@@ -1,0 +1,81 @@
+//! Quantize the trained in-repo LM with every quantizer and evaluate
+//! held-out perplexity plus the multiple-choice suite — the shape of the
+//! paper's Tables 1 and 2 on a real (small) model.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example llm_quantize_eval
+//! ```
+
+use std::sync::Arc;
+
+use bof4::eval::report::Table;
+use bof4::eval::{ppl, quantize_params, tasks};
+use bof4::quant::{Method, Norm, OpqConfig, QuantConfig};
+use bof4::runtime::Runtime;
+
+fn main() -> bof4::Result<()> {
+    bof4::util::log::init_from_env();
+    let rt = Arc::new(Runtime::new()?);
+    let base = bof4::eval::ensure_trained(&rt)?;
+    println!(
+        "trained LM: {} params over {} tensors\n",
+        base.n_params(),
+        base.entries.len()
+    );
+
+    let suite = tasks::build_suite(32, 99);
+    let mut table = Table::new(
+        "Quantized-LM evaluation (Tables 1/2 shape)",
+        &["quantizer", "MAE", "MSE", "PPL", "NAV ACC"],
+    );
+
+    let mut eval_one = |label: String, params: &bof4::models::ParamSet, mae: f64, mse: f64| -> bof4::Result<()> {
+        let ppl = ppl::perplexity(&rt, params, &ppl::PplConfig::default())?;
+        let mut accs = Vec::new();
+        for t in &suite {
+            accs.push((tasks::score_task(&rt, params, t)?, t.chance));
+        }
+        let nav = tasks::nav_acc(&accs);
+        table.row(vec![
+            label,
+            format!("{mae:.4e}"),
+            format!("{mse:.4e}"),
+            format!("{ppl:.4}"),
+            format!("{nav:.4}"),
+        ]);
+        Ok(())
+    };
+
+    eval_one("BF16 (reference)".into(), &base, 0.0, 0.0)?;
+
+    let configs = [
+        QuantConfig {
+            method: Method::Nf4,
+            norm: Norm::Absmax,
+            ..Default::default()
+        },
+        QuantConfig {
+            method: Method::Af4,
+            norm: Norm::Absmax,
+            ..Default::default()
+        },
+        QuantConfig {
+            method: Method::Bof4 { mse: true },
+            norm: Norm::SignedAbsmax,
+            ..Default::default()
+        },
+        QuantConfig {
+            method: Method::Bof4 { mse: true },
+            norm: Norm::SignedAbsmax,
+            opq: Some(OpqConfig::default()),
+            ..Default::default()
+        },
+    ];
+    for cfg in configs {
+        let qm = quantize_params(&base, &cfg)?;
+        eval_one(cfg.label(), &qm.params, qm.mae, qm.mse)?;
+    }
+
+    table.emit("example_llm_quantize_eval")?;
+    Ok(())
+}

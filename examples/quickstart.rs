@@ -1,0 +1,73 @@
+//! Quickstart: quantize a tensor with every quantizer family and compare.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use bof4::quant::{quant_error, Method, Norm, OpqConfig, QuantConfig, Quantizer};
+use bof4::util::rng::Pcg64;
+
+fn main() {
+    // 1M Gaussian "network weights"
+    let mut rng = Pcg64::seed_from_u64(7);
+    let mut w = vec![0.0f32; 1 << 20];
+    rng.fill_gaussian_f32(&mut w, 1.0);
+
+    println!("quantizing {} Gaussian weights, block size 64\n", w.len());
+    println!(
+        "{:<22} {:>12} {:>12} {:>8}",
+        "quantizer", "MAE", "MSE", "bits/w"
+    );
+
+    let configs = [
+        QuantConfig {
+            method: Method::Nf4,
+            norm: Norm::Absmax,
+            ..Default::default()
+        },
+        QuantConfig {
+            method: Method::Af4,
+            norm: Norm::Absmax,
+            ..Default::default()
+        },
+        QuantConfig {
+            method: Method::Bof4 { mse: true },
+            norm: Norm::Absmax,
+            ..Default::default()
+        },
+        QuantConfig {
+            method: Method::Bof4 { mse: true },
+            norm: Norm::SignedAbsmax,
+            ..Default::default()
+        },
+        QuantConfig {
+            method: Method::Bof4 { mse: true },
+            norm: Norm::SignedAbsmax,
+            opq: Some(OpqConfig::default()),
+            ..Default::default()
+        },
+        QuantConfig {
+            method: Method::Bof4 { mse: true },
+            norm: Norm::SignedAbsmax,
+            double_quant: true,
+            ..Default::default()
+        },
+    ];
+    for cfg in configs {
+        let q = Quantizer::new(cfg.clone());
+        let (mae, mse) = quant_error(&q, &w);
+        let qt = q.quantize(&w);
+        println!(
+            "{:<22} {:>12.5e} {:>12.5e} {:>8.3}",
+            cfg.label(),
+            mae,
+            mse,
+            qt.bits_per_weight()
+        );
+    }
+
+    println!(
+        "\nBOF4-S (MSE) is the paper's best block-wise quantizer; OPQ helps\n\
+         most when weights carry outliers (try examples/llm_quantize_eval)."
+    );
+}

@@ -1,0 +1,90 @@
+//! Batched serving demo: quantized weights behind the dynamic batcher,
+//! plus the 4-bit compute path — the fused Pallas dequant-matmul graph
+//! executed with rust-packed codes.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_batched
+//! ```
+
+use std::sync::Arc;
+
+use bof4::coordinator::{BatchedLm, ServiceConfig};
+use bof4::models::Corpus;
+use bof4::quant::{Method, Norm, QuantConfig, Quantizer};
+use bof4::runtime::{HostTensor, Runtime};
+use bof4::util::timer::Stopwatch;
+
+fn main() -> bof4::Result<()> {
+    bof4::util::log::init_from_env();
+    let rt = Arc::new(Runtime::new()?);
+    let base = bof4::eval::ensure_trained(&rt)?;
+
+    // --- 1. serving through the dynamic batcher -----------------------
+    let cfg = QuantConfig {
+        method: Method::Bof4 { mse: true },
+        norm: Norm::SignedAbsmax,
+        ..Default::default()
+    };
+    let qm = bof4::eval::quantize_params(&base, &cfg)?;
+    println!(
+        "serving {} with {}: quant MSE {:.3e}",
+        rt.platform(),
+        cfg.label(),
+        qm.mse
+    );
+    let svc = BatchedLm::start(rt.clone(), qm.params.to_tensors(), ServiceConfig::default())?;
+
+    let corpus = Corpus::generate(100_000, 5);
+    let n_requests = 128;
+    let sw = Stopwatch::start();
+    let pending: Vec<_> = (0..n_requests)
+        .map(|i| {
+            let start = (i * 131) % (corpus.len() - 40);
+            svc.infer_async(&corpus.tokens[start..start + 40]).unwrap()
+        })
+        .collect();
+    for rx in pending {
+        rx.recv().unwrap()?;
+    }
+    let secs = sw.elapsed().as_secs_f64();
+    println!(
+        "{n_requests} concurrent requests in {secs:.2}s -> {:.1} req/s",
+        n_requests as f64 / secs
+    );
+    println!("{}", svc.metrics.summary());
+
+    // --- 2. the 4-bit compute path: fused dequant-matmul --------------
+    let gm = rt.meta.graph("dequant_matmul")?.clone();
+    let (m, k) = (gm.args[0].shape[0], gm.args[0].shape[1]);
+    let n = gm.args[1].shape[1];
+    let block = rt.meta.model.block;
+    let mut rng = bof4::util::rng::Pcg64::seed_from_u64(3);
+    let mut x = vec![0.0f32; m * k];
+    let mut w = vec![0.0f32; k * n];
+    rng.fill_gaussian_f32(&mut x, 1.0);
+    rng.fill_gaussian_f32(&mut w, 0.05);
+
+    let q = Quantizer::new(cfg);
+    let qt = q.quantize(&w);
+    let codes = bof4::quant::pack::unpack_u4(&qt.codes, k * n);
+    let args = [
+        HostTensor::f32(x, vec![m, k]),
+        HostTensor::u8(codes, vec![k, n]),
+        HostTensor::f32(qt.absmax.clone(), vec![k, n / block]),
+        HostTensor::f32(q.codebook.levels.to_vec(), vec![16]),
+    ];
+    let sw = Stopwatch::start();
+    let iters = 20;
+    for _ in 0..iters {
+        rt.run("dequant_matmul", &args)?;
+    }
+    let per = sw.elapsed().as_secs_f64() / iters as f64;
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    println!(
+        "fused dequant-matmul {m}x{k}x{n}: {:.2} ms/iter ({:.2} GFLOP/s, interpret-mode)",
+        per * 1e3,
+        flops / per / 1e9
+    );
+    println!("(real-TPU perf is estimated analytically; see EXPERIMENTS.md §Perf)");
+    Ok(())
+}

@@ -1,0 +1,320 @@
+"""AOT lowering: jax graphs -> HLO *text* artifacts for the rust runtime.
+
+Run once at build time (``make artifacts``); python never appears on the
+request path. The interchange format is HLO **text**, not a serialized
+``HloModuleProto``: jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 (the version the published ``xla`` crate binds)
+rejects (``proto.id() <= INT_MAX``). The HLO text parser reassigns ids, so
+text round-trips cleanly.
+
+Outputs (to ``artifacts/``):
+  init_params.hlo.txt   lm_nll.hlo.txt        lm_logits_last.hlo.txt
+  lm_nll_q4.hlo.txt     train_step.hlo.txt    lora_step.hlo.txt
+  lm_logits_last_lora.hlo.txt
+  dequant_matmul.hlo.txt  quantize_blocks_abs.hlo.txt  quantize_blocks_signed.hlo.txt
+  meta.json             — every graph's argument/result names+shapes+dtypes
+  fixtures/*.json       — oracle outputs for rust integration tests
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import codebooks
+from .kernels import dequant_matmul as dqm
+from .kernels import ref
+from .model import (
+    ModelCfg,
+    init_params,
+    lm_logits_all,
+    lm_logits_all_lora,
+    lm_logits_last,
+    lm_logits_last_lora,
+    lm_nll,
+    lm_nll_q4,
+    lora_names,
+    lora_shapes,
+    lora_step,
+    matmul_param_names,
+    param_names,
+    param_shapes,
+    train_step,
+)
+
+BLOCK = 64  # quantization block size baked into the q4 serving graph
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _arg_meta(names, specs):
+    return [
+        {"name": n, "shape": list(s.shape), "dtype": str(np.dtype(s.dtype))}
+        for n, s in zip(names, specs)
+    ]
+
+
+def lower_graphs(cfg: ModelCfg, outdir: str) -> dict:
+    """Lower every graph; write artifacts; return the meta dict."""
+    os.makedirs(outdir, exist_ok=True)
+    meta: dict = {
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "seq_len": cfg.seq_len,
+            "batch": cfg.batch,
+            "lora_rank": cfg.lora_rank,
+            "lora_alpha": cfg.lora_alpha,
+            "lr": cfg.lr,
+            "block": BLOCK,
+        },
+        "graphs": {},
+    }
+
+    pnames = param_names(cfg)
+    pshapes = param_shapes(cfg)
+    pspecs = [_spec(pshapes[n], np.float32) for n in pnames]
+    tok_spec = _spec((cfg.batch, cfg.seq_len), np.int32)
+
+    def emit(name, fn, arg_names, arg_specs, result_names):
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta["graphs"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": _arg_meta(arg_names, arg_specs),
+            "results": result_names,
+        }
+        print(f"  {name}: {len(arg_specs)} args -> {len(result_names)} results, "
+              f"{len(text)} chars")
+
+    # --- init -------------------------------------------------------
+    emit(
+        "init_params",
+        lambda seed: tuple(init_params(cfg, seed)),
+        ["seed"],
+        [_spec((), np.uint32)],
+        pnames,
+    )
+
+    # --- eval forward ------------------------------------------------
+    emit(
+        "lm_nll",
+        functools.partial(lm_nll, cfg),
+        pnames + ["tokens"],
+        pspecs + [tok_spec],
+        ["nll_per_seq"],
+    )
+    emit(
+        "lm_logits_last",
+        functools.partial(lm_logits_last, cfg),
+        pnames + ["tokens"],
+        pspecs + [tok_spec],
+        ["logits_last"],
+    )
+    emit(
+        "lm_logits_all",
+        functools.partial(lm_logits_all, cfg),
+        pnames + ["tokens"],
+        pspecs + [tok_spec],
+        ["logits"],
+    )
+
+    # --- quantized serving forward (L1 Pallas dequant-matmul inside) --
+    mm = matmul_param_names(cfg)
+    f32_names = [n for n in pnames if n not in mm]
+    code_specs = [_spec(pshapes[n], np.uint8) for n in mm]
+    absmax_specs = [
+        _spec((pshapes[n][0], pshapes[n][1] // BLOCK), np.float32) for n in mm
+    ]
+    q4_names = (
+        f32_names
+        + [f"{n}.codes" for n in mm]
+        + [f"{n}.absmax" for n in mm]
+        + ["levels", "tokens"]
+    )
+    q4_specs = (
+        [_spec(pshapes[n], np.float32) for n in f32_names]
+        + code_specs
+        + absmax_specs
+        + [_spec((16,), np.float32), tok_spec]
+    )
+    emit(
+        "lm_nll_q4",
+        functools.partial(lm_nll_q4, cfg, BLOCK),
+        q4_names,
+        q4_specs,
+        ["nll_per_seq"],
+    )
+
+    # --- training ------------------------------------------------------
+    step_spec = _spec((), np.int32)
+    emit(
+        "train_step",
+        functools.partial(train_step, cfg),
+        pnames
+        + [f"m.{n}" for n in pnames]
+        + [f"v.{n}" for n in pnames]
+        + ["step", "tokens"],
+        pspecs + pspecs + pspecs + [step_spec, tok_spec],
+        pnames
+        + [f"m.{n}" for n in pnames]
+        + [f"v.{n}" for n in pnames]
+        + ["step", "loss"],
+    )
+
+    lnames = lora_names(cfg)
+    lshapes = lora_shapes(cfg)
+    lspecs = [_spec(lshapes[n], np.float32) for n in lnames]
+    from .model import init_lora
+
+    emit(
+        "init_lora",
+        lambda seed: tuple(init_lora(cfg, seed)),
+        ["seed"],
+        [_spec((), np.uint32)],
+        lnames,
+    )
+    emit(
+        "lora_step",
+        functools.partial(lora_step, cfg),
+        pnames
+        + lnames
+        + [f"m.{n}" for n in lnames]
+        + [f"v.{n}" for n in lnames]
+        + ["step", "tokens"],
+        pspecs + lspecs + lspecs + lspecs + [step_spec, tok_spec],
+        lnames
+        + [f"m.{n}" for n in lnames]
+        + [f"v.{n}" for n in lnames]
+        + ["step", "loss"],
+    )
+    emit(
+        "lm_logits_last_lora",
+        functools.partial(lm_logits_last_lora, cfg),
+        pnames + lnames + ["tokens"],
+        pspecs + lspecs + [tok_spec],
+        ["logits_last"],
+    )
+    emit(
+        "lm_logits_all_lora",
+        functools.partial(lm_logits_all_lora, cfg),
+        pnames + lnames + ["tokens"],
+        pspecs + lspecs + [tok_spec],
+        ["logits"],
+    )
+
+    # --- standalone kernels (perf bench + serving example) -------------
+    M, K, N = 128, 256, 256
+    emit(
+        "dequant_matmul",
+        lambda x, c, a, lv: (dqm.dequant_matmul(x, c, a, lv, block=BLOCK),),
+        ["x", "codes", "absmax", "levels"],
+        [
+            _spec((M, K), np.float32),
+            _spec((K, N), np.uint8),
+            _spec((K, N // BLOCK), np.float32),
+            _spec((16,), np.float32),
+        ],
+        ["y"],
+    )
+
+    from .kernels.quantize import quantize_blocks
+
+    for signed, suffix in ((False, "abs"), (True, "signed")):
+        emit(
+            f"quantize_blocks_{suffix}",
+            functools.partial(
+                lambda s, w, b: tuple(quantize_blocks(w, b, signed=s)), signed
+            ),
+            ["w", "bounds"],
+            [_spec((1024, BLOCK), np.float32), _spec((15,), np.float32)],
+            ["codes", "absmax"],
+        )
+
+    return meta
+
+
+def write_fixtures(outdir: str) -> None:
+    """Oracle fixtures consumed by rust integration tests (bit-for-bit)."""
+    fixdir = os.path.join(outdir, "fixtures")
+    os.makedirs(fixdir, exist_ok=True)
+    rng = np.random.default_rng(1234)
+
+    fixtures = {}
+    w = rng.normal(size=(16, 64)).astype(np.float32)
+    for name, levels in (
+        ("nf4", codebooks.NF4),
+        ("bof4s_mse_64", codebooks.BOF4_S_MSE_64),
+        ("bof4_mae_64", codebooks.BOF4_MAE_64),
+    ):
+        for signed in (False, True):
+            codes, m = ref.quantize_blocks_ref(w, levels, signed)
+            deq = ref.dequantize_blocks_ref(codes, m, levels)
+            fixtures[f"{name}_signed{int(signed)}"] = {
+                "levels": [float(x) for x in levels],
+                "codes": codes.reshape(-1).tolist(),
+                "absmax": m.tolist(),
+                "dequant": [float(x) for x in deq.reshape(-1)],
+            }
+    fixtures["weights"] = [float(x) for x in w.reshape(-1)]
+    fixtures["block"] = 64
+
+    # OPQ fixture: same weights with planted outliers
+    w2 = w.copy()
+    w2[3, 17] = 9.0
+    w2[11, 5] = -7.5
+    thr = 3.352401773130375  # F_M^{-1}(0.95) for I=64; rust's
+    # stats::blockmax test recomputes this and asserts agreement.
+    mask = ref.opq_outlier_mask_ref(w2, thr)
+    fixtures["opq"] = {
+        "weights": [float(x) for x in w2.reshape(-1)],
+        "threshold_sigma": thr,
+        "outlier_mask": mask.reshape(-1).astype(int).tolist(),
+    }
+
+    with open(os.path.join(fixdir, "quant_fixtures.json"), "w") as f:
+        json.dump(fixtures, f)
+    print(f"  fixtures: {len(fixtures)} entries")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+
+    cfg = ModelCfg()
+    print(f"lowering graphs (vocab={cfg.vocab} d={cfg.d_model} "
+          f"L={cfg.n_layers} S={cfg.seq_len} B={cfg.batch}) ...")
+    meta = lower_graphs(cfg, args.out)
+    write_fixtures(args.out)
+    with open(os.path.join(args.out, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"wrote {args.out}/meta.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,229 @@
+"""Quantization codebooks shared by the L1/L2 python layers.
+
+The authoritative codebook registry (including EM-designed BOF4 variants
+for every block size) lives in the rust layer (``rust/src/quant/codebook.rs``).
+This module mirrors the fixed published constants needed by the python
+kernels/tests and by the AOT fixture generator, so the two layers can be
+cross-checked bit-for-bit.
+
+Sources:
+- NF4: Dettmers et al., "QLoRA" (NeurIPS 2023) — the bitsandbytes constants.
+- BOF4 / BOF4-S: Blumenberg et al. (2025), Tables 6 and 7.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+#: 4-bit NormalFloat (NF4) reconstruction levels, exactly as shipped in
+#: bitsandbytes (block-size independent by design — the paper shows this is
+#: one of its flaws).
+NF4 = np.array(
+    [
+        -1.0,
+        -0.6961928009986877,
+        -0.5250730514526367,
+        -0.39491748809814453,
+        -0.28444138169288635,
+        -0.18477343022823334,
+        -0.09105003625154495,
+        0.0,
+        0.07958029955625534,
+        0.16093020141124725,
+        0.24611230194568634,
+        0.33791524171829224,
+        0.44070982933044434,
+        0.5626170039176941,
+        0.7229568362236023,
+        1.0,
+    ],
+    dtype=np.float32,
+)
+
+#: BOF4 optimized w.r.t. MSE, block size I = 64 (paper Table 6).
+BOF4_MSE_64 = np.array(
+    [
+        -1.0,
+        -0.7535245418548584,
+        -0.579203724861145,
+        -0.4385998845100403,
+        -0.3167679905891418,
+        -0.2059924453496933,
+        -0.1015387624502182,
+        0.0,
+        0.0887245312333107,
+        0.1793769598007202,
+        0.2741499841213226,
+        0.3758211433887482,
+        0.4884937703609467,
+        0.6187058687210083,
+        0.7790452241897583,
+        1.0,
+    ],
+    dtype=np.float32,
+)
+
+#: BOF4 optimized w.r.t. MAE, block size I = 64 (paper Table 6).
+BOF4_MAE_64 = np.array(
+    [
+        -1.0,
+        -0.7026305794715881,
+        -0.5272703766822815,
+        -0.3946738243103027,
+        -0.2832144796848297,
+        -0.1835313588380814,
+        -0.090308666229248,
+        0.0,
+        0.0789600014686584,
+        0.1598792523145676,
+        0.244986355304718,
+        0.3372218906879425,
+        0.441359281539917,
+        0.565777063369751,
+        0.7299178242683411,
+        1.0,
+    ],
+    dtype=np.float32,
+)
+
+#: BOF4-S optimized w.r.t. MSE, block size I = 64 (paper Table 6; signed
+#: absmax normalization — note only +1 is a constrained endpoint).
+BOF4_S_MSE_64 = np.array(
+    [
+        -0.8568463921546936,
+        -0.6692874431610107,
+        -0.5235266089439392,
+        -0.4004882574081421,
+        -0.2910638153553009,
+        -0.1900092959403992,
+        -0.0938529595732689,
+        0.0,
+        0.0887671709060669,
+        0.1794802695512772,
+        0.2743096053600311,
+        0.3760197460651398,
+        0.4886530041694641,
+        0.6188603639602661,
+        0.7791395783424377,
+        1.0,
+    ],
+    dtype=np.float32,
+)
+
+#: BOF4-S optimized w.r.t. MAE, block size I = 64 (paper Table 6).
+BOF4_S_MAE_64 = np.array(
+    [
+        -0.8018798232078552,
+        -0.6076051592826843,
+        -0.468828022480011,
+        -0.3559602797031403,
+        -0.2576169371604919,
+        -0.1677481383085251,
+        -0.0827366262674332,
+        0.0,
+        0.0789434835314751,
+        0.1597966849803925,
+        0.2448495477437973,
+        0.3371480107307434,
+        0.4412573873996735,
+        0.5656819343566895,
+        0.7298068404197693,
+        1.0,
+    ],
+    dtype=np.float32,
+)
+
+#: BOF4-S (MSE) for additional block sizes (paper Table 7), keyed by I.
+BOF4_S_MSE: dict[int, np.ndarray] = {
+    32: np.array(
+        [
+            -0.8732797503471375,
+            -0.6907446384429932,
+            -0.5437039136886597,
+            -0.4173701703548431,
+            -0.3038933575153351,
+            -0.1986017823219299,
+            -0.0981557220220566,
+            0.0,
+            0.0925938412547112,
+            0.187048003077507,
+            0.2855197489261627,
+            0.3907126188278198,
+            0.506283164024353,
+            0.6379748582839966,
+            0.7956376671791077,
+            1.0,
+        ],
+        dtype=np.float32,
+    ),
+    64: BOF4_S_MSE_64,
+    128: np.array(
+        [
+            -0.83739173412323,
+            -0.6462452411651611,
+            -0.5028634667396545,
+            -0.3836247622966766,
+            -0.2783779501914978,
+            -0.1815713942050934,
+            -0.0896477326750755,
+            0.0,
+            0.0850915610790253,
+            0.1720834821462631,
+            0.2632072865962982,
+            0.3613293170928955,
+            0.4707452654838562,
+            0.5988966822624207,
+            0.761027991771698,
+            1.0,
+        ],
+        dtype=np.float32,
+    ),
+    256: np.array(
+        [
+            -0.8146829009056091,
+            -0.6221838593482971,
+            -0.4820549190044403,
+            -0.3669650852680206,
+            -0.2659871876239777,
+            -0.1733742356300354,
+            -0.0855776593089104,
+            0.0,
+            0.0815095230937004,
+            0.1649149656295776,
+            0.2524392008781433,
+            0.3470274209976196,
+            0.4531534314155579,
+            0.578848659992218,
+            0.7418596744537354,
+            1.0,
+        ],
+        dtype=np.float32,
+    ),
+}
+
+#: Registry by name for CLI-ish selection in aot/tests.
+REGISTRY: dict[str, np.ndarray] = {
+    "nf4": NF4,
+    "bof4-mse-64": BOF4_MSE_64,
+    "bof4-mae-64": BOF4_MAE_64,
+    "bof4s-mse-64": BOF4_S_MSE_64,
+    "bof4s-mae-64": BOF4_S_MAE_64,
+    "bof4s-mse-32": BOF4_S_MSE[32],
+    "bof4s-mse-128": BOF4_S_MSE[128],
+    "bof4s-mse-256": BOF4_S_MSE[256],
+}
+
+
+def decision_boundaries(levels: np.ndarray) -> np.ndarray:
+    """Midpoint decision boundaries for a sorted 16-level codebook.
+
+    Returns the 15 interior thresholds xi(1..15); a normalized weight x is
+    encoded to level ``l`` iff ``xi(l-1) <= x < xi(l)`` (nearest-neighbor
+    rule for scalar quantization, Lloyd condition 1).
+    """
+    levels = np.asarray(levels, dtype=np.float64)
+    if levels.ndim != 1 or levels.shape[0] != 16:
+        raise ValueError(f"expected 16 levels, got shape {levels.shape}")
+    if not np.all(np.diff(levels) > 0):
+        raise ValueError("codebook levels must be strictly increasing")
+    return ((levels[1:] + levels[:-1]) / 2.0).astype(np.float64)

@@ -1,0 +1,15 @@
+"""Layer-1 Pallas kernels for BOF4 block-wise quantization.
+
+- :mod:`compile.kernels.quantize` — block-wise absmax quantize / dequantize
+  kernels (absolute and signed normalization).
+- :mod:`compile.kernels.dequant_matmul` — fused 4-bit dequant + matmul, the
+  QLoRA inference hot path.
+- :mod:`compile.kernels.ref` — pure-jnp/numpy oracles; the semantics ground
+  truth for both the kernels and the rust quantization core.
+
+All Pallas calls use ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; real-TPU behaviour is estimated analytically
+(EXPERIMENTS.md §Perf).
+"""
+
+from . import dequant_matmul, quantize, ref  # noqa: F401

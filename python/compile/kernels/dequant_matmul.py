@@ -1,0 +1,120 @@
+"""Pallas kernel: fused 4-bit dequantize + matmul (the QLoRA hot path).
+
+Computes ``y[M, N] = x[M, K] @ W_hat[K, N]`` where ``W_hat`` never exists in
+HBM: each grid step streams a ``[K_tile, N_tile]`` tile of uint8 codes and
+the matching slice of per-block absmax constants into VMEM, decodes them to
+float32 *inside* VMEM (codebook gather + absmax scale) and immediately feeds
+the MXU-shaped ``x_tile @ w_tile`` contraction, accumulating over K tiles.
+
+Block layout: quantization blocks are contiguous runs of ``I`` weights along
+each row of W (row-major flattening of the weight matrix — the same layout
+``rust/src/models`` serializes). ``absmax`` therefore has shape
+``[K, N // I]``, and N_tile is constrained to a multiple of I so one tile
+never straddles a block's absmax. (N_tile % I == 0 or I % N_tile == 0 both
+work; we require the former for simplicity.)
+
+CUDA -> TPU rethink (DESIGN.md "Hardware adaptation"): bitsandbytes assigns
+one CUDA thread per output element with the codebook in shared memory. Here
+the codebook is a broadcast VMEM operand; decode is a vectorized gather on
+the VPU; the contraction runs on the MXU in fp32 (bf16 on real hardware);
+the HBM<->VMEM schedule that CUDA expressed with threadblocks is the
+BlockSpec grid. ``interpret=True`` for CPU-PJRT correctness.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dqmm_kernel(x_ref, codes_ref, absmax_ref, levels_ref, o_ref, *, block: int):
+    """One (m, n, k) grid step: o[m,n] += x[m,k] @ dequant(codes[k,n])."""
+    k_idx = pl.program_id(2)
+
+    codes = codes_ref[...].astype(jnp.int32)  # [Kt, Nt]
+    levels = levels_ref[...]  # [16]
+    m_abs = absmax_ref[...]  # [Kt, Nt // block]
+    # Decode in VMEM: gather + per-block scale. repeat() expands each block
+    # constant across its I columns.
+    w = levels[codes] * jnp.repeat(m_abs, block, axis=1)  # [Kt, Nt] f32
+
+    acc = jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+
+    # K-loop accumulation: zero the output tile on the first K step.
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = acc
+
+    @pl.when(k_idx != 0)
+    def _acc():
+        o_ref[...] += acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block", "m_tile", "n_tile", "k_tile")
+)
+def dequant_matmul(
+    x,
+    codes,
+    absmax,
+    levels,
+    *,
+    block: int,
+    m_tile: int = 8,
+    n_tile: int = 128,
+    k_tile: int = 128,
+):
+    """Fused ``x @ dequant(codes, absmax)`` via Pallas.
+
+    Args:
+      x: float32 ``[M, K]``.
+      codes: uint8 ``[K, N]`` 4-bit codes (stored one code per byte in the
+        compute path; the 2-codes-per-byte packed form lives in the rust
+        storage layer and is unpacked on load — see DESIGN.md).
+      absmax: float32 ``[K, N // block]``.
+      levels: float32 ``[16]`` codebook.
+      block: quantization block size I (must divide n_tile).
+    """
+    m, k = x.shape
+    k2, n = codes.shape
+    assert k == k2, (k, k2)
+    if n_tile % block != 0:
+        raise ValueError(f"n_tile={n_tile} must be a multiple of block={block}")
+    if m % m_tile or n % n_tile or k % k_tile:
+        raise ValueError(f"shape ({m},{k})x({k},{n}) not tiled by "
+                         f"({m_tile},{k_tile},{n_tile})")
+    grid = (m // m_tile, n // n_tile, k // k_tile)
+    ab_tile = n_tile // block
+    return pl.pallas_call(
+        functools.partial(_dqmm_kernel, block=block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m_tile, k_tile), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((k_tile, n_tile), lambda mi, ni, ki: (ki, ni)),
+            pl.BlockSpec((k_tile, ab_tile), lambda mi, ni, ki: (ki, ni)),
+            pl.BlockSpec((16,), lambda mi, ni, ki: (0,)),
+        ],
+        out_specs=pl.BlockSpec((m_tile, n_tile), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, codes, absmax, levels)
+
+
+def vmem_bytes(m_tile: int, n_tile: int, k_tile: int, block: int) -> int:
+    """Analytic VMEM footprint of one grid step (perf-model helper).
+
+    Counts resident operand/output tiles plus the decoded weight tile the
+    kernel materializes. Used by the §Perf roofline estimate in
+    EXPERIMENTS.md — interpret-mode wallclock is NOT a TPU proxy.
+    """
+    f32 = 4
+    x_t = m_tile * k_tile * f32
+    codes_t = k_tile * n_tile  # u8
+    absmax_t = k_tile * (n_tile // block) * f32
+    w_t = k_tile * n_tile * f32  # decoded tile
+    out_t = m_tile * n_tile * f32
+    lv = 16 * f32
+    return x_t + codes_t + absmax_t + w_t + out_t + lv

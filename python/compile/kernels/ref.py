@@ -1,0 +1,162 @@
+"""Pure-jnp / numpy correctness oracles for the Pallas kernels.
+
+These reference implementations define the semantics that both the L1
+Pallas kernels (this package) and the rust quantization core
+(``rust/src/quant``) must match. They are deliberately written in the most
+transparent way possible — no fusion, no tiling — and are used by:
+
+- ``python/tests/test_kernels.py`` (hypothesis sweeps kernel vs ref),
+- ``compile.aot`` fixture generation (rust integration tests compare
+  against these numbers bit-for-bit).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def encode_ref(x: np.ndarray, levels: np.ndarray) -> np.ndarray:
+    """Nearest-level codes for normalized weights ``x`` in [-1, 1].
+
+    Ties at a midpoint boundary resolve to the *upper* level (consistent
+    with ``x >= boundary`` in the kernel and with rust's encoder).
+    """
+    levels = np.asarray(levels, dtype=np.float32)
+    bounds = (levels[1:] + levels[:-1]) / 2.0
+    # code = number of boundaries <= x  (searchsorted side='right')
+    return np.searchsorted(bounds, np.asarray(x, dtype=np.float32), side="right").astype(
+        np.uint8
+    )
+
+
+def block_absmax_ref(w: np.ndarray, signed: bool) -> np.ndarray:
+    """Per-row quantization constants for blocked weights ``w[B, I]``.
+
+    ``signed=False``: absolute block maximum (paper eq. 1).
+    ``signed=True``: the signed value of the absolutely-largest weight
+    (paper eq. 4) — BOF4-S normalization.
+
+    For signed normalization, when several entries tie in magnitude the
+    *first* (lowest index) is taken, matching ``np.argmax`` and the rust
+    implementation.
+    """
+    w = np.asarray(w, dtype=np.float32)
+    if signed:
+        j = np.argmax(np.abs(w), axis=1)
+        return w[np.arange(w.shape[0]), j]
+    return np.max(np.abs(w), axis=1)
+
+
+def quantize_blocks_ref(
+    w: np.ndarray, levels: np.ndarray, signed: bool
+) -> tuple[np.ndarray, np.ndarray]:
+    """Block-wise absmax quantization oracle.
+
+    Args:
+      w: float32 ``[B, I]`` — B blocks of I weights.
+      levels: the 16 codebook reconstruction levels (sorted).
+      signed: use signed absmax normalization (BOF4-S) instead of absolute.
+
+    Returns:
+      ``(codes uint8 [B, I], absmax float32 [B])``.
+
+    Degenerate all-zero blocks get absmax replaced by 1.0 so that
+    normalization is well-defined; every weight then encodes to the level
+    nearest 0 (exact for the paper's codebooks which all contain 0).
+    """
+    w = np.asarray(w, dtype=np.float32)
+    m = block_absmax_ref(w, signed)
+    safe = np.where(m == 0.0, np.float32(1.0), m)
+    x = w / safe[:, None]
+    return encode_ref(x, levels), m.astype(np.float32)
+
+
+def dequantize_blocks_ref(
+    codes: np.ndarray, absmax: np.ndarray, levels: np.ndarray
+) -> np.ndarray:
+    """Inverse of :func:`quantize_blocks_ref` (up to quantization error)."""
+    levels = np.asarray(levels, dtype=np.float32)
+    return levels[np.asarray(codes, dtype=np.int64)] * np.asarray(
+        absmax, dtype=np.float32
+    )[:, None]
+
+
+def quantize_tensor_ref(
+    w: np.ndarray, levels: np.ndarray, block: int, signed: bool
+) -> tuple[np.ndarray, np.ndarray]:
+    """Quantize a flat tensor: pad to a block multiple, reshape, quantize.
+
+    Padding weights are zeros; callers must remember the true length.
+    Returns ``(codes uint8 [B, I], absmax float32 [B])``.
+    """
+    w = np.asarray(w, dtype=np.float32).reshape(-1)
+    pad = (-len(w)) % block
+    if pad:
+        w = np.concatenate([w, np.zeros(pad, dtype=np.float32)])
+    return quantize_blocks_ref(w.reshape(-1, block), levels, signed)
+
+
+def dequant_matmul_ref(
+    x: np.ndarray, codes: np.ndarray, absmax: np.ndarray, levels: np.ndarray
+) -> np.ndarray:
+    """Oracle for the fused dequant-matmul: ``y = x @ W_hat``.
+
+    Args:
+      x: float32 ``[M, K]`` activations.
+      codes: uint8 ``[K, N]`` 4-bit codes of the weight matrix.
+      absmax: float32 ``[K, N // I]`` per-block quantization constants;
+        blocks are contiguous runs of ``I`` weights along each row of W
+        (row-major flattening, the same layout rust's `models` store uses).
+      levels: 16 reconstruction levels.
+    """
+    x = np.asarray(x, dtype=np.float32)
+    k, n = codes.shape
+    nblocks = absmax.shape[1]
+    block = n // nblocks
+    levels = np.asarray(levels, dtype=np.float32)
+    w_hat = levels[codes.astype(np.int64)] * np.repeat(absmax, block, axis=1)
+    return x @ w_hat
+
+
+def opq_outlier_mask_ref(w: np.ndarray, threshold_sigma: float) -> np.ndarray:
+    """Outlier mask for OPQ over blocked weights ``w[B, I]`` (paper eq. 9).
+
+    ``threshold_sigma`` is ``F_M^{-1}(q)`` — the q-quantile of the absolute
+    block-max distribution for unit-std Gaussian blocks — computed by the
+    caller (rust `stats::blockmax` or `scipy`-free python equivalent).
+    A weight is an outlier iff ``|w| > sigma_b * threshold_sigma`` with
+    ``sigma_b`` the corrected sample std of its block (paper eq. 73).
+    """
+    w = np.asarray(w, dtype=np.float64)
+    i = w.shape[1]
+    mean = w.mean(axis=1, keepdims=True)
+    var = ((w - mean) ** 2).sum(axis=1, keepdims=True) / (i - 1)
+    sigma = np.sqrt(var)
+    return np.abs(w) > sigma * threshold_sigma
+
+
+# --- jnp twins (used inside L2 graphs when a pure-jnp path is wanted) -----
+
+
+def dequant_matmul_jnp(x, codes, absmax, levels):
+    """jnp twin of :func:`dequant_matmul_ref` (traceable)."""
+    k, n = codes.shape
+    block = n // absmax.shape[1]
+    w_hat = levels[codes.astype(jnp.int32)] * jnp.repeat(absmax, block, axis=1)
+    return x @ w_hat
+
+
+def quantize_blocks_jnp(w, levels, signed: bool):
+    """jnp twin of :func:`quantize_blocks_ref` (traceable)."""
+    absw = jnp.abs(w)
+    if signed:
+        j = jnp.argmax(absw, axis=1)
+        m = jnp.take_along_axis(w, j[:, None], axis=1)[:, 0]
+    else:
+        m = jnp.max(absw, axis=1)
+    safe = jnp.where(m == 0.0, 1.0, m)
+    x = w / safe[:, None]
+    bounds = (levels[1:] + levels[:-1]) / 2.0
+    codes = jnp.sum(x[..., None] >= bounds[None, None, :], axis=-1)
+    return codes.astype(jnp.uint8), m

@@ -1,0 +1,447 @@
+"""Layer-2: GPT-style byte-level LM in JAX, plus train/LoRA/eval graphs.
+
+This module defines every compute graph the rust coordinator executes:
+
+- ``init_params``      — deterministic parameter initialization from a seed
+- ``lm_nll``           — per-sequence next-token NLL (perplexity eval)
+- ``lm_logits_last``   — last-position logits (greedy decode / serving)
+- ``lm_logits_q4``     — serving forward where every linear weight arrives
+                         as 4-bit codes + absmax and is consumed by the
+                         fused Pallas dequant-matmul kernel (L1)
+- ``train_step``       — one AdamW pre-training step (fwd + bwd + update)
+- ``lora_step``        — one QLoRA-style step: frozen base + LoRA adapters
+
+ABI convention: every graph takes and returns *flat positional lists* of
+arrays. The canonical parameter order is ``param_names(cfg)`` and is
+recorded in ``artifacts/meta.json`` by ``compile.aot`` so the rust runtime
+marshals literals without any pytree guesswork.
+
+The model is deliberately small (see ``ModelCfg``): the reproduction's
+perplexity signal needs a *real trained model*, trainable in minutes on the
+single-core CPU PJRT backend, not a large one (DESIGN.md §3 Substitutions).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.dequant_matmul import dequant_matmul
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    """Transformer LM hyper-parameters (shapes are MXU-tile friendly)."""
+
+    vocab: int = 64
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 256
+    seq_len: int = 64
+    batch: int = 16
+    # LoRA
+    lora_rank: int = 8
+    lora_alpha: float = 16.0
+    # AdamW
+    lr: float = 1e-3
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+
+
+#: Names of the weight matrices that are (a) quantized in the 4-bit serving
+#: graph and (b) LoRA-adapted during fine-tuning, per layer.
+MATMUL_KEYS = ("wqkv", "wo", "win", "wout")
+
+
+def param_names(cfg: ModelCfg) -> list[str]:
+    """Canonical flat parameter order (the rust<->python ABI)."""
+    names = ["embed", "pos"]
+    for layer in range(cfg.n_layers):
+        for k in ("ln1", "wqkv", "wo", "ln2", "win", "wout"):
+            names.append(f"l{layer}.{k}")
+    names += ["lnf", "head"]
+    return names
+
+
+def param_shapes(cfg: ModelCfg) -> dict[str, tuple[int, ...]]:
+    d, ff, v, s = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq_len
+    shapes: dict[str, tuple[int, ...]] = {"embed": (v, d), "pos": (s, d)}
+    for layer in range(cfg.n_layers):
+        shapes[f"l{layer}.ln1"] = (d,)
+        shapes[f"l{layer}.wqkv"] = (d, 3 * d)
+        shapes[f"l{layer}.wo"] = (d, d)
+        shapes[f"l{layer}.ln2"] = (d,)
+        shapes[f"l{layer}.win"] = (d, ff)
+        shapes[f"l{layer}.wout"] = (ff, d)
+    shapes["lnf"] = (d,)
+    shapes["head"] = (d, v)
+    return shapes
+
+
+def matmul_param_names(cfg: ModelCfg) -> list[str]:
+    """Parameters quantized in the q4 serving graph / LoRA-adapted."""
+    return [f"l{l}.{k}" for l in range(cfg.n_layers) for k in MATMUL_KEYS]
+
+
+def init_params(cfg: ModelCfg, seed) -> list[jnp.ndarray]:
+    """Initialize parameters (flat list in ``param_names`` order).
+
+    Scaled-normal init: matmuls get std 1/sqrt(fan_in); norms get ones;
+    embeddings std 0.02. ``seed`` may be a traced uint32 scalar so this
+    function lowers to a standalone HLO graph.
+    """
+    key = jax.random.PRNGKey(seed)
+    names = param_names(cfg)
+    shapes = param_shapes(cfg)
+    keys = jax.random.split(key, len(names))
+    out = []
+    for name, k in zip(names, keys):
+        shp = shapes[name]
+        if name.endswith((".ln1", ".ln2")) or name == "lnf":
+            out.append(jnp.ones(shp, jnp.float32))
+        elif name in ("embed", "pos"):
+            out.append(0.02 * jax.random.normal(k, shp, jnp.float32))
+        else:
+            std = 1.0 / math.sqrt(shp[0])
+            out.append(std * jax.random.normal(k, shp, jnp.float32))
+    return out
+
+
+def _as_dict(cfg: ModelCfg, flat) -> dict[str, jnp.ndarray]:
+    return dict(zip(param_names(cfg), flat))
+
+
+def _rmsnorm(x, scale):
+    rms = jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+    return x / rms * scale
+
+
+def _attention(cfg: ModelCfg, x, wqkv, wo, lora=None):
+    """Causal multi-head self-attention. x: [B, S, D]."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    qkv = x @ wqkv  # [B, S, 3D]
+    if lora is not None:
+        a, bb, scale = lora["wqkv"]
+        qkv = qkv + scale * ((x @ a) @ bb)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):
+        return t.reshape(b, s, h, hd).transpose(0, 2, 1, 3)  # [B,H,S,hd]
+
+    q, k, v = heads(q), heads(k), heads(v)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(hd)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    y = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, d)
+    out = y @ wo
+    if lora is not None:
+        a, bb, scale = lora["wo"]
+        out = out + scale * ((y @ a) @ bb)
+    return out
+
+
+def _mlp(x, win, wout, lora=None):
+    hmid = x @ win
+    if lora is not None:
+        a, bb, scale = lora["win"]
+        hmid = hmid + scale * ((x @ a) @ bb)
+    hmid = jax.nn.gelu(hmid)
+    out = hmid @ wout
+    if lora is not None:
+        a, bb, scale = lora["wout"]
+        out = out + scale * ((hmid @ a) @ bb)
+    return out
+
+
+def forward_logits(cfg: ModelCfg, flat_params, tokens, lora_by_layer=None):
+    """Full forward: tokens [B, S] int32 -> logits [B, S, V]."""
+    p = _as_dict(cfg, flat_params)
+    b, s = tokens.shape
+    x = p["embed"][tokens] + p["pos"][None, :s]
+    for layer in range(cfg.n_layers):
+        lora = lora_by_layer[layer] if lora_by_layer is not None else None
+        ln1 = _rmsnorm(x, p[f"l{layer}.ln1"])
+        x = x + _attention(cfg, ln1, p[f"l{layer}.wqkv"], p[f"l{layer}.wo"], lora)
+        ln2 = _rmsnorm(x, p[f"l{layer}.ln2"])
+        x = x + _mlp(ln2, p[f"l{layer}.win"], p[f"l{layer}.wout"], lora)
+    x = _rmsnorm(x, p["lnf"])
+    return x @ p["head"]
+
+
+def nll_per_seq(cfg: ModelCfg, flat_params, tokens):
+    """Sum of next-token NLLs per sequence: [B]. (S-1 targets per seq.)"""
+    logits = forward_logits(cfg, flat_params, tokens)  # [B,S,V]
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    picked = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return -jnp.sum(picked, axis=-1)
+
+
+def lm_nll(cfg: ModelCfg, *args):
+    """AOT entry: args = params..., tokens. Returns (nll_per_seq[B],)."""
+    flat, tokens = list(args[:-1]), args[-1]
+    return (nll_per_seq(cfg, flat, tokens),)
+
+
+def lm_logits_last(cfg: ModelCfg, *args):
+    """AOT entry: last-position logits [B, V] for greedy decoding."""
+    flat, tokens = list(args[:-1]), args[-1]
+    logits = forward_logits(cfg, flat, tokens)
+    return (logits[:, -1, :],)
+
+
+def lm_logits_all(cfg: ModelCfg, *args):
+    """AOT entry: full logits [B, S, V].
+
+    The rust evaluator reads the prediction at an arbitrary (supervised)
+    position — note position S-1 is never supervised by the CE loss, so
+    greedy decoding must not condition on it (see eval/lora.rs).
+    """
+    flat, tokens = list(args[:-1]), args[-1]
+    return (forward_logits(cfg, flat, tokens),)
+
+
+# ------------------------------------------------------------------
+# Quantized serving graph (uses the L1 fused dequant-matmul kernel)
+# ------------------------------------------------------------------
+
+
+def forward_logits_q4(cfg: ModelCfg, f32_params, q_codes, q_absmax, levels,
+                      tokens, block: int):
+    """Forward where every matmul weight is 4-bit (codes+absmax).
+
+    ``f32_params``: flat list of the *non-matmul* params in param_names
+    order (embed, pos, norms, head). ``q_codes`` / ``q_absmax``: lists
+    aligned with ``matmul_param_names(cfg)``.
+
+    Each linear is computed by the Pallas fused dequant-matmul over the
+    flattened [B*S, K] activations, so the quantized weight tile never
+    materializes outside VMEM.
+    """
+    mm_names = matmul_param_names(cfg)
+    q = {n: (q_codes[i], q_absmax[i]) for i, n in enumerate(mm_names)}
+    f32_names = [n for n in param_names(cfg) if n not in q]
+    p = dict(zip(f32_names, f32_params))
+
+    b, s = tokens.shape
+    d = cfg.d_model
+
+    def qmm(x2d, name):
+        codes, absmax = q[name]
+        return dequant_matmul(x2d, codes, absmax, levels, block=block,
+                              m_tile=8, n_tile=min(codes.shape[1], 128),
+                              k_tile=min(codes.shape[0], 128))
+
+    x = p["embed"][tokens] + p["pos"][None, :s]
+    h = cfg.n_heads
+    hd = d // h
+    for layer in range(cfg.n_layers):
+        ln1 = _rmsnorm(x, p[f"l{layer}.ln1"])
+        qkv = qmm(ln1.reshape(b * s, d), f"l{layer}.wqkv").reshape(b, s, 3 * d)
+        qh, kh, vh = jnp.split(qkv, 3, axis=-1)
+
+        def heads(t):
+            return t.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+
+        qh, kh, vh = heads(qh), heads(kh), heads(vh)
+        att = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / math.sqrt(hd)
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        att = jnp.where(mask[None, None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        y = jnp.einsum("bhqk,bhkd->bhqd", att, vh)
+        y = y.transpose(0, 2, 1, 3).reshape(b * s, d)
+        x = x + qmm(y, f"l{layer}.wo").reshape(b, s, d)
+
+        ln2 = _rmsnorm(x, p[f"l{layer}.ln2"])
+        hmid = qmm(ln2.reshape(b * s, d), f"l{layer}.win")
+        hmid = jax.nn.gelu(hmid)
+        x = x + qmm(hmid, f"l{layer}.wout").reshape(b, s, d)
+
+    x = _rmsnorm(x, p["lnf"])
+    return x @ p["head"]
+
+
+def lm_nll_q4(cfg: ModelCfg, block: int, *args):
+    """AOT entry for the quantized-forward NLL.
+
+    args = f32_params... , codes..., absmax..., levels, tokens
+    (order per meta.json).
+    """
+    n_f32 = len(param_names(cfg)) - len(matmul_param_names(cfg))
+    n_mm = len(matmul_param_names(cfg))
+    f32_params = list(args[:n_f32])
+    codes = list(args[n_f32 : n_f32 + n_mm])
+    absmax = list(args[n_f32 + n_mm : n_f32 + 2 * n_mm])
+    levels, tokens = args[-2], args[-1]
+    logits = forward_logits_q4(cfg, f32_params, codes, absmax, levels, tokens, block)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    picked = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return (-jnp.sum(picked, axis=-1),)
+
+
+# ------------------------------------------------------------------
+# Training (AdamW) and LoRA fine-tuning
+# ------------------------------------------------------------------
+
+
+def _adamw_update(cfg: ModelCfg, params, grads, m, v, step, *, decay_mask):
+    """One decoupled-weight-decay Adam update over flat lists."""
+    step = step + 1
+    t = step.astype(jnp.float32)
+    b1, b2 = cfg.beta1, cfg.beta2
+    # global-norm gradient clipping
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads) + 1e-12)
+    scale = jnp.minimum(1.0, cfg.grad_clip / gnorm)
+    new_p, new_m, new_v = [], [], []
+    for p, g, mi, vi, wd in zip(params, grads, m, v, decay_mask):
+        g = g * scale
+        mi = b1 * mi + (1 - b1) * g
+        vi = b2 * vi + (1 - b2) * g * g
+        mhat = mi / (1 - b1**t)
+        vhat = vi / (1 - b2**t)
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if wd:
+            upd = upd + cfg.weight_decay * p
+        new_p.append(p - cfg.lr * upd)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v, step
+
+
+def train_step(cfg: ModelCfg, *args):
+    """AOT entry: one AdamW step.
+
+    args = params... (P), m... (P), v... (P), step i32, tokens [B,S] i32.
+    Returns params'... , m'..., v'..., step', mean-NLL loss (scalar).
+    """
+    n = len(param_names(cfg))
+    params = list(args[:n])
+    m = list(args[n : 2 * n])
+    v = list(args[2 * n : 3 * n])
+    step, tokens = args[3 * n], args[3 * n + 1]
+
+    def loss_fn(ps):
+        per_seq = nll_per_seq(cfg, ps, tokens)
+        return jnp.sum(per_seq) / (tokens.shape[0] * (tokens.shape[1] - 1))
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    # decay matmul/embed weights, not norms (standard AdamW practice)
+    decay = [len(param_shapes(cfg)[nm]) >= 2 for nm in param_names(cfg)]
+    new_p, new_m, new_v, new_step = _adamw_update(
+        cfg, params, grads, m, v, step, decay_mask=decay
+    )
+    return (*new_p, *new_m, *new_v, new_step, loss)
+
+
+def lora_names(cfg: ModelCfg) -> list[str]:
+    """Flat LoRA parameter order: for each adapted matrix, A then B."""
+    out = []
+    for nm in matmul_param_names(cfg):
+        out.append(f"{nm}.lora_a")
+        out.append(f"{nm}.lora_b")
+    return out
+
+
+def lora_shapes(cfg: ModelCfg) -> dict[str, tuple[int, int]]:
+    shp = param_shapes(cfg)
+    out = {}
+    for nm in matmul_param_names(cfg):
+        k, n = shp[nm]
+        out[f"{nm}.lora_a"] = (k, cfg.lora_rank)
+        out[f"{nm}.lora_b"] = (cfg.lora_rank, n)
+    return out
+
+
+def init_lora(cfg: ModelCfg, seed) -> list[jnp.ndarray]:
+    """LoRA init: A ~ N(0, 1/sqrt(k)), B = 0 (adapter starts as identity)."""
+    key = jax.random.PRNGKey(seed)
+    names = lora_names(cfg)
+    keys = jax.random.split(key, len(names))
+    shapes = lora_shapes(cfg)
+    out = []
+    for nm, k in zip(names, keys):
+        shp = shapes[nm]
+        if nm.endswith(".lora_a"):
+            out.append(jax.random.normal(k, shp, jnp.float32) / math.sqrt(shp[0]))
+        else:
+            out.append(jnp.zeros(shp, jnp.float32))
+    return out
+
+
+def _lora_by_layer(cfg: ModelCfg, flat_lora):
+    """Regroup flat LoRA params into per-layer dicts used by the forward."""
+    d = dict(zip(lora_names(cfg), flat_lora))
+    scale = cfg.lora_alpha / cfg.lora_rank
+    out = []
+    for layer in range(cfg.n_layers):
+        out.append(
+            {
+                k: (d[f"l{layer}.{k}.lora_a"], d[f"l{layer}.{k}.lora_b"], scale)
+                for k in MATMUL_KEYS
+            }
+        )
+    return out
+
+
+def lora_step(cfg: ModelCfg, *args):
+    """AOT entry: one AdamW step over LoRA params with a frozen base.
+
+    args = base_params... (P, frozen — typically dequantized 4-bit),
+           lora... (L), m... (L), v... (L), step, tokens.
+    Returns lora'..., m'..., v'..., step', loss.
+    """
+    n = len(param_names(cfg))
+    nl = len(lora_names(cfg))
+    base = list(args[:n])
+    lora = list(args[n : n + nl])
+    m = list(args[n + nl : n + 2 * nl])
+    v = list(args[n + 2 * nl : n + 3 * nl])
+    step, tokens = args[n + 3 * nl], args[n + 3 * nl + 1]
+
+    def loss_fn(lr_params):
+        logits = forward_logits(cfg, base, tokens, _lora_by_layer(cfg, lr_params))
+        logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+        tgt = tokens[:, 1:]
+        picked = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        return -jnp.sum(picked) / (tokens.shape[0] * (tokens.shape[1] - 1))
+
+    loss, grads = jax.value_and_grad(loss_fn)(lora)
+    decay = [True] * nl
+    new_l, new_m, new_v, new_step = _adamw_update(
+        cfg, lora, grads, m, v, step, decay_mask=decay
+    )
+    return (*new_l, *new_m, *new_v, new_step, loss)
+
+
+def lm_logits_last_lora(cfg: ModelCfg, *args):
+    """AOT entry: last-position logits with LoRA adapters active."""
+    n = len(param_names(cfg))
+    nl = len(lora_names(cfg))
+    base = list(args[:n])
+    lora = list(args[n : n + nl])
+    tokens = args[n + nl]
+    logits = forward_logits(cfg, base, tokens, _lora_by_layer(cfg, lora))
+    return (logits[:, -1, :],)
+
+
+def lm_logits_all_lora(cfg: ModelCfg, *args):
+    """AOT entry: full logits [B, S, V] with LoRA adapters active."""
+    n = len(param_names(cfg))
+    nl = len(lora_names(cfg))
+    base = list(args[:n])
+    lora = list(args[n : n + nl])
+    tokens = args[n + nl]
+    logits = forward_logits(cfg, base, tokens, _lora_by_layer(cfg, lora))
+    return (logits,)

@@ -1,0 +1,84 @@
+"""AOT artifact integrity: meta.json structure, HLO text loadability."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "meta.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+EXPECTED_GRAPHS = [
+    "init_params",
+    "lm_nll",
+    "lm_logits_last",
+    "lm_nll_q4",
+    "train_step",
+    "lora_step",
+    "lm_logits_last_lora",
+    "dequant_matmul",
+    "quantize_blocks_abs",
+    "quantize_blocks_signed",
+]
+
+
+@pytest.fixture(scope="module")
+def meta():
+    with open(os.path.join(ART, "meta.json")) as f:
+        return json.load(f)
+
+
+def test_all_graphs_present(meta):
+    for g in EXPECTED_GRAPHS:
+        assert g in meta["graphs"], g
+        path = os.path.join(ART, meta["graphs"][g]["file"])
+        assert os.path.exists(path), path
+        text = open(path).read()
+        assert text.startswith("HloModule"), f"{g} is not HLO text"
+        assert "ENTRY" in text
+
+
+def test_train_step_abi_is_symmetric(meta):
+    g = meta["graphs"]["train_step"]
+    n_params = 16
+    assert len(g["args"]) == 3 * n_params + 2
+    assert len(g["results"]) == 3 * n_params + 2
+    # args and results share the params/m/v prefix naming
+    assert [a["name"] for a in g["args"][: 3 * n_params]] == g["results"][: 3 * n_params]
+
+
+def test_meta_shapes_match_model(meta):
+    from compile.model import ModelCfg, param_shapes
+
+    cfg = ModelCfg()
+    shapes = param_shapes(cfg)
+    by_name = {a["name"]: a for a in meta["graphs"]["lm_nll"]["args"]}
+    for name, shp in shapes.items():
+        assert tuple(by_name[name]["shape"]) == shp, name
+    assert meta["model"]["block"] == 64
+
+
+def test_fixtures_roundtrip():
+    from compile import codebooks
+    from compile.kernels import ref
+
+    with open(os.path.join(ART, "fixtures", "quant_fixtures.json")) as f:
+        fx = json.load(f)
+    w = np.array(fx["weights"], np.float32).reshape(16, 64)
+    entry = fx["nf4_signed0"]
+    codes, m = ref.quantize_blocks_ref(w, codebooks.NF4, False)
+    assert codes.reshape(-1).tolist() == entry["codes"]
+    np.testing.assert_allclose(m, np.array(entry["absmax"], np.float32))
+
+
+def test_no_mosaic_custom_calls(meta):
+    """interpret=True must have eliminated TPU-only custom calls."""
+    for g in EXPECTED_GRAPHS:
+        text = open(os.path.join(ART, meta["graphs"][g]["file"])).read()
+        assert "tpu_custom_call" not in text, g
+        assert "mosaic" not in text.lower(), g

@@ -1,0 +1,183 @@
+"""L1 kernel correctness: Pallas vs pure-jnp/numpy oracle (hypothesis sweeps).
+
+This is the CORE correctness signal for the compute layer: if these pass,
+the HLO artifacts embed kernels whose numerics match ``ref.py``, which the
+rust integration tests in turn pin against fixture files.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import codebooks
+from compile.kernels import dequant_matmul as dqm
+from compile.kernels import quantize as qz
+from compile.kernels import ref
+
+ALL_BOOKS = {
+    "nf4": codebooks.NF4,
+    "bof4-mse-64": codebooks.BOF4_MSE_64,
+    "bof4-mae-64": codebooks.BOF4_MAE_64,
+    "bof4s-mse-64": codebooks.BOF4_S_MSE_64,
+    "bof4s-mae-64": codebooks.BOF4_S_MAE_64,
+}
+
+
+def _bounds(levels):
+    return codebooks.decision_boundaries(levels).astype(np.float32)
+
+
+# ---------------------------------------------------------------------
+# quantize kernel
+# ---------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("book", list(ALL_BOOKS))
+@pytest.mark.parametrize("signed", [False, True])
+def test_quantize_matches_ref_basic(book, signed):
+    rng = np.random.default_rng(42)
+    w = rng.normal(size=(32, 64)).astype(np.float32)
+    levels = ALL_BOOKS[book]
+    codes, m = qz.quantize_blocks(w, _bounds(levels), signed=signed)
+    codes_r, m_r = ref.quantize_blocks_ref(w, levels, signed)
+    np.testing.assert_array_equal(np.asarray(codes), codes_r)
+    np.testing.assert_allclose(np.asarray(m), m_r)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(1, 8).map(lambda k: 8 * k),
+    width_pow=st.integers(4, 8),
+    signed=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantize_matches_ref_swept(blocks, width_pow, signed, seed):
+    """Hypothesis sweep over block counts, block widths (2^4..2^8), seeds."""
+    i = 2**width_pow
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(blocks, i)).astype(np.float32) * rng.uniform(0.01, 10)
+    levels = codebooks.BOF4_S_MSE_64
+    codes, m = qz.quantize_blocks(w, _bounds(levels), signed=signed)
+    codes_r, m_r = ref.quantize_blocks_ref(w, levels, signed)
+    np.testing.assert_array_equal(np.asarray(codes), codes_r)
+    np.testing.assert_allclose(np.asarray(m), m_r)
+
+
+def test_quantize_zero_block_is_safe():
+    w = np.zeros((8, 64), dtype=np.float32)
+    levels = codebooks.NF4
+    codes, m = qz.quantize_blocks(w, _bounds(levels), signed=False)
+    # absmax reported as 0, codes all encode 0 (level index 7 for NF4)
+    np.testing.assert_allclose(np.asarray(m), 0.0)
+    assert np.all(np.asarray(codes) == 7)
+
+
+def test_quantize_signed_flips_endpoint():
+    """A block whose largest-magnitude weight is negative must normalize to
+    +1 at that position under signed normalization."""
+    rng = np.random.default_rng(7)
+    w = rng.normal(size=(8, 64)).astype(np.float32)
+    w[:, 0] = -10.0  # force the max-magnitude weight negative
+    levels = codebooks.BOF4_S_MSE_64
+    codes, m = qz.quantize_blocks(w, _bounds(levels), signed=True)
+    assert np.all(np.asarray(m) == -10.0)
+    # normalized first entry = -10 / -10 = +1 -> top level (15)
+    assert np.all(np.asarray(codes)[:, 0] == 15)
+
+
+def test_dequantize_roundtrip_error_bounded():
+    """|w - dq(q(w))| <= absmax * max half-gap of the codebook."""
+    rng = np.random.default_rng(3)
+    w = rng.normal(size=(16, 64)).astype(np.float32)
+    levels = codebooks.BOF4_MSE_64
+    codes, m = qz.quantize_blocks(w, _bounds(levels), signed=False)
+    deq = np.asarray(qz.dequantize_blocks(np.asarray(codes), np.asarray(m), levels))
+    gaps = np.diff(levels)
+    max_half_gap = gaps.max() / 2
+    err = np.abs(w - deq)
+    assert np.all(err <= np.abs(np.asarray(m))[:, None] * max_half_gap + 1e-6)
+
+
+# ---------------------------------------------------------------------
+# fused dequant-matmul kernel
+# ---------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(8, 128, 128), (16, 128, 256), (8, 256, 384)])
+def test_dequant_matmul_matches_ref(shape):
+    m_, k, n = shape
+    rng = np.random.default_rng(11)
+    x = rng.normal(size=(m_, k)).astype(np.float32)
+    wmat = rng.normal(size=(k, n)).astype(np.float32)
+    levels = codebooks.BOF4_S_MSE_64
+    codes, amax = ref.quantize_blocks_ref(wmat.reshape(-1, 64), levels, True)
+    codes = codes.reshape(k, n)
+    amax = amax.reshape(k, n // 64)
+    y = dqm.dequant_matmul(x, codes, amax, levels, block=64)
+    y_r = ref.dequant_matmul_ref(x, codes, amax, levels)
+    np.testing.assert_allclose(np.asarray(y), y_r, rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m_mul=st.integers(1, 3),
+    k_mul=st.integers(1, 2),
+    n_mul=st.integers(1, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dequant_matmul_swept(m_mul, k_mul, n_mul, seed):
+    m_, k, n = 8 * m_mul, 128 * k_mul, 128 * n_mul
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(m_, k)).astype(np.float32)
+    wmat = rng.normal(size=(k, n)).astype(np.float32)
+    levels = codebooks.NF4
+    codes, amax = ref.quantize_blocks_ref(wmat.reshape(-1, 64), levels, False)
+    codes = codes.reshape(k, n)
+    amax = amax.reshape(k, n // 64)
+    y = dqm.dequant_matmul(x, codes, amax, levels, block=64)
+    y_r = ref.dequant_matmul_ref(x, codes, amax, levels)
+    np.testing.assert_allclose(np.asarray(y), y_r, rtol=1e-4, atol=1e-3)
+
+
+def test_dequant_matmul_rejects_bad_tiling():
+    x = np.zeros((8, 128), np.float32)
+    codes = np.zeros((128, 100), np.uint8)  # N not tiled
+    amax = np.zeros((128, 2), np.float32)
+    with pytest.raises(ValueError):
+        dqm.dequant_matmul(x, codes, amax, codebooks.NF4, block=50)
+
+
+def test_vmem_estimate_monotone():
+    """Perf-model sanity: VMEM grows with tile sizes."""
+    a = dqm.vmem_bytes(8, 128, 128, 64)
+    b = dqm.vmem_bytes(8, 256, 128, 64)
+    c = dqm.vmem_bytes(8, 256, 256, 64)
+    assert a < b < c
+
+
+# ---------------------------------------------------------------------
+# oracle self-consistency
+# ---------------------------------------------------------------------
+
+
+def test_encode_ref_tie_goes_up():
+    levels = codebooks.NF4
+    bounds = codebooks.decision_boundaries(levels)
+    x = np.array([bounds[7]], dtype=np.float32)  # exactly on a boundary
+    assert ref.encode_ref(x, levels)[0] == 8
+
+
+def test_quantize_tensor_ref_pads():
+    w = np.arange(100, dtype=np.float32)
+    codes, m = ref.quantize_tensor_ref(w, codebooks.NF4, 64, False)
+    assert codes.shape == (2, 64)
+    assert m.shape == (2,)
+
+
+def test_opq_mask_flags_planted_outliers():
+    rng = np.random.default_rng(5)
+    w = rng.normal(size=(8, 64)).astype(np.float32)
+    w[2, 10] = 50.0
+    mask = ref.opq_outlier_mask_ref(w, 3.3524)
+    assert mask[2, 10]
+    assert mask.sum() <= 3  # at ~q=0.95 for I=64, false alarms are rare

@@ -1,0 +1,154 @@
+//! Paper Fig. 2: MAE and MSE quantization error vs block size I for NF4,
+//! AF4, BOF4 and BOF4-S (each optimized for the plotted metric), on
+//! N(0, 1) weights. Also regenerates the Fig. 4/5 distribution plots with
+//! `--distributions` (or BOF4_DISTRIBUTIONS=1).
+//!
+//! Paper setup: 2^25 samples; we default to 2^23 (identical curves to
+//! within line width; raise with BOF4_FIG2_SAMPLES).
+
+use bof4::eval::report::{ascii_plot, write_series, Table};
+use bof4::quant::{quant_error, Method, Norm, QuantConfig, Quantizer};
+use bof4::util::rng::Pcg64;
+
+fn main() {
+    bof4::util::log::init_from_env();
+    let n_samples: usize = std::env::var("BOF4_FIG2_SAMPLES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1 << 23);
+    let blocks: Vec<usize> = vec![16, 32, 64, 128, 256, 512, 1024, 2048, 4096];
+    let distributions = std::env::args().any(|a| a == "--distributions")
+        || std::env::var("BOF4_DISTRIBUTIONS").is_ok();
+
+    println!("Fig. 2 reproduction: {n_samples} Gaussian samples per block size\n");
+    let mut rng = Pcg64::seed_from_u64(0xF162);
+    let mut w = vec![0.0f32; n_samples];
+    rng.fill_gaussian_f32(&mut w, 1.0);
+
+    // (label, method, norm, optimize-for-mse?) per panel
+    let mae_panel: Vec<(&str, Method, Norm)> = vec![
+        ("NF4", Method::Nf4, Norm::Absmax),
+        ("AF4", Method::Af4, Norm::Absmax),
+        ("BOF4 (MAE)", Method::Bof4 { mse: false }, Norm::Absmax),
+        ("BOF4-S (MAE)", Method::Bof4 { mse: false }, Norm::SignedAbsmax),
+    ];
+    let mse_panel: Vec<(&str, Method, Norm)> = vec![
+        ("NF4", Method::Nf4, Norm::Absmax),
+        ("AF4", Method::Af4, Norm::Absmax),
+        ("BOF4 (MSE)", Method::Bof4 { mse: true }, Norm::Absmax),
+        ("BOF4-S (MSE)", Method::Bof4 { mse: true }, Norm::SignedAbsmax),
+    ];
+
+    let mut table = Table::new(
+        "Fig. 2 — quantization error vs block size (Gaussian weights)",
+        &["I", "panel", "quantizer", "MAE", "MSE"],
+    );
+    let mut mae_series: Vec<(&str, Vec<(f64, f64)>)> =
+        mae_panel.iter().map(|(l, _, _)| (*l, Vec::new())).collect();
+    let mut mse_series: Vec<(&str, Vec<(f64, f64)>)> =
+        mse_panel.iter().map(|(l, _, _)| (*l, Vec::new())).collect();
+
+    for &block in &blocks {
+        for (panel, set, series) in [
+            ("MAE", &mae_panel, &mut mae_series),
+            ("MSE", &mse_panel, &mut mse_series),
+        ] {
+            for (si, (label, method, norm)) in set.iter().enumerate() {
+                let q = Quantizer::new(QuantConfig {
+                    method: method.clone(),
+                    norm: *norm,
+                    block,
+                    ..Default::default()
+                });
+                let (mae, mse) = quant_error(&q, &w);
+                table.row(vec![
+                    block.to_string(),
+                    panel.to_string(),
+                    label.to_string(),
+                    format!("{mae:.6e}"),
+                    format!("{mse:.6e}"),
+                ]);
+                let y = if panel == "MAE" { mae } else { mse };
+                series[si].1.push((block as f64, y.ln()));
+            }
+        }
+        println!("I = {block} done");
+    }
+
+    println!();
+    println!("{}", ascii_plot("Fig 2 left: ln MAE vs block index", &mae_series, 14));
+    println!("{}", ascii_plot("Fig 2 right: ln MSE vs block index", &mse_series, 14));
+    table.emit("fig2_quant_error").unwrap();
+    write_series("fig2_mae_series", "block", &mae_series).unwrap();
+    write_series("fig2_mse_series", "block", &mse_series).unwrap();
+
+    if distributions {
+        figs_4_5();
+    }
+
+    // Shape assertions (the paper's qualitative claims):
+    check_ordering(&w);
+}
+
+/// Fig. 4: histogram of normalized weights for several block sizes.
+/// Fig. 5: F_X CDF for absolute vs signed normalization (I = 8).
+fn figs_4_5() {
+    use bof4::stats::blockmax::{fx_marginal, Norm as BNorm};
+    use bof4::stats::histogram::Histogram;
+    use bof4::util::rng::Pcg64;
+
+    println!("\nFig. 4 — p_X(x) for block sizes 16 / 64 / 256:");
+    for block in [16usize, 64, 256] {
+        let mut h = Histogram::new(-1.0, 1.0, 120);
+        let mut rng = Pcg64::seed_from_u64(0xF4);
+        let mut buf = vec![0.0f32; block];
+        for _ in 0..200_000 / block {
+            rng.fill_gaussian_f32(&mut buf, 1.0);
+            let m = buf.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+            for &v in &buf {
+                h.add((v / m) as f64);
+            }
+        }
+        println!("  I={block:<4} {}", h.sparkline(72));
+    }
+
+    println!("\nFig. 5 — F_X(x), I = 8 (abs vs signed normalization):");
+    let xs: Vec<f64> = (0..=40).map(|i| -1.0 + i as f64 / 20.0).collect();
+    let mut series = Vec::new();
+    let abs_pts: Vec<(f64, f64)> = xs
+        .iter()
+        .map(|&x| (x, fx_marginal(x, 8, BNorm::Absmax)))
+        .collect();
+    let signed_pts: Vec<(f64, f64)> = xs
+        .iter()
+        .map(|&x| (x, fx_marginal(x, 8, BNorm::SignedAbsmax)))
+        .collect();
+    series.push(("absolute", abs_pts));
+    series.push(("signed", signed_pts));
+    println!("{}", ascii_plot("F_X(x) x in [-1,1]", &series, 12));
+    write_series("fig5_fx_cdf", "x", &series).unwrap();
+}
+
+fn check_ordering(w: &[f32]) {
+    let e = |method: Method, norm: Norm, block: usize, mse: bool| -> f64 {
+        let q = Quantizer::new(QuantConfig {
+            method,
+            norm,
+            block,
+            ..Default::default()
+        });
+        let (mae, mse_v) = quant_error(&q, w);
+        if mse {
+            mse_v
+        } else {
+            mae
+        }
+    };
+    for block in [64usize, 256] {
+        let nf4 = e(Method::Nf4, Norm::Absmax, block, true);
+        let bof4 = e(Method::Bof4 { mse: true }, Norm::Absmax, block, true);
+        let bof4s = e(Method::Bof4 { mse: true }, Norm::SignedAbsmax, block, true);
+        assert!(bof4 <= nf4 && bof4s < bof4, "I={block} MSE ordering broken");
+    }
+    println!("ordering checks passed: BOF4-S < BOF4 <= NF4 (MSE), as in the paper");
+}

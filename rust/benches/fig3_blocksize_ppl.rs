@@ -1,0 +1,104 @@
+//! Paper Fig. 3 (BOF4-S) / Fig. 12 (BOF4): perplexity vs block size for
+//! NF4, AF4 and BOF4(-S) with and without OPQ.
+
+use std::sync::Arc;
+
+use bof4::eval::report::{ascii_plot, write_series, Table};
+use bof4::eval::{ppl, quantize_params};
+use bof4::quant::{Method, Norm, OpqConfig, QuantConfig};
+use bof4::runtime::Runtime;
+
+fn main() {
+    bof4::util::log::init_from_env();
+    let rt = Arc::new(Runtime::new().expect("runtime"));
+    let base = bof4::eval::ensure_trained(&rt).expect("trained model");
+    let pcfg = ppl::PplConfig::default();
+    let blocks: Vec<usize> = vec![16, 32, 64, 128, 256, 512, 1024];
+
+    // Fig. 3 uses the signed variants, Fig. 12 the absolute ones.
+    let panels: Vec<(&str, Norm)> = vec![
+        ("fig3 (BOF4-S)", Norm::SignedAbsmax),
+        ("fig12 (BOF4)", Norm::Absmax),
+    ];
+
+    for (panel, norm) in panels {
+        let mut configs: Vec<(String, QuantConfig)> = vec![
+            (
+                "NF4".into(),
+                QuantConfig {
+                    method: Method::Nf4,
+                    norm: Norm::Absmax,
+                    ..Default::default()
+                },
+            ),
+            (
+                "AF4".into(),
+                QuantConfig {
+                    method: Method::Af4,
+                    norm: Norm::Absmax,
+                    ..Default::default()
+                },
+            ),
+        ];
+        for (mse, tag) in [(true, "MSE"), (false, "MAE")] {
+            let b = QuantConfig {
+                method: Method::Bof4 { mse },
+                norm,
+                ..Default::default()
+            };
+            configs.push((format!("BOF4{} ({tag})", s(norm)), b.clone()));
+            configs.push((
+                format!("BOF4{} ({tag}) +OPQ", s(norm)),
+                QuantConfig {
+                    opq: Some(OpqConfig::default()),
+                    ..b
+                },
+            ));
+        }
+
+        let mut table = Table::new(
+            &format!("{panel}: PPL vs block size"),
+            &["I", "quantizer", "MSE", "PPL"],
+        );
+        let mut series: Vec<(String, Vec<(f64, f64)>)> = configs
+            .iter()
+            .map(|(l, _)| (l.clone(), Vec::new()))
+            .collect();
+        for &block in &blocks {
+            for (ci, (label, cfg)) in configs.iter().enumerate() {
+                let mut c = cfg.clone();
+                c.block = block;
+                let qm = quantize_params(&base, &c).unwrap();
+                let p = ppl::perplexity(&rt, &qm.params, &pcfg).unwrap();
+                table.row(vec![
+                    block.to_string(),
+                    label.clone(),
+                    format!("{:.4e}", qm.mse),
+                    format!("{p:.4}"),
+                ]);
+                series[ci].1.push((block as f64, p));
+            }
+            println!("{panel}: I = {block} done");
+        }
+        let stem = if norm == Norm::SignedAbsmax {
+            "fig3_blocksize_ppl"
+        } else {
+            "fig12_blocksize_ppl"
+        };
+        table.emit(stem).unwrap();
+        let named: Vec<(&str, Vec<(f64, f64)>)> = series
+            .iter()
+            .map(|(l, v)| (l.as_str(), v.clone()))
+            .collect();
+        println!("{}", ascii_plot(&format!("{panel}: PPL"), &named, 12));
+        write_series(&format!("{stem}_series"), "block", &named).unwrap();
+    }
+}
+
+fn s(norm: Norm) -> &'static str {
+    if norm == Norm::SignedAbsmax {
+        "-S"
+    } else {
+        ""
+    }
+}

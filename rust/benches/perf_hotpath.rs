@@ -1,0 +1,133 @@
+//! §Perf — the hot-path microbench suite driving the optimization log in
+//! EXPERIMENTS.md: L3 encode/decode throughput, packing, scheduler
+//! scaling, XLA graph latency, EM design cost.
+
+use std::sync::Arc;
+
+use bof4::bench::{bench, Measurement};
+use bof4::eval::report::Table;
+use bof4::quant::{Method, Norm, QuantConfig, Quantizer};
+use bof4::runtime::{HostTensor, Meta, Runtime};
+use bof4::util::rng::Pcg64;
+
+fn main() {
+    bof4::util::log::init_from_env();
+    let n = 1 << 22; // 4M weights
+    let mut w = vec![0.0f32; n];
+    Pcg64::seed_from_u64(1).fill_gaussian_f32(&mut w, 0.05);
+
+    let mut table = Table::new(
+        "§Perf — hot-path microbenchmarks",
+        &["path", "mean", "throughput"],
+    );
+    let mut push = |m: &Measurement, items: f64, unit: &str| {
+        table.row(vec![
+            m.name.clone(),
+            bof4::util::timer::fmt_duration(m.mean),
+            format!("{:.3} {unit}", m.throughput(items) / 1e9),
+        ]);
+    };
+
+    // --- L3 quantize (encode) path -------------------------------------
+    let q = Quantizer::new(QuantConfig {
+        method: Method::Bof4 { mse: true },
+        norm: Norm::SignedAbsmax,
+        ..Default::default()
+    });
+    let m = bench("quantize 4M (BOF4-S, I=64)", 2, 10, || {
+        std::hint::black_box(q.quantize(&w));
+    });
+    push(&m, n as f64, "Gweights/s");
+
+    // --- L3 dequantize (decode) path ------------------------------------
+    let qt = q.quantize(&w);
+    let m = bench("dequantize 4M", 2, 12, || {
+        std::hint::black_box(q.dequantize(&qt));
+    });
+    push(&m, n as f64, "Gweights/s");
+
+    // --- nibble packing --------------------------------------------------
+    let codes: Vec<u8> = (0..n).map(|i| (i % 16) as u8).collect();
+    let m = bench("pack_u4 4M", 2, 12, || {
+        std::hint::black_box(bof4::quant::pack::pack_u4(&codes));
+    });
+    push(&m, n as f64, "Gcodes/s");
+    let packed = bof4::quant::pack::pack_u4(&codes);
+    let m = bench("unpack_u4 4M", 2, 12, || {
+        std::hint::black_box(bof4::quant::pack::unpack_u4(&packed, n));
+    });
+    push(&m, n as f64, "Gcodes/s");
+
+    // --- scheduler scaling ----------------------------------------------
+    for workers in [1usize, 2, 4] {
+        let sched = bof4::coordinator::QuantScheduler::new(QuantConfig::default())
+            .with_workers(workers);
+        let jobs: Vec<bof4::coordinator::QuantJob> = (0..8)
+            .map(|i| bof4::coordinator::QuantJob {
+                name: format!("t{i}"),
+                data: w[..1 << 19].to_vec(),
+            })
+            .collect();
+        let m = bench(&format!("scheduler 8x512K ({workers}w)"), 1, 5, || {
+            std::hint::black_box(sched.run(jobs.clone()).unwrap());
+        });
+        push(&m, 8.0 * (1 << 19) as f64, "Gweights/s");
+    }
+
+    // --- EM design cost ---------------------------------------------------
+    let m = bench("EM design (2^20 samples)", 0, 3, || {
+        let cfg = bof4::lloyd::EmConfig::new(
+            bof4::lloyd::Metric::Mse,
+            Norm::SignedAbsmax,
+            64,
+        );
+        std::hint::black_box(bof4::lloyd::design_empirical(&cfg, 1 << 20, 7));
+    });
+    push(&m, (1 << 20) as f64, "Gsamples/s");
+
+    // --- XLA graph latency (requires artifacts) --------------------------
+    if Meta::default_dir().join("meta.json").exists() {
+        let rt = Arc::new(Runtime::new().unwrap());
+        let params = rt
+            .run("init_params", &[HostTensor::scalar_u32(1)])
+            .unwrap();
+        let mmeta = rt.meta.model.clone();
+        let toks =
+            HostTensor::i32(vec![1; mmeta.batch * mmeta.seq_len], vec![mmeta.batch, mmeta.seq_len]);
+        let mut args = params.clone();
+        args.push(toks);
+        let m = bench("lm_nll graph (B=16,S=64)", 2, 15, || {
+            std::hint::black_box(rt.run("lm_nll", &args).unwrap());
+        });
+        let tokens = (mmeta.batch * mmeta.seq_len) as f64;
+        table.row(vec![
+            m.name.clone(),
+            bof4::util::timer::fmt_duration(m.mean),
+            format!("{:.1} Ktok/s", m.throughput(tokens) / 1e3),
+        ]);
+
+        // fused dequant-matmul kernel
+        let gm = rt.meta.graph("dequant_matmul").unwrap().clone();
+        let (mm, k) = (gm.args[0].shape[0], gm.args[0].shape[1]);
+        let nn = gm.args[1].shape[1];
+        let kernel_args = [
+            HostTensor::f32(vec![0.5; mm * k], vec![mm, k]),
+            HostTensor::u8(vec![7; k * nn], vec![k, nn]),
+            HostTensor::f32(vec![1.0; k * nn / 64], vec![k, nn / 64]),
+            HostTensor::f32(q.codebook.levels.to_vec(), vec![16]),
+        ];
+        let m = bench("dequant_matmul graph (Pallas)", 2, 15, || {
+            std::hint::black_box(rt.run("dequant_matmul", &kernel_args).unwrap());
+        });
+        let flops = 2.0 * mm as f64 * k as f64 * nn as f64;
+        table.row(vec![
+            m.name.clone(),
+            bof4::util::timer::fmt_duration(m.mean),
+            format!("{:.2} GFLOP/s (interpret)", m.throughput(flops) / 1e9),
+        ]);
+    } else {
+        println!("(artifacts missing: skipping XLA graph benches)");
+    }
+
+    table.emit("perf_hotpath").unwrap();
+}

@@ -1,0 +1,83 @@
+//! Paper Table 1 / Table 9: MAE, MSE and perplexity per quantizer at
+//! block size I = 64.
+//!
+//! Two model sets: (a) the trained in-repo LM (real perplexity signal);
+//! (b) the synthetic llama/qwen/mistral-like checkpoints (error only —
+//! they have no language behaviour, standing in for the paper's larger
+//! models' weight statistics).
+
+use std::sync::Arc;
+
+use bof4::bench::paper_lineup;
+use bof4::eval::report::Table;
+use bof4::eval::{ppl, quantize_params};
+use bof4::models::{ParamSet, SyntheticModel};
+use bof4::runtime::Runtime;
+
+fn main() {
+    bof4::util::log::init_from_env();
+    let rt = Arc::new(Runtime::new().expect("runtime (run `make artifacts`)"));
+    let base = bof4::eval::ensure_trained(&rt).expect("trained model");
+
+    // --- (a) trained LM: MAE / MSE / PPL --------------------------------
+    let mut t1 = Table::new(
+        "Table 1 (trained in-repo LM, I=64): error + perplexity",
+        &["quantizer", "MAE", "MSE", "PPL"],
+    );
+    let pcfg = ppl::PplConfig::default();
+    let bf16_ppl = ppl::perplexity(&rt, &base, &pcfg).unwrap();
+    t1.row(vec![
+        "BF16 (reference)".into(),
+        "0".into(),
+        "0".into(),
+        format!("{bf16_ppl:.4}"),
+    ]);
+    for cfg in paper_lineup(64) {
+        let qm = quantize_params(&base, &cfg).unwrap();
+        let p = ppl::perplexity(&rt, &qm.params, &pcfg).unwrap();
+        t1.row(vec![
+            cfg.label(),
+            format!("{:.4e}", qm.mae),
+            format!("{:.4e}", qm.mse),
+            format!("{p:.4}"),
+        ]);
+        println!("  {} done", cfg.label());
+    }
+    t1.emit("tab1_trained_lm").unwrap();
+
+    // --- (b) synthetic paper-suite checkpoints: error only --------------
+    let mut t9 = Table::new(
+        "Table 1/9 (synthetic LLM-like checkpoints, I=64): weight error",
+        &["model", "quantizer", "MAE", "MSE", "bits/w"],
+    );
+    for model in SyntheticModel::paper_suite() {
+        let params = ParamSet {
+            entries: model
+                .tensors
+                .iter()
+                .map(|(s, d)| (s.name.clone(), vec![s.rows, s.cols], d.clone()))
+                .collect(),
+        };
+        for cfg in paper_lineup(64) {
+            let qm = quantize_params(&params, &cfg).unwrap();
+            t9.row(vec![
+                model.name.clone(),
+                cfg.label(),
+                format!("{:.4e}", qm.mae),
+                format!("{:.4e}", qm.mse),
+                format!(
+                    "{:.3}",
+                    8.0 * qm.quant_bytes as f64 / (qm.orig_bytes / 4) as f64
+                ),
+            ]);
+        }
+        println!("  {} done", model.name);
+    }
+    t9.emit("tab1_9_synthetic").unwrap();
+
+    println!(
+        "paper shape check: within each column, BOF4-S rows should sit below\n\
+         BOF4 rows, which sit at-or-below NF4/AF4; +OPQ rows lowest.\n\
+         (Asserted programmatically in rust/tests/quant_pipeline.rs.)"
+    );
+}

@@ -1,0 +1,123 @@
+//! Paper Tables 6/7/8 and Fig. 1: codebook regeneration.
+//!
+//! - Table 6: BOF4 / BOF4-S levels (MAE & MSE, I = 64) from our EM vs the
+//!   paper's published constants.
+//! - Table 7: BOF4-S (MSE) levels for I ∈ {32, 64, 128, 256}.
+//! - Table 8: empirical vs theoretical centroid computation, per-level
+//!   deviations and the eq.-70 dB agreement metric.
+//! - Fig. 1: levels + decision thresholds for the two normalizations.
+
+use bof4::eval::report::Table;
+use bof4::lloyd::{
+    codebook_mse_db, design_empirical, design_theoretical, EmConfig, Metric,
+};
+use bof4::quant::codebook::{
+    bof4_s_mse_published, BOF4_MAE_64, BOF4_MSE_64, BOF4_S_MAE_64, BOF4_S_MSE_64,
+};
+use bof4::quant::Norm;
+
+const N_SAMPLES: usize = 1 << 22;
+
+fn main() {
+    bof4::util::log::init_from_env();
+
+    // --- Table 6 --------------------------------------------------------
+    let mut t6 = Table::new(
+        "Table 6 — BOF4/BOF4-S levels at I=64: our EM vs paper constants",
+        &["ℓ", "variant", "ours", "paper", "|Δ|"],
+    );
+    let variants: Vec<(&str, Metric, Norm, [f32; 16])> = vec![
+        ("BOF4 (MAE)", Metric::Mae, Norm::Absmax, BOF4_MAE_64),
+        ("BOF4 (MSE)", Metric::Mse, Norm::Absmax, BOF4_MSE_64),
+        ("BOF4-S (MAE)", Metric::Mae, Norm::SignedAbsmax, BOF4_S_MAE_64),
+        ("BOF4-S (MSE)", Metric::Mse, Norm::SignedAbsmax, BOF4_S_MSE_64),
+    ];
+    for (label, metric, norm, paper) in &variants {
+        let cfg = EmConfig::new(*metric, *norm, 64);
+        let cb = design_empirical(&cfg, N_SAMPLES, 0x7AB6);
+        let mut max_dev = 0.0f32;
+        for (l, (ours, want)) in cb.levels.iter().zip(paper).enumerate() {
+            let dev = (ours - want).abs();
+            max_dev = max_dev.max(dev);
+            t6.row(vec![
+                (l + 1).to_string(),
+                label.to_string(),
+                format!("{ours:+.7}"),
+                format!("{want:+.7}"),
+                format!("{dev:.1e}"),
+            ]);
+        }
+        println!("{label}: max deviation from paper constants {max_dev:.2e}");
+        assert!(max_dev < 5e-3, "{label} diverged from the paper");
+    }
+    t6.emit("tab6_codebooks").unwrap();
+
+    // --- Table 7 --------------------------------------------------------
+    let mut t7 = Table::new(
+        "Table 7 — BOF4-S (MSE) levels per block size: ours vs paper",
+        &["ℓ", "I", "ours", "paper", "|Δ|"],
+    );
+    for block in [32usize, 64, 128, 256] {
+        let cfg = EmConfig::new(Metric::Mse, Norm::SignedAbsmax, block);
+        let cb = design_empirical(&cfg, N_SAMPLES.max(block * 4096), 0x7AB7);
+        let paper = bof4_s_mse_published(block).unwrap();
+        for (l, (ours, want)) in cb.levels.iter().zip(&paper).enumerate() {
+            t7.row(vec![
+                (l + 1).to_string(),
+                block.to_string(),
+                format!("{ours:+.7}"),
+                format!("{want:+.7}"),
+                format!("{:.1e}", (ours - want).abs()),
+            ]);
+        }
+        println!("Table 7 I={block} done");
+    }
+    t7.emit("tab7_codebooks").unwrap();
+
+    // --- Table 8 --------------------------------------------------------
+    let cfg = EmConfig::new(Metric::Mse, Norm::Absmax, 64);
+    let emp = design_empirical(&cfg, N_SAMPLES, 0x7AB8);
+    let theo = design_theoretical(&cfg);
+    let mut t8 = Table::new(
+        "Table 8 — empirical vs theoretical centroid backends (BOF4 MSE, I=64)",
+        &["ℓ", "empirical", "theoretical", "|Δ|"],
+    );
+    for l in 0..16 {
+        t8.row(vec![
+            (l + 1).to_string(),
+            format!("{:+.10}", emp.levels[l]),
+            format!("{:+.10}", theo.levels[l]),
+            format!("{:.3e}", (emp.levels[l] - theo.levels[l]).abs()),
+        ]);
+    }
+    let db = codebook_mse_db(&theo, &emp, 64, Norm::Absmax);
+    t8.emit("tab8_backend_equivalence").unwrap();
+    println!(
+        "eq. 70 agreement: {db:.2} dB (paper reports -56.34 dB at 2^25+ samples)"
+    );
+    assert!(db < -40.0, "backends disagree: {db} dB");
+
+    // --- Fig. 1 ---------------------------------------------------------
+    println!("\nFig. 1 — levels (▼) and thresholds (|), I = 64, MSE-optimal:");
+    for (name, cb) in [
+        ("BOF4   (absolute)", {
+            let c = EmConfig::new(Metric::Mse, Norm::Absmax, 64);
+            design_theoretical(&c)
+        }),
+        ("BOF4-S (signed)  ", {
+            let c = EmConfig::new(Metric::Mse, Norm::SignedAbsmax, 64);
+            design_theoretical(&c)
+        }),
+    ] {
+        let mut line = vec![' '; 101];
+        for b in cb.bounds.iter().take(15) {
+            let pos = (((b + 1.0) / 2.0) * 100.0).round() as usize;
+            line[pos.min(100)] = '|';
+        }
+        for l in cb.levels.iter() {
+            let pos = (((l + 1.0) / 2.0) * 100.0).round() as usize;
+            line[pos.min(100)] = 'v';
+        }
+        println!("  {name} -1 {} +1", line.into_iter().collect::<String>());
+    }
+}

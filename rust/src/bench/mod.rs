@@ -1,0 +1,140 @@
+//! Measurement harness (criterion is unavailable offline): warmup +
+//! timed iterations with mean/p50/p95 and throughput reporting.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean.as_secs_f64()
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>10}  p50 {:>10}  p95 {:>10}",
+            self.name,
+            self.iters,
+            crate::util::timer::fmt_duration(self.mean),
+            crate::util::timer::fmt_duration(self.p50),
+            crate::util::timer::fmt_duration(self.p95),
+        )
+    }
+}
+
+/// Run `f` with warmup, then time `iters` iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let total: Duration = times.iter().sum();
+    let m = Measurement {
+        name: name.to_string(),
+        iters,
+        mean: total / iters as u32,
+        p50: times[iters / 2],
+        p95: times[(iters as f64 * 0.95) as usize % iters],
+        min: times[0],
+    };
+    println!("{}", m.report());
+    m
+}
+
+/// Auto-calibrated variant: choose the iteration count so the measured
+/// phase takes roughly `target`.
+pub fn bench_auto<F: FnMut()>(name: &str, target: Duration, mut f: F) -> Measurement {
+    // one probe run
+    let t0 = Instant::now();
+    f();
+    let probe = t0.elapsed().max(Duration::from_nanos(100));
+    let iters = (target.as_secs_f64() / probe.as_secs_f64()).clamp(3.0, 10_000.0) as usize;
+    bench(name, (iters / 10).max(1), iters, f)
+}
+
+/// The paper's standard quantizer line-up (Tables 1/2/9/10 rows), in
+/// presentation order. `block` parameterizes every entry.
+pub fn paper_lineup(block: usize) -> Vec<crate::quant::QuantConfig> {
+    use crate::quant::{Method, Norm, OpqConfig, QuantConfig};
+    let base = |method: Method, norm: Norm| QuantConfig {
+        method,
+        norm,
+        block,
+        opq: None,
+        double_quant: false,
+    };
+    let with_opq = |mut c: QuantConfig| {
+        c.opq = Some(OpqConfig::default());
+        c
+    };
+    vec![
+        base(Method::Nf4, Norm::Absmax),
+        base(Method::Af4, Norm::Absmax),
+        base(Method::Bof4 { mse: false }, Norm::Absmax),
+        base(Method::Bof4 { mse: true }, Norm::Absmax),
+        base(Method::Bof4 { mse: false }, Norm::SignedAbsmax),
+        with_opq(base(Method::Bof4 { mse: false }, Norm::SignedAbsmax)),
+        base(Method::Bof4 { mse: true }, Norm::SignedAbsmax),
+        with_opq(base(Method::Bof4 { mse: true }, Norm::SignedAbsmax)),
+    ]
+}
+
+/// Env-tunable scale factor for bench workloads (`BOF4_BENCH_SCALE`,
+/// default 1.0; smaller = faster smoke runs).
+pub fn scale() -> f64 {
+    std::env::var("BOF4_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0)
+}
+
+/// Scaled count helper.
+pub fn scaled(n: usize) -> usize {
+    ((n as f64) * scale()).max(1.0) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lineup_has_paper_rows() {
+        let l = paper_lineup(64);
+        assert_eq!(l.len(), 8);
+        assert_eq!(l[0].label(), "NF4");
+        assert_eq!(l[7].label(), "BOF4-S (MSE) +OPQ");
+    }
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let m = bench("noop-ish", 2, 50, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(m.iters, 50);
+        assert!(m.min <= m.p50 && m.p50 <= m.p95);
+        assert!(m.throughput(1000.0) > 0.0);
+    }
+
+    #[test]
+    fn bench_auto_calibrates() {
+        let m = bench_auto("sleepless", Duration::from_millis(20), || {
+            std::hint::black_box((0..10_000).sum::<u64>());
+        });
+        assert!(m.iters >= 3);
+    }
+}

@@ -1,0 +1,151 @@
+//! Lightweight metrics: atomic counters + lock-protected latency
+//! reservoirs, shared across coordinator threads.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Process-local metrics registry.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, AtomicU64>>,
+    latencies: Mutex<BTreeMap<String, Vec<f64>>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&self, name: &str, v: u64) {
+        let mut g = self.counters.lock().unwrap();
+        g.entry(name.to_string())
+            .or_insert_with(|| AtomicU64::new(0))
+            .fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    pub fn observe(&self, name: &str, d: Duration) {
+        self.latencies
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .push(d.as_secs_f64() * 1e3);
+    }
+
+    /// (count, mean_ms, p50_ms, p95_ms, max_ms) for a latency series.
+    pub fn latency_stats(&self, name: &str) -> Option<LatencyStats> {
+        let g = self.latencies.lock().unwrap();
+        let xs = g.get(name)?;
+        if xs.is_empty() {
+            return None;
+        }
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| sorted[((sorted.len() - 1) as f64 * p) as usize];
+        Some(LatencyStats {
+            count: sorted.len(),
+            mean_ms: sorted.iter().sum::<f64>() / sorted.len() as f64,
+            p50_ms: pct(0.5),
+            p95_ms: pct(0.95),
+            max_ms: *sorted.last().unwrap(),
+        })
+    }
+
+    /// Render all metrics for reports.
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{k}: {}\n", v.load(Ordering::Relaxed)));
+        }
+        let names: Vec<String> = self.latencies.lock().unwrap().keys().cloned().collect();
+        for k in names {
+            if let Some(s) = self.latency_stats(&k) {
+                out.push_str(&format!(
+                    "{k}: n={} mean={:.2}ms p50={:.2}ms p95={:.2}ms max={:.2}ms\n",
+                    s.count, s.mean_ms, s.p50_ms, s.p95_ms, s.max_ms
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyStats {
+    pub count: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub max_ms: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters() {
+        let m = Metrics::new();
+        m.inc("a");
+        m.add("a", 4);
+        assert_eq!(m.get("a"), 5);
+        assert_eq!(m.get("missing"), 0);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.observe("op", Duration::from_millis(i));
+        }
+        let s = m.latency_stats("op").unwrap();
+        assert_eq!(s.count, 100);
+        assert!((s.p50_ms - 50.0).abs() <= 1.5);
+        assert!((s.p95_ms - 95.0).abs() <= 1.5);
+        assert_eq!(s.max_ms, 100.0);
+    }
+
+    #[test]
+    fn thread_safety() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        m.inc("x");
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(m.get("x"), 4000);
+    }
+
+    #[test]
+    fn summary_renders() {
+        let m = Metrics::new();
+        m.inc("jobs");
+        m.observe("lat", Duration::from_millis(3));
+        let s = m.summary();
+        assert!(s.contains("jobs: 1"));
+        assert!(s.contains("lat: n=1"));
+    }
+}

@@ -1,0 +1,16 @@
+//! Layer-3 coordinator: the system around the algorithm.
+//!
+//! - [`scheduler`]: multithreaded tensor-quantization pipeline (work
+//!   queue with backpressure, deterministic result order)
+//! - [`service`]: batched inference service — request router + dynamic
+//!   batcher over the AOT'd `lm_logits_last` graph (vLLM-router-shaped,
+//!   scaled to this testbed)
+//! - [`metrics`]: counters/latency histograms shared by both
+
+pub mod metrics;
+pub mod scheduler;
+pub mod service;
+
+pub use metrics::Metrics;
+pub use scheduler::{QuantJob, QuantScheduler};
+pub use service::{BatchedLm, InferenceRequest, ServiceConfig};

@@ -1,0 +1,221 @@
+//! Multithreaded quantization scheduler.
+//!
+//! Quantizing an LLM checkpoint is embarrassingly parallel across tensors;
+//! this scheduler runs a worker pool over a bounded job queue (bounded =
+//! backpressure when the producer reads tensors faster than workers
+//! quantize) and returns results in deterministic submission order
+//! regardless of completion order. Invariants (property-tested in
+//! `rust/tests/coordinator_integration.rs`): every job is processed
+//! exactly once; results are order-stable; worker panics surface as
+//! errors, not hangs.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+
+use anyhow::{anyhow, Result};
+
+use super::metrics::Metrics;
+use crate::quant::{QuantConfig, QuantizedTensor, Quantizer};
+
+/// One tensor to quantize.
+#[derive(Clone, Debug)]
+pub struct QuantJob {
+    pub name: String,
+    pub data: Vec<f32>,
+}
+
+/// A finished tensor.
+#[derive(Debug)]
+pub struct QuantResult {
+    pub name: String,
+    pub tensor: QuantizedTensor,
+    pub mae: f64,
+    pub mse: f64,
+}
+
+/// Worker-pool scheduler for whole-model quantization.
+pub struct QuantScheduler {
+    pub config: QuantConfig,
+    pub workers: usize,
+    pub queue_cap: usize,
+    pub metrics: Arc<Metrics>,
+}
+
+impl QuantScheduler {
+    pub fn new(config: QuantConfig) -> Self {
+        let workers = thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        QuantScheduler {
+            config,
+            workers,
+            queue_cap: 2 * workers,
+            metrics: Arc::new(Metrics::new()),
+        }
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self.queue_cap = 2 * self.workers;
+        self
+    }
+
+    /// Quantize all jobs; results return in submission order.
+    pub fn run(&self, jobs: Vec<QuantJob>) -> Result<Vec<QuantResult>> {
+        let n = jobs.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        // The quantizer (incl. its possibly-EM-designed codebook) is built
+        // once and shared read-only.
+        let quantizer = Arc::new(Quantizer::new(self.config.clone()));
+
+        // bounded job channel: backpressure against the producer
+        let (job_tx, job_rx) = mpsc::sync_channel::<(usize, QuantJob)>(self.queue_cap);
+        let job_rx = Arc::new(std::sync::Mutex::new(job_rx));
+        let (res_tx, res_rx) = mpsc::channel::<(usize, Result<QuantResult>)>();
+
+        let mut handles = Vec::new();
+        for wid in 0..self.workers {
+            let job_rx = job_rx.clone();
+            let res_tx = res_tx.clone();
+            let quantizer = quantizer.clone();
+            let metrics = self.metrics.clone();
+            handles.push(thread::Builder::new().name(format!("quant-{wid}")).spawn(
+                move || {
+                    loop {
+                        let job = {
+                            let guard = job_rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        let (idx, job) = match job {
+                            Ok(j) => j,
+                            Err(_) => break, // channel closed: done
+                        };
+                        let sw = crate::util::timer::Stopwatch::start();
+                        let result = std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(|| {
+                                let qt = quantizer.quantize(&job.data);
+                                let deq = quantizer.dequantize(&qt);
+                                let mae = crate::quant::error::mae(&job.data, &deq);
+                                let mse = crate::quant::error::mse(&job.data, &deq);
+                                QuantResult {
+                                    name: job.name.clone(),
+                                    tensor: qt,
+                                    mae,
+                                    mse,
+                                }
+                            }),
+                        )
+                        .map_err(|_| anyhow!("worker panic on tensor '{}'", job.name));
+                        metrics.observe("quantize_tensor", sw.elapsed());
+                        metrics.inc("tensors_done");
+                        if res_tx.send((idx, result)).is_err() {
+                            break;
+                        }
+                    }
+                },
+            )?);
+        }
+        drop(res_tx);
+
+        // producer: feed jobs (blocks when the queue is full = backpressure)
+        let producer = thread::spawn(move || {
+            for (idx, job) in jobs.into_iter().enumerate() {
+                if job_tx.send((idx, job)).is_err() {
+                    break;
+                }
+            }
+            // drop closes the channel -> workers drain and exit
+        });
+
+        // collect and re-order
+        let mut slots: Vec<Option<Result<QuantResult>>> = (0..n).map(|_| None).collect();
+        for (idx, res) in res_rx {
+            slots[idx] = Some(res);
+        }
+        producer.join().map_err(|_| anyhow!("producer panicked"))?;
+        for h in handles {
+            h.join().map_err(|_| anyhow!("worker panicked"))?;
+        }
+        slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| s.ok_or_else(|| anyhow!("job {i} lost"))?)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Method;
+    use crate::util::rng::Pcg64;
+
+    fn jobs(n: usize, len: usize, seed: u64) -> Vec<QuantJob> {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        (0..n)
+            .map(|i| {
+                let mut data = vec![0.0f32; len];
+                rng.fill_gaussian_f32(&mut data, 1.0);
+                QuantJob {
+                    name: format!("t{i}"),
+                    data,
+                }
+            })
+            .collect()
+    }
+
+    fn sched() -> QuantScheduler {
+        QuantScheduler::new(QuantConfig {
+            method: Method::Nf4,
+            ..Default::default()
+        })
+        .with_workers(3)
+    }
+
+    #[test]
+    fn processes_all_in_order() {
+        let s = sched();
+        let js = jobs(17, 640, 1);
+        let res = s.run(js).unwrap();
+        assert_eq!(res.len(), 17);
+        for (i, r) in res.iter().enumerate() {
+            assert_eq!(r.name, format!("t{i}"));
+            assert!(r.mse > 0.0);
+        }
+        assert_eq!(s.metrics.get("tensors_done"), 17);
+    }
+
+    #[test]
+    fn empty_job_list() {
+        let s = sched();
+        assert!(s.run(vec![]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn single_worker_matches_many_workers() {
+        let js = jobs(8, 512, 2);
+        let r1 = sched().with_workers(1).run(js.clone()).unwrap();
+        let r4 = sched().with_workers(4).run(js).unwrap();
+        for (a, b) in r1.iter().zip(&r4) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.tensor.codes, b.tensor.codes);
+            assert_eq!(a.mse, b.mse);
+        }
+    }
+
+    #[test]
+    fn results_match_direct_quantizer() {
+        let js = jobs(3, 256, 3);
+        let s = sched();
+        let res = s.run(js.clone()).unwrap();
+        let q = Quantizer::new(s.config.clone());
+        for (j, r) in js.iter().zip(&res) {
+            let direct = q.quantize(&j.data);
+            assert_eq!(r.tensor.codes, direct.codes);
+            assert_eq!(r.tensor.absmax, direct.absmax);
+        }
+    }
+}

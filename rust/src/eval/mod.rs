@@ -1,0 +1,23 @@
+//! Evaluation harness: perplexity, task accuracies, training drivers, and
+//! report generation — everything the paper's experiment section needs.
+//!
+//! - [`trainer`]: pre-train the in-repo LM via the AOT'd `train_step`
+//!   graph (cached in `artifacts/trained_model.wbin`)
+//! - [`ppl`]: held-out perplexity via `lm_nll`
+//! - [`quantized`]: quantize a trained [`ParamSet`] with any
+//!   [`crate::quant::QuantConfig`] and rebuild eval tensors
+//! - [`lora`]: QLoRA-style fine-tuning via `lora_step` (Tables 3/4 proxy)
+//! - [`tasks`]: synthetic multiple-choice suite + NAV ACC (eq. 74) and the
+//!   two fine-tuning tasks (instruction echo / bracket code)
+//! - [`report`]: markdown/CSV table writers into `results/`
+
+pub mod lora;
+pub mod ppl;
+pub mod quantized;
+pub mod report;
+pub mod tasks;
+pub mod trainer;
+
+pub use ppl::perplexity;
+pub use quantized::quantize_params;
+pub use trainer::ensure_trained;

@@ -1,0 +1,68 @@
+//! Held-out perplexity via the AOT'd `lm_nll` graph (the WikiText-2 /
+//! LAMBADA stand-in; same mechanism, different corpus).
+
+use anyhow::Result;
+
+use crate::models::{Corpus, ParamSet};
+use crate::runtime::{HostTensor, Runtime};
+
+/// Perplexity evaluation configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct PplConfig {
+    /// Number of eval batches (each `batch × seq_len` tokens).
+    pub batches: usize,
+    pub corpus_tokens: usize,
+    pub corpus_seed: u64,
+}
+
+impl Default for PplConfig {
+    fn default() -> Self {
+        PplConfig {
+            batches: 24,
+            corpus_tokens: 400_000,
+            corpus_seed: 2024,
+        }
+    }
+}
+
+/// Compute held-out perplexity of `params` (natural-log PPL = exp(mean NLL
+/// per token), the paper's convention).
+pub fn perplexity(rt: &Runtime, params: &ParamSet, cfg: &PplConfig) -> Result<f64> {
+    let m = rt.meta.model.clone();
+    let corpus = Corpus::generate(cfg.corpus_tokens, cfg.corpus_seed);
+    let (_, eval_split) = corpus.split(0.9);
+
+    let tensors = params.to_tensors();
+    let mut total_nll = 0.0f64;
+    let mut total_tokens = 0usize;
+    for step in 0..cfg.batches {
+        let tokens = corpus.batch(eval_split, m.batch, m.seq_len, step);
+        let mut args = tensors.clone();
+        args.push(HostTensor::i32(tokens, vec![m.batch, m.seq_len]));
+        let out = rt.run("lm_nll", &args)?;
+        let nll = out[0].as_f32()?;
+        total_nll += nll.iter().map(|&x| x as f64).sum::<f64>();
+        total_tokens += m.batch * (m.seq_len - 1);
+    }
+    Ok((total_nll / total_tokens as f64).exp())
+}
+
+/// Perplexity + the (MAE, MSE) of the quantized weights vs the originals —
+/// the per-row contents of paper Tables 1 and 9.
+pub fn ppl_and_error(
+    rt: &Runtime,
+    original: &ParamSet,
+    quantized: &ParamSet,
+    cfg: &PplConfig,
+) -> Result<(f64, f64, f64)> {
+    let ppl = perplexity(rt, quantized, cfg)?;
+    let mut all_orig = Vec::new();
+    let mut all_quant = Vec::new();
+    for ((_, _, o), (_, _, q)) in original.entries.iter().zip(&quantized.entries) {
+        all_orig.extend_from_slice(o);
+        all_quant.extend_from_slice(q);
+    }
+    let mae = crate::quant::error::mae(&all_orig, &all_quant);
+    let mse = crate::quant::error::mse(&all_orig, &all_quant);
+    Ok((mae, mse, ppl))
+}

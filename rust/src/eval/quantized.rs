@@ -1,0 +1,169 @@
+//! Quantize a trained [`ParamSet`] with any quantizer config.
+//!
+//! Follows QLoRA practice (and the paper's evaluation protocol): the
+//! 2-D matmul weights are quantized; norms/embeddings stay in 16/32-bit.
+//! The quantization itself runs through the multithreaded
+//! [`crate::coordinator::QuantScheduler`].
+
+use anyhow::Result;
+
+use crate::coordinator::{QuantJob, QuantScheduler};
+use crate::models::ParamSet;
+use crate::quant::QuantConfig;
+
+/// Which parameters get quantized: 2-D weights except the embedding table
+/// (QLoRA quantizes linear layers; embeddings stay high-precision).
+pub fn is_quantized_param(name: &str, shape: &[usize]) -> bool {
+    shape.len() == 2 && name != "embed" && name != "pos"
+}
+
+/// Outcome of whole-model quantization.
+#[derive(Debug)]
+pub struct QuantizedModel {
+    /// Dequantized parameters (ready for the eval graphs).
+    pub params: ParamSet,
+    /// Whole-model error over the quantized tensors only.
+    pub mae: f64,
+    pub mse: f64,
+    /// Storage bytes of the quantized representation.
+    pub quant_bytes: usize,
+    /// f32 bytes of the same tensors, for the memory ratio.
+    pub orig_bytes: usize,
+    /// OPQ outlier count across tensors.
+    pub outliers: usize,
+}
+
+/// Quantize + dequantize every eligible tensor of `params`.
+pub fn quantize_params(params: &ParamSet, config: &QuantConfig) -> Result<QuantizedModel> {
+    let sched = QuantScheduler::new(config.clone());
+    let mut jobs = Vec::new();
+    let mut job_names = Vec::new();
+    for (name, shape, data) in &params.entries {
+        if is_quantized_param(name, shape) {
+            jobs.push(QuantJob {
+                name: name.clone(),
+                data: data.clone(),
+            });
+            job_names.push(name.clone());
+        }
+    }
+    let results = sched.run(jobs)?;
+
+    let mut out = params.clone();
+    let mut se = 0.0f64;
+    let mut ae = 0.0f64;
+    let mut n = 0usize;
+    let mut quant_bytes = 0usize;
+    let mut orig_bytes = 0usize;
+    let mut outliers = 0usize;
+    let q = crate::quant::Quantizer::new(config.clone());
+    for r in results {
+        let deq = q.dequantize(&r.tensor);
+        let dst = out.get_mut(&r.name).expect("param exists");
+        // accumulate error vs original
+        let orig = params.get(&r.name).unwrap().1;
+        for (a, b) in orig.iter().zip(&deq) {
+            let d = (*a as f64) - (*b as f64);
+            se += d * d;
+            ae += d.abs();
+        }
+        n += deq.len();
+        quant_bytes += r.tensor.bytes();
+        orig_bytes += 4 * deq.len();
+        outliers += r.tensor.outliers.len();
+        *dst = deq;
+    }
+    Ok(QuantizedModel {
+        params: out,
+        mae: ae / n.max(1) as f64,
+        mse: se / n.max(1) as f64,
+        quant_bytes,
+        orig_bytes,
+        outliers,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{Method, Norm};
+    use crate::util::rng::Pcg64;
+
+    fn fake_params() -> ParamSet {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let mk = |n: usize, rng: &mut Pcg64| -> Vec<f32> {
+            let mut v = vec![0.0f32; n];
+            rng.fill_gaussian_f32(&mut v, 0.05);
+            v
+        };
+        ParamSet {
+            entries: vec![
+                ("embed".into(), vec![64, 32], mk(64 * 32, &mut rng)),
+                ("l0.wqkv".into(), vec![32, 96], mk(32 * 96, &mut rng)),
+                ("l0.ln1".into(), vec![32], vec![1.0; 32]),
+                ("head".into(), vec![32, 64], mk(32 * 64, &mut rng)),
+            ],
+        }
+    }
+
+    #[test]
+    fn eligibility() {
+        assert!(is_quantized_param("l0.wqkv", &[32, 96]));
+        assert!(is_quantized_param("head", &[32, 64]));
+        assert!(!is_quantized_param("embed", &[64, 32]));
+        assert!(!is_quantized_param("l0.ln1", &[32]));
+    }
+
+    #[test]
+    fn quantizes_only_eligible() {
+        let p = fake_params();
+        let qm = quantize_params(
+            &p,
+            &QuantConfig {
+                method: Method::Nf4,
+                norm: Norm::Absmax,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // embed and ln unchanged
+        assert_eq!(qm.params.get("embed").unwrap().1, p.get("embed").unwrap().1);
+        assert_eq!(qm.params.get("l0.ln1").unwrap().1, p.get("l0.ln1").unwrap().1);
+        // wqkv changed (quantization noise)
+        assert_ne!(
+            qm.params.get("l0.wqkv").unwrap().1,
+            p.get("l0.wqkv").unwrap().1
+        );
+        assert!(qm.mse > 0.0);
+        assert!(qm.quant_bytes < qm.orig_bytes / 5); // ~4.5 bits vs 32
+    }
+
+    #[test]
+    fn better_codebook_lower_error() {
+        let p = fake_params();
+        let nf4 = quantize_params(
+            &p,
+            &QuantConfig {
+                method: Method::Nf4,
+                norm: Norm::Absmax,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let bof4s = quantize_params(
+            &p,
+            &QuantConfig {
+                method: Method::Bof4 { mse: true },
+                norm: Norm::SignedAbsmax,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(
+            bof4s.mse < nf4.mse,
+            "BOF4-S {} should beat NF4 {}",
+            bof4s.mse,
+            nf4.mse
+        );
+    }
+}

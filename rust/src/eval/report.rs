@@ -1,0 +1,214 @@
+//! Report writers: markdown tables + CSV series into `results/`.
+//!
+//! Every bench regenerates its paper table/figure through these, so the
+//! repository's outputs are diffable run-to-run.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+/// A simple column-aligned markdown table builder.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render as github-flavoured markdown.
+    pub fn to_markdown(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                s.push_str(&format!(" {:<w$} |", cells[i], w = widths[i]));
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = format!("### {}\n\n", self.title);
+        out.push_str(&fmt_row(&self.header));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out
+    }
+
+    /// Render as CSV.
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self
+            .header
+            .iter()
+            .map(|h| esc(h))
+            .collect::<Vec<_>>()
+            .join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout and persist both renderings under `results/`.
+    pub fn emit(&self, stem: &str) -> Result<()> {
+        println!("{}", self.to_markdown());
+        let dir = results_dir();
+        std::fs::create_dir_all(&dir)?;
+        std::fs::write(dir.join(format!("{stem}.md")), self.to_markdown())
+            .with_context(|| format!("writing {stem}.md"))?;
+        std::fs::write(dir.join(format!("{stem}.csv")), self.to_csv())
+            .with_context(|| format!("writing {stem}.csv"))?;
+        Ok(())
+    }
+}
+
+/// Locate `results/` next to the artifacts dir (works from any cwd).
+pub fn results_dir() -> PathBuf {
+    let art = crate::runtime::Meta::default_dir();
+    art.parent()
+        .map(|p| p.join("results"))
+        .unwrap_or_else(|| PathBuf::from("results"))
+}
+
+/// Write an x/y series as CSV (figure reproductions).
+pub fn write_series(stem: &str, xlabel: &str, series: &[(&str, Vec<(f64, f64)>)]) -> Result<()> {
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir)?;
+    let mut out = format!("{xlabel},series,value\n");
+    for (name, points) in series {
+        for (x, y) in points {
+            out.push_str(&format!("{x},{name},{y}\n"));
+        }
+    }
+    std::fs::write(dir.join(format!("{stem}.csv")), out)?;
+    Ok(())
+}
+
+/// Console ASCII plot of one or more series (log-x), for bench output.
+pub fn ascii_plot(title: &str, series: &[(&str, Vec<(f64, f64)>)], height: usize) -> String {
+    let mut all_y: Vec<f64> = series
+        .iter()
+        .flat_map(|(_, pts)| pts.iter().map(|p| p.1))
+        .collect();
+    all_y.retain(|y| y.is_finite());
+    if all_y.is_empty() {
+        return format!("{title}: (no data)\n");
+    }
+    let (ymin, ymax) = all_y
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(a, b), &y| {
+            (a.min(y), b.max(y))
+        });
+    let span = (ymax - ymin).max(1e-12);
+    let width = series.iter().map(|(_, p)| p.len()).max().unwrap_or(0);
+    let marks = ['*', 'o', '+', 'x', '#', '@'];
+    let mut grid = vec![vec![' '; width * 3]; height];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        for (xi, (_, y)) in pts.iter().enumerate() {
+            if !y.is_finite() {
+                continue;
+            }
+            let row = ((ymax - y) / span * (height - 1) as f64).round() as usize;
+            grid[row.min(height - 1)][xi * 3 + 1] = marks[si % marks.len()];
+        }
+    }
+    let mut out = format!("{title}  [{ymin:.4} .. {ymax:.4}]\n");
+    for row in grid {
+        out.push_str(&row.into_iter().collect::<String>());
+        out.push('\n');
+    }
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (n, _))| format!("{} {}", marks[i % marks.len()], n))
+        .collect();
+    out.push_str(&legend.join("   "));
+    out.push('\n');
+    out
+}
+
+/// Save a markdown section (appending) into results/summary.md.
+pub fn append_summary(section: &str) -> Result<()> {
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("summary.md");
+    let mut existing = std::fs::read_to_string(&path).unwrap_or_default();
+    existing.push_str(section);
+    existing.push('\n');
+    std::fs::write(path, existing)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_rendering() {
+        let mut t = Table::new("Demo", &["method", "mse"]);
+        t.row(vec!["NF4".into(), "1.637".into()]);
+        t.row(vec!["BOF4-S (MSE)".into(), "1.441".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| NF4"));
+        assert!(md.lines().count() >= 5);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["x,y".into(), "q\"z".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"z\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn rejects_wrong_arity() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn ascii_plot_renders() {
+        let pts: Vec<(f64, f64)> = (0..10).map(|i| (i as f64, (i * i) as f64)).collect();
+        let s = ascii_plot("sq", &[("x²", pts)], 8);
+        assert!(s.contains("sq"));
+        assert!(s.lines().count() >= 9);
+    }
+}

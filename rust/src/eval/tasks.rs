@@ -1,0 +1,548 @@
+//! Synthetic evaluation tasks.
+//!
+//! **Multiple-choice suite** (the MMLU/ARC/HellaSwag/PIQA/SIQA/WinoGrande
+//! stand-in of Tables 2/10): six tasks built from the corpus's formal
+//! language, with chance levels matching the real benchmarks (4/4/4/2/3/2
+//! choices). Scoring is NLL-based choice ranking via the `lm_nll` graph —
+//! the same mechanism the real benchmarks use. The normalized average
+//! accuracy (NAV ACC) implements the paper's eq. 74.
+//!
+//! **Fine-tuning tasks** (Tables 3/4 proxy): an instruction-echo task and
+//! a bracket-code task; data generators + greedy-decode accuracy live
+//! here, the LoRA optimizer loop in [`crate::eval::lora`].
+
+use anyhow::Result;
+
+use crate::models::corpus::{
+    Corpus, TOK_ARROW, TOK_COLON, TOK_FN, TOK_KEY, TOK_LBRK, TOK_RBRK, TOK_SPACE,
+};
+use crate::models::ParamSet;
+use crate::runtime::{HostTensor, Runtime};
+use crate::util::rng::Pcg64;
+
+const DIGIT0: u8 = 26;
+/// Echo-instruction token (reserved corpus slot 48).
+pub const TOK_ECHO: u8 = 48;
+
+/// One multiple-choice question: shared context, candidate continuations,
+/// index of the correct one.
+#[derive(Clone, Debug)]
+pub struct McQuestion {
+    pub context: Vec<u8>,
+    pub choices: Vec<Vec<u8>>,
+    pub correct: usize,
+}
+
+/// A named task with its chance-level accuracy.
+#[derive(Clone, Debug)]
+pub struct McTask {
+    pub name: &'static str,
+    pub chance: f64,
+    pub questions: Vec<McQuestion>,
+}
+
+/// Build the six-task suite from the corpus eval split.
+pub fn build_suite(n_questions: usize, seed: u64) -> Vec<McTask> {
+    let corpus = Corpus::generate(600_000, seed);
+    let (_, eval_split) = corpus.split(0.9);
+    vec![
+        recall_task("mmlu-like", eval_split, n_questions, 4, seed ^ 1),
+        arith_task("arc-like", eval_split, n_questions, 4, seed ^ 2),
+        bracket_task("hellaswag-like", n_questions, 4, seed ^ 3),
+        close_task("piqa-like", n_questions, 2, seed ^ 4),
+        next_stmt_task("siqa-like", eval_split, n_questions, 3, seed ^ 5),
+        recall_task("winogrande-like", eval_split, n_questions, 2, seed ^ 6),
+    ]
+}
+
+/// Recall questions: context ends at `K a b ->`; choices are digit pairs.
+fn recall_task(
+    name: &'static str,
+    toks: &[u8],
+    n: usize,
+    n_choices: usize,
+    seed: u64,
+) -> McTask {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let mut questions = Vec::new();
+    let mut i = 0;
+    while questions.len() < n && i + 8 < toks.len() {
+        if toks[i] == TOK_KEY && toks[i + 3] == TOK_ARROW {
+            let ctx_start = i.saturating_sub(52);
+            let context = toks[ctx_start..i + 4].to_vec();
+            // the question is only answerable if the assignment
+            // `K a b =` appears inside the context window
+            let (ka, kb) = (toks[i + 1], toks[i + 2]);
+            let assigned_in_ctx = context.windows(4).any(|w| {
+                w[0] == TOK_KEY
+                    && w[1] == ka
+                    && w[2] == kb
+                    && w[3] == crate::models::corpus::TOK_EQ
+            });
+            if !assigned_in_ctx {
+                i += 7;
+                continue;
+            }
+            let correct_pair = [toks[i + 4], toks[i + 5]];
+            let mut choices = vec![correct_pair.to_vec()];
+            while choices.len() < n_choices {
+                let cand = vec![
+                    DIGIT0 + rng.next_below(10) as u8,
+                    DIGIT0 + rng.next_below(10) as u8,
+                ];
+                if !choices.contains(&cand) {
+                    choices.push(cand);
+                }
+            }
+            // shuffle: put correct at a random slot
+            let correct = rng.next_below(n_choices as u64) as usize;
+            choices.swap(0, correct);
+            questions.push(McQuestion {
+                context,
+                choices,
+                correct,
+            });
+            i += 7;
+        } else {
+            i += 1;
+        }
+    }
+    McTask {
+        name,
+        chance: 1.0 / n_choices as f64,
+        questions,
+    }
+}
+
+/// Harder recall discrimination (ARC-style "reasoning"): the context ends
+/// at `K a b ->` (assignment visible); the distractors are *permutations
+/// and near-misses* of the correct digits — (d2 d1), (d1 d1), (d2 d2) —
+/// so order sensitivity is required, not just content recall.
+fn arith_task(
+    name: &'static str,
+    toks: &[u8],
+    n: usize,
+    n_choices: usize,
+    seed: u64,
+) -> McTask {
+    use crate::models::corpus::TOK_EQ;
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let mut questions = Vec::new();
+    let mut i = 0;
+    while questions.len() < n && i + 8 < toks.len() {
+        if toks[i] == TOK_KEY && toks[i + 3] == TOK_ARROW {
+            let ctx_start = i.saturating_sub(52);
+            let context = toks[ctx_start..i + 4].to_vec();
+            let (ka, kb) = (toks[i + 1], toks[i + 2]);
+            let assigned_in_ctx = context.windows(4).any(|w| {
+                w[0] == TOK_KEY && w[1] == ka && w[2] == kb && w[3] == TOK_EQ
+            });
+            let (d1, d2) = (toks[i + 4], toks[i + 5]);
+            if !assigned_in_ctx || d1 == d2 {
+                i += 7;
+                continue;
+            }
+            let mut choices = vec![
+                vec![d1, d2], // correct
+                vec![d2, d1],
+                vec![d1, d1],
+                vec![d2, d2],
+            ];
+            choices.truncate(n_choices);
+            let correct = rng.next_below(choices.len() as u64) as usize;
+            choices.swap(0, correct);
+            questions.push(McQuestion {
+                context,
+                choices,
+                correct,
+            });
+            i += 7;
+        } else {
+            i += 1;
+        }
+    }
+    McTask {
+        name,
+        chance: 1.0 / n_choices as f64,
+        questions,
+    }
+}
+
+/// Bracket-continuation: context is an unfinished nest; the correct choice
+/// closes it with the right number of `]`s.
+fn bracket_task(name: &'static str, n: usize, n_choices: usize, seed: u64) -> McTask {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let mut questions = Vec::new();
+    for _ in 0..n {
+        let depth = 2 + rng.next_below(3) as usize; // 2..4
+        let mut context = vec![TOK_SPACE];
+        for _ in 0..depth {
+            context.push(TOK_LBRK);
+            context.push(rng.next_below(26) as u8);
+        }
+        // correct: close `depth` brackets
+        let mut choices = Vec::new();
+        for d in 0..n_choices {
+            // candidate closes depth-d brackets (d=0 correct), then space
+            let closes = depth.saturating_sub(d).max(1);
+            let mut c = vec![TOK_RBRK; closes];
+            c.push(TOK_SPACE);
+            choices.push(c);
+        }
+        choices.dedup();
+        while choices.len() < n_choices {
+            let mut c = vec![TOK_RBRK; choices.len() + depth];
+            c.push(TOK_SPACE);
+            choices.push(c);
+        }
+        // pad all choices to equal length with separators so the NLL
+        // ranking is not length-biased
+        let maxlen = choices.iter().map(Vec::len).max().unwrap();
+        for c in &mut choices {
+            c.resize(maxlen, TOK_SPACE);
+        }
+        let correct = rng.next_below(n_choices as u64) as usize;
+        choices.swap(0, correct);
+        questions.push(McQuestion {
+            context,
+            choices,
+            correct,
+        });
+    }
+    McTask {
+        name,
+        chance: 1.0 / n_choices as f64,
+        questions,
+    }
+}
+
+/// Two-way "physical plausibility" analogue: after `[ x`, a close bracket
+/// is a *possible* continuation while an operator (`+`) is grammatically
+/// impossible in the corpus — the model must prefer the possible one.
+fn close_task(name: &'static str, n: usize, n_choices: usize, seed: u64) -> McTask {
+    use crate::models::corpus::TOK_PLUS;
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let mut questions = Vec::new();
+    for _ in 0..n {
+        let letter = rng.next_below(26) as u8;
+        let context = vec![TOK_SPACE, TOK_LBRK, letter];
+        let choices = vec![vec![TOK_RBRK], vec![TOK_PLUS]];
+        let correct = rng.next_below(n_choices as u64) as usize;
+        let mut ch = choices;
+        ch.swap(0, correct);
+        questions.push(McQuestion {
+            context,
+            choices: ch,
+            correct,
+        });
+    }
+    McTask {
+        name,
+        chance: 1.0 / n_choices as f64,
+        questions,
+    }
+}
+
+/// Next-statement-type: after `;` + space, which statement opener follows
+/// in the corpus? (K / [ / F — 3 choices.)
+fn next_stmt_task(
+    name: &'static str,
+    toks: &[u8],
+    n: usize,
+    n_choices: usize,
+    seed: u64,
+) -> McTask {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let mut questions = Vec::new();
+    let mut i = 1;
+    let openers = [TOK_KEY, TOK_LBRK, TOK_FN];
+    while questions.len() < n && i + 2 < toks.len() {
+        if toks[i] == TOK_SPACE && openers.contains(&toks[i + 1]) {
+            let ctx_start = i.saturating_sub(40);
+            let context = toks[ctx_start..=i].to_vec();
+            let correct_tok = toks[i + 1];
+            let mut choices: Vec<Vec<u8>> = vec![vec![correct_tok]];
+            for &o in &openers {
+                if o != correct_tok && choices.len() < n_choices {
+                    choices.push(vec![o]);
+                }
+            }
+            let correct = rng.next_below(choices.len() as u64) as usize;
+            choices.swap(0, correct);
+            questions.push(McQuestion {
+                context,
+                choices,
+                correct,
+            });
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    McTask {
+        name,
+        chance: 1.0 / n_choices as f64,
+        questions,
+    }
+}
+
+/// Score a suite: NLL-rank choices with `lm_nll`, batching sequences.
+pub fn score_task(rt: &Runtime, params: &ParamSet, task: &McTask) -> Result<f64> {
+    let m = rt.meta.model.clone();
+    let tensors = params.to_tensors();
+    // flatten all (question, choice) sequences
+    let mut seqs: Vec<Vec<u8>> = Vec::new();
+    for q in &task.questions {
+        for c in &q.choices {
+            let mut s = q.context.clone();
+            s.extend_from_slice(c);
+            seqs.push(s);
+        }
+    }
+    // right-align into fixed windows; pad left with separator
+    let mut nlls = Vec::with_capacity(seqs.len());
+    for chunk in seqs.chunks(m.batch) {
+        let mut toks = vec![TOK_SPACE as i32; m.batch * m.seq_len];
+        for (i, s) in chunk.iter().enumerate() {
+            let take = s.len().min(m.seq_len);
+            let tail = &s[s.len() - take..];
+            let row = &mut toks[i * m.seq_len..(i + 1) * m.seq_len];
+            for (dst, &t) in row[m.seq_len - take..].iter_mut().zip(tail) {
+                *dst = t as i32;
+            }
+        }
+        let mut args = tensors.clone();
+        args.push(HostTensor::i32(toks, vec![m.batch, m.seq_len]));
+        let out = rt.run("lm_nll", &args)?;
+        let batch_nll = out[0].as_f32()?;
+        nlls.extend_from_slice(&batch_nll[..chunk.len()]);
+    }
+    // rank per question
+    let mut correct = 0usize;
+    let mut idx = 0;
+    for q in &task.questions {
+        let k = q.choices.len();
+        let slice = &nlls[idx..idx + k];
+        let best = slice
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if best == q.correct {
+            correct += 1;
+        }
+        idx += k;
+    }
+    Ok(correct as f64 / task.questions.len().max(1) as f64)
+}
+
+/// Normalized accuracy (paper eq. 74): (ACC − chance) / (1 − chance).
+pub fn normalized_acc(acc: f64, chance: f64) -> f64 {
+    (acc - chance) / (1.0 - chance)
+}
+
+/// NAV ACC over a suite of (accuracy, chance) results.
+pub fn nav_acc(results: &[(f64, f64)]) -> f64 {
+    if results.is_empty() {
+        return 0.0;
+    }
+    results
+        .iter()
+        .map(|&(a, c)| normalized_acc(a, c))
+        .sum::<f64>()
+        / results.len() as f64
+}
+
+// ------------------------------------------------------------------
+// Fine-tuning task data (Tables 3/4 proxies)
+// ------------------------------------------------------------------
+
+/// Which fine-tune task.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FtTask {
+    /// In-context key recall (IFEval-style instruction proxy): the prompt
+    /// shows `K a b = ( d1 + d2 ) ; K a b ->` and the model must answer
+    /// `d1 d2` — fully determined by the prompt, in-distribution for the
+    /// pre-trained LM, sharpened by fine-tuning.
+    KeyRecall,
+    /// `F n : [^n letter ]^n` — emit a correct depth-n nest (MBPP+/
+    /// HumanEval+ code proxy; the letter position is a wildcard).
+    BracketCode,
+}
+
+/// One supervised example: prompt and expected completion. ``wildcards``
+/// lists answer positions whose content is inherently unpredictable (e.g.
+/// the random letter inside a bracket nest); scoring ignores them and
+/// teacher-forces the expected token so the continuation stays aligned.
+#[derive(Clone, Debug)]
+pub struct FtExample {
+    pub prompt: Vec<u8>,
+    pub answer: Vec<u8>,
+    pub wildcards: Vec<usize>,
+}
+
+/// Generate fine-tune examples.
+pub fn ft_examples(task: FtTask, n: usize, seed: u64) -> Vec<FtExample> {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    (0..n)
+        .map(|_| match task {
+            FtTask::KeyRecall => {
+                use crate::models::corpus::{TOK_EQ, TOK_LPAR, TOK_PLUS, TOK_RPAR, TOK_SEMI};
+                let (a, b) = (rng.next_below(26) as u8, rng.next_below(26) as u8);
+                let d1 = DIGIT0 + rng.next_below(10) as u8;
+                let d2 = DIGIT0 + rng.next_below(10) as u8;
+                let prompt = vec![
+                    TOK_KEY, a, b, TOK_EQ, TOK_LPAR, d1, TOK_PLUS, d2, TOK_RPAR,
+                    TOK_SEMI, TOK_SPACE, TOK_KEY, a, b, TOK_ARROW,
+                ];
+                FtExample {
+                    prompt,
+                    answer: vec![d1, d2],
+                    wildcards: Vec::new(),
+                }
+            }
+            FtTask::BracketCode => {
+                let depth = 1 + rng.next_below(4) as usize; // 1-4
+                let letter = rng.next_below(26) as u8;
+                let prompt = vec![TOK_FN, DIGIT0 + depth as u8, TOK_COLON];
+                let mut answer = vec![TOK_LBRK; depth];
+                answer.push(letter);
+                answer.extend(vec![TOK_RBRK; depth]);
+                FtExample {
+                    prompt,
+                    answer,
+                    wildcards: vec![depth], // the letter is content-free
+                }
+            }
+        })
+        .collect()
+}
+
+/// Build fine-tuning token batches.
+///
+/// Each `[batch, seq]` row packs *whole* examples (prompt + answer +
+/// separator) from the right, with the front left-padded by the separator
+/// token — exactly the layout the greedy-decode evaluation uses, so
+/// training and inference see the same conditioning distribution.
+pub fn ft_batches(
+    examples: &[FtExample],
+    batch: usize,
+    seq: usize,
+    step: usize,
+) -> Vec<i32> {
+    assert!(!examples.is_empty());
+    let mut out = vec![TOK_SPACE as i32; batch * seq];
+    let mut next = step * batch * 3; // advance through examples per step
+    for b in 0..batch {
+        // pack whole examples right-to-left, with a varying right offset so
+        // the model cannot overfit to absolute positions (the evaluator
+        // reads predictions at seq-2; training must cover that alignment)
+        let row = &mut out[b * seq..(b + 1) * seq];
+        let mut end = seq - (b * 5 + step * 3) % 7;
+        loop {
+            let e = &examples[next % examples.len()];
+            next += 1;
+            let total = e.prompt.len() + e.answer.len() + 1;
+            if total > end {
+                break;
+            }
+            let start = end - total;
+            for (dst, &t) in row[start..].iter_mut().zip(
+                e.prompt
+                    .iter()
+                    .chain(e.answer.iter())
+                    .chain(std::iter::once(&TOK_SPACE)),
+            ) {
+                *dst = t as i32;
+            }
+            end = start;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_builds_with_correct_shapes() {
+        let suite = build_suite(20, 9);
+        assert_eq!(suite.len(), 6);
+        let chances: Vec<f64> = suite.iter().map(|t| t.chance).collect();
+        assert_eq!(chances, vec![0.25, 0.25, 0.25, 0.5, 1.0 / 3.0, 0.5]);
+        for t in &suite {
+            assert!(
+                t.questions.len() >= 10,
+                "{}: only {} questions",
+                t.name,
+                t.questions.len()
+            );
+            for q in &t.questions {
+                assert!(q.correct < q.choices.len());
+                // choices distinct
+                for i in 0..q.choices.len() {
+                    for j in i + 1..q.choices.len() {
+                        assert_ne!(q.choices[i], q.choices[j], "{}", t.name);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn recall_correct_choice_matches_corpus() {
+        let corpus = Corpus::generate(200_000, 3);
+        let (_, eval) = corpus.split(0.9);
+        let t = recall_task("r", eval, 30, 4, 11);
+        for q in &t.questions {
+            // context ends with arrow; correct choice = next two tokens in
+            // the corpus, i.e. digits
+            let c = &q.choices[q.correct];
+            assert!(c.iter().all(|&d| (DIGIT0..DIGIT0 + 10).contains(&d)));
+            assert_eq!(*q.context.last().unwrap(), TOK_ARROW);
+        }
+    }
+
+    #[test]
+    fn nav_acc_eq74() {
+        // chance-level accuracy normalizes to 0; perfect to 1
+        assert!((normalized_acc(0.25, 0.25)).abs() < 1e-12);
+        assert!((normalized_acc(1.0, 0.25) - 1.0).abs() < 1e-12);
+        assert!((normalized_acc(0.625, 0.25) - 0.5).abs() < 1e-12);
+        let nav = nav_acc(&[(0.25, 0.25), (1.0, 0.5)]);
+        assert!((nav - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ft_examples_shapes() {
+        let recall = ft_examples(FtTask::KeyRecall, 50, 1);
+        for e in &recall {
+            assert_eq!(e.prompt[0], TOK_KEY);
+            assert_eq!(*e.prompt.last().unwrap(), TOK_ARROW);
+            // the answer digits appear inside the prompt (in-context)
+            assert_eq!(e.answer.len(), 2);
+            assert_eq!(e.answer[0], e.prompt[5]);
+            assert_eq!(e.answer[1], e.prompt[7]);
+            assert!(e.wildcards.is_empty());
+        }
+        let code = ft_examples(FtTask::BracketCode, 50, 2);
+        for e in &code {
+            let depth = (e.prompt[1] - DIGIT0) as usize;
+            assert_eq!(e.answer.len(), 2 * depth + 1);
+            assert!(e.answer[..depth].iter().all(|&t| t == TOK_LBRK));
+            assert!(e.answer[depth + 1..].iter().all(|&t| t == TOK_RBRK));
+            assert_eq!(e.wildcards, vec![depth]);
+        }
+    }
+
+    #[test]
+    fn ft_batches_shape() {
+        let ex = ft_examples(FtTask::KeyRecall, 200, 3);
+        let b = ft_batches(&ex, 16, 64, 0);
+        assert_eq!(b.len(), 16 * 64);
+        assert!(b.iter().all(|&t| t >= 0 && t < 64));
+        assert_ne!(b, ft_batches(&ex, 16, 64, 1));
+    }
+}

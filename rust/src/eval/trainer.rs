@@ -1,0 +1,126 @@
+//! Pre-training driver: run the AOT'd `train_step` graph from rust until
+//! the LM has learned the corpus, then cache the weights.
+//!
+//! This is the end-to-end proof that the three layers compose: the L2 JAX
+//! train step (with the L1-adjacent compute inside) executes under the L3
+//! rust event loop, with data produced by the rust corpus generator.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::models::{Corpus, ParamSet};
+use crate::runtime::{HostTensor, Runtime};
+
+/// Training run configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub corpus_tokens: usize,
+    pub corpus_seed: u64,
+    pub init_seed: u32,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            // 3000 steps take ~3 min on the single-core CPU PJRT backend
+            // and are enough for the LM to learn in-context recall
+            // (NAV ACC ~0.74); cached afterwards in artifacts/.
+            steps: 3000,
+            corpus_tokens: 400_000,
+            corpus_seed: 2024,
+            init_seed: 0,
+            log_every: 250,
+        }
+    }
+}
+
+/// Result of a training run.
+#[derive(Debug)]
+pub struct TrainOutcome {
+    pub params: ParamSet,
+    pub losses: Vec<f32>,
+    pub steps: usize,
+}
+
+/// Train the LM from scratch; returns params + the loss curve.
+pub fn train(rt: &Runtime, cfg: &TrainConfig) -> Result<TrainOutcome> {
+    let m = rt.meta.model.clone();
+    let corpus = Corpus::generate(cfg.corpus_tokens, cfg.corpus_seed);
+    let (train_split, _) = corpus.split(0.9);
+
+    let params = rt.run("init_params", &[HostTensor::scalar_u32(cfg.init_seed)])?;
+    let n = params.len();
+    let zeros: Vec<HostTensor> = params
+        .iter()
+        .map(|p| HostTensor::f32(vec![0.0; p.shape().iter().product()], p.shape().to_vec()))
+        .collect();
+
+    let mut state: Vec<HostTensor> = params
+        .iter()
+        .chain(zeros.iter())
+        .chain(zeros.iter())
+        .cloned()
+        .collect();
+    let mut step_t = HostTensor::scalar_i32(0);
+
+    let mut losses = Vec::with_capacity(cfg.steps);
+    let sw = crate::util::timer::Stopwatch::start();
+    for step in 0..cfg.steps {
+        let tokens = corpus.batch(train_split, m.batch, m.seq_len, step);
+        let mut args = state.clone();
+        args.push(step_t.clone());
+        args.push(HostTensor::i32(tokens, vec![m.batch, m.seq_len]));
+        let out = rt.run("train_step", &args)?;
+        let loss = out[3 * n + 1].scalar_f32_value()?;
+        losses.push(loss);
+        state = out[..3 * n].to_vec();
+        step_t = out[3 * n].clone();
+        if cfg.log_every > 0 && (step + 1) % cfg.log_every == 0 {
+            crate::info!(
+                "train step {:>4}/{}: loss {:.4} ({:.0} ms/step)",
+                step + 1,
+                cfg.steps,
+                loss,
+                sw.elapsed_ms() / (step + 1) as f64
+            );
+        }
+    }
+
+    let gm = rt.meta.graph("lm_nll")?;
+    let params = ParamSet::from_tensors(gm, &state[..n])?;
+    Ok(TrainOutcome {
+        params,
+        losses,
+        steps: cfg.steps,
+    })
+}
+
+/// Cache path for the default trained model.
+pub fn trained_model_path(rt: &Runtime) -> PathBuf {
+    rt.meta.dir.join("trained_model.wbin")
+}
+
+/// Return the default trained model, training (once) if not yet cached.
+pub fn ensure_trained(rt: &Arc<Runtime>) -> Result<ParamSet> {
+    let path = trained_model_path(rt);
+    if path.exists() {
+        if let Ok(p) = ParamSet::load(&path) {
+            crate::info!("loaded cached trained model from {path:?}");
+            return Ok(p);
+        }
+    }
+    crate::info!("no cached model; pre-training (one-time, cached afterwards)");
+    let outcome = train(rt, &TrainConfig::default())?;
+    let first = outcome.losses.first().copied().unwrap_or(f32::NAN);
+    let last = outcome.losses.last().copied().unwrap_or(f32::NAN);
+    crate::info!(
+        "training done: loss {first:.3} -> {last:.3} over {} steps",
+        outcome.steps
+    );
+    outcome.params.save(&path)?;
+    Ok(outcome.params)
+}

@@ -1,0 +1,64 @@
+//! # BOF4 — 4-bit Block-Wise Optimal Float quantization for LLMs
+//!
+//! Production-grade reproduction of *"Improving Block-Wise LLM Quantization
+//! by 4-bit Block-Wise Optimal Float (BOF4): Analysis and Variations"*
+//! (Blumenberg, Graave, Fingscheidt, 2025).
+//!
+//! The crate is the **Layer-3 rust coordinator** of a three-layer stack:
+//!
+//! - **L1** Pallas kernels (build-time python, `python/compile/kernels/`):
+//!   block-wise quantization and the fused 4-bit dequant-matmul hot path.
+//! - **L2** JAX model graphs (`python/compile/model.py`): a GPT-style LM,
+//!   its AdamW train step, LoRA fine-tune step and NLL/logit eval heads,
+//!   AOT-lowered once to HLO text in `artifacts/`.
+//! - **L3** this crate: the complete quantization system (codebooks, EM
+//!   design, OPQ, packing), the PJRT runtime that executes the lowered
+//!   graphs, the multithreaded quantization scheduler, the batched
+//!   inference service, and the experiment harness regenerating every
+//!   table and figure of the paper.
+//!
+//! Python never runs on the request path: after `make artifacts`, the
+//! `bof4` binary and all benches are self-contained.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use bof4::quant::{Quantizer, QuantConfig, Method, Norm};
+//! use bof4::util::rng::Pcg64;
+//!
+//! // 1M Gaussian "network weights"
+//! let mut rng = Pcg64::seed_from_u64(7);
+//! let w: Vec<f32> = (0..1 << 20).map(|_| rng.next_gaussian() as f32).collect();
+//!
+//! // BOF4-S (MSE-optimal, signed absmax normalization), block size 64
+//! let q = Quantizer::new(QuantConfig {
+//!     method: Method::Bof4 { mse: true },
+//!     norm: Norm::SignedAbsmax,
+//!     block: 64,
+//!     ..Default::default()
+//! });
+//! let packed = q.quantize(&w);
+//! let w_hat = q.dequantize(&packed);
+//! let mse = bof4::quant::error::mse(&w, &w_hat);
+//! println!("MSE = {mse:.3e}");
+//! ```
+
+pub mod bench;
+pub mod coordinator;
+pub mod eval;
+pub mod lloyd;
+pub mod models;
+pub mod quant;
+pub mod runtime;
+pub mod stats;
+pub mod tensor;
+pub mod testkit;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Paper reference string used in reports.
+pub const PAPER: &str =
+    "Blumenberg, Graave, Fingscheidt (2025): Improving Block-Wise LLM \
+     Quantization by 4-bit Block-Wise Optimal Float (BOF4)";

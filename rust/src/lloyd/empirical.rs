@@ -1,0 +1,228 @@
+//! Empirical (Monte-Carlo) centroid backend — paper Appendix B.3.
+//!
+//! Samples `B × I` Gaussian weights, normalizes per block, then sorts the
+//! normalized samples once and builds prefix sums of the centroid weights
+//! so that each EM iteration costs O(L log N):
+//!
+//! - MSE centroid (eq. 64): weighted mean `Σ w_k² x_k / Σ w_k²` over the
+//!   region — two prefix-sum lookups;
+//! - MAE centroid (eq. 69): weighted median — binary search for the point
+//!   where the cumulative `|w_k|` crosses half the region's total.
+//!
+//! For the normalized objective (App. D, AF4) the weights are 1.
+
+use super::{CentroidBackend, EmConfig, Metric, Objective};
+use crate::quant::absmax::{block_constant, safe_constant};
+use crate::quant::codebook::LEVELS;
+use crate::util::rng::Pcg64;
+
+pub struct EmpiricalBackend {
+    /// Normalized samples, ascending.
+    xs: Vec<f64>,
+    /// Prefix sums (len N+1): Σ weight, Σ weight·x. For MSE the weight is
+    /// m², for MAE |m| (or 1 under the normalized objective).
+    cum_w: Vec<f64>,
+    cum_wx: Vec<f64>,
+    metric: Metric,
+}
+
+impl EmpiricalBackend {
+    pub fn new(cfg: &EmConfig, n_samples: usize, seed: u64) -> Self {
+        let block = cfg.block;
+        let n_blocks = n_samples.div_ceil(block);
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let mut pairs: Vec<(f64, f64)> = Vec::with_capacity(n_blocks * block);
+        let mut buf = vec![0.0f32; block];
+        for _ in 0..n_blocks {
+            for v in buf.iter_mut() {
+                *v = rng.next_gaussian() as f32;
+            }
+            let m = block_constant(&buf, cfg.norm);
+            let ms = safe_constant(m) as f64;
+            let weight = match (cfg.objective, cfg.metric) {
+                (Objective::Normalized, _) => 1.0,
+                (Objective::EndToEnd, Metric::Mse) => (m as f64) * (m as f64),
+                (Objective::EndToEnd, Metric::Mae) => (m as f64).abs(),
+            };
+            for &v in buf.iter() {
+                pairs.push((v as f64 / ms, weight));
+            }
+        }
+        pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let n = pairs.len();
+        let mut xs = Vec::with_capacity(n);
+        let mut cum_w = Vec::with_capacity(n + 1);
+        let mut cum_wx = Vec::with_capacity(n + 1);
+        cum_w.push(0.0);
+        cum_wx.push(0.0);
+        let (mut sw, mut swx) = (0.0, 0.0);
+        for (x, w) in pairs {
+            xs.push(x);
+            sw += w;
+            swx += w * x;
+            cum_w.push(sw);
+            cum_wx.push(swx);
+        }
+        EmpiricalBackend {
+            xs,
+            cum_w,
+            cum_wx,
+            metric: cfg.metric,
+        }
+    }
+
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// Index range [lo, hi) of samples falling in [a, b).
+    fn range(&self, a: f64, b: f64) -> (usize, usize) {
+        let lo = self.xs.partition_point(|&x| x < a);
+        let hi = self.xs.partition_point(|&x| x < b);
+        (lo, hi)
+    }
+}
+
+impl CentroidBackend for EmpiricalBackend {
+    fn centroid(&self, region: usize, bounds: &[f64; LEVELS - 1]) -> Option<f64> {
+        let a = if region == 0 {
+            f64::NEG_INFINITY
+        } else {
+            bounds[region - 1]
+        };
+        let b = if region == LEVELS - 1 {
+            f64::INFINITY
+        } else {
+            bounds[region]
+        };
+        let (lo, hi) = self.range(a, b);
+        if hi <= lo {
+            return None;
+        }
+        let total_w = self.cum_w[hi] - self.cum_w[lo];
+        if total_w <= 0.0 {
+            return None;
+        }
+        match self.metric {
+            Metric::Mse => {
+                let total_wx = self.cum_wx[hi] - self.cum_wx[lo];
+                Some(total_wx / total_w)
+            }
+            Metric::Mae => {
+                // weighted median: smallest index k in [lo, hi) with
+                // cum_w[k+1] - cum_w[lo] >= total_w / 2
+                let target = self.cum_w[lo] + total_w / 2.0;
+                let mut l = lo;
+                let mut h = hi; // searching k in [lo, hi)
+                while l < h {
+                    let mid = (l + h) / 2;
+                    if self.cum_w[mid + 1] < target {
+                        l = mid + 1;
+                    } else {
+                        h = mid;
+                    }
+                }
+                Some(self.xs[l.min(hi - 1)])
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lloyd::boundaries;
+    use crate::quant::Norm;
+
+    fn bounds_for(levels: [f64; LEVELS]) -> [f64; LEVELS - 1] {
+        boundaries(&levels)
+    }
+
+    fn simple_cfg(metric: Metric, norm: Norm) -> EmConfig {
+        EmConfig::new(metric, norm, 64)
+    }
+
+    #[test]
+    fn samples_normalized_to_unit_interval() {
+        let be = EmpiricalBackend::new(&simple_cfg(Metric::Mse, Norm::Absmax), 1 << 14, 1);
+        assert!(be.xs.iter().all(|&x| (-1.0..=1.0).contains(&x)));
+        // absolute normalization: both endpoints present
+        assert!((be.xs[0] + 1.0).abs() < 1e-12);
+        assert!((be.xs[be.len() - 1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn signed_normalization_only_plus_one() {
+        let be =
+            EmpiricalBackend::new(&simple_cfg(Metric::Mse, Norm::SignedAbsmax), 1 << 14, 2);
+        // signed: max normalized value +1, min strictly inside (-1, 1)
+        assert!((be.xs[be.len() - 1] - 1.0).abs() < 1e-12);
+        assert!(be.xs[0] > -1.0);
+    }
+
+    #[test]
+    fn mse_centroid_is_weighted_mean() {
+        let be = EmpiricalBackend::new(&simple_cfg(Metric::Mse, Norm::Absmax), 1 << 14, 3);
+        // single full region: centroid = global weighted mean ≈ 0
+        let mut levels = [0.0f64; LEVELS];
+        for (i, l) in levels.iter_mut().enumerate() {
+            *l = -1.0 + 2.0 * i as f64 / 15.0;
+        }
+        let b = bounds_for(levels);
+        // regions 7 and 8 are mirror images: centroids symmetric about 0
+        let c7 = be.centroid(7, &b).unwrap();
+        let c8 = be.centroid(8, &b).unwrap();
+        assert!((c7 + c8).abs() < 0.01, "{c7} vs {c8}");
+        assert!(c7 < 0.0 && c8 > 0.0);
+    }
+
+    #[test]
+    fn mae_centroid_within_region() {
+        let be = EmpiricalBackend::new(&simple_cfg(Metric::Mae, Norm::Absmax), 1 << 14, 4);
+        let mut levels = [0.0f64; LEVELS];
+        for (i, l) in levels.iter_mut().enumerate() {
+            *l = -1.0 + 2.0 * i as f64 / 15.0;
+        }
+        let b = bounds_for(levels);
+        for region in 0..LEVELS {
+            if let Some(c) = be.centroid(region, &b) {
+                let lo = if region == 0 { -1.0 } else { b[region - 1] };
+                let hi = if region == 15 { 1.0 } else { b[region] };
+                assert!(c >= lo - 1e-12 && c <= hi + 1e-12, "region {region}: {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_region_returns_none() {
+        let be = EmpiricalBackend::new(&simple_cfg(Metric::Mse, Norm::Absmax), 1 << 12, 5);
+        // construct bounds with an empty region beyond +1
+        let mut levels = [0.0f64; LEVELS];
+        for (i, l) in levels.iter_mut().enumerate() {
+            *l = i as f64 / 4.0; // levels 0..3.75, regions past 1 are empty
+        }
+        let b = bounds_for(levels);
+        assert!(be.centroid(15, &b).is_none());
+    }
+
+    #[test]
+    fn weighted_median_simple_case() {
+        // Hand-built backend: three points with weights via cum arrays.
+        let be = EmpiricalBackend {
+            xs: vec![0.1, 0.2, 0.9],
+            cum_w: vec![0.0, 1.0, 2.0, 10.0],
+            cum_wx: vec![0.0, 0.1, 0.3, 7.5],
+            metric: Metric::Mae,
+        };
+        let mut b = [f64::INFINITY; LEVELS - 1];
+        b[0] = 1.5; // region 0 = (-inf, 1.5) covers all points
+        // total weight 10, half = 5 -> first index where cum >= 5 is x=0.9
+        let c = be.centroid(0, &b).unwrap();
+        assert_eq!(c, 0.9);
+    }
+}

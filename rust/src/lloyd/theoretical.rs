@@ -1,0 +1,313 @@
+//! Theoretical centroid backend — numerical integration of the paper's
+//! closed-form centroid conditions (Appendix B.2).
+//!
+//! For Gaussian weights, writing g = φ, G = Φ, F(m) = 2G(m) − 1:
+//!
+//! **MSE** (eq. 35, extended to the discrete endpoint masses of eqs. 36–42):
+//! for region ℛ = [a, b) with a' = clamp(a), b' = clamp(b) to [−1, 1],
+//!
+//! ```text
+//!            ∫ m² · num(m) · p_M(m) dm
+//!   x̂(ℓ) = ─────────────────────────────
+//!            ∫ m² · den(m) · p_M(m) dm
+//!
+//!   num(m) = (I−1)/I · (g(m a') − g(m b')) / (m (2G(m)−1))
+//!            [+ mass₊·1 if b ≥ 1]  [− mass₋·1 if a ≤ −1]
+//!   den(m) = (I−1)/I · (G(m b') − G(m a')) / (2G(m)−1)
+//!            [+ mass₊]            [+ mass₋]
+//! ```
+//!
+//! with mass₊ = 1/(2I) (absolute) or 1/I (signed), mass₋ = 1/(2I)
+//! (absolute) or 0 (signed). The continuous parts follow from eq. 31 via
+//! the Gaussian antiderivative ∫ x g(mx) dx = −g(mx)/m² (eq. 32).
+//!
+//! **MAE** (eq. 59): x̂ is the root in (a', b') of
+//!
+//! ```text
+//!   h(x̂) = ∫ m · p_M(m) · ( F_X(x̂|m) − F_X(a|m) − ½ [F_X(b|m) − F_X(a|m)] ) dm
+//! ```
+//!
+//! which is monotone in x̂; we bracket it with bisection (paper's choice).
+//!
+//! Integration uses composite Gauss-Legendre over [ε, m_hi] where m_hi is
+//! chosen so the neglected p_M tail is < 1e-15.
+
+use super::{CentroidBackend, EmConfig, Metric, Objective};
+use crate::quant::codebook::LEVELS;
+use crate::quant::Norm;
+use crate::stats::blockmax::{fx_given_m, BlockMax};
+use crate::stats::quadrature::GaussLegendre;
+use crate::stats::roots::bisect;
+use crate::stats::special::{gauss_cdf, gauss_pdf};
+
+pub struct TheoreticalBackend {
+    block: usize,
+    norm: Norm,
+    metric: Metric,
+    objective: Objective,
+    bm: BlockMax,
+    gl: GaussLegendre,
+    m_hi: f64,
+    panels: usize,
+}
+
+impl TheoreticalBackend {
+    pub fn new(cfg: &EmConfig) -> Self {
+        let bm = BlockMax::new(cfg.block);
+        let m_hi = bm.upper_limit();
+        TheoreticalBackend {
+            block: cfg.block,
+            norm: cfg.norm,
+            metric: cfg.metric,
+            objective: cfg.objective,
+            bm,
+            gl: GaussLegendre::new(48),
+            m_hi,
+            panels: 24,
+        }
+    }
+
+    fn region_interval(&self, region: usize, bounds: &[f64; LEVELS - 1]) -> (f64, f64) {
+        let a = if region == 0 {
+            f64::NEG_INFINITY
+        } else {
+            bounds[region - 1]
+        };
+        let b = if region == LEVELS - 1 {
+            f64::INFINITY
+        } else {
+            bounds[region]
+        };
+        (a, b)
+    }
+
+    /// Endpoint masses captured by region [a, b).
+    fn endpoint_masses(&self, a: f64, b: f64) -> (f64, f64) {
+        let i = self.block as f64;
+        // +1 is included iff b > 1 (region extends past the endpoint).
+        let mass_p = if b >= 1.0 {
+            match self.norm {
+                Norm::Absmax => 1.0 / (2.0 * i),
+                Norm::SignedAbsmax => 1.0 / i,
+            }
+        } else {
+            0.0
+        };
+        // −1 included iff a < −1 ⇔ a = −inf (leftmost region).
+        let mass_m = if a <= -1.0 {
+            match self.norm {
+                Norm::Absmax => 1.0 / (2.0 * i),
+                Norm::SignedAbsmax => 0.0,
+            }
+        } else {
+            0.0
+        };
+        (mass_p, mass_m)
+    }
+
+    fn mse_centroid(&self, a: f64, b: f64) -> Option<f64> {
+        let i = self.block as f64;
+        let ap = a.clamp(-1.0, 1.0);
+        let bp = b.clamp(-1.0, 1.0);
+        let (mass_p, mass_m) = self.endpoint_masses(a, b);
+        // Under the *normalized* objective the weighting m² (resp. m)
+        // disappears (App. D): weights w(m) = 1.
+        let end_to_end = self.objective == Objective::EndToEnd;
+        let f = |m: f64| -> (f64, f64) {
+            let pm = self.bm.pdf(m);
+            if pm <= 0.0 {
+                return (0.0, 0.0);
+            }
+            let fw = 2.0 * gauss_cdf(m) - 1.0; // F_{|W|}(m)
+            if fw <= 0.0 {
+                return (0.0, 0.0);
+            }
+            let cont_num =
+                (i - 1.0) / i * (gauss_pdf(m * ap) - gauss_pdf(m * bp)) / (m * fw);
+            let cont_den =
+                (i - 1.0) / i * (gauss_cdf(m * bp) - gauss_cdf(m * ap)) / fw;
+            let num = cont_num + mass_p - mass_m;
+            let den = cont_den + mass_p + mass_m;
+            let w = if end_to_end { m * m } else { 1.0 };
+            (w * num * pm, w * den * pm)
+        };
+        let num = self
+            .gl
+            .integrate_panels(|m| f(m).0, 1e-8, self.m_hi, self.panels);
+        let den = self
+            .gl
+            .integrate_panels(|m| f(m).1, 1e-8, self.m_hi, self.panels);
+        if den.abs() < 1e-300 {
+            None
+        } else {
+            Some(num / den)
+        }
+    }
+
+    fn mae_centroid(&self, a: f64, b: f64) -> Option<f64> {
+        let ap = a.max(-1.0 - 1e-12);
+        let bp = b.min(1.0 + 1e-12);
+        if bp <= ap {
+            return None;
+        }
+        let end_to_end = self.objective == Objective::EndToEnd;
+        let h = |xhat: f64| -> f64 {
+            self.gl.integrate_panels(
+                |m| {
+                    let pm = self.bm.pdf(m);
+                    if pm <= 0.0 {
+                        return 0.0;
+                    }
+                    let fa = if a <= -1.0 {
+                        0.0
+                    } else {
+                        fx_given_m(a, m, self.block, self.norm)
+                    };
+                    let fb = if b >= 1.0 {
+                        1.0
+                    } else {
+                        fx_given_m(b, m, self.block, self.norm)
+                    };
+                    let fx = fx_given_m(xhat, m, self.block, self.norm);
+                    let w = if end_to_end { m } else { 1.0 };
+                    w * pm * (fx - fa - 0.5 * (fb - fa))
+                },
+                1e-8,
+                self.m_hi,
+                self.panels,
+            )
+        };
+        // h is monotone increasing in x̂; bracket inside the clamped region.
+        let lo = ap.max(-1.0) + 1e-9;
+        let hi = bp.min(1.0) - 1e-9;
+        if hi <= lo {
+            return None;
+        }
+        let (hl, hh) = (h(lo), h(hi));
+        if hl >= 0.0 {
+            return Some(lo);
+        }
+        if hh <= 0.0 {
+            return Some(hi);
+        }
+        bisect(h, lo, hi, 1e-12)
+    }
+}
+
+impl CentroidBackend for TheoreticalBackend {
+    fn centroid(&self, region: usize, bounds: &[f64; LEVELS - 1]) -> Option<f64> {
+        let (a, b) = self.region_interval(region, bounds);
+        // Degenerate: region entirely outside [-1, 1].
+        if b <= -1.0 || a >= 1.0 {
+            return None;
+        }
+        match self.metric {
+            Metric::Mse => self.mse_centroid(a, b),
+            Metric::Mae => self.mae_centroid(a, b),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lloyd::{boundaries, EmConfig};
+
+    fn backend(metric: Metric, norm: Norm, block: usize) -> TheoreticalBackend {
+        let mut cfg = EmConfig::new(metric, norm, block);
+        cfg.metric = metric;
+        TheoreticalBackend::new(&cfg)
+    }
+
+    fn uniform_levels() -> [f64; LEVELS] {
+        let mut l = [0.0f64; LEVELS];
+        for (i, v) in l.iter_mut().enumerate() {
+            *v = -1.0 + 2.0 * i as f64 / 15.0;
+        }
+        l
+    }
+
+    #[test]
+    fn mse_centroid_symmetric_center() {
+        let be = backend(Metric::Mse, Norm::Absmax, 64);
+        let b = boundaries(&uniform_levels());
+        // regions 7 and 8 mirror each other about 0
+        let c7 = be.centroid(7, &b).unwrap();
+        let c8 = be.centroid(8, &b).unwrap();
+        assert!((c7 + c8).abs() < 1e-9, "{c7} vs {c8}");
+        assert!(c7 < 0.0 && c8 > 0.0);
+    }
+
+    #[test]
+    fn mse_centroid_inside_region() {
+        let be = backend(Metric::Mse, Norm::Absmax, 64);
+        let b = boundaries(&uniform_levels());
+        for region in 0..LEVELS {
+            if let Some(c) = be.centroid(region, &b) {
+                let lo = if region == 0 { -1.0 } else { b[region - 1] };
+                let hi = if region == 15 { 1.0 } else { b[region] };
+                assert!(
+                    c >= lo - 1e-9 && c <= hi + 1e-9,
+                    "region {region}: {c} not in [{lo}, {hi}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mae_centroid_monotone_function_root() {
+        let be = backend(Metric::Mae, Norm::Absmax, 64);
+        let b = boundaries(&uniform_levels());
+        let c7 = be.centroid(7, &b).unwrap();
+        let c8 = be.centroid(8, &b).unwrap();
+        assert!((c7 + c8).abs() < 1e-8, "{c7} vs {c8}");
+        let c5 = be.centroid(5, &b).unwrap();
+        assert!(c5 < c7);
+    }
+
+    #[test]
+    fn rightmost_region_pulled_to_one_by_endpoint_mass() {
+        // With the region [0.9, inf), the discrete mass at +1 pulls the
+        // MSE centroid above the continuous-only mean.
+        let be_abs = backend(Metric::Mse, Norm::Absmax, 64);
+        let be_signed = backend(Metric::Mse, Norm::SignedAbsmax, 64);
+        let mut b = [0.0f64; LEVELS - 1];
+        // put the last boundary at 0.9; others below
+        for (i, v) in b.iter_mut().enumerate() {
+            *v = -1.2 + 2.1 * (i as f64) / 14.0;
+        }
+        b[14] = 0.9;
+        let c_abs = be_abs.centroid(15, &b).unwrap();
+        let c_signed = be_signed.centroid(15, &b).unwrap();
+        assert!(c_abs > 0.93, "{c_abs}");
+        // signed has twice the mass at +1 -> pulled harder
+        assert!(c_signed > c_abs, "{c_signed} vs {c_abs}");
+    }
+
+    #[test]
+    fn signed_and_absolute_agree_on_interior_regions() {
+        // The continuous part of p_X is identical for both normalizations;
+        // interior centroids must match (paper App. B.2.1 closing remark).
+        let be_a = backend(Metric::Mse, Norm::Absmax, 64);
+        let be_s = backend(Metric::Mse, Norm::SignedAbsmax, 64);
+        let b = boundaries(&uniform_levels());
+        for region in 2..14 {
+            let ca = be_a.centroid(region, &b).unwrap();
+            let cs = be_s.centroid(region, &b).unwrap();
+            crate::testkit::assert_close(ca, cs, 1e-9, 1e-10, "interior centroid");
+        }
+    }
+
+    #[test]
+    fn block_size_dependence() {
+        // Larger I concentrates X near 0 -> centroid of a fixed interior
+        // region shifts toward the region's inner edge... more simply:
+        // the same region's |centroid| shrinks with I for regions near 0.
+        let be64 = backend(Metric::Mse, Norm::Absmax, 64);
+        let be1k = backend(Metric::Mse, Norm::Absmax, 1024);
+        let b = boundaries(&uniform_levels());
+        let c64 = be64.centroid(9, &b).unwrap();
+        let c1k = be1k.centroid(9, &b).unwrap();
+        assert!(c1k < c64, "{c1k} vs {c64}");
+    }
+}

@@ -1,0 +1,276 @@
+//! `bof4` — the Layer-3 coordinator CLI.
+//!
+//! Subcommands:
+//!   design    EM-design a codebook and print its reconstruction levels
+//!   quantize  quantize a synthetic LLM (or a .wbin) and report error/memory
+//!   train     pre-train the in-repo LM via the AOT'd train_step graph
+//!   eval      perplexity + task accuracy for a quantizer configuration
+//!   serve     run the batched inference service on a quantized model
+//!   info      artifact + platform inventory
+//!
+//! Run `bof4 <cmd> --help` for flags.
+
+use std::sync::Arc;
+
+use bof4::eval::{self, lora, ppl, tasks};
+use bof4::lloyd;
+use bof4::models::{ParamSet, SyntheticModel};
+use bof4::quant::{Method, Norm, OpqConfig, QuantConfig, Quantizer};
+use bof4::runtime::Runtime;
+use bof4::util::cli::Args;
+use bof4::{info, Result};
+
+fn main() {
+    bof4::util::log::init_from_env();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(String::as_str).unwrap_or("help");
+    let rest: Vec<String> = argv.iter().skip(1).cloned().collect();
+    let code = match cmd {
+        "design" => run(design(rest)),
+        "quantize" => run(quantize(rest)),
+        "train" => run(train(rest)),
+        "eval" => run(eval_cmd(rest)),
+        "serve" => run(serve(rest)),
+        "info" => run(info_cmd(rest)),
+        _ => {
+            eprintln!(
+                "bof4 — 4-bit Block-Wise Optimal Float quantization\n\n\
+                 USAGE: bof4 <design|quantize|train|eval|serve|info> [flags]\n\
+                 Each subcommand accepts --help."
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(r: Result<()>) -> i32 {
+    match r {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+/// Parse the common quantizer flags into a QuantConfig.
+fn quant_config(p: &bof4::util::cli::Parsed) -> QuantConfig {
+    let method = match p.get("method").unwrap_or("bof4") {
+        "nf4" => Method::Nf4,
+        "af4" => Method::Af4,
+        "bof4" => Method::Bof4 {
+            mse: p.get("metric").unwrap_or("mse") == "mse",
+        },
+        other => {
+            eprintln!("unknown method '{other}', using bof4");
+            Method::Bof4 { mse: true }
+        }
+    };
+    let norm = if p.has_flag("signed") || p.get("norm") == Some("signed") {
+        Norm::SignedAbsmax
+    } else if p.get("norm") == Some("abs") {
+        Norm::Absmax
+    } else if matches!(method, Method::Bof4 { .. }) {
+        Norm::SignedAbsmax
+    } else {
+        Norm::Absmax
+    };
+    QuantConfig {
+        method,
+        norm,
+        block: p.get_usize("block").unwrap_or(64),
+        opq: if p.has_flag("opq") {
+            Some(OpqConfig {
+                q: p.get_f64("opq-q").unwrap_or(0.95),
+            })
+        } else {
+            None
+        },
+        double_quant: p.has_flag("double-quant"),
+    }
+}
+
+fn quant_flags(a: Args) -> Args {
+    a.opt("method", Some("bof4"), "nf4 | af4 | bof4")
+        .opt("metric", Some("mse"), "mse | mae (BOF4 optimization target)")
+        .opt("norm", None, "abs | signed (default: signed for bof4)")
+        .flag("signed", "shorthand for --norm signed")
+        .opt("block", Some("64"), "block size I")
+        .flag("opq", "enable outlier-preserving quantization")
+        .opt("opq-q", Some("0.95"), "OPQ quantile q")
+        .flag("double-quant", "8-bit quantize the block constants")
+}
+
+fn design(rest: Vec<String>) -> Result<()> {
+    let p = quant_flags(Args::new("EM-design a BOF4 codebook"))
+        .opt("backend", Some("empirical"), "empirical | theoretical")
+        .opt("samples", Some("4194304"), "Monte-Carlo samples (empirical)")
+        .parse_from(rest);
+    let metric = if p.get("metric") == Some("mae") {
+        lloyd::Metric::Mae
+    } else {
+        lloyd::Metric::Mse
+    };
+    let norm = if p.get("norm") == Some("abs") {
+        Norm::Absmax
+    } else {
+        Norm::SignedAbsmax
+    };
+    let block = p.get_usize("block").unwrap_or(64);
+    let cfg = lloyd::EmConfig::new(metric, norm, block);
+    let cb = match p.get("backend").unwrap_or("empirical") {
+        "theoretical" => lloyd::design_theoretical(&cfg),
+        _ => lloyd::design_empirical(&cfg, p.get_usize("samples").unwrap_or(1 << 22), 0xB0F4),
+    };
+    println!("codebook: {}", cb.name);
+    for (i, l) in cb.levels.iter().enumerate() {
+        println!("  x({:>2}) = {:>+.16}", i + 1, l);
+    }
+    Ok(())
+}
+
+fn quantize(rest: Vec<String>) -> Result<()> {
+    let p = quant_flags(Args::new("quantize a model and report error/memory"))
+        .opt("wbin", None, "quantize this .wbin instead of synthetic models")
+        .parse_from(rest);
+    let cfg = quant_config(&p);
+    println!("quantizer: {}", cfg.label());
+    if let Some(path) = p.get("wbin") {
+        let params = ParamSet::load(std::path::Path::new(path))?;
+        let qm = eval::quantize_params(&params, &cfg)?;
+        println!(
+            "{path}: MAE {:.4e}  MSE {:.4e}  {} -> {} bytes, {} outliers",
+            qm.mae, qm.mse, qm.orig_bytes, qm.quant_bytes, qm.outliers
+        );
+        return Ok(());
+    }
+    for model in SyntheticModel::paper_suite() {
+        let q = Quantizer::new(cfg.clone());
+        let flat = model.flat();
+        let qt = q.quantize(&flat);
+        let deq = q.dequantize(&qt);
+        let mae = bof4::quant::error::mae(&flat, &deq);
+        let mse = bof4::quant::error::mse(&flat, &deq);
+        println!(
+            "{:<14} {:>9} params  MAE {:.4e}  MSE {:.4e}  {:.3} bits/weight  {} outliers",
+            model.name,
+            model.n_params(),
+            mae,
+            mse,
+            qt.bits_per_weight(),
+            qt.outliers.len()
+        );
+    }
+    Ok(())
+}
+
+fn train(rest: Vec<String>) -> Result<()> {
+    let p = Args::new("pre-train the in-repo LM (cached in artifacts/)")
+        .opt("steps", Some("400"), "training steps")
+        .flag("force", "retrain even if a cached model exists")
+        .parse_from(rest);
+    let rt = Arc::new(Runtime::new()?);
+    let path = eval::trainer::trained_model_path(&rt);
+    if p.has_flag("force") && path.exists() {
+        std::fs::remove_file(&path)?;
+    }
+    let mut cfg = eval::trainer::TrainConfig::default();
+    if let Some(s) = p.get_usize("steps") {
+        cfg.steps = s;
+    }
+    let outcome = eval::trainer::train(&rt, &cfg)?;
+    outcome.params.save(&path)?;
+    println!(
+        "trained {} steps: loss {:.3} -> {:.3}; saved {path:?}",
+        outcome.steps,
+        outcome.losses.first().unwrap(),
+        outcome.losses.last().unwrap()
+    );
+    Ok(())
+}
+
+fn eval_cmd(rest: Vec<String>) -> Result<()> {
+    let p = quant_flags(Args::new("PPL + task accuracy for a quantizer"))
+        .flag("bf16", "evaluate the unquantized model instead")
+        .flag("tasks", "also run the multiple-choice suite")
+        .parse_from(rest);
+    let rt = Arc::new(Runtime::new()?);
+    let base = eval::ensure_trained(&rt)?;
+    let cfg = quant_config(&p);
+    let (label, params) = if p.has_flag("bf16") {
+        ("BF16".to_string(), base.clone())
+    } else {
+        let qm = eval::quantize_params(&base, &cfg)?;
+        info!("quant error: MAE {:.4e} MSE {:.4e}", qm.mae, qm.mse);
+        (cfg.label(), qm.params)
+    };
+    let ppl = ppl::perplexity(&rt, &params, &ppl::PplConfig::default())?;
+    println!("{label}: held-out PPL = {ppl:.4}");
+    if p.has_flag("tasks") {
+        let suite = tasks::build_suite(40, 99);
+        let mut results = Vec::new();
+        for t in &suite {
+            let acc = tasks::score_task(&rt, &params, t)?;
+            println!("  {:<18} ACC {:.3} (chance {:.3})", t.name, acc, t.chance);
+            results.push((acc, t.chance));
+        }
+        println!("  NAV ACC = {:.4}", tasks::nav_acc(&results));
+    }
+    Ok(())
+}
+
+fn serve(rest: Vec<String>) -> Result<()> {
+    let p = quant_flags(Args::new("run the batched inference service (demo)"))
+        .opt("requests", Some("64"), "demo request count")
+        .parse_from(rest);
+    let rt = Arc::new(Runtime::new()?);
+    let base = eval::ensure_trained(&rt)?;
+    let cfg = quant_config(&p);
+    let qm = eval::quantize_params(&base, &cfg)?;
+    let svc = bof4::coordinator::BatchedLm::start(
+        rt.clone(),
+        qm.params.to_tensors(),
+        bof4::coordinator::ServiceConfig::default(),
+    )?;
+    let n = p.get_usize("requests").unwrap_or(64);
+    let corpus = bof4::models::Corpus::generate(50_000, 5);
+    let sw = bof4::util::timer::Stopwatch::start();
+    let mut pending = Vec::new();
+    for i in 0..n {
+        let start = (i * 97) % (corpus.len() - 48);
+        pending.push(svc.infer_async(&corpus.tokens[start..start + 48])?);
+    }
+    let mut answered = 0;
+    for rx in pending {
+        let resp = rx.recv()??;
+        let _ = resp.next_token;
+        answered += 1;
+    }
+    let secs = sw.elapsed().as_secs_f64();
+    println!(
+        "served {answered}/{n} requests in {secs:.2}s ({:.1} req/s)\n{}",
+        n as f64 / secs,
+        svc.metrics.summary()
+    );
+    Ok(())
+}
+
+fn info_cmd(_rest: Vec<String>) -> Result<()> {
+    let rt = Runtime::new()?;
+    println!("{}", bof4::PAPER);
+    println!("platform: {}", rt.platform());
+    println!("model: {:?}", rt.meta.model);
+    println!("graphs:");
+    for (name, g) in &rt.meta.graphs {
+        println!(
+            "  {:<22} {:>3} args -> {:>3} results ({})",
+            name,
+            g.args.len(),
+            g.results.len(),
+            g.file.file_name().unwrap().to_string_lossy()
+        );
+    }
+    let _ = lora::LoraConfig::default(); // (module linked into the CLI)
+    Ok(())
+}

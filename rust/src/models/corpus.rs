@@ -1,0 +1,261 @@
+//! Deterministic synthetic corpus: a small formal language with enough
+//! structure (copy dependencies, nesting, local n-gram statistics) that a
+//! small LM learns a sharply non-uniform distribution — which is exactly
+//! what makes held-out perplexity sensitive to weight quantization noise
+//! (our stand-in for WikiText-2 / LAMBADA; DESIGN.md §3).
+//!
+//! Vocabulary (64 tokens): 26 letters, 10 digits, and punctuation /
+//! structure tokens. Sentences are drawn from templates:
+//!
+//! - assignment:  `Kab = ( d1 + d2 ) ;`   — arithmetic with a value echo
+//! - recall:      `Kab -> d1 d2 ;`         — the key's digits echoed later
+//! - nesting:     `[ [ x y ] z ]`-style balanced brackets, depth ≤ 4
+//!
+//! Key-recall pairs force long-range dependencies; nesting forces a stack;
+//! digit echoes give deterministic continuations a trained model predicts
+//! with high confidence (and a quantized model measurably less so).
+
+use crate::util::rng::Pcg64;
+
+/// Vocabulary size (matches the AOT'd model's `vocab`).
+pub const VOCAB: usize = 64;
+
+// token layout
+const LETTER0: u8 = 0; // 26 letters: 0..26
+const DIGIT0: u8 = 26; // 10 digits: 26..36
+pub const TOK_EQ: u8 = 36;
+pub const TOK_ARROW: u8 = 37;
+pub const TOK_SEMI: u8 = 38;
+pub const TOK_LPAR: u8 = 39;
+pub const TOK_RPAR: u8 = 40;
+pub const TOK_PLUS: u8 = 41;
+pub const TOK_LBRK: u8 = 42;
+pub const TOK_RBRK: u8 = 43;
+pub const TOK_KEY: u8 = 44;
+pub const TOK_SPACE: u8 = 45; // separator
+pub const TOK_FN: u8 = 46;
+pub const TOK_COLON: u8 = 47;
+// 48..64 reserved / rare filler tokens
+
+/// A generated token stream with deterministic seeding.
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    pub tokens: Vec<u8>,
+}
+
+impl Corpus {
+    /// Generate `n_tokens` of corpus text from `seed`.
+    pub fn generate(n_tokens: usize, seed: u64) -> Corpus {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let mut out = Vec::with_capacity(n_tokens + 64);
+        // live key table: key letters -> 2 digits
+        let mut keys: Vec<(u8, u8, [u8; 2])> = Vec::new();
+        while out.len() < n_tokens {
+            match rng.next_below(10) {
+                0..=3 => Self::emit_assignment(&mut rng, &mut out, &mut keys),
+                4..=6 => Self::emit_recall(&mut rng, &mut out, &keys),
+                7..=8 => Self::emit_nesting(&mut rng, &mut out, 0),
+                _ => Self::emit_fn(&mut rng, &mut out),
+            }
+            out.push(TOK_SPACE);
+        }
+        out.truncate(n_tokens);
+        Corpus { tokens: out }
+    }
+
+    fn letter(rng: &mut Pcg64) -> u8 {
+        LETTER0 + rng.next_below(26) as u8
+    }
+
+    fn digit(rng: &mut Pcg64) -> u8 {
+        DIGIT0 + rng.next_below(10) as u8
+    }
+
+    /// `K a b = ( d1 + d2 ) ;` and remember (a, b) -> digits.
+    fn emit_assignment(
+        rng: &mut Pcg64,
+        out: &mut Vec<u8>,
+        keys: &mut Vec<(u8, u8, [u8; 2])>,
+    ) {
+        let (a, b) = (Self::letter(rng), Self::letter(rng));
+        let d = [Self::digit(rng), Self::digit(rng)];
+        out.extend_from_slice(&[TOK_KEY, a, b, TOK_EQ, TOK_LPAR, d[0], TOK_PLUS, d[1], TOK_RPAR, TOK_SEMI]);
+        // Reassignment replaces the old entry (recalls must always echo
+        // the *most recent* assignment), and the live-key table stays
+        // small so assignment->recall distances fit inside the model's
+        // 64-token context window (recall must be *learnable* from
+        // context for the induction tasks to be sound).
+        keys.retain(|&(ka, kb, _)| (ka, kb) != (a, b));
+        if keys.len() >= 3 {
+            keys.remove(0);
+        }
+        keys.push((a, b, d));
+    }
+
+    /// `K a b -> d1 d2 ;` — echoes a previously assigned key's digits.
+    fn emit_recall(rng: &mut Pcg64, out: &mut Vec<u8>, keys: &[(u8, u8, [u8; 2])]) {
+        if keys.is_empty() {
+            return;
+        }
+        let (a, b, d) = keys[rng.next_below(keys.len() as u64) as usize];
+        out.extend_from_slice(&[TOK_KEY, a, b, TOK_ARROW, d[0], d[1], TOK_SEMI]);
+    }
+
+    /// Balanced brackets with letters inside, recursion depth ≤ 4.
+    fn emit_nesting(rng: &mut Pcg64, out: &mut Vec<u8>, depth: usize) {
+        out.push(TOK_LBRK);
+        let items = 1 + rng.next_below(3);
+        for _ in 0..items {
+            if depth < 3 && rng.next_below(3) == 0 {
+                Self::emit_nesting(rng, out, depth + 1);
+            } else {
+                out.push(Self::letter(rng));
+            }
+        }
+        out.push(TOK_RBRK);
+    }
+
+    /// `F n : [ ... ]` — bracket sequence with depth matching the digit
+    /// (the "code generation" fine-tune task shape).
+    fn emit_fn(rng: &mut Pcg64, out: &mut Vec<u8>) {
+        let n = 1 + rng.next_below(3) as usize;
+        out.extend_from_slice(&[TOK_FN, DIGIT0 + n as u8, TOK_COLON]);
+        for _ in 0..n {
+            out.push(TOK_LBRK);
+        }
+        out.push(Self::letter(rng));
+        for _ in 0..n {
+            out.push(TOK_RBRK);
+        }
+    }
+
+    /// Deterministic train/eval split: the first `frac` of the stream is
+    /// training data, the rest held out.
+    pub fn split(&self, frac: f64) -> (&[u8], &[u8]) {
+        let cut = (self.tokens.len() as f64 * frac) as usize;
+        self.tokens.split_at(cut)
+    }
+
+    /// Iterate `[batch, seq]` i32 batches over a token range (sequential
+    /// windows, wrapping). `step` indexes the batch deterministically.
+    pub fn batch(&self, range: &[u8], batch: usize, seq: usize, step: usize) -> Vec<i32> {
+        assert!(range.len() > seq + 1, "corpus slice too small");
+        let mut out = Vec::with_capacity(batch * seq);
+        let stride = (range.len() - seq - 1) / batch.max(1);
+        for b in 0..batch {
+            let start = (b * stride + step * seq) % (range.len() - seq);
+            for s in 0..seq {
+                out.push(range[start + s] as i32);
+            }
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = Corpus::generate(10_000, 7);
+        let b = Corpus::generate(10_000, 7);
+        assert_eq!(a.tokens, b.tokens);
+        let c = Corpus::generate(10_000, 8);
+        assert_ne!(a.tokens, c.tokens);
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let c = Corpus::generate(50_000, 1);
+        assert!(c.tokens.iter().all(|&t| (t as usize) < VOCAB));
+        assert_eq!(c.len(), 50_000);
+    }
+
+    #[test]
+    fn has_structure_not_uniform() {
+        let c = Corpus::generate(100_000, 2);
+        let mut counts = [0usize; VOCAB];
+        for &t in &c.tokens {
+            counts[t as usize] += 1;
+        }
+        // structural tokens are much more common than any single letter
+        assert!(counts[TOK_SPACE as usize] > counts[3]);
+        // reserved tokens never appear
+        assert!(counts[50..].iter().all(|&c| c == 0));
+        // entropy is well below uniform (ln 64 = 4.16 nats)
+        let n = c.len() as f64;
+        let h: f64 = counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / n;
+                -p * p.ln()
+            })
+            .sum();
+        assert!(h < 3.9, "unigram entropy {h}");
+    }
+
+    #[test]
+    fn recall_pairs_are_consistent() {
+        // every `K a b -> d1 d2` must match the most recent `K a b = (x+y)`
+        let c = Corpus::generate(200_000, 3);
+        let t = &c.tokens;
+        let mut last: std::collections::HashMap<(u8, u8), (u8, u8)> =
+            std::collections::HashMap::new();
+        let mut checked = 0;
+        let mut i = 0;
+        while i + 9 < t.len() {
+            if t[i] == TOK_KEY && t[i + 3] == TOK_EQ {
+                last.insert((t[i + 1], t[i + 2]), (t[i + 5], t[i + 7]));
+                i += 10;
+            } else if t[i] == TOK_KEY && t[i + 3] == TOK_ARROW {
+                if let Some(&(d1, d2)) = last.get(&(t[i + 1], t[i + 2])) {
+                    assert_eq!((t[i + 4], t[i + 5]), (d1, d2), "recall at {i}");
+                    checked += 1;
+                }
+                i += 7;
+            } else {
+                i += 1;
+            }
+        }
+        assert!(checked > 100, "only {checked} recalls checked");
+    }
+
+    #[test]
+    fn brackets_balanced() {
+        let c = Corpus::generate(100_000, 4);
+        let mut depth: i64 = 0;
+        for &t in &c.tokens {
+            if t == TOK_LBRK {
+                depth += 1;
+            } else if t == TOK_RBRK {
+                depth -= 1;
+            }
+            // truncation can leave the final bracket open; never negative
+            // beyond a truncated tail
+        }
+        assert!(depth.abs() <= 8, "unbalanced depth {depth}");
+    }
+
+    #[test]
+    fn batches_shape_and_range() {
+        let c = Corpus::generate(50_000, 5);
+        let (train, eval) = c.split(0.9);
+        assert!(train.len() > eval.len());
+        let b = c.batch(train, 16, 64, 0);
+        assert_eq!(b.len(), 16 * 64);
+        assert!(b.iter().all(|&t| t >= 0 && t < VOCAB as i32));
+        // different steps give different batches
+        let b2 = c.batch(train, 16, 64, 1);
+        assert_ne!(b, b2);
+    }
+}

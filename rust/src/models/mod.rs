@@ -1,0 +1,19 @@
+//! Model-side substrates: the synthetic training corpus, parameter
+//! containers + persistence, and synthetic LLM-like weight generation for
+//! the quantization-error experiments.
+//!
+//! - [`corpus`]: a deterministic formal-language corpus (the pre-training
+//!   and evaluation data for the in-repo LM; DESIGN.md §3 Substitutions)
+//! - [`params`]: named parameter sets matching `artifacts/meta.json` order,
+//!   with a `.wbin` binary store
+//! - [`synthetic`]: LLM-shaped weight tensors (near-Gaussian blocks with
+//!   sparse super-Gaussian outliers) standing in for Llama/Qwen/Mistral
+//!   checkpoints in Tables 1/9
+
+pub mod corpus;
+pub mod params;
+pub mod synthetic;
+
+pub use corpus::Corpus;
+pub use params::ParamSet;
+pub use synthetic::SyntheticModel;

@@ -1,0 +1,187 @@
+//! Named parameter sets + `.wbin` persistence.
+//!
+//! A [`ParamSet`] is the rust-side view of the model's flat parameter list
+//! in `meta.json` order. The `.wbin` format is a minimal self-describing
+//! binary container (magic, count, then per-tensor name/shape/f32 data,
+//! little-endian) used to cache the trained model between benches.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::{GraphMeta, HostTensor};
+
+const MAGIC: &[u8; 8] = b"BOF4WBIN";
+
+/// An ordered, named collection of f32 tensors.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSet {
+    pub entries: Vec<(String, Vec<usize>, Vec<f32>)>,
+}
+
+impl ParamSet {
+    pub fn new() -> Self {
+        ParamSet {
+            entries: Vec::new(),
+        }
+    }
+
+    /// Build from runtime tensors using the first `n` args of a graph ABI
+    /// for names/shapes.
+    pub fn from_tensors(gm: &GraphMeta, tensors: &[HostTensor]) -> Result<ParamSet> {
+        let mut entries = Vec::new();
+        for (t, m) in tensors.iter().zip(&gm.args) {
+            entries.push((m.name.clone(), m.shape.clone(), t.as_f32()?.to_vec()));
+        }
+        Ok(ParamSet { entries })
+    }
+
+    pub fn get(&self, name: &str) -> Option<(&[usize], &[f32])> {
+        self.entries
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .map(|(_, s, d)| (s.as_slice(), d.as_slice()))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Vec<f32>> {
+        self.entries
+            .iter_mut()
+            .find(|(n, _, _)| n == name)
+            .map(|(_, _, d)| d)
+    }
+
+    /// Convert to HostTensors in stored order.
+    pub fn to_tensors(&self) -> Vec<HostTensor> {
+        self.entries
+            .iter()
+            .map(|(_, s, d)| HostTensor::f32(d.clone(), s.clone()))
+            .collect()
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.entries.iter().map(|(_, _, d)| d.len()).sum()
+    }
+
+    /// Save in `.wbin` format.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?,
+        );
+        f.write_all(MAGIC)?;
+        f.write_all(&(self.entries.len() as u32).to_le_bytes())?;
+        for (name, shape, data) in &self.entries {
+            let nb = name.as_bytes();
+            f.write_all(&(nb.len() as u32).to_le_bytes())?;
+            f.write_all(nb)?;
+            f.write_all(&(shape.len() as u32).to_le_bytes())?;
+            for &d in shape {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            f.write_all(&(data.len() as u64).to_le_bytes())?;
+            // little-endian f32s
+            let bytes = unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+            };
+            f.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    /// Load from `.wbin`.
+    pub fn load(path: &Path) -> Result<ParamSet> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(anyhow!("{path:?}: bad magic"));
+        }
+        let mut u32buf = [0u8; 4];
+        let mut u64buf = [0u8; 8];
+        f.read_exact(&mut u32buf)?;
+        let count = u32::from_le_bytes(u32buf) as usize;
+        let mut entries = Vec::with_capacity(count);
+        for _ in 0..count {
+            f.read_exact(&mut u32buf)?;
+            let name_len = u32::from_le_bytes(u32buf) as usize;
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            f.read_exact(&mut u32buf)?;
+            let rank = u32::from_le_bytes(u32buf) as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                f.read_exact(&mut u64buf)?;
+                shape.push(u64::from_le_bytes(u64buf) as usize);
+            }
+            f.read_exact(&mut u64buf)?;
+            let n = u64::from_le_bytes(u64buf) as usize;
+            if n != shape.iter().product::<usize>() {
+                return Err(anyhow!("{path:?}: shape/data mismatch"));
+            }
+            let mut data = vec![0f32; n];
+            let bytes = unsafe {
+                std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, n * 4)
+            };
+            f.read_exact(bytes)?;
+            entries.push((String::from_utf8(name)?, shape, data));
+        }
+        Ok(ParamSet { entries })
+    }
+}
+
+impl Default for ParamSet {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ParamSet {
+        ParamSet {
+            entries: vec![
+                ("embed".into(), vec![4, 2], (0..8).map(|i| i as f32).collect()),
+                ("head".into(), vec![3], vec![1.5, -2.5, 0.0]),
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip_wbin() {
+        let dir = std::env::temp_dir().join("bof4_test_wbin");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("params.wbin");
+        let p = sample();
+        p.save(&path).unwrap();
+        let q = ParamSet::load(&path).unwrap();
+        assert_eq!(p, q);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn accessors() {
+        let p = sample();
+        assert_eq!(p.n_params(), 11);
+        let (shape, data) = p.get("head").unwrap();
+        assert_eq!(shape, &[3]);
+        assert_eq!(data[1], -2.5);
+        assert!(p.get("missing").is_none());
+        let t = p.to_tensors();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0].shape(), &[4, 2]);
+    }
+
+    #[test]
+    fn rejects_corrupt_file() {
+        let dir = std::env::temp_dir().join("bof4_test_wbin2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.wbin");
+        std::fs::write(&path, b"NOTMAGIC------").unwrap();
+        assert!(ParamSet::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

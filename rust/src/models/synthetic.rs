@@ -1,0 +1,211 @@
+//! Synthetic LLM-like weight sets — the stand-in for Llama/Qwen/Mistral
+//! checkpoints in the Table-1/9 experiments (DESIGN.md §3 Substitutions).
+//!
+//! What matters for quantizer *ordering* is the distribution shape the
+//! paper itself identifies (App. E.1): per-row near-Gaussian weights whose
+//! scale varies across tensors, with a sparse set of super-Gaussian
+//! outliers concentrated in a few blocks ("most rows ... are very close to
+//! Gaussian, whereas only some blocks follow a super-Gaussian distribution
+//! with a small number of large-magnitude outlier weights", also Dettmers
+//! et al.). We synthesize exactly that, per named tensor, with
+//! deterministic seeding.
+
+use crate::util::rng::Pcg64;
+
+/// Description of one synthetic weight tensor.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    /// Per-tensor base std (LLM layers differ by ~an order of magnitude).
+    pub scale: f32,
+}
+
+/// A synthetic "LLM checkpoint": named tensors with LLM-like statistics.
+#[derive(Clone, Debug)]
+pub struct SyntheticModel {
+    pub name: String,
+    pub tensors: Vec<(TensorSpec, Vec<f32>)>,
+}
+
+/// Outlier-injection profile.
+#[derive(Clone, Copy, Debug)]
+pub struct OutlierProfile {
+    /// Fraction of weights turned into outliers (e.g. 4e-5).
+    pub fraction: f64,
+    /// Outlier magnitude multiple of the tensor scale (e.g. 12–30×).
+    pub magnitude: f32,
+}
+
+impl Default for OutlierProfile {
+    fn default() -> Self {
+        OutlierProfile {
+            fraction: 5e-5,
+            magnitude: 18.0,
+        }
+    }
+}
+
+impl SyntheticModel {
+    /// A transformer-shaped tensor inventory (d_model × multiples), scaled
+    /// like 1/sqrt(fan_in) layers plus embeddings; `layers` controls size.
+    pub fn llm_like(name: &str, d_model: usize, layers: usize, seed: u64) -> SyntheticModel {
+        let mut specs = Vec::new();
+        specs.push(TensorSpec {
+            name: "embed".into(),
+            rows: 4 * d_model, // vocab stand-in
+            cols: d_model,
+            scale: 0.02,
+        });
+        for l in 0..layers {
+            let s_attn = 1.0 / (d_model as f32).sqrt();
+            let s_mlp = 1.0 / (2.0 * d_model as f32).sqrt();
+            specs.push(TensorSpec {
+                name: format!("l{l}.wqkv"),
+                rows: d_model,
+                cols: 3 * d_model,
+                scale: s_attn,
+            });
+            specs.push(TensorSpec {
+                name: format!("l{l}.wo"),
+                rows: d_model,
+                cols: d_model,
+                scale: s_attn * 0.7,
+            });
+            specs.push(TensorSpec {
+                name: format!("l{l}.win"),
+                rows: d_model,
+                cols: 4 * d_model,
+                scale: s_attn,
+            });
+            specs.push(TensorSpec {
+                name: format!("l{l}.wout"),
+                rows: 4 * d_model,
+                cols: d_model,
+                scale: s_mlp,
+            });
+        }
+        Self::from_specs(name, specs, seed, OutlierProfile::default())
+    }
+
+    /// Generate from explicit specs.
+    pub fn from_specs(
+        name: &str,
+        specs: Vec<TensorSpec>,
+        seed: u64,
+        outliers: OutlierProfile,
+    ) -> SyntheticModel {
+        let mut tensors = Vec::with_capacity(specs.len());
+        for (i, spec) in specs.into_iter().enumerate() {
+            let mut rng = Pcg64::seed_with_stream(seed, i as u64 + 1);
+            let n = spec.rows * spec.cols;
+            let mut data = vec![0.0f32; n];
+            rng.fill_gaussian_f32(&mut data, spec.scale);
+            // inject sparse super-Gaussian outliers
+            let n_out = (n as f64 * outliers.fraction).round() as usize;
+            for _ in 0..n_out {
+                let idx = rng.next_below(n as u64) as usize;
+                let sign = if rng.next_f32() < 0.5 { -1.0 } else { 1.0 };
+                let mag = outliers.magnitude * (1.0 + rng.next_f32());
+                data[idx] = sign * spec.scale * mag;
+            }
+            tensors.push((spec, data));
+        }
+        SyntheticModel {
+            name: name.to_string(),
+            tensors,
+        }
+    }
+
+    /// Total parameter count.
+    pub fn n_params(&self) -> usize {
+        self.tensors.iter().map(|(_, d)| d.len()).sum()
+    }
+
+    /// Flat concatenated view (for whole-model error metrics).
+    pub fn flat(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.n_params());
+        for (_, d) in &self.tensors {
+            out.extend_from_slice(d);
+        }
+        out
+    }
+
+    /// The paper's three evaluation models, scaled down to this testbed.
+    pub fn paper_suite() -> Vec<SyntheticModel> {
+        vec![
+            SyntheticModel::llm_like("llama-like", 256, 4, 101),
+            SyntheticModel::llm_like("qwen-like", 192, 5, 202),
+            SyntheticModel::llm_like("mistral-like", 320, 3, 303),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = SyntheticModel::llm_like("m", 64, 2, 1);
+        let b = SyntheticModel::llm_like("m", 64, 2, 1);
+        assert_eq!(a.tensors[0].1, b.tensors[0].1);
+        let c = SyntheticModel::llm_like("m", 64, 2, 2);
+        assert_ne!(a.tensors[0].1, c.tensors[0].1);
+    }
+
+    #[test]
+    fn shapes_and_count() {
+        let m = SyntheticModel::llm_like("m", 64, 2, 3);
+        // embed + 4 per layer * 2
+        assert_eq!(m.tensors.len(), 9);
+        let n = m.n_params();
+        assert_eq!(n, m.flat().len());
+        assert!(n > 100_000);
+    }
+
+    #[test]
+    fn per_tensor_scales_differ() {
+        let m = SyntheticModel::llm_like("m", 128, 1, 4);
+        let std = |d: &[f32]| {
+            let mu = d.iter().sum::<f32>() / d.len() as f32;
+            (d.iter().map(|x| (x - mu).powi(2)).sum::<f32>() / d.len() as f32).sqrt()
+        };
+        let s_embed = std(&m.tensors[0].1);
+        let s_qkv = std(&m.tensors[1].1);
+        assert!((s_embed - 0.02).abs() < 0.005, "{s_embed}");
+        assert!(s_qkv > s_embed * 2.0);
+    }
+
+    #[test]
+    fn outliers_present_and_sparse() {
+        let m = SyntheticModel::from_specs(
+            "o",
+            vec![TensorSpec {
+                name: "w".into(),
+                rows: 512,
+                cols: 512,
+                scale: 0.05,
+            }],
+            5,
+            OutlierProfile {
+                fraction: 1e-4,
+                magnitude: 20.0,
+            },
+        );
+        let d = &m.tensors[0].1;
+        let big = d.iter().filter(|&&x| x.abs() > 0.05 * 10.0).count();
+        let expect = (d.len() as f64 * 1e-4) as usize;
+        assert!(big >= expect / 2 && big <= expect * 3, "{big} vs {expect}");
+    }
+
+    #[test]
+    fn paper_suite_models_distinct() {
+        let suite = SyntheticModel::paper_suite();
+        assert_eq!(suite.len(), 3);
+        let names: Vec<_> = suite.iter().map(|m| m.name.as_str()).collect();
+        assert_eq!(names, ["llama-like", "qwen-like", "mistral-like"]);
+        assert!(suite.iter().all(|m| m.n_params() > 500_000));
+    }
+}

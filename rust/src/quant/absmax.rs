@@ -1,0 +1,72 @@
+//! Block-wise absmax normalization (paper §2.1 eqs. 1–3 and §3.1 eq. 4).
+
+pub use crate::stats::blockmax::Norm;
+
+/// Quantization constant of one block: the absolute maximum (eq. 1) or the
+/// signed value of the absolutely-largest weight (eq. 4, BOF4-S).
+/// Ties in magnitude resolve to the lowest index (matches the python
+/// oracle's `argmax`).
+#[inline]
+pub fn block_constant(block: &[f32], norm: Norm) -> f32 {
+    debug_assert!(!block.is_empty());
+    match norm {
+        Norm::Absmax => block.iter().fold(0.0f32, |a, &w| a.max(w.abs())),
+        Norm::SignedAbsmax => {
+            let mut best = block[0];
+            let mut best_abs = best.abs();
+            for &w in &block[1..] {
+                let a = w.abs();
+                if a > best_abs {
+                    best = w;
+                    best_abs = a;
+                }
+            }
+            best
+        }
+    }
+}
+
+/// Safe divisor: all-zero blocks normalize by 1.0 (weights stay 0, which
+/// every paper codebook represents exactly).
+#[inline]
+pub fn safe_constant(c: f32) -> f32 {
+    if c == 0.0 {
+        1.0
+    } else {
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn absmax_basic() {
+        assert_eq!(block_constant(&[1.0, -3.0, 2.0], Norm::Absmax), 3.0);
+        assert_eq!(block_constant(&[1.0, -3.0, 2.0], Norm::SignedAbsmax), -3.0);
+        assert_eq!(block_constant(&[0.5], Norm::SignedAbsmax), 0.5);
+    }
+
+    #[test]
+    fn signed_tie_takes_first() {
+        // |−2| == |2|: the first one (index 0) wins.
+        assert_eq!(block_constant(&[-2.0, 2.0], Norm::SignedAbsmax), -2.0);
+        assert_eq!(block_constant(&[2.0, -2.0], Norm::SignedAbsmax), 2.0);
+    }
+
+    #[test]
+    fn zero_block() {
+        assert_eq!(block_constant(&[0.0, 0.0], Norm::Absmax), 0.0);
+        assert_eq!(safe_constant(0.0), 1.0);
+        assert_eq!(safe_constant(-2.5), -2.5);
+    }
+
+    #[test]
+    fn signed_normalization_maps_max_to_one() {
+        let b = [0.3f32, -0.9, 0.1];
+        let c = block_constant(&b, Norm::SignedAbsmax);
+        assert_eq!(b[1] / c, 1.0); // the largest-magnitude weight -> +1
+        assert!(b[0] / c < 0.0); // others flip sign
+    }
+}

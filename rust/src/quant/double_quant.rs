@@ -1,0 +1,125 @@
+//! Double quantization: 8-bit affine quantization of the per-block
+//! quantization constants (Dettmers et al. §QLoRA; discussed in the BOF4
+//! paper's Limitations — signed constants double the input range, which is
+//! why the affine min/max form is used here rather than absmax-of-absmax).
+//!
+//! Constants are grouped into chunks of [`CHUNK`]; each chunk stores an
+//! f32 (min, scale) pair plus one u8 per constant.
+
+/// Constants per double-quantization chunk.
+pub const CHUNK: usize = 256;
+
+/// 8-bit affine-quantized block constants.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DoubleQuant {
+    pub codes: Vec<u8>,
+    /// Per-chunk (min, scale): value = min + code * scale.
+    pub chunk_params: Vec<(f32, f32)>,
+    pub len: usize,
+}
+
+impl DoubleQuant {
+    /// Quantize the block constants.
+    pub fn quantize(absmax: &[f32]) -> Self {
+        let mut codes = Vec::with_capacity(absmax.len());
+        let mut chunk_params = Vec::with_capacity(absmax.len().div_ceil(CHUNK));
+        for chunk in absmax.chunks(CHUNK) {
+            let mn = chunk.iter().cloned().fold(f32::INFINITY, f32::min);
+            let mx = chunk.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let scale = if mx > mn { (mx - mn) / 255.0 } else { 0.0 };
+            chunk_params.push((mn, scale));
+            for &a in chunk {
+                let code = if scale > 0.0 {
+                    ((a - mn) / scale).round().clamp(0.0, 255.0) as u8
+                } else {
+                    0
+                };
+                codes.push(code);
+            }
+        }
+        DoubleQuant {
+            codes,
+            chunk_params,
+            len: absmax.len(),
+        }
+    }
+
+    /// Reconstruct the block constants.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.len);
+        for (ci, chunk) in self.codes.chunks(CHUNK).enumerate() {
+            let (mn, scale) = self.chunk_params[ci];
+            for &c in chunk {
+                out.push(mn + c as f32 * scale);
+            }
+        }
+        out
+    }
+
+    /// Storage bytes: 1 per constant + 8 per chunk.
+    pub fn bytes(&self) -> usize {
+        self.codes.len() + 8 * self.chunk_params.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        let mut rng = Pcg64::seed_from_u64(8);
+        let absmax: Vec<f32> = (0..1000)
+            .map(|_| 1.0 + rng.next_f32() * 3.0)
+            .collect();
+        let dq = DoubleQuant::quantize(&absmax);
+        let rec = dq.dequantize();
+        assert_eq!(rec.len(), absmax.len());
+        for (ci, chunk) in absmax.chunks(CHUNK).enumerate() {
+            let (_, scale) = dq.chunk_params[ci];
+            for (i, (&a, &r)) in chunk.iter().zip(&rec[ci * CHUNK..]).enumerate() {
+                assert!(
+                    (a - r).abs() <= scale / 2.0 + 1e-6,
+                    "chunk {ci} idx {i}: {a} vs {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn signed_constants_supported() {
+        // BOF4-S constants carry signs; affine handles the doubled range
+        // (this is the Limitations-section trade-off made explicit).
+        let absmax = vec![-3.0f32, -1.0, 1.0, 3.0];
+        let dq = DoubleQuant::quantize(&absmax);
+        let rec = dq.dequantize();
+        for (a, r) in absmax.iter().zip(&rec) {
+            assert!((a - r).abs() <= (6.0 / 255.0) / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn constant_chunk_is_exact() {
+        let absmax = vec![2.5f32; 300];
+        let dq = DoubleQuant::quantize(&absmax);
+        assert_eq!(dq.dequantize(), absmax);
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let absmax = vec![1.0f32; 600];
+        let dq = DoubleQuant::quantize(&absmax);
+        // 600 bytes + 3 chunks * 8
+        assert_eq!(dq.bytes(), 600 + 24);
+    }
+
+    #[test]
+    fn endpoints_representable() {
+        let absmax = vec![1.0f32, 2.0, 4.0];
+        let dq = DoubleQuant::quantize(&absmax);
+        let rec = dq.dequantize();
+        assert_eq!(rec[0], 1.0);
+        assert_eq!(rec[2], 4.0);
+    }
+}

@@ -1,0 +1,90 @@
+//! Quantization error metrics (MAE / MSE) with f64 accumulation.
+
+/// Mean absolute error between original and reconstructed weights.
+pub fn mae(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(&x, &y)| ((x as f64) - (y as f64)).abs())
+        .sum();
+    s / a.len() as f64
+}
+
+/// Mean squared error.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = (x as f64) - (y as f64);
+            d * d
+        })
+        .sum();
+    s / a.len() as f64
+}
+
+/// Signal-to-quantization-noise ratio in dB (reports).
+pub fn sqnr_db(orig: &[f32], deq: &[f32]) -> f64 {
+    let sig: f64 = orig.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    let noise: f64 = orig
+        .iter()
+        .zip(deq)
+        .map(|(&x, &y)| {
+            let d = (x as f64) - (y as f64);
+            d * d
+        })
+        .sum();
+    10.0 * (sig / noise.max(1e-300)).log10()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_error_when_equal() {
+        let a = [1.0f32, -2.0, 3.0];
+        assert_eq!(mae(&a, &a), 0.0);
+        assert_eq!(mse(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn known_values() {
+        let a = [0.0f32, 0.0];
+        let b = [1.0f32, -3.0];
+        assert_eq!(mae(&a, &b), 2.0);
+        assert_eq!(mse(&a, &b), 5.0);
+    }
+
+    #[test]
+    fn mse_dominated_by_outliers_vs_mae() {
+        let a = vec![0.0f32; 100];
+        let mut b = vec![0.01f32; 100];
+        b[0] = 1.0;
+        // MSE is relatively more sensitive to the single outlier
+        let ratio_mse = mse(&a, &b) / mse(&a, &vec![0.01; 100]);
+        let ratio_mae = mae(&a, &b) / mae(&a, &vec![0.01; 100]);
+        assert!(ratio_mse > ratio_mae);
+    }
+
+    #[test]
+    fn sqnr_positive_for_small_noise() {
+        let a: Vec<f32> = (0..100).map(|i| (i as f32).sin()).collect();
+        let b: Vec<f32> = a.iter().map(|x| x + 0.001).collect();
+        assert!(sqnr_db(&a, &b) > 40.0);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        assert_eq!(mae(&[], &[]), 0.0);
+        assert_eq!(mse(&[], &[]), 0.0);
+    }
+}

@@ -1,0 +1,447 @@
+//! Block-wise absmax quantization core (the paper's algorithmic system).
+//!
+//! - [`codebook`]: NF4/AF4/BOF4/BOF4-S codebooks + dynamic EM registry
+//! - [`absmax`]: absolute & signed block normalization (eqs. 1–4)
+//! - [`pack`]: 4-bit nibble packing
+//! - [`opq`]: outlier-preserving quantization (§3.3)
+//! - [`double_quant`]: 8-bit quantization of the block constants
+//! - [`error`]: MAE/MSE/SQNR metrics
+//!
+//! The high-level entry point is [`Quantizer`]:
+//!
+//! ```no_run
+//! use bof4::quant::{Quantizer, QuantConfig, Method, Norm};
+//! let q = Quantizer::new(QuantConfig {
+//!     method: Method::Bof4 { mse: true },
+//!     norm: Norm::SignedAbsmax,
+//!     block: 64,
+//!     ..Default::default()
+//! });
+//! let w = vec![0.1f32, -0.5, 0.25, 1.5, -0.02, 0.33, 0.7, -1.1];
+//! let qt = q.quantize(&w);
+//! let w_hat = q.dequantize(&qt);
+//! assert_eq!(w_hat.len(), w.len());
+//! ```
+
+pub mod absmax;
+pub mod codebook;
+pub mod double_quant;
+pub mod error;
+pub mod opq;
+pub mod pack;
+
+pub use absmax::Norm;
+pub use codebook::{codebook_for, Codebook, Method};
+pub use double_quant::DoubleQuant;
+pub use opq::{OpqConfig, Outlier};
+
+/// Full quantizer configuration.
+#[derive(Clone, Debug)]
+pub struct QuantConfig {
+    pub method: Method,
+    pub norm: Norm,
+    /// Block size I.
+    pub block: usize,
+    /// Outlier-preserving quantization (None = off).
+    pub opq: Option<OpqConfig>,
+    /// 8-bit double quantization of the block constants.
+    pub double_quant: bool,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        QuantConfig {
+            method: Method::Bof4 { mse: true },
+            norm: Norm::SignedAbsmax,
+            block: 64,
+            opq: None,
+            double_quant: false,
+        }
+    }
+}
+
+impl QuantConfig {
+    pub fn label(&self) -> String {
+        let mut s = self.method.label(self.norm);
+        if self.opq.is_some() {
+            s.push_str(" +OPQ");
+        }
+        if self.double_quant {
+            s.push_str(" +DQ");
+        }
+        s
+    }
+}
+
+/// A quantized flat tensor (storage form).
+#[derive(Clone, Debug)]
+pub struct QuantizedTensor {
+    /// Packed 4-bit codes (2 per byte), padded to a block multiple.
+    pub codes: Vec<u8>,
+    /// Per-block constants (f32 storage form), present unless
+    /// double-quantized.
+    pub absmax: Vec<f32>,
+    /// Double-quantized constants (replaces `absmax` storage accounting).
+    pub dq: Option<DoubleQuant>,
+    /// OPQ outliers (empty when OPQ is off).
+    pub outliers: Vec<Outlier>,
+    /// Original element count (before block padding).
+    pub len: usize,
+    pub block: usize,
+}
+
+impl QuantizedTensor {
+    /// Number of blocks.
+    pub fn n_blocks(&self) -> usize {
+        self.len.div_ceil(self.block)
+    }
+
+    /// Total storage bytes (the paper's memory-footprint accounting:
+    /// packed codes + constants (+DQ) + OPQ side table).
+    pub fn bytes(&self) -> usize {
+        let code_bytes = self.codes.len();
+        let const_bytes = match &self.dq {
+            Some(dq) => dq.bytes(),
+            None => 4 * self.absmax.len(),
+        };
+        code_bytes + const_bytes + opq::opq_bytes(self.outliers.len())
+    }
+
+    /// Effective bits per weight.
+    pub fn bits_per_weight(&self) -> f64 {
+        8.0 * self.bytes() as f64 / self.len as f64
+    }
+}
+
+/// The block-wise absmax quantizer (paper eq. 3 with the chosen codebook).
+#[derive(Clone, Debug)]
+pub struct Quantizer {
+    pub config: QuantConfig,
+    pub codebook: Codebook,
+}
+
+impl Quantizer {
+    pub fn new(config: QuantConfig) -> Self {
+        let codebook = codebook_for(&config.method, config.norm, config.block);
+        Quantizer { config, codebook }
+    }
+
+    /// Build with an explicit codebook (skips the registry).
+    pub fn with_codebook(config: QuantConfig, codebook: Codebook) -> Self {
+        Quantizer { config, codebook }
+    }
+
+    /// Quantize a flat tensor.
+    pub fn quantize(&self, w: &[f32]) -> QuantizedTensor {
+        let block = self.config.block;
+        let mut work = w.to_vec();
+
+        // OPQ: pull outliers out before the block-max search (paper §3.3).
+        let outliers = match self.config.opq {
+            Some(cfg) => opq::extract_outliers(&mut work, block, cfg),
+            None => Vec::new(),
+        };
+
+        // pad to a block multiple with zeros
+        let padded = work.len().div_ceil(block) * block;
+        work.resize(padded, 0.0);
+
+        let n_blocks = padded / block;
+        let mut absmax = Vec::with_capacity(n_blocks);
+        let mut codes = Vec::with_capacity(padded);
+        for chunk in work.chunks_exact(block) {
+            let c = absmax::block_constant(chunk, self.config.norm);
+            absmax.push(c);
+            let inv = 1.0 / absmax::safe_constant(c);
+            for &v in chunk {
+                codes.push(self.codebook.encode1(v * inv));
+            }
+        }
+        let packed = pack::pack_u4(&codes);
+        let dq = if self.config.double_quant {
+            Some(DoubleQuant::quantize(&absmax))
+        } else {
+            None
+        };
+        QuantizedTensor {
+            codes: packed,
+            absmax,
+            dq,
+            outliers,
+            len: w.len(),
+            block,
+        }
+    }
+
+    /// Dequantize back to f32 (the L3 decode hot path).
+    pub fn dequantize(&self, qt: &QuantizedTensor) -> Vec<f32> {
+        let block = qt.block;
+        let absmax: Vec<f32> = match &qt.dq {
+            Some(dq) => dq.dequantize(),
+            None => qt.absmax.clone(),
+        };
+        let mut out = vec![0.0f32; qt.len];
+        // Per-block LUT: levels * absmax computed once per block, then a
+        // single table lookup per weight.
+        let mut lut = [0.0f32; 16];
+        for (b, m) in absmax.iter().enumerate() {
+            let msafe = absmax::safe_constant(*m);
+            for (l, v) in lut.iter_mut().enumerate() {
+                *v = self.codebook.levels[l] * msafe;
+            }
+            let start = b * block;
+            if start >= qt.len {
+                break;
+            }
+            let end = (start + block).min(qt.len);
+            let out_blk = &mut out[start..end];
+            for (i, v) in out_blk.iter_mut().enumerate() {
+                *v = lut[pack::get_u4(&qt.codes, start + i) as usize];
+            }
+        }
+        opq::restore_outliers(&mut out, &qt.outliers);
+        out
+    }
+
+    /// Quantize + dequantize (error-evaluation convenience).
+    pub fn roundtrip(&self, w: &[f32]) -> Vec<f32> {
+        self.dequantize(&self.quantize(w))
+    }
+}
+
+/// Quantize, dequantize, and report (MAE, MSE) in one call.
+pub fn quant_error(q: &Quantizer, w: &[f32]) -> (f64, f64) {
+    let w_hat = q.roundtrip(w);
+    (error::mae(w, &w_hat), error::mse(w, &w_hat))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, GaussianVec, Prop};
+    use crate::util::rng::Pcg64;
+
+    fn gaussian(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        (0..n).map(|_| rng.next_gaussian() as f32).collect()
+    }
+
+    fn q(method: Method, norm: Norm, block: usize) -> Quantizer {
+        Quantizer::new(QuantConfig {
+            method,
+            norm,
+            block,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn roundtrip_len_and_bound() {
+        let w = gaussian(64 * 100 + 13, 1); // non-multiple length
+        let qz = q(Method::Nf4, Norm::Absmax, 64);
+        let qt = qz.quantize(&w);
+        assert_eq!(qt.len, w.len());
+        assert_eq!(qt.n_blocks(), 101);
+        let w_hat = qz.dequantize(&qt);
+        assert_eq!(w_hat.len(), w.len());
+        // error bound: |w - ŵ| <= |m_b| * max_norm_error
+        let gap = qz.codebook.max_norm_error();
+        for (b, chunk) in w.chunks(64).enumerate() {
+            let m = qt.absmax[b].abs();
+            for (i, &x) in chunk.iter().enumerate() {
+                let err = (x - w_hat[b * 64 + i]).abs();
+                assert!(err <= m * gap + 1e-5, "b={b} i={i} err={err}");
+            }
+        }
+    }
+
+    #[test]
+    fn absmax_weight_exact_under_both_norms() {
+        // The largest-magnitude weight must be exactly representable
+        // (level ±1 · constant).
+        let mut w = gaussian(64, 2);
+        w[10] = -3.5; // max magnitude, negative
+        for norm in [Norm::Absmax, Norm::SignedAbsmax] {
+            let qz = q(Method::Bof4 { mse: true }, norm, 64);
+            let w_hat = qz.roundtrip(&w);
+            assert_eq!(w_hat[10], -3.5, "{norm:?}");
+        }
+    }
+
+    #[test]
+    fn zeros_exact() {
+        let mut w = gaussian(128, 3);
+        w[5] = 0.0;
+        w[77] = 0.0;
+        let qz = q(Method::Bof4 { mse: true }, Norm::SignedAbsmax, 64);
+        let w_hat = qz.roundtrip(&w);
+        assert_eq!(w_hat[5], 0.0);
+        assert_eq!(w_hat[77], 0.0);
+    }
+
+    #[test]
+    fn all_zero_tensor() {
+        let w = vec![0.0f32; 200];
+        let qz = q(Method::Nf4, Norm::Absmax, 64);
+        let w_hat = qz.roundtrip(&w);
+        assert_eq!(w_hat, w);
+    }
+
+    #[test]
+    fn signed_beats_absolute_on_gaussian() {
+        // The paper's headline: BOF4-S < BOF4 in MSE for Gaussian weights.
+        let w = gaussian(64 * 4096, 4);
+        let (_, mse_abs) = quant_error(&q(Method::Bof4 { mse: true }, Norm::Absmax, 64), &w);
+        let (_, mse_sgn) = quant_error(
+            &q(Method::Bof4 { mse: true }, Norm::SignedAbsmax, 64),
+            &w,
+        );
+        assert!(
+            mse_sgn < mse_abs,
+            "signed {mse_sgn} should beat absolute {mse_abs}"
+        );
+    }
+
+    #[test]
+    fn bof4_beats_nf4_on_gaussian_mse() {
+        let w = gaussian(64 * 4096, 5);
+        let (_, mse_nf4) = quant_error(&q(Method::Nf4, Norm::Absmax, 64), &w);
+        let (_, mse_bof4) = quant_error(&q(Method::Bof4 { mse: true }, Norm::Absmax, 64), &w);
+        assert!(
+            mse_bof4 < mse_nf4,
+            "BOF4 {mse_bof4} should beat NF4 {mse_nf4}"
+        );
+    }
+
+    #[test]
+    fn opq_reduces_error_with_outliers() {
+        let mut w = gaussian(64 * 512, 6);
+        // plant super-Gaussian outliers
+        let mut rng = Pcg64::seed_from_u64(60);
+        for _ in 0..80 {
+            let i = rng.next_below(w.len() as u64) as usize;
+            w[i] = (rng.next_gaussian() as f32) * 20.0;
+        }
+        let base = QuantConfig {
+            method: Method::Bof4 { mse: true },
+            norm: Norm::SignedAbsmax,
+            block: 64,
+            ..Default::default()
+        };
+        let no_opq = Quantizer::new(base.clone());
+        let with_opq = Quantizer::new(QuantConfig {
+            opq: Some(OpqConfig::default()),
+            ..base
+        });
+        let (_, mse0) = quant_error(&no_opq, &w);
+        let (_, mse1) = quant_error(&with_opq, &w);
+        assert!(mse1 < mse0, "OPQ {mse1} should beat {mse0}");
+    }
+
+    #[test]
+    fn opq_restores_outliers_to_bf16() {
+        let mut w = gaussian(256, 7);
+        w[100] = 42.0;
+        let qz = Quantizer::new(QuantConfig {
+            opq: Some(OpqConfig::default()),
+            ..Default::default()
+        });
+        let w_hat = qz.roundtrip(&w);
+        assert_eq!(w_hat[100], 42.0); // 42 is bf16-exact
+    }
+
+    #[test]
+    fn double_quant_shrinks_memory() {
+        let w = gaussian(64 * 2048, 8);
+        let base = QuantConfig::default();
+        let qt0 = Quantizer::new(base.clone()).quantize(&w);
+        let qt1 = Quantizer::new(QuantConfig {
+            double_quant: true,
+            ..base
+        })
+        .quantize(&w);
+        assert!(qt1.bytes() < qt0.bytes());
+        // and the error penalty is small
+        let q0 = Quantizer::new(QuantConfig::default());
+        let q1 = Quantizer::new(QuantConfig {
+            double_quant: true,
+            ..QuantConfig::default()
+        });
+        let (_, e0) = quant_error(&q0, &w);
+        let (_, e1) = quant_error(&q1, &w);
+        assert!(e1 < e0 * 1.35, "DQ error {e1} vs {e0}");
+    }
+
+    #[test]
+    fn bits_per_weight_near_4() {
+        let w = gaussian(64 * 1024, 9);
+        let qt = Quantizer::new(QuantConfig::default()).quantize(&w);
+        let bpw = qt.bits_per_weight();
+        // 4 bits + 32/64 for the constant = 4.5
+        assert!((bpw - 4.5).abs() < 0.01, "{bpw}");
+        let qt = Quantizer::new(QuantConfig {
+            double_quant: true,
+            ..Default::default()
+        })
+        .quantize(&w);
+        // 4 + 8/64 + chunk overhead ≈ 4.13
+        assert!(qt.bits_per_weight() < 4.2);
+    }
+
+    #[test]
+    fn property_roundtrip_error_bounded() {
+        let gen = GaussianVec {
+            max_len: 300,
+            max_scale: 8.0,
+        };
+        let qz = q(Method::Bof4 { mse: true }, Norm::SignedAbsmax, 64);
+        forall("quant-bounded", 21, 60, &gen, |w| {
+            let qt = qz.quantize(w);
+            let w_hat = qz.dequantize(&qt);
+            let gap = qz.codebook.max_norm_error();
+            for (i, (&a, &b)) in w.iter().zip(&w_hat).enumerate() {
+                let m = qt.absmax[i / 64].abs();
+                if (a - b).abs() > m * gap + 1e-5 {
+                    return Prop::Fail(format!("i={i} a={a} b={b} m={m}"));
+                }
+            }
+            Prop::Pass
+        });
+    }
+
+    #[test]
+    fn property_idempotent() {
+        // Quantizing an already-dequantized tensor is exact (fixed point).
+        let gen = GaussianVec {
+            max_len: 256,
+            max_scale: 2.0,
+        };
+        let qz = q(Method::Nf4, Norm::Absmax, 64);
+        forall("quant-idempotent", 22, 40, &gen, |w| {
+            let once = qz.roundtrip(w);
+            let twice = qz.roundtrip(&once);
+            Prop::check(
+                once.iter().zip(&twice).all(|(a, b)| (a - b).abs() < 1e-6),
+                || "not idempotent".into(),
+            )
+        });
+    }
+
+    #[test]
+    fn config_labels() {
+        let c = QuantConfig {
+            method: Method::Bof4 { mse: true },
+            norm: Norm::SignedAbsmax,
+            opq: Some(OpqConfig::default()),
+            double_quant: true,
+            block: 64,
+        };
+        assert_eq!(c.label(), "BOF4-S (MSE) +OPQ +DQ");
+        let c = QuantConfig {
+            method: Method::Nf4,
+            norm: Norm::Absmax,
+            ..Default::default()
+        };
+        assert_eq!(c.label(), "NF4");
+    }
+}

@@ -1,0 +1,173 @@
+//! Outlier-preserving quantization — OPQ (paper §3.3, App. E).
+//!
+//! A weight `w_{b,i}` is an outlier iff `|w_{b,i}| > σ_b · F_M^{-1}(q)`
+//! (eq. 9), where `σ_b` is the corrected sample std of its block (eq. 73)
+//! and `F_M^{-1}` the quantile of the absolute-block-max distribution for
+//! unit-std Gaussian blocks. Outliers are stored losslessly-ish in bf16
+//! with a 64-bit flat index, replaced by 0 before the block-max search, and
+//! patched back after dequantization.
+
+use crate::stats::blockmax::BlockMax;
+use crate::tensor::Bf16;
+
+/// OPQ hyper-parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OpqConfig {
+    /// Quantile of the absolute block-max distribution (paper: q = 0.95).
+    pub q: f64,
+}
+
+impl Default for OpqConfig {
+    fn default() -> Self {
+        OpqConfig { q: 0.95 }
+    }
+}
+
+/// A preserved outlier: flat index into the tensor + bf16 value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Outlier {
+    pub index: u64,
+    pub value: Bf16,
+}
+
+/// Corrected sample standard deviation (paper eq. 73).
+pub fn block_std(block: &[f32]) -> f64 {
+    let n = block.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mean = block.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+    let var = block
+        .iter()
+        .map(|&x| {
+            let d = x as f64 - mean;
+            d * d
+        })
+        .sum::<f64>()
+        / (n - 1) as f64;
+    var.sqrt()
+}
+
+/// Detect outliers in a flat tensor of blocked weights and *zero them in
+/// place* (so the subsequent block-max search ignores them). Returns the
+/// preserved outliers. `block` is the quantization block size I.
+pub fn extract_outliers(w: &mut [f32], block: usize, cfg: OpqConfig) -> Vec<Outlier> {
+    let bm = BlockMax::new(block);
+    let threshold_sigma = bm.quantile(cfg.q);
+    let mut out = Vec::new();
+    for (b, chunk) in w.chunks_mut(block).enumerate() {
+        // Padding tail (shorter than I) uses its own length for σ — the
+        // conservative choice; tails exist only for non-multiple tensors.
+        let sigma = block_std(chunk);
+        if sigma <= 0.0 {
+            continue;
+        }
+        let thr = (sigma * threshold_sigma) as f32;
+        for (i, v) in chunk.iter_mut().enumerate() {
+            if v.abs() > thr {
+                out.push(Outlier {
+                    index: (b * block + i) as u64,
+                    value: Bf16::from_f32(*v),
+                });
+                *v = 0.0;
+            }
+        }
+    }
+    out
+}
+
+/// Patch preserved outliers back into a dequantized tensor.
+pub fn restore_outliers(w: &mut [f32], outliers: &[Outlier]) {
+    for o in outliers {
+        w[o.index as usize] = o.value.to_f32();
+    }
+}
+
+/// Memory cost of OPQ in bytes: bf16 value + u64 index per outlier
+/// (paper App. E: "stores outlier weights separately in bfloat16 and
+/// additionally uses a 64-bit integer ... to address the outlier").
+pub fn opq_bytes(n_outliers: usize) -> usize {
+    n_outliers * (2 + 8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn gaussian(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        (0..n).map(|_| rng.next_gaussian() as f32).collect()
+    }
+
+    #[test]
+    fn block_std_matches_definition() {
+        let b = [1.0f32, 2.0, 3.0, 4.0];
+        // mean 2.5, var = (2.25+0.25+0.25+2.25)/3 = 5/3
+        assert!((block_std(&b) - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(block_std(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn planted_outliers_found_and_zeroed() {
+        let mut w = gaussian(64 * 16, 1);
+        w[17] = 25.0;
+        w[64 * 5 + 3] = -30.0;
+        let outliers = extract_outliers(&mut w, 64, OpqConfig::default());
+        let idx: Vec<u64> = outliers.iter().map(|o| o.index).collect();
+        assert!(idx.contains(&17));
+        assert!(idx.contains(&(64 * 5 + 3)));
+        assert_eq!(w[17], 0.0);
+        assert_eq!(w[64 * 5 + 3], 0.0);
+        // bf16 round-trips the magnitudes closely
+        let v17 = outliers.iter().find(|o| o.index == 17).unwrap().value;
+        assert!((v17.to_f32() - 25.0).abs() < 0.125);
+    }
+
+    #[test]
+    fn gaussian_data_rarely_flagged() {
+        // With q = 0.95, pure Gaussian blocks should flag roughly
+        // P[|w| > σ F_M^{-1}(.95)] ≈ tiny per weight; over 32k weights
+        // expect well under 1%.
+        let mut w = gaussian(64 * 512, 2);
+        let outliers = extract_outliers(&mut w, 64, OpqConfig::default());
+        let frac = outliers.len() as f64 / w.len() as f64;
+        assert!(frac < 0.01, "flagged {frac}");
+    }
+
+    #[test]
+    fn lower_q_flags_more() {
+        let w0 = gaussian(64 * 256, 3);
+        let mut w1 = w0.clone();
+        let mut w2 = w0.clone();
+        let o_90 = extract_outliers(&mut w1, 64, OpqConfig { q: 0.90 });
+        let o_99 = extract_outliers(&mut w2, 64, OpqConfig { q: 0.99 });
+        assert!(o_90.len() >= o_99.len());
+    }
+
+    #[test]
+    fn restore_roundtrip() {
+        let mut w = gaussian(128, 4);
+        w[5] = 40.0;
+        let orig = w.clone();
+        let outliers = extract_outliers(&mut w, 64, OpqConfig::default());
+        assert!(!outliers.is_empty());
+        restore_outliers(&mut w, &outliers);
+        // restored value equals bf16(original)
+        assert_eq!(w[5], Bf16::from_f32(orig[5]).to_f32());
+    }
+
+    #[test]
+    fn memory_accounting() {
+        assert_eq!(opq_bytes(0), 0);
+        assert_eq!(opq_bytes(10), 100);
+    }
+
+    #[test]
+    fn matches_python_fixture_semantics() {
+        // Mirrors aot.py's OPQ fixture: threshold σ multiplier for I=64,
+        // q=0.95 is F_M^{-1}(0.95) ≈ 3.3524.
+        let bm = BlockMax::new(64);
+        assert!((bm.quantile(0.95) - 3.3524).abs() < 1e-4);
+    }
+}

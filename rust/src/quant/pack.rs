@@ -1,0 +1,82 @@
+//! 4-bit nibble packing: two codes per byte, low nibble first.
+//!
+//! Storage layout note (DESIGN.md): codes are packed for *storage*; the
+//! serving path unpacks per weight-matrix on load because the XLA graph
+//! (and a real TPU kernel's VPU gather) consumes one code per int8 lane.
+
+/// Pack codes (each < 16) into bytes, low nibble = even index.
+pub fn pack_u4(codes: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(codes.len().div_ceil(2));
+    let mut it = codes.chunks_exact(2);
+    for pair in &mut it {
+        debug_assert!(pair[0] < 16 && pair[1] < 16);
+        out.push(pair[0] | (pair[1] << 4));
+    }
+    if let [last] = it.remainder() {
+        out.push(*last & 0x0f);
+    }
+    out
+}
+
+/// Unpack `n` codes from packed bytes.
+pub fn unpack_u4(packed: &[u8], n: usize) -> Vec<u8> {
+    assert!(packed.len() * 2 >= n, "packed buffer too short");
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let b = packed[i / 2];
+        out.push(if i % 2 == 0 { b & 0x0f } else { b >> 4 });
+    }
+    out
+}
+
+/// Iterate codes without materializing (hot decode path).
+#[inline(always)]
+pub fn get_u4(packed: &[u8], i: usize) -> u8 {
+    let b = packed[i / 2];
+    if i % 2 == 0 {
+        b & 0x0f
+    } else {
+        b >> 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, GaussianVec, Prop};
+
+    #[test]
+    fn roundtrip_even_odd() {
+        for n in [0usize, 1, 2, 7, 8, 63, 64, 65] {
+            let codes: Vec<u8> = (0..n).map(|i| (i % 16) as u8).collect();
+            let packed = pack_u4(&codes);
+            assert_eq!(packed.len(), n.div_ceil(2));
+            assert_eq!(unpack_u4(&packed, n), codes, "n={n}");
+            for (i, &c) in codes.iter().enumerate() {
+                assert_eq!(get_u4(&packed, i), c);
+            }
+        }
+    }
+
+    #[test]
+    fn nibble_order_low_first() {
+        let packed = pack_u4(&[0x3, 0xa]);
+        assert_eq!(packed, vec![0xa3]);
+    }
+
+    #[test]
+    fn property_roundtrip_random() {
+        let gen = GaussianVec {
+            max_len: 257,
+            max_scale: 1.0,
+        };
+        forall("pack-roundtrip", 17, 100, &gen, |v| {
+            let codes: Vec<u8> = v
+                .iter()
+                .map(|x| ((x.abs() * 37.0) as usize % 16) as u8)
+                .collect();
+            let rt = unpack_u4(&pack_u4(&codes), codes.len());
+            Prop::check(rt == codes, || format!("mismatch len {}", codes.len()))
+        });
+    }
+}

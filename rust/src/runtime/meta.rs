@@ -1,0 +1,236 @@
+//! `artifacts/meta.json` — the python→rust ABI contract.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context};
+
+use crate::util::json::Json;
+
+/// One graph argument/result descriptor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArgMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// numpy dtype string: "float32", "int32", "uint8", "uint32".
+    pub dtype: String,
+}
+
+impl ArgMeta {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered graph.
+#[derive(Clone, Debug)]
+pub struct GraphMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub args: Vec<ArgMeta>,
+    pub results: Vec<String>,
+}
+
+impl GraphMeta {
+    pub fn arg_index(&self, name: &str) -> Option<usize> {
+        self.args.iter().position(|a| a.name == name)
+    }
+
+    pub fn result_index(&self, name: &str) -> Option<usize> {
+        self.results.iter().position(|r| r == name)
+    }
+}
+
+/// Model hyper-parameters recorded by aot.py.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub lora_rank: usize,
+    pub block: usize,
+}
+
+/// The whole artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Meta {
+    pub dir: PathBuf,
+    pub model: ModelMeta,
+    pub graphs: BTreeMap<String, GraphMeta>,
+}
+
+impl Meta {
+    /// Load `meta.json` from an artifact directory.
+    pub fn load(dir: &Path) -> anyhow::Result<Meta> {
+        let path = dir.join("meta.json");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&src).map_err(|e| anyhow!("parsing meta.json: {e}"))?;
+
+        let m = j.get("model").ok_or_else(|| anyhow!("meta.json: no model"))?;
+        let get = |k: &str| -> anyhow::Result<usize> {
+            m.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("meta.json model.{k} missing"))
+        };
+        let model = ModelMeta {
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            d_ff: get("d_ff")?,
+            seq_len: get("seq_len")?,
+            batch: get("batch")?,
+            lora_rank: get("lora_rank")?,
+            block: get("block")?,
+        };
+
+        let mut graphs = BTreeMap::new();
+        let gobj = match j.get("graphs") {
+            Some(Json::Obj(o)) => o,
+            _ => return Err(anyhow!("meta.json: no graphs object")),
+        };
+        for (name, g) in gobj {
+            let file = g
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("graph {name}: no file"))?;
+            let args = g
+                .get("args")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("graph {name}: no args"))?
+                .iter()
+                .map(|a| -> anyhow::Result<ArgMeta> {
+                    Ok(ArgMeta {
+                        name: a
+                            .get("name")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("arg name"))?
+                            .to_string(),
+                        shape: a
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .ok_or_else(|| anyhow!("arg shape"))?
+                            .iter()
+                            .map(|d| d.as_usize().unwrap_or(0))
+                            .collect(),
+                        dtype: a
+                            .get("dtype")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("arg dtype"))?
+                            .to_string(),
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let results = g
+                .get("results")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("graph {name}: no results"))?
+                .iter()
+                .map(|r| r.as_str().unwrap_or("").to_string())
+                .collect();
+            graphs.insert(
+                name.clone(),
+                GraphMeta {
+                    name: name.clone(),
+                    file: dir.join(file),
+                    args,
+                    results,
+                },
+            );
+        }
+        Ok(Meta {
+            dir: dir.to_path_buf(),
+            model,
+            graphs,
+        })
+    }
+
+    pub fn graph(&self, name: &str) -> anyhow::Result<&GraphMeta> {
+        self.graphs
+            .get(name)
+            .ok_or_else(|| anyhow!("graph '{name}' not in meta.json"))
+    }
+
+    /// Default artifact dir: $BOF4_ARTIFACTS or ./artifacts (searching up
+    /// from the current dir so tests/benches work from any workspace cwd).
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("BOF4_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        loop {
+            let cand = dir.join("artifacts");
+            if cand.join("meta.json").exists() {
+                return cand;
+            }
+            if !dir.pop() {
+                return PathBuf::from("artifacts");
+            }
+        }
+    }
+
+    pub fn load_default() -> anyhow::Result<Meta> {
+        Self::load(&Self::default_dir())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        Meta::default_dir().join("meta.json").exists()
+    }
+
+    #[test]
+    fn loads_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let meta = Meta::load_default().unwrap();
+        assert_eq!(meta.model.vocab, 64);
+        assert_eq!(meta.model.block, 64);
+        for g in [
+            "init_params",
+            "lm_nll",
+            "train_step",
+            "lora_step",
+            "dequant_matmul",
+        ] {
+            let gm = meta.graph(g).unwrap();
+            assert!(gm.file.exists(), "{:?}", gm.file);
+            assert!(!gm.args.is_empty());
+        }
+    }
+
+    #[test]
+    fn train_step_abi_symmetry() {
+        if !have_artifacts() {
+            return;
+        }
+        let meta = Meta::load_default().unwrap();
+        let g = meta.graph("train_step").unwrap();
+        // 16 params * 3 + step + tokens
+        assert_eq!(g.args.len(), 50);
+        assert_eq!(g.results.len(), 50);
+        assert_eq!(g.args[0].name, g.results[0]);
+        assert_eq!(g.arg_index("tokens"), Some(49));
+        assert_eq!(g.result_index("loss"), Some(49));
+    }
+
+    #[test]
+    fn arg_meta_helpers() {
+        let a = ArgMeta {
+            name: "x".into(),
+            shape: vec![2, 3, 4],
+            dtype: "float32".into(),
+        };
+        assert_eq!(a.elements(), 24);
+    }
+}

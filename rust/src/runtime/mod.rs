@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the rust hot path (start pattern: /opt/xla-example/load_hlo).
+//!
+//! `make artifacts` (python, build-time only) produces `artifacts/*.hlo.txt`
+//! plus `meta.json` describing each graph's flat argument/result ABI. This
+//! module is the only place the `xla` crate is touched:
+//!
+//! - [`meta`]: parse `meta.json` into [`meta::GraphMeta`] ABIs
+//! - [`client`]: the process-wide `PjRtClient`, graph compilation cache,
+//!   and typed literal marshalling helpers ([`client::HostTensor`])
+
+pub mod client;
+pub mod meta;
+
+pub use client::{HostTensor, Runtime};
+pub use meta::{ArgMeta, GraphMeta, Meta};

@@ -1,0 +1,262 @@
+//! Distribution of block maxima and of normalized weights (paper App. B.1).
+//!
+//! For i.i.d. weights `W ~ N(0,1)` grouped into blocks of size `I`:
+//!
+//! - `M = max_i |W_i|` has CDF `F_M(m) = (2Φ(m) − 1)^I` (eq. 11) and pdf
+//!   `p_M(m) = 2I (2Φ(m)−1)^{I−1} φ(m)` (eq. 12);
+//! - the normalized weights `X = W / M` (or `W / M_signed`) have, for fixed
+//!   `M = m`, the continuous conditional CDF
+//!   `F_X^cont(x|m) = (Φ(mx) − Φ(−m)) / (2Φ(m) − 1)` (eq. 10);
+//! - the full conditional CDF carries discrete mass `1/(2I)` at each of
+//!   ±1 for absolute normalization (eq. 41), or `1/I` at +1 only for
+//!   signed normalization (eq. 42).
+
+use crate::stats::special::{folded_gauss_cdf, gauss_cdf, gauss_pdf, gauss_quantile};
+
+/// Normalization mode for block-wise absmax quantization.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Norm {
+    /// Divide by `max |w|` (NF4/AF4/BOF4; paper eq. 1).
+    Absmax,
+    /// Divide by the *signed* value of the absolutely-largest weight
+    /// (BOF4-S; paper eq. 4).
+    SignedAbsmax,
+}
+
+/// The distribution family of block maxima for unit-variance Gaussian
+/// weights with block size `I`.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockMax {
+    pub block: usize,
+}
+
+impl BlockMax {
+    pub fn new(block: usize) -> Self {
+        assert!(block >= 2, "block size must be >= 2");
+        BlockMax { block }
+    }
+
+    /// `F_M(m)` (eq. 11).
+    pub fn cdf(&self, m: f64) -> f64 {
+        folded_gauss_cdf(m).powi(self.block as i32)
+    }
+
+    /// `p_M(m)` (eq. 12).
+    pub fn pdf(&self, m: f64) -> f64 {
+        if m <= 0.0 {
+            return 0.0;
+        }
+        2.0 * self.block as f64
+            * folded_gauss_cdf(m).powi(self.block as i32 - 1)
+            * gauss_pdf(m)
+    }
+
+    /// Quantile `F_M^{-1}(q)` — the OPQ outlier threshold (eq. 9):
+    /// `F_M(m) = q  ⇔  2Φ(m) − 1 = q^{1/I}  ⇔  m = Φ⁻¹((q^{1/I} + 1)/2)`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..1.0).contains(&q) && q > 0.0, "q in (0,1)");
+        let r = q.powf(1.0 / self.block as f64);
+        gauss_quantile((r + 1.0) / 2.0)
+    }
+
+    /// Expected value E[M] by quadrature (used in reports/illustrations).
+    pub fn mean(&self) -> f64 {
+        let gl = crate::stats::quadrature::GaussLegendre::new(64);
+        gl.integrate_panels(|m| m * self.pdf(m), 0.0, 12.0, 12)
+    }
+
+    /// Practical upper integration limit: p_M mass above is < ~1e-16.
+    pub fn upper_limit(&self) -> f64 {
+        // F_|W|(m) = 1 - eps -> F_M ≈ exp(-I eps); want I*eps ~ 1e-16
+        // erfc(m/√2) = eps/... just return a conservative bound:
+        let mut m = 4.0;
+        while 1.0 - self.cdf(m) > 1e-15 && m < 16.0 {
+            m += 0.5;
+        }
+        m + 1.0
+    }
+}
+
+/// Conditional CDF of normalized weights for fixed block max `m`:
+/// continuous part only, `F_X^cont(x | M = m)` (eq. 10). `x ∈ [-1, 1]`.
+pub fn fx_cont_given_m(x: f64, m: f64) -> f64 {
+    debug_assert!(m > 0.0);
+    let x = x.clamp(-1.0, 1.0);
+    let denom = folded_gauss_cdf(m);
+    if denom <= 0.0 {
+        return 0.5; // degenerate m -> symmetric limit
+    }
+    ((gauss_cdf(m * x) - gauss_cdf(-m)) / denom).clamp(0.0, 1.0)
+}
+
+/// Full conditional CDF with the discrete endpoint mass (eqs. 41/42).
+pub fn fx_given_m(x: f64, m: f64, block: usize, norm: Norm) -> f64 {
+    let i = block as f64;
+    if x < -1.0 {
+        return 0.0;
+    }
+    if x >= 1.0 {
+        return 1.0;
+    }
+    let cont = fx_cont_given_m(x, m);
+    match norm {
+        Norm::Absmax => 1.0 / (2.0 * i) + (i - 1.0) / i * cont,
+        Norm::SignedAbsmax => (i - 1.0) / i * cont,
+    }
+}
+
+/// Marginal CDF of normalized weights `F_X(x)` (eqs. 15–17), by quadrature
+/// over `p_M`. Used for the Fig. 5 reproduction and for level-utilization
+/// reports.
+pub fn fx_marginal(x: f64, block: usize, norm: Norm) -> f64 {
+    if x < -1.0 {
+        return 0.0;
+    }
+    if x >= 1.0 {
+        return 1.0;
+    }
+    let bm = BlockMax::new(block);
+    let gl = crate::stats::quadrature::GaussLegendre::new(64);
+    let hi = bm.upper_limit();
+    let cont = gl.integrate_panels(|m| bm.pdf(m) * fx_cont_given_m(x, m), 1e-9, hi, 16);
+    let i = block as f64;
+    match norm {
+        Norm::Absmax => 1.0 / (2.0 * i) + (i - 1.0) / i * cont,
+        Norm::SignedAbsmax => (i - 1.0) / i * cont,
+    }
+}
+
+/// Probability that a normalized weight falls in `[a, b)` (marginal).
+pub fn px_region(a: f64, b: f64, block: usize, norm: Norm) -> f64 {
+    let fa = if a <= -1.0 { 0.0 } else { fx_marginal(a, block, norm) };
+    let fb = if b >= 1.0 { 1.0 } else { fx_marginal(b, block, norm) };
+    (fb - fa).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn cdf_pdf_consistent() {
+        let bm = BlockMax::new(64);
+        // numeric derivative of F_M matches p_M
+        for m in [1.5, 2.0, 2.5, 3.0] {
+            let h = 1e-6;
+            let d = (bm.cdf(m + h) - bm.cdf(m - h)) / (2.0 * h);
+            assert!((d - bm.pdf(m)).abs() < 1e-6, "m={m}");
+        }
+    }
+
+    #[test]
+    fn quantile_inverts_cdf() {
+        for block in [16, 64, 256] {
+            let bm = BlockMax::new(block);
+            for q in [0.5, 0.9, 0.95, 0.99] {
+                let m = bm.quantile(q);
+                assert!((bm.cdf(m) - q).abs() < 1e-10, "I={block} q={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantile_matches_monte_carlo() {
+        // F_M^{-1}(0.95) for I = 64 — the OPQ threshold constant shared
+        // with the python fixture generator (aot.py).
+        let bm = BlockMax::new(64);
+        let thr = bm.quantile(0.95);
+        assert!((thr - 3.352_401_773_130_375).abs() < 1e-12, "thr={thr}");
+
+        let mut rng = Pcg64::seed_from_u64(4);
+        let trials = 20_000;
+        let mut below = 0;
+        for _ in 0..trials {
+            let mx = (0..64)
+                .map(|_| rng.next_gaussian().abs())
+                .fold(0.0f64, f64::max);
+            if mx <= thr {
+                below += 1;
+            }
+        }
+        let frac = below as f64 / trials as f64;
+        assert!((frac - 0.95).abs() < 0.01, "frac={frac}");
+    }
+
+    #[test]
+    fn mean_increases_with_block() {
+        let m16 = BlockMax::new(16).mean();
+        let m64 = BlockMax::new(64).mean();
+        let m256 = BlockMax::new(256).mean();
+        assert!(m16 < m64 && m64 < m256);
+        // E[max of 64 |N(0,1)|] ≈ 2.596 (Monte-Carlo cross-checked)
+        assert!((m64 - 2.596).abs() < 0.01, "{m64}");
+        assert!((m16 - 2.077).abs() < 0.01, "{m16}");
+    }
+
+    #[test]
+    fn fx_cont_bounds_and_symmetry() {
+        for m in [1.0, 2.5, 4.0] {
+            assert!(fx_cont_given_m(-1.0, m).abs() < 1e-12);
+            assert!((fx_cont_given_m(1.0, m) - 1.0).abs() < 1e-12);
+            // symmetric distribution: F(0) = 1/2
+            assert!((fx_cont_given_m(0.0, m) - 0.5).abs() < 1e-12);
+            // symmetry F(-x) = 1 - F(x)
+            for x in [0.2, 0.6, 0.9] {
+                let s = fx_cont_given_m(-x, m) + fx_cont_given_m(x, m);
+                assert!((s - 1.0).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn fx_full_endpoint_mass() {
+        let i = 64usize;
+        // Just below +1, absolute normalization: 1 - 1/(2I) of mass seen.
+        let v = fx_given_m(1.0 - 1e-12, 3.0, i, Norm::Absmax);
+        assert!((v - (1.0 - 1.0 / (2.0 * i as f64))).abs() < 1e-6, "{v}");
+        // signed: 1 - 1/I below +1, no mass at -1.
+        let v = fx_given_m(1.0 - 1e-12, 3.0, i, Norm::SignedAbsmax);
+        assert!((v - (1.0 - 1.0 / i as f64)).abs() < 1e-6, "{v}");
+        let v = fx_given_m(-1.0, 3.0, i, Norm::SignedAbsmax);
+        assert!(v < 1e-9, "{v}");
+        // absolute: mass 1/(2I) sits at exactly -1.
+        let v = fx_given_m(-1.0, 3.0, i, Norm::Absmax);
+        assert!((v - 1.0 / (2.0 * i as f64)).abs() < 1e-9, "{v}");
+    }
+
+    #[test]
+    fn fx_marginal_matches_monte_carlo() {
+        let block = 16;
+        let mut rng = Pcg64::seed_from_u64(99);
+        let trials = 40_000;
+        let mut cnt = 0usize;
+        let x0 = 0.3;
+        for _ in 0..trials {
+            let w: Vec<f64> = (0..block).map(|_| rng.next_gaussian()).collect();
+            let mx = w.iter().fold(0.0f64, |a, &b| a.max(b.abs()));
+            for &wi in &w {
+                if wi / mx <= x0 {
+                    cnt += 1;
+                }
+            }
+        }
+        let emp = cnt as f64 / (trials * block) as f64;
+        let theo = fx_marginal(x0, block, Norm::Absmax);
+        assert!((emp - theo).abs() < 0.01, "emp={emp} theo={theo}");
+    }
+
+    #[test]
+    fn px_region_sums_to_one() {
+        let edges = [-1.0, -0.5, -0.1, 0.0, 0.2, 0.7, 1.0];
+        for norm in [Norm::Absmax, Norm::SignedAbsmax] {
+            // The region ending at b = 1.0 maps to F = 1, so the discrete
+            // endpoint masses are included; the partition must sum to 1.
+            let total: f64 = edges
+                .windows(2)
+                .map(|w| px_region(w[0], w[1], 64, norm))
+                .sum::<f64>();
+            assert!((total - 1.0).abs() < 1e-6, "{norm:?} {total}");
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! Fixed-bin histograms (distribution figures 4, 7, 8 and the OPQ
+//! illustration benches).
+
+/// Equal-width histogram over `[lo, hi)`.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<u64>,
+    pub below: u64,
+    pub above: u64,
+    pub count: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Histogram {
+            lo,
+            hi,
+            bins: vec![0; nbins],
+            below: 0,
+            above: 0,
+            count: 0,
+        }
+    }
+
+    #[inline]
+    pub fn add(&mut self, x: f64) {
+        self.count += 1;
+        if x < self.lo {
+            self.below += 1;
+        } else if x >= self.hi {
+            self.above += 1;
+        } else {
+            let n = self.bins.len();
+            let idx = ((x - self.lo) / (self.hi - self.lo) * n as f64) as usize;
+            self.bins[idx.min(n - 1)] += 1;
+        }
+    }
+
+    pub fn add_all<'a>(&mut self, xs: impl IntoIterator<Item = &'a f64>) {
+        for &x in xs {
+            self.add(x);
+        }
+    }
+
+    /// Probability density estimate per bin (normalized by count·binwidth).
+    pub fn density(&self) -> Vec<f64> {
+        let bw = (self.hi - self.lo) / self.bins.len() as f64;
+        let n = self.count.max(1) as f64;
+        self.bins.iter().map(|&c| c as f64 / (n * bw)).collect()
+    }
+
+    pub fn bin_centers(&self) -> Vec<f64> {
+        let bw = (self.hi - self.lo) / self.bins.len() as f64;
+        (0..self.bins.len())
+            .map(|i| self.lo + (i as f64 + 0.5) * bw)
+            .collect()
+    }
+
+    /// Render a crude console sparkline for reports.
+    pub fn sparkline(&self, width: usize) -> String {
+        const GLYPHS: &[char] = &[' ', '▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let step = (self.bins.len() as f64 / width as f64).max(1.0);
+        let mut agg = Vec::with_capacity(width);
+        let mut i = 0.0;
+        while (i as usize) < self.bins.len() && agg.len() < width {
+            let a = i as usize;
+            let b = ((i + step) as usize).min(self.bins.len());
+            agg.push(self.bins[a..b].iter().sum::<u64>());
+            i += step;
+        }
+        let max = *agg.iter().max().unwrap_or(&1) as f64;
+        agg.iter()
+            .map(|&c| GLYPHS[((c as f64 / max.max(1.0)) * 8.0).round() as usize])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn counts_and_overflow() {
+        let mut h = Histogram::new(0.0, 1.0, 10);
+        h.add(-0.1);
+        h.add(0.0);
+        h.add(0.55);
+        h.add(0.999);
+        h.add(1.0);
+        assert_eq!(h.below, 1);
+        assert_eq!(h.above, 1);
+        assert_eq!(h.count, 5);
+        assert_eq!(h.bins[0], 1);
+        assert_eq!(h.bins[5], 1);
+        assert_eq!(h.bins[9], 1);
+    }
+
+    #[test]
+    fn density_integrates_to_coverage() {
+        let mut h = Histogram::new(-4.0, 4.0, 64);
+        let mut rng = Pcg64::seed_from_u64(5);
+        for _ in 0..50_000 {
+            h.add(rng.next_gaussian());
+        }
+        let bw = 8.0 / 64.0;
+        let total: f64 = h.density().iter().map(|d| d * bw).sum();
+        assert!((total - 1.0).abs() < 0.01, "{total}"); // ~all mass in ±4
+    }
+
+    #[test]
+    fn gaussian_shape_peak_at_center() {
+        let mut h = Histogram::new(-4.0, 4.0, 16);
+        let mut rng = Pcg64::seed_from_u64(6);
+        for _ in 0..20_000 {
+            h.add(rng.next_gaussian());
+        }
+        let d = h.density();
+        let peak = d
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert!((7..=8).contains(&peak), "peak bin {peak}");
+    }
+
+    #[test]
+    fn sparkline_len() {
+        let mut h = Histogram::new(0.0, 1.0, 100);
+        for i in 0..100 {
+            for _ in 0..i {
+                h.add(i as f64 / 100.0);
+            }
+        }
+        let s = h.sparkline(20);
+        assert_eq!(s.chars().count(), 20);
+    }
+}

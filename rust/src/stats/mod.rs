@@ -1,0 +1,19 @@
+//! Statistical substrate for quantizer design and OPQ.
+//!
+//! Everything the paper's Appendix B needs, built from scratch (no scipy,
+//! no statrs in the offline image):
+//!
+//! - [`special`]: erf / erfc / Gaussian pdf-cdf-quantile in double precision
+//! - [`blockmax`]: the distribution of (absolute) block maxima `M` —
+//!   `F_M = F_|W|^I` (paper eq. 11), `p_M` (eq. 12), its quantile function
+//!   (used by OPQ eq. 9), and the conditional normalized-weight CDF `F_X`
+//!   (eqs. 10, 41, 42)
+//! - [`quadrature`]: adaptive Simpson + Gauss-Legendre integration
+//! - [`roots`]: bisection / Brent root finding (for the MAE centroid eq. 7)
+//! - [`histogram`]: fixed-bin histograms for the distribution figures
+
+pub mod blockmax;
+pub mod histogram;
+pub mod quadrature;
+pub mod roots;
+pub mod special;

@@ -1,0 +1,177 @@
+//! Numerical integration: adaptive Simpson and Gauss-Legendre.
+//!
+//! The theoretical centroid updates (paper eqs. 5/7/35/59) integrate smooth,
+//! rapidly-decaying functions of the block maximum m over (0, ∞). The mass
+//! of `p_M` for block sizes 2..2¹² lives well inside [0, 8]; integrands are
+//! C^∞ there, so fixed-order Gauss-Legendre on a truncated interval
+//! converges spectrally. Adaptive Simpson is the general-purpose fallback
+//! (and the cross-check in tests).
+
+/// Adaptive Simpson with absolute tolerance `tol` on `[a, b]`.
+pub fn adaptive_simpson<F: Fn(f64) -> f64>(f: &F, a: f64, b: f64, tol: f64) -> f64 {
+    let c = 0.5 * (a + b);
+    let fa = f(a);
+    let fb = f(b);
+    let fc = f(c);
+    let whole = simpson(a, b, fa, fc, fb);
+    simpson_rec(f, a, b, fa, fb, fc, whole, tol, 40)
+}
+
+#[inline]
+fn simpson(a: f64, b: f64, fa: f64, fc: f64, fb: f64) -> f64 {
+    (b - a) / 6.0 * (fa + 4.0 * fc + fb)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn simpson_rec<F: Fn(f64) -> f64>(
+    f: &F,
+    a: f64,
+    b: f64,
+    fa: f64,
+    fb: f64,
+    fc: f64,
+    whole: f64,
+    tol: f64,
+    depth: u32,
+) -> f64 {
+    let c = 0.5 * (a + b);
+    let d = 0.5 * (a + c);
+    let e = 0.5 * (c + b);
+    let fd = f(d);
+    let fe = f(e);
+    let left = simpson(a, c, fa, fd, fc);
+    let right = simpson(c, b, fc, fe, fb);
+    let err = left + right - whole;
+    if depth == 0 || err.abs() <= 15.0 * tol {
+        left + right + err / 15.0
+    } else {
+        simpson_rec(f, a, c, fa, fc, fd, left, tol / 2.0, depth - 1)
+            + simpson_rec(f, c, b, fc, fb, fe, right, tol / 2.0, depth - 1)
+    }
+}
+
+/// Gauss-Legendre nodes/weights on [-1, 1], computed by Newton iteration on
+/// P_n (no coefficient tables needed; accurate to machine precision).
+pub struct GaussLegendre {
+    pub nodes: Vec<f64>,
+    pub weights: Vec<f64>,
+}
+
+impl GaussLegendre {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 2);
+        let mut nodes = vec![0.0; n];
+        let mut weights = vec![0.0; n];
+        let m = n.div_ceil(2);
+        for i in 0..m {
+            // Initial guess: Chebyshev-like
+            let mut x = (std::f64::consts::PI * (i as f64 + 0.75) / (n as f64 + 0.5)).cos();
+            let mut dp = 0.0;
+            for _ in 0..100 {
+                // Evaluate P_n(x) and P'_n(x) by recurrence.
+                let mut p0 = 1.0;
+                let mut p1 = x;
+                for k in 2..=n {
+                    let kf = k as f64;
+                    let p2 = ((2.0 * kf - 1.0) * x * p1 - (kf - 1.0) * p0) / kf;
+                    p0 = p1;
+                    p1 = p2;
+                }
+                dp = n as f64 * (x * p1 - p0) / (x * x - 1.0);
+                let dx = p1 / dp;
+                x -= dx;
+                if dx.abs() < 1e-15 {
+                    break;
+                }
+            }
+            nodes[i] = -x;
+            nodes[n - 1 - i] = x;
+            let w = 2.0 / ((1.0 - x * x) * dp * dp);
+            weights[i] = w;
+            weights[n - 1 - i] = w;
+        }
+        GaussLegendre { nodes, weights }
+    }
+
+    /// Integrate `f` over `[a, b]` with this rule.
+    pub fn integrate<F: Fn(f64) -> f64>(&self, f: F, a: f64, b: f64) -> f64 {
+        let half = 0.5 * (b - a);
+        let mid = 0.5 * (a + b);
+        self.nodes
+            .iter()
+            .zip(&self.weights)
+            .map(|(&x, &w)| w * f(mid + half * x))
+            .sum::<f64>()
+            * half
+    }
+
+    /// Integrate over `[a, b]` split into `panels` equal panels (composite
+    /// rule; robust when the integrand is sharply peaked).
+    pub fn integrate_panels<F: Fn(f64) -> f64>(
+        &self,
+        f: F,
+        a: f64,
+        b: f64,
+        panels: usize,
+    ) -> f64 {
+        let h = (b - a) / panels as f64;
+        (0..panels)
+            .map(|i| {
+                let lo = a + i as f64 * h;
+                self.integrate(&f, lo, lo + h)
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::special::{gauss_cdf, gauss_pdf};
+
+    #[test]
+    fn simpson_polynomial_exact() {
+        // Simpson is exact for cubics
+        let f = |x: f64| 3.0 * x * x * x - x + 2.0;
+        let got = adaptive_simpson(&f, -1.0, 2.0, 1e-12);
+        // ∫ = 3/4 x^4 - x²/2 + 2x over [-1,2] = (12-2+4)-(0.75-0.5-2)=15.75
+        assert!((got - 15.75).abs() < 1e-10, "{got}");
+    }
+
+    #[test]
+    fn simpson_gaussian_mass() {
+        let got = adaptive_simpson(&gauss_pdf, -8.0, 8.0, 1e-12);
+        assert!((got - 1.0).abs() < 1e-10, "{got}");
+    }
+
+    #[test]
+    fn gl_nodes_symmetric_weights_sum() {
+        for n in [4, 16, 32, 64] {
+            let gl = GaussLegendre::new(n);
+            let wsum: f64 = gl.weights.iter().sum();
+            assert!((wsum - 2.0).abs() < 1e-12, "n={n} wsum={wsum}");
+            for i in 0..n {
+                assert!((gl.nodes[i] + gl.nodes[n - 1 - i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn gl_high_degree_exactness() {
+        // n-point GL integrates degree 2n-1 polynomials exactly.
+        let gl = GaussLegendre::new(8);
+        let f = |x: f64| x.powi(15) + 2.0 * x.powi(14);
+        // over [-1,1]: odd term 0; 2·(2/15)
+        let got = gl.integrate(f, -1.0, 1.0);
+        assert!((got - 4.0 / 15.0).abs() < 1e-13, "{got}");
+    }
+
+    #[test]
+    fn gl_matches_simpson_on_cdf_integral() {
+        let f = |m: f64| gauss_cdf(m) * gauss_pdf(m) * m;
+        let gl = GaussLegendre::new(64);
+        let a = gl.integrate_panels(f, 0.0, 8.0, 8);
+        let b = adaptive_simpson(&f, 0.0, 8.0, 1e-13);
+        assert!((a - b).abs() < 1e-11, "{a} vs {b}");
+    }
+}

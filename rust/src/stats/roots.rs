@@ -1,0 +1,130 @@
+//! Root finding: bisection (guaranteed) and Brent (fast), used by the MAE
+//! centroid condition (paper eq. 7/59) and the OPQ threshold inversion.
+
+/// Bisection on a sign-changing interval; returns the midpoint after the
+/// interval shrinks below `xtol`.
+pub fn bisect<F: Fn(f64) -> f64>(f: F, mut a: f64, mut b: f64, xtol: f64) -> Option<f64> {
+    let mut fa = f(a);
+    let fb = f(b);
+    if fa == 0.0 {
+        return Some(a);
+    }
+    if fb == 0.0 {
+        return Some(b);
+    }
+    if fa.signum() == fb.signum() {
+        return None;
+    }
+    for _ in 0..200 {
+        let m = 0.5 * (a + b);
+        let fm = f(m);
+        if fm == 0.0 || (b - a).abs() < xtol {
+            return Some(m);
+        }
+        if fm.signum() == fa.signum() {
+            a = m;
+            fa = fm;
+        } else {
+            b = m;
+        }
+    }
+    Some(0.5 * (a + b))
+}
+
+/// Brent's method (inverse-quadratic + secant + bisection safeguards).
+pub fn brent<F: Fn(f64) -> f64>(f: F, mut a: f64, mut b: f64, xtol: f64) -> Option<f64> {
+    let mut fa = f(a);
+    let mut fb = f(b);
+    if fa == 0.0 {
+        return Some(a);
+    }
+    if fb == 0.0 {
+        return Some(b);
+    }
+    if fa.signum() == fb.signum() {
+        return None;
+    }
+    if fa.abs() < fb.abs() {
+        std::mem::swap(&mut a, &mut b);
+        std::mem::swap(&mut fa, &mut fb);
+    }
+    let mut c = a;
+    let mut fc = fa;
+    let mut mflag = true;
+    let mut d = 0.0;
+    for _ in 0..200 {
+        if (b - a).abs() < xtol || fb == 0.0 {
+            return Some(b);
+        }
+        let mut s = if fa != fc && fb != fc {
+            // inverse quadratic interpolation
+            a * fb * fc / ((fa - fb) * (fa - fc))
+                + b * fa * fc / ((fb - fa) * (fb - fc))
+                + c * fa * fb / ((fc - fa) * (fc - fb))
+        } else {
+            b - fb * (b - a) / (fb - fa)
+        };
+        let lo = (3.0 * a + b) / 4.0;
+        let cond = !((lo.min(b) < s && s < lo.max(b))
+            && !(mflag && (s - b).abs() >= (b - c).abs() / 2.0)
+            && !(!mflag && (s - b).abs() >= (c - d).abs() / 2.0));
+        if cond {
+            s = 0.5 * (a + b);
+            mflag = true;
+        } else {
+            mflag = false;
+        }
+        let fs = f(s);
+        d = c;
+        c = b;
+        fc = fb;
+        if fa.signum() != fs.signum() {
+            b = s;
+            fb = fs;
+        } else {
+            a = s;
+            fa = fs;
+        }
+        if fa.abs() < fb.abs() {
+            std::mem::swap(&mut a, &mut b);
+            std::mem::swap(&mut fa, &mut fb);
+        }
+    }
+    Some(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bisect_finds_sqrt2() {
+        let r = bisect(|x| x * x - 2.0, 0.0, 2.0, 1e-12).unwrap();
+        assert!((r - std::f64::consts::SQRT_2).abs() < 1e-10);
+    }
+
+    #[test]
+    fn bisect_rejects_no_sign_change() {
+        assert!(bisect(|x| x * x + 1.0, -1.0, 1.0, 1e-12).is_none());
+    }
+
+    #[test]
+    fn bisect_exact_endpoint() {
+        assert_eq!(bisect(|x| x, 0.0, 1.0, 1e-12), Some(0.0));
+    }
+
+    #[test]
+    fn brent_finds_cos_root() {
+        let r = brent(|x| x.cos(), 0.0, 3.0, 1e-14).unwrap();
+        assert!((r - std::f64::consts::FRAC_PI_2).abs() < 1e-10, "{r}");
+    }
+
+    #[test]
+    fn brent_matches_bisect() {
+        let f = |x: f64| x.exp() - 3.0;
+        let rb = brent(f, 0.0, 2.0, 1e-13).unwrap();
+        let ri = bisect(f, 0.0, 2.0, 1e-13).unwrap();
+        assert!((rb - ri).abs() < 1e-9);
+        assert!((rb - 3.0f64.ln()).abs() < 1e-10);
+    }
+}

@@ -1,0 +1,104 @@
+//! Software bfloat16 (truncated IEEE-754 binary32 with round-to-nearest-even).
+//!
+//! OPQ stores outlier weights in bf16 (paper §3.3), and the quantization
+//! constants are conventionally kept in bf16/fp32; this is the faithful
+//! conversion used by `quant::opq` and the storage layer.
+
+/// A bfloat16 value stored as its raw 16 bits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    /// Round-to-nearest-even conversion from f32.
+    pub fn from_f32(x: f32) -> Self {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            // quiet NaN, preserving sign
+            return Bf16(((bits >> 16) as u16) | 0x0040);
+        }
+        // Standard RNE trick: add half-ulp (0x7fff) plus the lsb of the
+        // kept part; the carry performs the round-up exactly for
+        // above-tie values and for ties with an odd kept lsb.
+        let rounded = bits.wrapping_add(0x7fff + ((bits >> 16) & 1));
+        Bf16((rounded >> 16) as u16)
+    }
+
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+
+    pub fn from_bits(bits: u16) -> Self {
+        Bf16(bits)
+    }
+
+    pub fn to_bits(self) -> u16 {
+        self.0
+    }
+}
+
+/// Convert a slice, reporting max absolute conversion error (diagnostics).
+pub fn roundtrip_max_err(xs: &[f32]) -> f32 {
+    xs.iter()
+        .map(|&x| (Bf16::from_f32(x).to_f32() - x).abs())
+        .fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_integers() {
+        for v in [0.0f32, 1.0, -1.0, 2.0, 0.5, -0.25, 128.0] {
+            assert_eq!(Bf16::from_f32(v).to_f32(), v, "v={v}");
+        }
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        // bf16 has 8 significand bits: RNE rel err <= 2^-8 = 1/256.
+        let mut x = 1e-3f32;
+        while x < 1e3 {
+            let r = Bf16::from_f32(x).to_f32();
+            assert!(((r - x) / x).abs() <= 1.0 / 256.0 + 1e-7, "x={x} r={r}");
+            x *= 1.37;
+        }
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // bf16 ulp at 1.0 is 2^-7; the tie 1 + 2^-8 = 1.00390625 has f32
+        // bits 0x3f80_8000. Ties-to-even keeps 1.0 (0x3f80 is even).
+        let tie = f32::from_bits(0x3f80_8000);
+        assert_eq!(Bf16::from_f32(tie).to_f32(), 1.0, "tie rounds to even");
+        // Just above the tie rounds up to the next bf16, 1.0078125.
+        let above = f32::from_bits(0x3f80_8001);
+        assert_eq!(Bf16::from_f32(above).to_f32(), 1.0078125);
+        // Tie with odd kept lsb rounds up: 1.0078125 + 2^-8 -> 1.015625.
+        let tie_odd = f32::from_bits(0x3f81_8000);
+        assert_eq!(Bf16::from_f32(tie_odd).to_f32(), 1.015625);
+    }
+
+    #[test]
+    fn nan_and_inf() {
+        assert!(Bf16::from_f32(f32::NAN).to_f32().is_nan());
+        assert_eq!(Bf16::from_f32(f32::INFINITY).to_f32(), f32::INFINITY);
+        assert_eq!(
+            Bf16::from_f32(f32::NEG_INFINITY).to_f32(),
+            f32::NEG_INFINITY
+        );
+    }
+
+    #[test]
+    fn sign_preserved() {
+        assert_eq!(Bf16::from_f32(-0.0).to_bits(), 0x8000);
+        assert!(Bf16::from_f32(-3.7).to_f32() < 0.0);
+    }
+
+    #[test]
+    fn roundtrip_err_helper() {
+        let xs: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) * 0.037).collect();
+        let e = roundtrip_max_err(&xs);
+        assert!(e <= 2.0 * 0.0039 * 2.0, "{e}"); // loose bound ~ulp scale
+    }
+}

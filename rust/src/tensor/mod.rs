@@ -1,0 +1,135 @@
+//! Minimal tensor substrate: dtypes (incl. software bf16 and packed 4-bit
+//! nibbles), a shaped dense tensor over f32, and flat views.
+//!
+//! This is deliberately small — the heavy compute runs inside the AOT'd
+//! XLA executables; rust needs tensors only for weight storage, the
+//! quantization hot path and marshalling.
+
+pub mod bf16;
+
+pub use bf16::Bf16;
+
+/// Element type of stored tensors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    Bf16,
+    U8,
+    I32,
+    /// Two 4-bit codes per byte (low nibble first).
+    PackedU4,
+}
+
+impl DType {
+    /// Bytes needed for `n` elements of this dtype.
+    pub fn bytes_for(self, n: usize) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4 * n,
+            DType::Bf16 => 2 * n,
+            DType::U8 => n,
+            DType::PackedU4 => n.div_ceil(2),
+        }
+    }
+
+    /// Bits per element.
+    pub fn bits(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 32,
+            DType::Bf16 => 16,
+            DType::U8 => 8,
+            DType::PackedU4 => 4,
+        }
+    }
+}
+
+/// Dense row-major f32 tensor with a shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// 2-D accessor (row-major).
+    pub fn at2(&self, r: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[r * self.shape[1] + c]
+    }
+
+    /// Reshape in place (size-preserving).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape;
+        self
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::F32.bytes_for(10), 40);
+        assert_eq!(DType::Bf16.bytes_for(10), 20);
+        assert_eq!(DType::PackedU4.bytes_for(10), 5);
+        assert_eq!(DType::PackedU4.bytes_for(11), 6); // odd count rounds up
+        assert_eq!(DType::PackedU4.bits(), 4);
+    }
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.at2(1, 2), 6.0);
+        assert_eq!(t.rank(), 2);
+        let t = t.reshape(vec![3, 2]);
+        assert_eq!(t.at2(2, 1), 6.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_rejects_bad_shape() {
+        Tensor::new(vec![2, 2], vec![1.0; 5]);
+    }
+
+    #[test]
+    fn norm() {
+        let t = Tensor::new(vec![2], vec![3.0, 4.0]);
+        assert!((t.norm() - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,215 @@
+//! Property-testing mini-framework (proptest is unavailable offline).
+//!
+//! Provides seeded generators, a `forall` runner with failure-case
+//! shrinking for the common shapes we need (vectors of floats, block
+//! geometries), and assertion helpers. Deliberately tiny but real:
+//! failures report the *shrunk* input and the reproducing seed.
+
+use crate::util::rng::Pcg64;
+
+/// A generator of random values of `T`.
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Pcg64) -> T;
+    /// Candidate simpler versions of a failing input (for shrinking).
+    fn shrink(&self, value: &T) -> Vec<T> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Uniform f32 in [lo, hi).
+pub struct F32Range(pub f32, pub f32);
+
+impl Gen<f32> for F32Range {
+    fn generate(&self, rng: &mut Pcg64) -> f32 {
+        self.0 + rng.next_f32() * (self.1 - self.0)
+    }
+    fn shrink(&self, v: &f32) -> Vec<f32> {
+        let mut out = Vec::new();
+        if *v != 0.0 && self.0 <= 0.0 && self.1 > 0.0 {
+            out.push(0.0);
+            out.push(v / 2.0);
+        }
+        out
+    }
+}
+
+/// usize in [lo, hi].
+pub struct USizeRange(pub usize, pub usize);
+
+impl Gen<usize> for USizeRange {
+    fn generate(&self, rng: &mut Pcg64) -> usize {
+        self.0 + rng.next_below((self.1 - self.0 + 1) as u64) as usize
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Vector of Gaussian f32s with random scale, length in [1, max_len].
+pub struct GaussianVec {
+    pub max_len: usize,
+    pub max_scale: f32,
+}
+
+impl Gen<Vec<f32>> for GaussianVec {
+    fn generate(&self, rng: &mut Pcg64) -> Vec<f32> {
+        let len = 1 + rng.next_below(self.max_len as u64) as usize;
+        let scale = (rng.next_f32() * self.max_scale).max(1e-4);
+        (0..len)
+            .map(|_| rng.next_gaussian() as f32 * scale)
+            .collect()
+    }
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if v.len() > 1 {
+            out.push(v[..v.len() / 2].to_vec());
+            out.push(v[v.len() / 2..].to_vec());
+        }
+        if v.iter().any(|&x| x != 0.0) {
+            out.push(vec![0.0; v.len()]);
+        }
+        out
+    }
+}
+
+/// Outcome of a property check.
+pub enum Prop {
+    Pass,
+    Fail(String),
+}
+
+impl Prop {
+    pub fn check(cond: bool, msg: impl FnOnce() -> String) -> Prop {
+        if cond {
+            Prop::Pass
+        } else {
+            Prop::Fail(msg())
+        }
+    }
+}
+
+/// Run `prop` on `cases` random inputs; on failure, shrink and panic with
+/// the smallest failing input found.
+pub fn forall<T: Clone + std::fmt::Debug, G: Gen<T>>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    gen: &G,
+    prop: impl Fn(&T) -> Prop,
+) {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    for case in 0..cases {
+        let input = gen.generate(&mut rng);
+        if let Prop::Fail(msg) = prop(&input) {
+            // shrink loop: greedily take any failing shrink candidate
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut progress = true;
+            let mut rounds = 0;
+            while progress && rounds < 64 {
+                progress = false;
+                rounds += 1;
+                for cand in gen.shrink(&best) {
+                    if let Prop::Fail(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        progress = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed {seed}, case {case}):\n  \
+                 input: {best:?}\n  reason: {best_msg}"
+            );
+        }
+    }
+}
+
+/// Relative-or-absolute closeness assertion for float comparisons.
+pub fn assert_close(a: f64, b: f64, rtol: f64, atol: f64, what: &str) {
+    let diff = (a - b).abs();
+    let tol = atol + rtol * b.abs().max(a.abs());
+    assert!(
+        diff <= tol,
+        "{what}: {a} vs {b} (diff {diff:.3e} > tol {tol:.3e})"
+    );
+}
+
+/// Max-abs-diff over slices.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("abs-nonneg", 1, 200, &F32Range(-5.0, 5.0), |x| {
+            Prop::check(x.abs() >= 0.0, || "abs < 0".into())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn forall_reports_failure() {
+        forall("always-fails", 2, 10, &USizeRange(1, 100), |_| {
+            Prop::Fail("nope".into())
+        });
+    }
+
+    #[test]
+    fn shrinking_reduces_vec() {
+        // Property: no vector longer than 3. Shrinker should find a short
+        // one (len 4..=some small bound after halving).
+        let gen = GaussianVec {
+            max_len: 64,
+            max_scale: 1.0,
+        };
+        let result = std::panic::catch_unwind(|| {
+            forall("short-vecs", 3, 50, &gen, |v| {
+                Prop::check(v.len() <= 3, || format!("len {}", v.len()))
+            });
+        });
+        let err = *result.unwrap_err().downcast::<String>().unwrap();
+        // extract the reported length; shrinking halves until <= 7
+        let reported: usize = err
+            .split("len ")
+            .nth(1)
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap();
+        assert!(reported <= 8, "shrunk to {reported}: {err}");
+    }
+
+    #[test]
+    fn usize_range_bounds() {
+        let gen = USizeRange(3, 9);
+        let mut rng = Pcg64::seed_from_u64(4);
+        for _ in 0..100 {
+            let v = gen.generate(&mut rng);
+            assert!((3..=9).contains(&v));
+        }
+    }
+
+    #[test]
+    fn assert_close_accepts_and_rejects() {
+        assert_close(1.0, 1.0 + 1e-9, 1e-6, 0.0, "close");
+        let r = std::panic::catch_unwind(|| assert_close(1.0, 2.0, 1e-6, 0.0, "far"));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,229 @@
+//! Tiny declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, typed
+//! accessors with defaults, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+/// Declared option.
+struct Opt {
+    name: &'static str,
+    help: &'static str,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// Declarative argument parser.
+pub struct Args {
+    program: String,
+    about: &'static str,
+    opts: Vec<Opt>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(about: &'static str) -> Self {
+        Args {
+            program: std::env::args().next().unwrap_or_else(|| "bof4".into()),
+            about,
+            opts: Vec::new(),
+            values: BTreeMap::new(),
+            flags: Vec::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    /// Declare a `--key value` option (with optional default).
+    pub fn opt(mut self, name: &'static str, default: Option<&str>, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            takes_value: true,
+            default: default.map(str::to_string),
+        });
+        self
+    }
+
+    /// Declare a boolean `--flag`.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    /// Parse `std::env::args`; exits on `--help` or unknown option.
+    pub fn parse(self) -> Parsed {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        self.parse_from(argv)
+    }
+
+    /// Parse an explicit argv (testable).
+    pub fn parse_from(mut self, argv: Vec<String>) -> Parsed {
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                self.print_help();
+                std::process::exit(0);
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let decl = self.opts.iter().find(|o| o.name == key);
+                match decl {
+                    Some(o) if o.takes_value => {
+                        let v = match inline_val {
+                            Some(v) => v,
+                            None => {
+                                i += 1;
+                                argv.get(i)
+                                    .unwrap_or_else(|| {
+                                        eprintln!("missing value for --{key}");
+                                        std::process::exit(2);
+                                    })
+                                    .clone()
+                            }
+                        };
+                        self.values.insert(key, v);
+                    }
+                    Some(_) => self.flags.push(key),
+                    None => {
+                        eprintln!("unknown option --{key} (see --help)");
+                        std::process::exit(2);
+                    }
+                }
+            } else {
+                self.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        // fill defaults
+        for o in &self.opts {
+            if o.takes_value && !self.values.contains_key(o.name) {
+                if let Some(d) = &o.default {
+                    self.values.insert(o.name.to_string(), d.clone());
+                }
+            }
+        }
+        Parsed {
+            values: self.values,
+            flags: self.flags,
+            positional: self.positional,
+        }
+    }
+
+    fn print_help(&self) {
+        println!("{} — {}\n", self.program, self.about);
+        println!("OPTIONS:");
+        for o in &self.opts {
+            let arg = if o.takes_value {
+                format!("--{} <v>", o.name)
+            } else {
+                format!("--{}", o.name)
+            };
+            let def = o
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            println!("  {arg:<26} {}{def}", o.help);
+        }
+    }
+}
+
+/// Parse result with typed accessors.
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Option<usize> {
+        self.get(name)?.parse().ok()
+    }
+
+    pub fn get_u64(&self, name: &str) -> Option<u64> {
+        self.get(name)?.parse().ok()
+    }
+
+    pub fn get_f64(&self, name: &str) -> Option<f64> {
+        self.get(name)?.parse().ok()
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Comma-separated list of usizes, e.g. `--blocks 16,32,64`.
+    pub fn get_usize_list(&self, name: &str) -> Option<Vec<usize>> {
+        self.get(name)?
+            .split(',')
+            .map(|s| s.trim().parse().ok())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args() -> Args {
+        Args::new("test")
+            .opt("block", Some("64"), "block size")
+            .opt("out", None, "output path")
+            .flag("verbose", "log more")
+    }
+
+    fn v(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = args().parse_from(v(&[]));
+        assert_eq!(p.get_usize("block"), Some(64));
+        assert_eq!(p.get("out"), None);
+        assert!(!p.has_flag("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let p = args().parse_from(v(&["--block", "128", "--out=x.json", "--verbose"]));
+        assert_eq!(p.get_usize("block"), Some(128));
+        assert_eq!(p.get("out"), Some("x.json"));
+        assert!(p.has_flag("verbose"));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let p = args().parse_from(v(&["quantize", "--block", "32", "file.bin"]));
+        assert_eq!(p.positional(), &["quantize".to_string(), "file.bin".to_string()]);
+    }
+
+    #[test]
+    fn usize_list() {
+        let p = args().parse_from(v(&["--block", "64"]));
+        assert_eq!(p.get_usize_list("block"), Some(vec![64]));
+        let p = Args::new("t")
+            .opt("blocks", Some("16,32,64"), "")
+            .parse_from(v(&[]));
+        assert_eq!(p.get_usize_list("blocks"), Some(vec![16, 32, 64]));
+    }
+}

@@ -1,0 +1,9 @@
+//! Infrastructure substrates built in-repo (the offline image ships no
+//! `clap`, `serde`, `rand`, `criterion` or `tokio`; per the reproduction
+//! mandate we build the pieces we need instead of stubbing them).
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod rng;
+pub mod timer;

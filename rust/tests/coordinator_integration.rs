@@ -1,0 +1,182 @@
+//! Coordinator invariants: scheduler property tests + batched-service
+//! behaviour over the real PJRT runtime.
+
+use std::sync::Arc;
+
+use bof4::coordinator::{BatchedLm, QuantJob, QuantScheduler, ServiceConfig};
+use bof4::quant::{Method, Norm, QuantConfig};
+use bof4::runtime::{HostTensor, Meta, Runtime};
+use bof4::testkit::{forall, Gen, Prop, USizeRange};
+use bof4::util::rng::Pcg64;
+
+// ---------------------------------------------------------------------
+// scheduler properties (no runtime needed)
+// ---------------------------------------------------------------------
+
+struct JobBatchGen;
+
+impl Gen<Vec<QuantJob>> for JobBatchGen {
+    fn generate(&self, rng: &mut Pcg64) -> Vec<QuantJob> {
+        let n = 1 + rng.next_below(12) as usize;
+        (0..n)
+            .map(|i| {
+                let len = 1 + rng.next_below(500) as usize;
+                let mut data = vec![0.0f32; len];
+                for v in data.iter_mut() {
+                    *v = rng.next_gaussian() as f32;
+                }
+                QuantJob {
+                    name: format!("j{i}"),
+                    data,
+                }
+            })
+            .collect()
+    }
+    fn shrink(&self, v: &Vec<QuantJob>) -> Vec<Vec<QuantJob>> {
+        if v.len() > 1 {
+            vec![v[..v.len() / 2].to_vec()]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+#[test]
+fn property_no_lost_or_duplicated_jobs() {
+    let sched = QuantScheduler::new(QuantConfig {
+        method: Method::Nf4,
+        norm: Norm::Absmax,
+        ..Default::default()
+    })
+    .with_workers(4);
+    forall("scheduler-exactly-once", 31, 25, &JobBatchGen, |jobs| {
+        let res = match sched.run(jobs.clone()) {
+            Ok(r) => r,
+            Err(e) => return Prop::Fail(format!("scheduler error: {e}")),
+        };
+        if res.len() != jobs.len() {
+            return Prop::Fail(format!("{} results for {} jobs", res.len(), jobs.len()));
+        }
+        for (j, r) in jobs.iter().zip(&res) {
+            if j.name != r.name {
+                return Prop::Fail(format!("order broken: {} vs {}", j.name, r.name));
+            }
+            if r.tensor.len != j.data.len() {
+                return Prop::Fail("length mismatch".into());
+            }
+        }
+        Prop::Pass
+    });
+}
+
+#[test]
+fn property_worker_count_invariant() {
+    // Result bits must not depend on parallelism.
+    let mk = |workers| QuantScheduler::new(QuantConfig::default()).with_workers(workers);
+    forall(
+        "scheduler-worker-invariance",
+        32,
+        10,
+        &USizeRange(1, 6),
+        |&workers| {
+            let mut rng = Pcg64::seed_from_u64(777);
+            let jobs: Vec<QuantJob> = (0..5)
+                .map(|i| {
+                    let mut data = vec![0.0f32; 320];
+                    rng.fill_gaussian_f32(&mut data, 1.0);
+                    QuantJob {
+                        name: format!("t{i}"),
+                        data,
+                    }
+                })
+                .collect();
+            let base = mk(1).run(jobs.clone()).unwrap();
+            let other = mk(workers).run(jobs).unwrap();
+            for (a, b) in base.iter().zip(&other) {
+                if a.tensor.codes != b.tensor.codes || a.mse != b.mse {
+                    return Prop::Fail(format!("workers={workers} diverged"));
+                }
+            }
+            Prop::Pass
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// batched service over the real runtime
+// ---------------------------------------------------------------------
+
+fn service() -> Option<(Arc<Runtime>, BatchedLm)> {
+    if !Meta::default_dir().join("meta.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let rt = Arc::new(Runtime::new().unwrap());
+    let params = rt
+        .run("init_params", &[HostTensor::scalar_u32(3)])
+        .unwrap();
+    let svc = BatchedLm::start(rt.clone(), params, ServiceConfig::default()).unwrap();
+    Some((rt, svc))
+}
+
+#[test]
+fn every_request_answered_exactly_once() {
+    let Some((rt, svc)) = service() else { return };
+    let n = 40;
+    let mut rng = Pcg64::seed_from_u64(5);
+    let prompts: Vec<Vec<u8>> = (0..n)
+        .map(|_| {
+            (0..20)
+                .map(|_| rng.next_below(64) as u8)
+                .collect::<Vec<u8>>()
+        })
+        .collect();
+    let rxs: Vec<_> = prompts
+        .iter()
+        .map(|p| svc.infer_async(p).unwrap())
+        .collect();
+    let mut answers = 0;
+    for rx in rxs {
+        let resp = rx.recv().unwrap().unwrap();
+        assert!((resp.next_token as usize) < rt.meta.model.vocab);
+        answers += 1;
+    }
+    assert_eq!(answers, n);
+    // batching actually happened: fewer batches than requests
+    let batches = svc.metrics.get("batches");
+    assert!(batches < n as u64, "batches={batches}");
+    assert_eq!(svc.metrics.get("batched_requests"), n as u64);
+}
+
+#[test]
+fn batch_size_never_exceeds_model_batch() {
+    let Some((rt, svc)) = service() else { return };
+    let b = rt.meta.model.batch as u64;
+    let n = 3 * b + 1;
+    let rxs: Vec<_> = (0..n)
+        .map(|i| svc.infer_async(&[(i % 60) as u8; 8]).unwrap())
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let batches = svc.metrics.get("batches");
+    let reqs = svc.metrics.get("batched_requests");
+    assert_eq!(reqs, n);
+    assert!(batches >= n / b, "impossible packing: {batches} batches");
+}
+
+#[test]
+fn deterministic_responses_for_same_prompt() {
+    let Some((_rt, svc)) = service() else { return };
+    let p = vec![1u8, 2, 3, 4, 5];
+    let a = svc.infer(&p).unwrap();
+    let b = svc.infer(&p).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn generate_extends_context() {
+    let Some((_rt, svc)) = service() else { return };
+    let out = svc.generate(&[1, 2, 3], 5).unwrap();
+    assert_eq!(out.len(), 5);
+}

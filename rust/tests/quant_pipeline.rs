@@ -1,0 +1,193 @@
+//! Cross-module quantization pipeline tests: EM-designed codebooks flow
+//! through the Quantizer, OPQ, double quantization, the scheduler, and the
+//! model-level quantize_params — checking the paper's ordering claims on
+//! synthetic LLM weights.
+
+use bof4::eval::quantized::quantize_params;
+use bof4::models::{ParamSet, SyntheticModel};
+use bof4::quant::{quant_error, Method, Norm, OpqConfig, QuantConfig, Quantizer};
+use bof4::util::rng::Pcg64;
+
+fn gaussian(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let mut v = vec![0.0f32; n];
+    rng.fill_gaussian_f32(&mut v, 1.0);
+    v
+}
+
+fn q(method: Method, norm: Norm, block: usize) -> Quantizer {
+    Quantizer::new(QuantConfig {
+        method,
+        norm,
+        block,
+        ..Default::default()
+    })
+}
+
+/// Paper Fig. 2 (one point): at I = 64 on Gaussian data the MSE ordering is
+/// BOF4-S (MSE) < BOF4 (MSE) < NF4 and BOF4-S (MSE) < AF4.
+#[test]
+fn fig2_ordering_at_block_64() {
+    let w = gaussian(64 * 8192, 1);
+    let (_, nf4) = quant_error(&q(Method::Nf4, Norm::Absmax, 64), &w);
+    let (_, af4) = quant_error(&q(Method::Af4, Norm::Absmax, 64), &w);
+    let (_, bof4) = quant_error(&q(Method::Bof4 { mse: true }, Norm::Absmax, 64), &w);
+    let (_, bof4s) = quant_error(&q(Method::Bof4 { mse: true }, Norm::SignedAbsmax, 64), &w);
+    assert!(bof4 < nf4, "BOF4 {bof4} < NF4 {nf4}");
+    assert!(bof4s < bof4, "BOF4-S {bof4s} < BOF4 {bof4}");
+    assert!(bof4s < af4, "BOF4-S {bof4s} < AF4 {af4}");
+}
+
+/// MAE ordering with MAE-optimized codebooks.
+#[test]
+fn fig2_mae_ordering_at_block_64() {
+    let w = gaussian(64 * 8192, 2);
+    let (nf4, _) = quant_error(&q(Method::Nf4, Norm::Absmax, 64), &w);
+    let (bof4, _) = quant_error(&q(Method::Bof4 { mse: false }, Norm::Absmax, 64), &w);
+    let (bof4s, _) = quant_error(&q(Method::Bof4 { mse: false }, Norm::SignedAbsmax, 64), &w);
+    assert!(bof4 <= nf4 * 1.001, "BOF4(MAE) {bof4} <= NF4 {nf4}");
+    assert!(bof4s < bof4, "BOF4-S(MAE) {bof4s} < BOF4 {bof4}");
+}
+
+/// AF4's defining weakness (paper Fig. 2 discussion): poor MSE at medium/
+/// large block sizes relative to BOF4 (MSE).
+#[test]
+fn af4_mse_weakness_large_blocks() {
+    let w = gaussian(512 * 2048, 3);
+    let (_, af4) = quant_error(&q(Method::Af4, Norm::Absmax, 512), &w);
+    let (_, bof4) = quant_error(&q(Method::Bof4 { mse: true }, Norm::Absmax, 512), &w);
+    assert!(
+        bof4 < af4 * 0.97,
+        "BOF4 (MSE) {bof4} should clearly beat AF4 {af4} at I=512"
+    );
+}
+
+/// Error grows with block size (paper Fig. 2's monotone trend).
+#[test]
+fn error_monotone_in_block_size() {
+    let w = gaussian(1 << 20, 4);
+    let mut last = 0.0;
+    for block in [16usize, 64, 256, 1024] {
+        let (_, mse) = quant_error(&q(Method::Bof4 { mse: true }, Norm::SignedAbsmax, block), &w);
+        assert!(mse > last, "I={block}: {mse} !> {last}");
+        last = mse;
+    }
+}
+
+/// OPQ on outlier-contaminated LLM-like weights: lower error, small memory
+/// overhead (paper §3.3 / Figs. 9-10 direction).
+#[test]
+fn opq_error_and_memory_tradeoff() {
+    let model = SyntheticModel::llm_like("m", 256, 2, 9);
+    let flat = model.flat();
+    let base = QuantConfig {
+        method: Method::Bof4 { mse: true },
+        norm: Norm::SignedAbsmax,
+        block: 256,
+        ..Default::default()
+    };
+    let plain = Quantizer::new(base.clone());
+    let opq = Quantizer::new(QuantConfig {
+        opq: Some(OpqConfig { q: 0.95 }),
+        ..base
+    });
+    let (_, mse_plain) = quant_error(&plain, &flat);
+    let (_, mse_opq) = quant_error(&opq, &flat);
+    assert!(mse_opq < mse_plain, "{mse_opq} < {mse_plain}");
+    let qt_plain = plain.quantize(&flat);
+    let qt_opq = opq.quantize(&flat);
+    let overhead =
+        qt_opq.bytes() as f64 / qt_plain.bytes() as f64 - 1.0;
+    assert!(overhead < 0.05, "OPQ overhead {overhead:.3} too big");
+    assert!(qt_opq.outliers.len() > 10);
+}
+
+/// Model-level pipeline: paper-suite synthetic checkpoints keep the
+/// quantizer ordering (Tables 1/9 shape).
+#[test]
+fn tables_1_9_ordering_on_synthetic_models() {
+    for model in SyntheticModel::paper_suite() {
+        let params = ParamSet {
+            entries: model
+                .tensors
+                .iter()
+                .map(|(spec, data)| {
+                    (
+                        spec.name.clone(),
+                        vec![spec.rows, spec.cols],
+                        data.clone(),
+                    )
+                })
+                .collect(),
+        };
+        let mse_of = |cfg: QuantConfig| quantize_params(&params, &cfg).unwrap().mse;
+        let nf4 = mse_of(QuantConfig {
+            method: Method::Nf4,
+            norm: Norm::Absmax,
+            ..Default::default()
+        });
+        let bof4s = mse_of(QuantConfig {
+            method: Method::Bof4 { mse: true },
+            norm: Norm::SignedAbsmax,
+            ..Default::default()
+        });
+        let bof4s_opq = mse_of(QuantConfig {
+            method: Method::Bof4 { mse: true },
+            norm: Norm::SignedAbsmax,
+            opq: Some(OpqConfig::default()),
+            ..Default::default()
+        });
+        assert!(bof4s < nf4, "{}: BOF4-S {bof4s} < NF4 {nf4}", model.name);
+        assert!(
+            bof4s_opq < bof4s,
+            "{}: +OPQ {bof4s_opq} < BOF4-S {bof4s}",
+            model.name
+        );
+    }
+}
+
+/// Double quantization: constants shrink ~4x with small error penalty on
+/// signed constants too (Limitations-section trade-off).
+#[test]
+fn double_quant_signed_constants() {
+    let w = gaussian(64 * 4096, 10);
+    let base = QuantConfig {
+        method: Method::Bof4 { mse: true },
+        norm: Norm::SignedAbsmax,
+        block: 64,
+        ..Default::default()
+    };
+    let plain = Quantizer::new(base.clone());
+    let dq = Quantizer::new(QuantConfig {
+        double_quant: true,
+        ..base
+    });
+    let (_, e_plain) = quant_error(&plain, &w);
+    let (_, e_dq) = quant_error(&dq, &w);
+    // small penalty
+    assert!(e_dq < e_plain * 1.4, "{e_dq} vs {e_plain}");
+    let b_plain = plain.quantize(&w).bytes();
+    let b_dq = dq.quantize(&w).bytes();
+    assert!(b_dq < b_plain);
+}
+
+/// Exhaustive nibble consistency: every (code, absmax) survives the
+/// pack->store->unpack->decode chain bit-for-bit.
+#[test]
+fn exhaustive_code_roundtrip() {
+    let qz = q(Method::Nf4, Norm::Absmax, 16);
+    // craft a block hitting every level: one weight per level midpoint
+    let levels = qz.codebook.levels;
+    let mut w = Vec::new();
+    for &l in &levels {
+        w.push(l * 2.0); // scale by the block max (=2 via the ±1 entries)
+    }
+    let qt = qz.quantize(&w);
+    let codes = bof4::quant::pack::unpack_u4(&qt.codes, w.len());
+    let expect: Vec<u8> = (0..16).map(|i| i as u8).collect();
+    assert_eq!(codes, expect);
+    let deq = qz.dequantize(&qt);
+    for (d, &l) in deq.iter().zip(&levels) {
+        assert!((d - l * 2.0).abs() < 1e-6);
+    }
+}

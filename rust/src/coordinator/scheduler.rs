@@ -13,7 +13,7 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
 
-use anyhow::{anyhow, Result};
+use crate::error::Result;
 
 use super::metrics::Metrics;
 use crate::quant::{QuantConfig, QuantizedTensor, Quantizer};
@@ -108,7 +108,7 @@ impl QuantScheduler {
                                 }
                             }),
                         )
-                        .map_err(|_| anyhow!("worker panic on tensor '{}'", job.name));
+                        .map_err(|_| crate::err!("worker panic on tensor '{}'", job.name));
                         metrics.observe("quantize_tensor", sw.elapsed());
                         metrics.inc("tensors_done");
                         if res_tx.send((idx, result)).is_err() {
@@ -135,14 +135,14 @@ impl QuantScheduler {
         for (idx, res) in res_rx {
             slots[idx] = Some(res);
         }
-        producer.join().map_err(|_| anyhow!("producer panicked"))?;
+        producer.join().map_err(|_| crate::err!("producer panicked"))?;
         for h in handles {
-            h.join().map_err(|_| anyhow!("worker panicked"))?;
+            h.join().map_err(|_| crate::err!("worker panicked"))?;
         }
         slots
             .into_iter()
             .enumerate()
-            .map(|(i, s)| s.ok_or_else(|| anyhow!("job {i} lost"))?)
+            .map(|(i, s)| s.ok_or_else(|| crate::err!("job {i} lost"))?)
             .collect()
     }
 }

@@ -14,7 +14,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use crate::error::Result;
 
 use super::metrics::Metrics;
 use crate::models::corpus::TOK_SPACE;
@@ -69,14 +69,14 @@ impl BatchedLm {
     ) -> Result<BatchedLm> {
         let gm = rt.meta.graph("lm_logits_last")?;
         if params.len() + 1 != gm.args.len() {
-            return Err(anyhow!(
+            return Err(crate::err!(
                 "lm_logits_last wants {} params, got {}",
                 gm.args.len() - 1,
                 params.len()
             ));
         }
-        // Force compilation up-front so the first request isn't slow.
-        rt.executable("lm_logits_last")?;
+        // Force compilation/warm-up up-front so the first request isn't slow.
+        rt.prepare("lm_logits_last")?;
         let metrics = Arc::new(Metrics::new());
         let (tx, rx) = mpsc::channel::<Pending>();
         let m = metrics.clone();
@@ -102,8 +102,9 @@ impl BatchedLm {
                 },
                 rtx,
             ))
-            .map_err(|_| anyhow!("service stopped"))?;
-        rrx.recv().map_err(|_| anyhow!("service dropped request"))?
+            .map_err(|_| crate::err!("service stopped"))?;
+        rrx.recv()
+            .map_err(|_| crate::err!("service dropped request"))?
     }
 
     /// Submit asynchronously; returns the response receiver.
@@ -118,7 +119,7 @@ impl BatchedLm {
                 },
                 rtx,
             ))
-            .map_err(|_| anyhow!("service stopped"))?;
+            .map_err(|_| crate::err!("service stopped"))?;
         Ok(rrx)
     }
 
@@ -163,7 +164,7 @@ impl BatchedLm {
                 Err(e) => {
                     let msg = format!("{e}");
                     for (_, rtx) in batch {
-                        let _ = rtx.send(Err(anyhow!("{msg}")));
+                        let _ = rtx.send(Err(crate::err!("{msg}")));
                     }
                 }
             }

@@ -1,0 +1,144 @@
+//! Crate-local error type: a tiny, dependency-free `anyhow` stand-in.
+//!
+//! The hermetic default build must compile with zero crates.io
+//! dependencies, so this module provides the three things the crate
+//! actually used from `anyhow`: a string-y error with a cause chain, a
+//! `Result` alias, and `.context()` / `.with_context()` adapters. The
+//! `crate::err!` macro replaces `anyhow!`.
+
+use std::fmt;
+
+/// A message plus an optional chain of causes.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build from a message.
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error {
+            msg: msg.into(),
+            cause: None,
+        }
+    }
+
+    /// Wrap an existing error with outer context.
+    pub fn wrap(msg: impl Into<String>, cause: Error) -> Error {
+        Error {
+            msg: msg.into(),
+            cause: Some(Box::new(cause)),
+        }
+    }
+
+    /// Iterate the cause chain (outermost first).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        std::iter::successors(Some(self), |e| e.cause.as_deref()).map(|e| e.msg.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            let mut cause = self.cause.as_deref();
+            while let Some(e) = cause {
+                write!(f, ": {}", e.msg)?;
+                cause = e.cause.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cause = self.cause.as_deref();
+        while let Some(e) = cause {
+            write!(f, "\n  caused by: {}", e.msg)?;
+            cause = e.cause.as_deref();
+        }
+        Ok(())
+    }
+}
+
+// Any std error converts losslessly (message + source chain). `Error`
+// itself deliberately does NOT implement `std::error::Error`, which is
+// what makes this blanket impl coherent (the same trick anyhow uses).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut messages = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            messages.push(s.to_string());
+            src = s.source();
+        }
+        let mut err = Error::msg(messages.pop().expect("at least one message"));
+        while let Some(m) = messages.pop() {
+            err = Error::wrap(m, err);
+        }
+        err
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context()` / `.with_context()` on results, mirroring anyhow's API.
+pub trait Context<T> {
+    fn context<S: Into<String>>(self, msg: S) -> Result<T>;
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<S: Into<String>>(self, msg: S) -> Result<T> {
+        self.map_err(|e| Error::wrap(msg, e.into()))
+    }
+
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::wrap(f(), e.into()))
+    }
+}
+
+/// Format an [`Error`] in place (the crate's `anyhow!` replacement).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_alternate() {
+        let e = Error::wrap("outer", Error::msg("inner"));
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        assert!(format!("{e:?}").contains("caused by: inner"));
+    }
+
+    #[test]
+    fn from_std_error_keeps_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(format!("{e}").contains("gone"));
+    }
+
+    #[test]
+    fn context_wraps() {
+        let r: std::result::Result<(), std::io::Error> = Err(std::io::Error::other("deep"));
+        let e = r.with_context(|| "shallow".to_string()).unwrap_err();
+        assert_eq!(format!("{e}"), "shallow");
+        assert!(format!("{e:#}").contains("deep"));
+    }
+
+    #[test]
+    fn macro_formats() {
+        let e = crate::err!("x = {}", 42);
+        assert_eq!(format!("{e}"), "x = 42");
+    }
+}

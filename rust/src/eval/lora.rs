@@ -5,7 +5,7 @@
 //! graph; only the LoRA A/B adapters (and their Adam state) update.
 //! Task accuracy is greedy-decode exact-match via `lm_logits_last_lora`.
 
-use anyhow::Result;
+use crate::error::Result;
 
 use super::tasks::{ft_batches, ft_examples, FtTask};
 use crate::models::corpus::TOK_SPACE;

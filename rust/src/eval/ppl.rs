@@ -1,8 +1,7 @@
 //! Held-out perplexity via the AOT'd `lm_nll` graph (the WikiText-2 /
 //! LAMBADA stand-in; same mechanism, different corpus).
 
-use anyhow::Result;
-
+use crate::error::Result;
 use crate::models::{Corpus, ParamSet};
 use crate::runtime::{HostTensor, Runtime};
 

@@ -5,9 +5,8 @@
 //! The quantization itself runs through the multithreaded
 //! [`crate::coordinator::QuantScheduler`].
 
-use anyhow::Result;
-
 use crate::coordinator::{QuantJob, QuantScheduler};
+use crate::error::Result;
 use crate::models::ParamSet;
 use crate::quant::QuantConfig;
 

@@ -5,7 +5,7 @@
 
 use std::path::PathBuf;
 
-use anyhow::{Context, Result};
+use crate::error::{Context, Result};
 
 /// A simple column-aligned markdown table builder.
 #[derive(Clone, Debug, Default)]

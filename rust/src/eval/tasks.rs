@@ -11,8 +11,7 @@
 //! a bracket-code task; data generators + greedy-decode accuracy live
 //! here, the LoRA optimizer loop in [`crate::eval::lora`].
 
-use anyhow::Result;
-
+use crate::error::Result;
 use crate::models::corpus::{
     Corpus, TOK_ARROW, TOK_COLON, TOK_FN, TOK_KEY, TOK_LBRK, TOK_RBRK, TOK_SPACE,
 };

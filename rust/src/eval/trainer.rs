@@ -8,8 +8,7 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use anyhow::Result;
-
+use crate::error::Result;
 use crate::models::{Corpus, ParamSet};
 use crate::runtime::{HostTensor, Runtime};
 
@@ -114,6 +113,9 @@ pub fn ensure_trained(rt: &Arc<Runtime>) -> Result<ParamSet> {
         }
     }
     crate::info!("no cached model; pre-training (one-time, cached afterwards)");
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
     let outcome = train(rt, &TrainConfig::default())?;
     let first = outcome.losses.first().copied().unwrap_or(f32::NAN);
     let last = outcome.losses.last().copied().unwrap_or(f32::NAN);

@@ -12,25 +12,31 @@
 //!   its AdamW train step, LoRA fine-tune step and NLL/logit eval heads,
 //!   AOT-lowered once to HLO text in `artifacts/`.
 //! - **L3** this crate: the complete quantization system (codebooks, EM
-//!   design, OPQ, packing), the PJRT runtime that executes the lowered
-//!   graphs, the multithreaded quantization scheduler, the batched
-//!   inference service, and the experiment harness regenerating every
-//!   table and figure of the paper.
+//!   design, OPQ, packing), a **multi-backend runtime** behind
+//!   [`runtime::Backend`] — a pure-Rust CPU interpreter (default, fully
+//!   hermetic) and the PJRT/XLA executor (behind the `xla` feature) — the
+//!   multithreaded quantization scheduler, the batched inference service,
+//!   and the experiment harness regenerating every table and figure of
+//!   the paper.
 //!
-//! Python never runs on the request path: after `make artifacts`, the
-//! `bof4` binary and all benches are self-contained.
+//! Python never runs on the request path. The default build needs no
+//! Python at all: the CPU backend interprets every graph (embedding
+//! gather, fused 4-bit dequant-matmul, attention, layer norms, AdamW and
+//! LoRA training steps) directly in Rust, so `cargo test` is
+//! self-contained offline.
 //!
 //! ## Quick tour
 //!
-//! ```no_run
+//! Quantize Gaussian "network weights" with BOF4-S (MSE-optimal, signed
+//! absmax normalization) at block size 64:
+//!
+//! ```
 //! use bof4::quant::{Quantizer, QuantConfig, Method, Norm};
 //! use bof4::util::rng::Pcg64;
 //!
-//! // 1M Gaussian "network weights"
 //! let mut rng = Pcg64::seed_from_u64(7);
-//! let w: Vec<f32> = (0..1 << 20).map(|_| rng.next_gaussian() as f32).collect();
+//! let w: Vec<f32> = (0..1 << 16).map(|_| rng.next_gaussian() as f32).collect();
 //!
-//! // BOF4-S (MSE-optimal, signed absmax normalization), block size 64
 //! let q = Quantizer::new(QuantConfig {
 //!     method: Method::Bof4 { mse: true },
 //!     norm: Norm::SignedAbsmax,
@@ -40,11 +46,28 @@
 //! let packed = q.quantize(&w);
 //! let w_hat = q.dequantize(&packed);
 //! let mse = bof4::quant::error::mse(&w, &w_hat);
-//! println!("MSE = {mse:.3e}");
+//! assert!(mse > 0.0 && mse < 1e-2);
 //! ```
+//!
+//! Run a model graph end-to-end on the hermetic CPU backend (no Python,
+//! no artifacts, no network):
+//!
+//! ```
+//! use bof4::runtime::{HostTensor, Runtime};
+//!
+//! let rt = Runtime::new().unwrap(); // defaults to the CPU interpreter
+//! let params = rt.run("init_params", &[HostTensor::scalar_u32(0)]).unwrap();
+//! assert_eq!(params.len(), 16);
+//! assert_eq!(params[0].shape(), &[rt.meta.model.vocab, rt.meta.model.d_model]);
+//! ```
+//!
+//! With the off-by-default `xla` cargo feature (plus vendored `xla` crate
+//! and `make artifacts`), the same calls execute the AOT'd HLO graphs
+//! through PJRT instead — see [`runtime::Backend`].
 
 pub mod bench;
 pub mod coordinator;
+pub mod error;
 pub mod eval;
 pub mod lloyd;
 pub mod models;
@@ -55,8 +78,10 @@ pub mod tensor;
 pub mod testkit;
 pub mod util;
 
+pub use error::Error;
+
 /// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = error::Result<T>;
 
 /// Paper reference string used in reports.
 pub const PAPER: &str =

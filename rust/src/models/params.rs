@@ -8,8 +8,7 @@
 use std::io::{Read, Write};
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
-
+use crate::error::{Context, Result};
 use crate::runtime::{GraphMeta, HostTensor};
 
 const MAGIC: &[u8; 8] = b"BOF4WBIN";
@@ -96,7 +95,7 @@ impl ParamSet {
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic)?;
         if &magic != MAGIC {
-            return Err(anyhow!("{path:?}: bad magic"));
+            return Err(crate::err!("{path:?}: bad magic"));
         }
         let mut u32buf = [0u8; 4];
         let mut u64buf = [0u8; 8];
@@ -118,7 +117,7 @@ impl ParamSet {
             f.read_exact(&mut u64buf)?;
             let n = u64::from_le_bytes(u64buf) as usize;
             if n != shape.iter().product::<usize>() {
-                return Err(anyhow!("{path:?}: shape/data mismatch"));
+                return Err(crate::err!("{path:?}: shape/data mismatch"));
             }
             let mut data = vec![0f32; n];
             let bytes = unsafe {

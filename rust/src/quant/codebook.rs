@@ -10,9 +10,7 @@
 //! published behaviour (strong MAE at small I, weak MSE at large I).
 
 use std::collections::HashMap;
-use std::sync::Mutex;
-
-use once_cell::sync::Lazy;
+use std::sync::{Mutex, OnceLock};
 
 use crate::stats::blockmax::Norm;
 
@@ -297,7 +295,11 @@ impl Method {
 
 type Key = (String, bool, usize); // (family tag, signed, block)
 
-static REGISTRY: Lazy<Mutex<HashMap<Key, Codebook>>> = Lazy::new(|| Mutex::new(HashMap::new()));
+static REGISTRY: OnceLock<Mutex<HashMap<Key, Codebook>>> = OnceLock::new();
+
+fn registry() -> &'static Mutex<HashMap<Key, Codebook>> {
+    REGISTRY.get_or_init(|| Mutex::new(HashMap::new()))
+}
 
 /// Resolve the codebook for (method, norm, block). Published constants are
 /// used where the paper provides them; everything else is EM-designed on
@@ -332,7 +334,7 @@ pub fn codebook_for(method: &Method, norm: Norm, block: usize) -> Codebook {
         _ => unreachable!(),
     };
     let key = (tag.clone(), signed, block);
-    if let Some(cb) = REGISTRY.lock().unwrap().get(&key) {
+    if let Some(cb) = registry().lock().unwrap().get(&key) {
         return cb.clone();
     }
     // Design it. (lloyd depends on quant::Codebook; intra-crate cycles are
@@ -342,10 +344,7 @@ pub fn codebook_for(method: &Method, norm: Norm, block: usize) -> Codebook {
         Method::Bof4 { mse } => crate::lloyd::design_bof4_empirical_default(*mse, norm, block),
         _ => unreachable!(),
     };
-    REGISTRY
-        .lock()
-        .unwrap()
-        .insert(key, cb.clone());
+    registry().lock().unwrap().insert(key, cb.clone());
     cb
 }
 

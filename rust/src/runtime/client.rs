@@ -1,299 +1,147 @@
-//! PJRT client wrapper: compile-once executable cache + host marshalling.
+//! PJRT/XLA backend (behind the `xla` cargo feature): compile-once
+//! executable cache + literal marshalling.
 //!
 //! HLO **text** is the interchange format (not serialized protos): jax≥0.5
 //! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Enabling this module requires the `xla` crate to be provided
+//! out-of-band (vendored + `[patch]`), plus `make artifacts` for the
+//! lowered `*.hlo.txt` files referenced by `meta.json`.
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
-use anyhow::{anyhow, Result};
+use super::meta::GraphMeta;
+use super::{Backend, HostTensor};
+use crate::error::Result;
 
-use super::meta::{GraphMeta, Meta};
-
-/// A host-side tensor in one of the dtypes crossing the ABI.
-#[derive(Clone, Debug)]
-pub enum HostTensor {
-    F32(Vec<f32>, Vec<usize>),
-    I32(Vec<i32>, Vec<usize>),
-    U8(Vec<u8>, Vec<usize>),
-    U32(Vec<u32>, Vec<usize>),
+fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    fn bytes<T: Copy>(v: &[T]) -> &[u8] {
+        unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+    }
+    let (ty, dims, raw): (xla::ElementType, &Vec<usize>, &[u8]) = match t {
+        HostTensor::F32(d, s) => (xla::ElementType::F32, s, bytes(d)),
+        HostTensor::I32(d, s) => (xla::ElementType::S32, s, bytes(d)),
+        HostTensor::U8(d, s) => (xla::ElementType::U8, s, bytes(d)),
+        HostTensor::U32(d, s) => (xla::ElementType::U32, s, bytes(d)),
+    };
+    xla::Literal::create_from_shape_and_untyped_data(ty, dims, raw)
+        .map_err(|e| crate::err!("literal creation failed: {e:?}"))
 }
 
-impl HostTensor {
-    pub fn scalar_u32(v: u32) -> Self {
-        HostTensor::U32(vec![v], vec![])
-    }
-
-    pub fn scalar_i32(v: i32) -> Self {
-        HostTensor::I32(vec![v], vec![])
-    }
-
-    pub fn f32(data: Vec<f32>, shape: Vec<usize>) -> Self {
-        assert_eq!(data.len(), shape.iter().product::<usize>());
-        HostTensor::F32(data, shape)
-    }
-
-    pub fn i32(data: Vec<i32>, shape: Vec<usize>) -> Self {
-        assert_eq!(data.len(), shape.iter().product::<usize>());
-        HostTensor::I32(data, shape)
-    }
-
-    pub fn u8(data: Vec<u8>, shape: Vec<usize>) -> Self {
-        assert_eq!(data.len(), shape.iter().product::<usize>());
-        HostTensor::U8(data, shape)
-    }
-
-    pub fn shape(&self) -> &[usize] {
-        match self {
-            HostTensor::F32(_, s)
-            | HostTensor::I32(_, s)
-            | HostTensor::U8(_, s)
-            | HostTensor::U32(_, s) => s,
+fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| crate::err!("literal shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let ty = lit.ty().map_err(|e| crate::err!("literal ty: {e:?}"))?;
+    Ok(match ty {
+        xla::ElementType::F32 => {
+            HostTensor::F32(lit.to_vec().map_err(|e| crate::err!("{e:?}"))?, dims)
         }
-    }
-
-    pub fn dtype_str(&self) -> &'static str {
-        match self {
-            HostTensor::F32(..) => "float32",
-            HostTensor::I32(..) => "int32",
-            HostTensor::U8(..) => "uint8",
-            HostTensor::U32(..) => "uint32",
+        xla::ElementType::S32 => {
+            HostTensor::I32(lit.to_vec().map_err(|e| crate::err!("{e:?}"))?, dims)
         }
-    }
-
-    pub fn as_f32(&self) -> Result<&[f32]> {
-        match self {
-            HostTensor::F32(d, _) => Ok(d),
-            other => Err(anyhow!("expected f32 tensor, got {}", other.dtype_str())),
+        xla::ElementType::U8 => {
+            HostTensor::U8(lit.to_vec().map_err(|e| crate::err!("{e:?}"))?, dims)
         }
-    }
-
-    pub fn into_f32(self) -> Result<Vec<f32>> {
-        match self {
-            HostTensor::F32(d, _) => Ok(d),
-            other => Err(anyhow!("expected f32 tensor, got {}", other.dtype_str())),
+        xla::ElementType::U32 => {
+            HostTensor::U32(lit.to_vec().map_err(|e| crate::err!("{e:?}"))?, dims)
         }
-    }
-
-    pub fn scalar_f32_value(&self) -> Result<f32> {
-        Ok(self.as_f32()?[0])
-    }
-
-    fn to_literal(&self) -> Result<xla::Literal> {
-        fn bytes<T: Copy>(v: &[T]) -> &[u8] {
-            unsafe {
-                std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v))
-            }
-        }
-        let (ty, dims, raw): (xla::ElementType, &Vec<usize>, &[u8]) = match self {
-            HostTensor::F32(d, s) => (xla::ElementType::F32, s, bytes(d)),
-            HostTensor::I32(d, s) => (xla::ElementType::S32, s, bytes(d)),
-            HostTensor::U8(d, s) => (xla::ElementType::U8, s, bytes(d)),
-            HostTensor::U32(d, s) => (xla::ElementType::U32, s, bytes(d)),
-        };
-        xla::Literal::create_from_shape_and_untyped_data(ty, dims, raw)
-            .map_err(|e| anyhow!("literal creation failed: {e:?}"))
-    }
-
-    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
-        let shape = lit
-            .array_shape()
-            .map_err(|e| anyhow!("literal shape: {e:?}"))?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        let ty = lit.ty().map_err(|e| anyhow!("literal ty: {e:?}"))?;
-        Ok(match ty {
-            xla::ElementType::F32 => {
-                HostTensor::F32(lit.to_vec().map_err(|e| anyhow!("{e:?}"))?, dims)
-            }
-            xla::ElementType::S32 => {
-                HostTensor::I32(lit.to_vec().map_err(|e| anyhow!("{e:?}"))?, dims)
-            }
-            xla::ElementType::U8 => {
-                HostTensor::U8(lit.to_vec().map_err(|e| anyhow!("{e:?}"))?, dims)
-            }
-            xla::ElementType::U32 => {
-                HostTensor::U32(lit.to_vec().map_err(|e| anyhow!("{e:?}"))?, dims)
-            }
-            other => return Err(anyhow!("unsupported result element type {other:?}")),
-        })
-    }
+        other => return Err(crate::err!("unsupported result element type {other:?}")),
+    })
 }
 
 /// Compiled-executable cache over the PJRT CPU client.
-pub struct Runtime {
-    pub meta: Meta,
+pub struct XlaBackend {
     client: xla::PjRtClient,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
 }
 
 // The PJRT client/executable handles are internally synchronized for our
-// single-client, execute-only usage; Runtime is shared behind &self.
-unsafe impl Send for Runtime {}
-unsafe impl Sync for Runtime {}
+// single-client, execute-only usage; XlaBackend is shared behind &self.
+unsafe impl Send for XlaBackend {}
+unsafe impl Sync for XlaBackend {}
 
-impl Runtime {
-    /// Build from the default artifacts directory.
-    pub fn new() -> Result<Runtime> {
-        Self::with_meta(Meta::load_default()?)
-    }
-
-    pub fn with_meta(meta: Meta) -> Result<Runtime> {
+impl XlaBackend {
+    pub fn new() -> Result<XlaBackend> {
         let client =
-            xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu failed: {e:?}"))?;
+            xla::PjRtClient::cpu().map_err(|e| crate::err!("PjRtClient::cpu failed: {e:?}"))?;
         crate::info!(
             "PJRT client up: platform={} devices={}",
             client.platform_name(),
             client.device_count()
         );
-        Ok(Runtime {
-            meta,
+        Ok(XlaBackend {
             client,
             cache: Mutex::new(HashMap::new()),
         })
     }
 
     /// Compile (or fetch the cached) executable for a graph.
-    pub fn executable(&self, graph: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(graph) {
+    fn executable(&self, gm: &GraphMeta) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(&gm.name) {
             return Ok(exe.clone());
         }
-        let gm = self.meta.graph(graph)?;
         let sw = crate::util::timer::Stopwatch::start();
         let proto = xla::HloModuleProto::from_text_file(
             gm.file
                 .to_str()
-                .ok_or_else(|| anyhow!("non-utf8 path {:?}", gm.file))?,
+                .ok_or_else(|| crate::err!("non-utf8 path {:?}", gm.file))?,
         )
-        .map_err(|e| anyhow!("parsing {:?}: {e:?}", gm.file))?;
+        .map_err(|e| crate::err!("parsing {:?}: {e:?}", gm.file))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client
             .compile(&comp)
-            .map_err(|e| anyhow!("compiling {graph}: {e:?}"))?;
-        crate::info!("compiled graph '{graph}' in {:.1} ms", sw.elapsed_ms());
-        let exe = std::sync::Arc::new(exe);
+            .map_err(|e| crate::err!("compiling {}: {e:?}", gm.name))?;
+        crate::info!("compiled graph '{}' in {:.1} ms", gm.name, sw.elapsed_ms());
+        let exe = Arc::new(exe);
         self.cache
             .lock()
             .unwrap()
-            .insert(graph.to_string(), exe.clone());
+            .insert(gm.name.clone(), exe.clone());
         Ok(exe)
     }
+}
 
-    /// Execute a graph with ABI validation against meta.json.
-    pub fn run(&self, graph: &str, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        let gm = self.meta.graph(graph)?.clone();
-        self.validate_args(&gm, args)?;
-        let exe = self.executable(graph)?;
-        let literals: Vec<xla::Literal> = args
-            .iter()
-            .map(|a| a.to_literal())
-            .collect::<Result<Vec<_>>>()?;
+impl Backend for XlaBackend {
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, gm: &GraphMeta) -> Result<()> {
+        self.executable(gm).map(|_| ())
+    }
+
+    fn execute(&self, gm: &GraphMeta, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let exe = self.executable(gm)?;
+        let literals: Vec<xla::Literal> =
+            args.iter().map(to_literal).collect::<Result<Vec<_>>>()?;
         let result = exe
             .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("executing {graph}: {e:?}"))?;
+            .map_err(|e| crate::err!("executing {}: {e:?}", gm.name))?;
         let first = result
             .into_iter()
             .next()
             .and_then(|r| r.into_iter().next())
-            .ok_or_else(|| anyhow!("{graph}: empty result"))?;
+            .ok_or_else(|| crate::err!("{}: empty result", gm.name))?;
         let lit = first
             .to_literal_sync()
-            .map_err(|e| anyhow!("fetching result of {graph}: {e:?}"))?;
+            .map_err(|e| crate::err!("fetching result of {}: {e:?}", gm.name))?;
         // Graphs are lowered with return_tuple=True.
         let parts = lit
             .to_tuple()
-            .map_err(|e| anyhow!("untupling result of {graph}: {e:?}"))?;
+            .map_err(|e| crate::err!("untupling result of {}: {e:?}", gm.name))?;
         if parts.len() != gm.results.len() {
-            return Err(anyhow!(
-                "{graph}: expected {} results, got {}",
+            return Err(crate::err!(
+                "{}: expected {} results, got {}",
+                gm.name,
                 gm.results.len(),
                 parts.len()
             ));
         }
-        parts.iter().map(HostTensor::from_literal).collect()
+        parts.iter().map(from_literal).collect()
     }
-
-    fn validate_args(&self, gm: &GraphMeta, args: &[HostTensor]) -> Result<()> {
-        if args.len() != gm.args.len() {
-            return Err(anyhow!(
-                "{}: expected {} args, got {}",
-                gm.name,
-                gm.args.len(),
-                args.len()
-            ));
-        }
-        for (i, (a, m)) in args.iter().zip(&gm.args).enumerate() {
-            if a.shape() != m.shape.as_slice() {
-                return Err(anyhow!(
-                    "{} arg {i} ({}): shape {:?} != expected {:?}",
-                    gm.name,
-                    m.name,
-                    a.shape(),
-                    m.shape
-                ));
-            }
-            if a.dtype_str() != m.dtype {
-                return Err(anyhow!(
-                    "{} arg {i} ({}): dtype {} != expected {}",
-                    gm.name,
-                    m.name,
-                    a.dtype_str(),
-                    m.dtype
-                ));
-            }
-        }
-        Ok(())
-    }
-
-    /// Map result names to tensors.
-    pub fn run_named(
-        &self,
-        graph: &str,
-        args: &[HostTensor],
-    ) -> Result<Vec<(String, HostTensor)>> {
-        let names = self.meta.graph(graph)?.results.clone();
-        let vals = self.run(graph, args)?;
-        Ok(names.into_iter().zip(vals).collect())
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-}
-
-impl std::fmt::Debug for Runtime {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(
-            f,
-            "Runtime(platform={}, graphs={})",
-            self.client.platform_name(),
-            self.meta.graphs.len()
-        )
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn host_tensor_shape_checks() {
-        let t = HostTensor::f32(vec![1.0; 6], vec![2, 3]);
-        assert_eq!(t.shape(), &[2, 3]);
-        assert_eq!(t.dtype_str(), "float32");
-        assert!(t.as_f32().is_ok());
-        let t = HostTensor::scalar_i32(5);
-        assert_eq!(t.shape(), &[] as &[usize]);
-        assert!(t.as_f32().is_err());
-    }
-
-    #[test]
-    #[should_panic]
-    fn host_tensor_rejects_shape_mismatch() {
-        HostTensor::f32(vec![1.0; 5], vec![2, 3]);
-    }
-
-    // Full round-trip through PJRT is covered by rust/tests/runtime_e2e.rs
-    // (integration test, requires artifacts).
 }

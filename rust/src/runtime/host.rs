@@ -1,0 +1,152 @@
+//! Host-side tensors crossing the backend ABI.
+//!
+//! [`HostTensor`] is the only value type exchanged with a
+//! [`super::Backend`]: a flat little-endian buffer plus a shape, in one of
+//! the four dtypes the graph ABIs use (`float32`, `int32`, `uint8`,
+//! `uint32`).
+
+use crate::error::Result;
+
+/// A host-side tensor in one of the dtypes crossing the ABI.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+    U8(Vec<u8>, Vec<usize>),
+    U32(Vec<u32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn scalar_u32(v: u32) -> Self {
+        HostTensor::U32(vec![v], vec![])
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor::I32(vec![v], vec![])
+    }
+
+    pub fn f32(data: Vec<f32>, shape: Vec<usize>) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::F32(data, shape)
+    }
+
+    pub fn i32(data: Vec<i32>, shape: Vec<usize>) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::I32(data, shape)
+    }
+
+    pub fn u8(data: Vec<u8>, shape: Vec<usize>) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::U8(data, shape)
+    }
+
+    pub fn u32(data: Vec<u32>, shape: Vec<usize>) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::U32(data, shape)
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s)
+            | HostTensor::I32(_, s)
+            | HostTensor::U8(_, s)
+            | HostTensor::U32(_, s) => s,
+        }
+    }
+
+    pub fn dtype_str(&self) -> &'static str {
+        match self {
+            HostTensor::F32(..) => "float32",
+            HostTensor::I32(..) => "int32",
+            HostTensor::U8(..) => "uint8",
+            HostTensor::U32(..) => "uint32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(d, _) => Ok(d),
+            other => Err(crate::err!(
+                "expected f32 tensor, got {}",
+                other.dtype_str()
+            )),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(d, _) => Ok(d),
+            other => Err(crate::err!(
+                "expected i32 tensor, got {}",
+                other.dtype_str()
+            )),
+        }
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        match self {
+            HostTensor::U8(d, _) => Ok(d),
+            other => Err(crate::err!(
+                "expected u8 tensor, got {}",
+                other.dtype_str()
+            )),
+        }
+    }
+
+    pub fn as_u32(&self) -> Result<&[u32]> {
+        match self {
+            HostTensor::U32(d, _) => Ok(d),
+            other => Err(crate::err!(
+                "expected u32 tensor, got {}",
+                other.dtype_str()
+            )),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32(d, _) => Ok(d),
+            other => Err(crate::err!(
+                "expected f32 tensor, got {}",
+                other.dtype_str()
+            )),
+        }
+    }
+
+    pub fn scalar_f32_value(&self) -> Result<f32> {
+        Ok(self.as_f32()?[0])
+    }
+
+    pub fn scalar_i32_value(&self) -> Result<i32> {
+        Ok(self.as_i32()?[0])
+    }
+
+    pub fn scalar_u32_value(&self) -> Result<u32> {
+        Ok(self.as_u32()?[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_checks() {
+        let t = HostTensor::f32(vec![1.0; 6], vec![2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.dtype_str(), "float32");
+        assert!(t.as_f32().is_ok());
+        let t = HostTensor::scalar_i32(5);
+        assert_eq!(t.shape(), &[] as &[usize]);
+        assert!(t.as_f32().is_err());
+        assert_eq!(t.scalar_i32_value().unwrap(), 5);
+        let t = HostTensor::scalar_u32(9);
+        assert_eq!(t.scalar_u32_value().unwrap(), 9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn host_tensor_rejects_shape_mismatch() {
+        HostTensor::f32(vec![1.0; 5], vec![2, 3]);
+    }
+}

@@ -1,10 +1,20 @@
-//! `artifacts/meta.json` — the python→rust ABI contract.
+//! Graph ABI metadata: every graph's argument/result names, shapes and
+//! dtypes, plus the model hyper-parameters.
+//!
+//! Two sources produce a [`Meta`]:
+//!
+//! - [`Meta::builtin`] — constructed directly in Rust from the canonical
+//!   model configuration. This is the hermetic path the CPU backend uses:
+//!   no files, no Python, no network. It mirrors `python/compile/aot.py`
+//!   exactly (same graph names, same flat positional ABI).
+//! - [`Meta::load`] — parse `artifacts/meta.json` written by `aot.py`
+//!   (`make artifacts`), used by the XLA backend which also needs the
+//!   lowered `*.hlo.txt` files next to it.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context};
-
+use crate::error::{Context, Result};
 use crate::util::json::Json;
 
 /// One graph argument/result descriptor.
@@ -41,7 +51,7 @@ impl GraphMeta {
     }
 }
 
-/// Model hyper-parameters recorded by aot.py.
+/// Model hyper-parameters (mirrors `ModelCfg` in python/compile/model.py).
 #[derive(Clone, Debug)]
 pub struct ModelMeta {
     pub vocab: usize,
@@ -55,6 +65,70 @@ pub struct ModelMeta {
     pub block: usize,
 }
 
+impl ModelMeta {
+    /// The canonical configuration baked into the AOT artifacts and the
+    /// CPU backend (ModelCfg defaults + BLOCK in aot.py).
+    pub fn canonical() -> ModelMeta {
+        ModelMeta {
+            vocab: 64,
+            d_model: 128,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 256,
+            seq_len: 64,
+            batch: 16,
+            lora_rank: 8,
+            block: 64,
+        }
+    }
+}
+
+/// Canonical flat parameter order with shapes (the rust<->python ABI;
+/// mirrors `param_names` + `param_shapes` in model.py).
+pub fn param_specs(m: &ModelMeta) -> Vec<(String, Vec<usize>)> {
+    let (d, ff, v, s) = (m.d_model, m.d_ff, m.vocab, m.seq_len);
+    let mut out: Vec<(String, Vec<usize>)> =
+        vec![("embed".into(), vec![v, d]), ("pos".into(), vec![s, d])];
+    for layer in 0..m.n_layers {
+        out.push((format!("l{layer}.ln1"), vec![d]));
+        out.push((format!("l{layer}.wqkv"), vec![d, 3 * d]));
+        out.push((format!("l{layer}.wo"), vec![d, d]));
+        out.push((format!("l{layer}.ln2"), vec![d]));
+        out.push((format!("l{layer}.win"), vec![d, ff]));
+        out.push((format!("l{layer}.wout"), vec![ff, d]));
+    }
+    out.push(("lnf".into(), vec![d]));
+    out.push(("head".into(), vec![d, v]));
+    out
+}
+
+/// Names of the weight matrices quantized in the q4 serving graph and
+/// LoRA-adapted during fine-tuning (mirrors `matmul_param_names`).
+pub fn matmul_param_names(m: &ModelMeta) -> Vec<String> {
+    let mut out = Vec::new();
+    for layer in 0..m.n_layers {
+        for k in ["wqkv", "wo", "win", "wout"] {
+            out.push(format!("l{layer}.{k}"));
+        }
+    }
+    out
+}
+
+/// Flat LoRA parameter order with shapes: for each adapted matrix, A
+/// `[k, r]` then B `[r, n]` (mirrors `lora_names` + `lora_shapes`).
+pub fn lora_specs(m: &ModelMeta) -> Vec<(String, Vec<usize>)> {
+    let shapes: std::collections::HashMap<String, Vec<usize>> =
+        param_specs(m).into_iter().collect();
+    let mut out = Vec::new();
+    for nm in matmul_param_names(m) {
+        let shp = &shapes[&nm];
+        let (k, n) = (shp[0], shp[1]);
+        out.push((format!("{nm}.lora_a"), vec![k, m.lora_rank]));
+        out.push((format!("{nm}.lora_b"), vec![m.lora_rank, n]));
+    }
+    out
+}
+
 /// The whole artifact manifest.
 #[derive(Clone, Debug)]
 pub struct Meta {
@@ -64,18 +138,164 @@ pub struct Meta {
 }
 
 impl Meta {
+    /// Build the full graph ABI in Rust, without any artifact files —
+    /// the hermetic path the CPU backend uses. Graph names, argument
+    /// order, shapes and dtypes match `aot.py::lower_graphs` exactly.
+    pub fn builtin() -> Meta {
+        let m = ModelMeta::canonical();
+        let dir = Self::default_dir();
+        let mut graphs = BTreeMap::new();
+
+        let f32s = "float32".to_string();
+        let pspecs = param_specs(&m);
+        let lspecs = lora_specs(&m);
+        let mm = matmul_param_names(&m);
+        let arg = |name: &str, shape: Vec<usize>, dtype: &str| ArgMeta {
+            name: name.to_string(),
+            shape,
+            dtype: dtype.to_string(),
+        };
+        let params_args = |prefix: &str| -> Vec<ArgMeta> {
+            pspecs
+                .iter()
+                .map(|(n, s)| arg(&format!("{prefix}{n}"), s.clone(), &f32s))
+                .collect()
+        };
+        let lora_args = |prefix: &str| -> Vec<ArgMeta> {
+            lspecs
+                .iter()
+                .map(|(n, s)| arg(&format!("{prefix}{n}"), s.clone(), &f32s))
+                .collect()
+        };
+        let tokens_arg = || arg("tokens", vec![m.batch, m.seq_len], "int32");
+        let step_arg = || arg("step", vec![], "int32");
+        let seed_arg = || arg("seed", vec![], "uint32");
+        let pnames: Vec<String> = pspecs.iter().map(|(n, _)| n.clone()).collect();
+        let lnames: Vec<String> = lspecs.iter().map(|(n, _)| n.clone()).collect();
+
+        let mut add = |name: &str, args: Vec<ArgMeta>, results: Vec<String>| {
+            graphs.insert(
+                name.to_string(),
+                GraphMeta {
+                    name: name.to_string(),
+                    file: dir.join(format!("{name}.hlo.txt")),
+                    args,
+                    results,
+                },
+            );
+        };
+
+        // --- init ------------------------------------------------------
+        add("init_params", vec![seed_arg()], pnames.clone());
+        add("init_lora", vec![seed_arg()], lnames.clone());
+
+        // --- eval forwards ----------------------------------------------
+        let mut a = params_args("");
+        a.push(tokens_arg());
+        add("lm_nll", a.clone(), vec!["nll_per_seq".into()]);
+        add("lm_logits_last", a.clone(), vec!["logits_last".into()]);
+        add("lm_logits_all", a, vec!["logits".into()]);
+
+        // --- quantized serving forward ----------------------------------
+        let pshapes: std::collections::HashMap<String, Vec<usize>> =
+            pspecs.iter().cloned().collect();
+        let mut q4 = Vec::new();
+        for (n, s) in &pspecs {
+            if !mm.contains(n) {
+                q4.push(arg(n, s.clone(), &f32s));
+            }
+        }
+        for n in &mm {
+            q4.push(arg(&format!("{n}.codes"), pshapes[n].clone(), "uint8"));
+        }
+        for n in &mm {
+            let s = &pshapes[n];
+            q4.push(arg(
+                &format!("{n}.absmax"),
+                vec![s[0], s[1] / m.block],
+                &f32s,
+            ));
+        }
+        q4.push(arg("levels", vec![16], &f32s));
+        q4.push(tokens_arg());
+        add("lm_nll_q4", q4, vec!["nll_per_seq".into()]);
+
+        // --- training ---------------------------------------------------
+        let mut t = params_args("");
+        t.extend(params_args("m."));
+        t.extend(params_args("v."));
+        t.push(step_arg());
+        t.push(tokens_arg());
+        let mut tres = pnames.clone();
+        tres.extend(pnames.iter().map(|n| format!("m.{n}")));
+        tres.extend(pnames.iter().map(|n| format!("v.{n}")));
+        tres.push("step".into());
+        tres.push("loss".into());
+        add("train_step", t, tres);
+
+        let mut l = params_args("");
+        l.extend(lora_args(""));
+        l.extend(lora_args("m."));
+        l.extend(lora_args("v."));
+        l.push(step_arg());
+        l.push(tokens_arg());
+        let mut lres = lnames.clone();
+        lres.extend(lnames.iter().map(|n| format!("m.{n}")));
+        lres.extend(lnames.iter().map(|n| format!("v.{n}")));
+        lres.push("step".into());
+        lres.push("loss".into());
+        add("lora_step", l, lres);
+
+        let mut ll = params_args("");
+        ll.extend(lora_args(""));
+        ll.push(tokens_arg());
+        add("lm_logits_last_lora", ll.clone(), vec!["logits_last".into()]);
+        add("lm_logits_all_lora", ll, vec!["logits".into()]);
+
+        // --- standalone kernels -----------------------------------------
+        let (mk, kk, nn) = (128usize, 256usize, 256usize);
+        add(
+            "dequant_matmul",
+            vec![
+                arg("x", vec![mk, kk], &f32s),
+                arg("codes", vec![kk, nn], "uint8"),
+                arg("absmax", vec![kk, nn / m.block], &f32s),
+                arg("levels", vec![16], &f32s),
+            ],
+            vec!["y".into()],
+        );
+        for suffix in ["abs", "signed"] {
+            add(
+                &format!("quantize_blocks_{suffix}"),
+                vec![
+                    arg("w", vec![1024, m.block], &f32s),
+                    arg("bounds", vec![15], &f32s),
+                ],
+                vec!["codes".into(), "absmax".into()],
+            );
+        }
+
+        Meta {
+            dir,
+            model: m,
+            graphs,
+        }
+    }
+
     /// Load `meta.json` from an artifact directory.
-    pub fn load(dir: &Path) -> anyhow::Result<Meta> {
+    pub fn load(dir: &Path) -> Result<Meta> {
         let path = dir.join("meta.json");
         let src = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
-        let j = Json::parse(&src).map_err(|e| anyhow!("parsing meta.json: {e}"))?;
+        let j = Json::parse(&src).map_err(|e| crate::err!("parsing meta.json: {e}"))?;
 
-        let m = j.get("model").ok_or_else(|| anyhow!("meta.json: no model"))?;
-        let get = |k: &str| -> anyhow::Result<usize> {
+        let m = j
+            .get("model")
+            .ok_or_else(|| crate::err!("meta.json: no model"))?;
+        let get = |k: &str| -> Result<usize> {
             m.get(k)
                 .and_then(Json::as_usize)
-                .ok_or_else(|| anyhow!("meta.json model.{k} missing"))
+                .ok_or_else(|| crate::err!("meta.json model.{k} missing"))
         };
         let model = ModelMeta {
             vocab: get("vocab")?,
@@ -92,44 +312,44 @@ impl Meta {
         let mut graphs = BTreeMap::new();
         let gobj = match j.get("graphs") {
             Some(Json::Obj(o)) => o,
-            _ => return Err(anyhow!("meta.json: no graphs object")),
+            _ => return Err(crate::err!("meta.json: no graphs object")),
         };
         for (name, g) in gobj {
             let file = g
                 .get("file")
                 .and_then(Json::as_str)
-                .ok_or_else(|| anyhow!("graph {name}: no file"))?;
+                .ok_or_else(|| crate::err!("graph {name}: no file"))?;
             let args = g
                 .get("args")
                 .and_then(Json::as_arr)
-                .ok_or_else(|| anyhow!("graph {name}: no args"))?
+                .ok_or_else(|| crate::err!("graph {name}: no args"))?
                 .iter()
-                .map(|a| -> anyhow::Result<ArgMeta> {
+                .map(|a| -> Result<ArgMeta> {
                     Ok(ArgMeta {
                         name: a
                             .get("name")
                             .and_then(Json::as_str)
-                            .ok_or_else(|| anyhow!("arg name"))?
+                            .ok_or_else(|| crate::err!("arg name"))?
                             .to_string(),
                         shape: a
                             .get("shape")
                             .and_then(Json::as_arr)
-                            .ok_or_else(|| anyhow!("arg shape"))?
+                            .ok_or_else(|| crate::err!("arg shape"))?
                             .iter()
                             .map(|d| d.as_usize().unwrap_or(0))
                             .collect(),
                         dtype: a
                             .get("dtype")
                             .and_then(Json::as_str)
-                            .ok_or_else(|| anyhow!("arg dtype"))?
+                            .ok_or_else(|| crate::err!("arg dtype"))?
                             .to_string(),
                     })
                 })
-                .collect::<anyhow::Result<Vec<_>>>()?;
+                .collect::<Result<Vec<_>>>()?;
             let results = g
                 .get("results")
                 .and_then(Json::as_arr)
-                .ok_or_else(|| anyhow!("graph {name}: no results"))?
+                .ok_or_else(|| crate::err!("graph {name}: no results"))?
                 .iter()
                 .map(|r| r.as_str().unwrap_or("").to_string())
                 .collect();
@@ -150,14 +370,17 @@ impl Meta {
         })
     }
 
-    pub fn graph(&self, name: &str) -> anyhow::Result<&GraphMeta> {
+    pub fn graph(&self, name: &str) -> Result<&GraphMeta> {
         self.graphs
             .get(name)
-            .ok_or_else(|| anyhow!("graph '{name}' not in meta.json"))
+            .ok_or_else(|| crate::err!("graph '{name}' not in meta"))
     }
 
-    /// Default artifact dir: $BOF4_ARTIFACTS or ./artifacts (searching up
-    /// from the current dir so tests/benches work from any workspace cwd).
+    /// Default artifact dir: $BOF4_ARTIFACTS, or an existing ./artifacts
+    /// (searching up from the current dir so tests/benches work from any
+    /// workspace cwd), or — when none exists yet, the common hermetic
+    /// case — a stable workspace-anchored `artifacts/` next to the crate,
+    /// so caches like `trained_model.wbin` do not depend on the cwd.
     pub fn default_dir() -> PathBuf {
         if let Ok(d) = std::env::var("BOF4_ARTIFACTS") {
             return PathBuf::from(d);
@@ -169,12 +392,14 @@ impl Meta {
                 return cand;
             }
             if !dir.pop() {
-                return PathBuf::from("artifacts");
+                // fall back to <workspace root>/artifacts, anchored at
+                // compile time (the crate lives in <workspace>/rust)
+                return PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts"));
             }
         }
     }
 
-    pub fn load_default() -> anyhow::Result<Meta> {
+    pub fn load_default() -> Result<Meta> {
         Self::load(&Self::default_dir())
     }
 }
@@ -210,11 +435,8 @@ mod tests {
     }
 
     #[test]
-    fn train_step_abi_symmetry() {
-        if !have_artifacts() {
-            return;
-        }
-        let meta = Meta::load_default().unwrap();
+    fn builtin_train_step_abi_symmetry() {
+        let meta = Meta::builtin();
         let g = meta.graph("train_step").unwrap();
         // 16 params * 3 + step + tokens
         assert_eq!(g.args.len(), 50);
@@ -225,6 +447,51 @@ mod tests {
     }
 
     #[test]
+    fn builtin_matches_aot_graph_set() {
+        let meta = Meta::builtin();
+        for g in [
+            "init_params",
+            "init_lora",
+            "lm_nll",
+            "lm_logits_last",
+            "lm_logits_all",
+            "lm_nll_q4",
+            "train_step",
+            "lora_step",
+            "lm_logits_last_lora",
+            "lm_logits_all_lora",
+            "dequant_matmul",
+            "quantize_blocks_abs",
+            "quantize_blocks_signed",
+        ] {
+            assert!(meta.graphs.contains_key(g), "missing graph {g}");
+        }
+        // param ABI: 16 tensors, embed first, head last
+        let nll = meta.graph("lm_nll").unwrap();
+        assert_eq!(nll.args.len(), 17);
+        assert_eq!(nll.args[0].name, "embed");
+        assert_eq!(nll.args[0].shape, vec![64, 128]);
+        assert_eq!(nll.args[15].name, "head");
+        assert_eq!(nll.args[15].shape, vec![128, 64]);
+        assert_eq!(nll.args[16].name, "tokens");
+        assert_eq!(nll.args[16].dtype, "int32");
+        // lora ABI: 16 adapters (2 layers x 4 matrices x A/B)
+        let il = meta.graph("init_lora").unwrap();
+        assert_eq!(il.results.len(), 16);
+        assert_eq!(il.results[0], "l0.wqkv.lora_a");
+        // lora_step: 16 base + 3*16 lora + step + tokens
+        let ls = meta.graph("lora_step").unwrap();
+        assert_eq!(ls.args.len(), 16 + 3 * 16 + 2);
+        assert_eq!(ls.results.len(), 3 * 16 + 2);
+        // q4: 8 f32 + 8 codes + 8 absmax + levels + tokens
+        let q4 = meta.graph("lm_nll_q4").unwrap();
+        assert_eq!(q4.args.len(), 8 + 8 + 8 + 2);
+        assert_eq!(q4.arg_index("l0.wqkv.codes"), Some(8));
+        let am = &q4.args[q4.arg_index("l0.wqkv.absmax").unwrap()];
+        assert_eq!(am.shape, vec![128, 6]);
+    }
+
+    #[test]
     fn arg_meta_helpers() {
         let a = ArgMeta {
             name: "x".into(),
@@ -232,5 +499,18 @@ mod tests {
             dtype: "float32".into(),
         };
         assert_eq!(a.elements(), 24);
+    }
+
+    #[test]
+    fn spec_helpers_consistent() {
+        let m = ModelMeta::canonical();
+        let p = param_specs(&m);
+        assert_eq!(p.len(), 16);
+        assert_eq!(matmul_param_names(&m).len(), 8);
+        let l = lora_specs(&m);
+        assert_eq!(l.len(), 16);
+        assert_eq!(l[0].1, vec![128, 8]); // wqkv.lora_a
+        assert_eq!(l[1].1, vec![8, 384]); // wqkv.lora_b
+        assert_eq!(l[7].1, vec![8, 128]); // wout.lora_b
     }
 }

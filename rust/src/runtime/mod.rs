@@ -1,16 +1,219 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
-//! the rust hot path (start pattern: /opt/xla-example/load_hlo).
+//! Multi-backend graph runtime.
 //!
-//! `make artifacts` (python, build-time only) produces `artifacts/*.hlo.txt`
-//! plus `meta.json` describing each graph's flat argument/result ABI. This
-//! module is the only place the `xla` crate is touched:
+//! Every model computation in this crate — training steps, NLL/logit
+//! evals, the quantized serving forward, the standalone kernels — is
+//! expressed as a named *graph* with a flat positional ABI described by
+//! [`Meta`]. The [`Backend`] trait abstracts who executes those graphs:
 //!
-//! - [`meta`]: parse `meta.json` into [`meta::GraphMeta`] ABIs
-//! - [`client`]: the process-wide `PjRtClient`, graph compilation cache,
-//!   and typed literal marshalling helpers ([`client::HostTensor`])
+//! - [`cpu::CpuBackend`] (default): a pure-Rust interpreter of the same
+//!   graph semantics — embedding gather, matmul with fused 4-bit dequant,
+//!   RMS-norm, GELU, causal attention softmax, NLL, AdamW and LoRA
+//!   updates. Fully hermetic: zero Python, zero artifacts, zero network.
+//! - `client::XlaBackend` (behind the off-by-default `xla` cargo
+//!   feature): compiles the AOT'd HLO-text artifacts produced by
+//!   `make artifacts` through PJRT and executes them (start pattern:
+//!   /opt/xla-example/load_hlo).
+//!
+//! [`Runtime`] owns a [`Meta`] plus one backend, validates every call
+//! against the ABI, and is what the coordinator/eval layers hold.
+//!
+//! Backend selection: [`Runtime::new`] honours `BOF4_BACKEND=cpu|xla`
+//! (default `cpu`).
 
+#[cfg(feature = "xla")]
 pub mod client;
+pub mod cpu;
+pub mod host;
 pub mod meta;
 
-pub use client::{HostTensor, Runtime};
-pub use meta::{ArgMeta, GraphMeta, Meta};
+pub use cpu::CpuBackend;
+pub use host::HostTensor;
+pub use meta::{ArgMeta, GraphMeta, Meta, ModelMeta};
+
+use crate::error::Result;
+
+/// A graph executor: prepare (compile/warm) and execute graphs over the
+/// flat `meta.json` ABI. Implementations must be shareable across the
+/// coordinator's threads.
+pub trait Backend: Send + Sync {
+    /// Human-readable platform tag ("cpu-interpreter", "Host", ...).
+    fn platform(&self) -> String;
+
+    /// Compile or otherwise warm the graph so the first [`Backend::execute`]
+    /// is not slow. A no-op for interpreters.
+    fn compile(&self, gm: &GraphMeta) -> Result<()>;
+
+    /// Execute one graph invocation. `args` are already validated against
+    /// `gm.args`; the returned tensors must align with `gm.results`.
+    fn execute(&self, gm: &GraphMeta, args: &[HostTensor]) -> Result<Vec<HostTensor>>;
+}
+
+/// ABI-validating facade over a [`Backend`].
+pub struct Runtime {
+    pub meta: Meta,
+    backend: Box<dyn Backend>,
+}
+
+impl Runtime {
+    /// Default runtime: `BOF4_BACKEND` env override, else the hermetic
+    /// CPU backend.
+    pub fn new() -> Result<Runtime> {
+        match std::env::var("BOF4_BACKEND").ok().as_deref() {
+            None | Some("cpu") | Some("") => Ok(Self::cpu()),
+            Some("xla") => Self::xla_runtime(),
+            Some(other) => Err(crate::err!(
+                "unknown BOF4_BACKEND '{other}' (expected 'cpu' or 'xla')"
+            )),
+        }
+    }
+
+    /// The pure-Rust CPU interpreter over the builtin ABI (infallible,
+    /// artifact-free).
+    pub fn cpu() -> Runtime {
+        let meta = Meta::builtin();
+        let backend = CpuBackend::new(meta.model.clone());
+        crate::info!("runtime up: backend={} (hermetic)", backend.platform());
+        Runtime {
+            meta,
+            backend: Box::new(backend),
+        }
+    }
+
+    /// The PJRT/XLA backend over `artifacts/meta.json` (requires the
+    /// `xla` cargo feature and `make artifacts`).
+    #[cfg(feature = "xla")]
+    pub fn xla() -> Result<Runtime> {
+        let meta = Meta::load_default()?;
+        let backend = client::XlaBackend::new()?;
+        Ok(Runtime {
+            meta,
+            backend: Box::new(backend),
+        })
+    }
+
+    #[cfg(feature = "xla")]
+    fn xla_runtime() -> Result<Runtime> {
+        Self::xla()
+    }
+
+    #[cfg(not(feature = "xla"))]
+    fn xla_runtime() -> Result<Runtime> {
+        Err(crate::err!(
+            "BOF4_BACKEND=xla but this build has no XLA support \
+             (rebuild with `--features xla` and a vendored xla crate)"
+        ))
+    }
+
+    /// Assemble from explicit parts (tests / custom backends).
+    ///
+    /// Invariant: the backend must have been constructed for this `meta`
+    /// (in particular, `CpuBackend::new` must receive `meta.model`) —
+    /// `run` validates arguments against `meta`, but a backend sizes its
+    /// buffers from its own model configuration.
+    pub fn with_backend(meta: Meta, backend: Box<dyn Backend>) -> Runtime {
+        Runtime { meta, backend }
+    }
+
+    /// Compile (or warm) a graph so the first `run` is not slow.
+    pub fn prepare(&self, graph: &str) -> Result<()> {
+        let gm = self.meta.graph(graph)?;
+        self.backend.compile(gm)
+    }
+
+    /// Execute a graph with ABI validation against the manifest.
+    pub fn run(&self, graph: &str, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let gm = self.meta.graph(graph)?;
+        self.validate_args(gm, args)?;
+        let out = self.backend.execute(gm, args)?;
+        if out.len() != gm.results.len() {
+            return Err(crate::err!(
+                "{graph}: backend returned {} results, ABI expects {}",
+                out.len(),
+                gm.results.len()
+            ));
+        }
+        Ok(out)
+    }
+
+    /// Map result names to tensors.
+    pub fn run_named(&self, graph: &str, args: &[HostTensor]) -> Result<Vec<(String, HostTensor)>> {
+        let names = self.meta.graph(graph)?.results.clone();
+        let vals = self.run(graph, args)?;
+        Ok(names.into_iter().zip(vals).collect())
+    }
+
+    pub fn platform(&self) -> String {
+        self.backend.platform()
+    }
+
+    fn validate_args(&self, gm: &GraphMeta, args: &[HostTensor]) -> Result<()> {
+        if args.len() != gm.args.len() {
+            return Err(crate::err!(
+                "{}: expected {} args, got {}",
+                gm.name,
+                gm.args.len(),
+                args.len()
+            ));
+        }
+        for (i, (a, m)) in args.iter().zip(&gm.args).enumerate() {
+            if a.shape() != m.shape.as_slice() {
+                return Err(crate::err!(
+                    "{} arg {i} ({}): shape {:?} != expected {:?}",
+                    gm.name,
+                    m.name,
+                    a.shape(),
+                    m.shape
+                ));
+            }
+            if a.dtype_str() != m.dtype {
+                return Err(crate::err!(
+                    "{} arg {i} ({}): dtype {} != expected {}",
+                    gm.name,
+                    m.name,
+                    a.dtype_str(),
+                    m.dtype
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Runtime(platform={}, graphs={})",
+            self.backend.platform(),
+            self.meta.graphs.len()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_runtime_validates_abi() {
+        let rt = Runtime::cpu();
+        assert_eq!(rt.platform(), "cpu-interpreter");
+        // wrong arg count
+        assert!(rt.run("lm_nll", &[]).is_err());
+        // wrong dtype for the seed
+        assert!(rt.run("init_params", &[HostTensor::scalar_i32(0)]).is_err());
+        // unknown graph
+        assert!(rt.run("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn run_named_aligns_names() {
+        let rt = Runtime::cpu();
+        let out = rt
+            .run_named("init_params", &[HostTensor::scalar_u32(1)])
+            .unwrap();
+        assert_eq!(out.len(), 16);
+        assert_eq!(out[0].0, "embed");
+        assert_eq!(out[15].0, "head");
+    }
+}

@@ -3,12 +3,16 @@
 //! is useless — this is the ~80-line implementation we actually need).
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
 
-use once_cell::sync::Lazy;
-
-static START: Lazy<Instant> = Lazy::new(Instant::now);
+static START: OnceLock<Instant> = OnceLock::new();
 static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Process start time (first call wins).
+fn start() -> Instant {
+    *START.get_or_init(Instant::now)
+}
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
@@ -46,7 +50,7 @@ pub fn init_from_env() {
         };
         set_level(lv);
     }
-    Lazy::force(&START);
+    let _ = start();
 }
 
 pub fn enabled(level: Level) -> bool {
@@ -57,7 +61,7 @@ pub fn log(level: Level, module: &str, msg: std::fmt::Arguments<'_>) {
     if !enabled(level) {
         return;
     }
-    let t = START.elapsed();
+    let t = start().elapsed();
     eprintln!(
         "[{:>8.3}s {} {}] {}",
         t.as_secs_f64(),

@@ -1,11 +1,13 @@
 //! Coordinator invariants: scheduler property tests + batched-service
-//! behaviour over the real PJRT runtime.
+//! behaviour over the default (pure-Rust CPU) runtime. Everything here
+//! runs hermetically — no artifacts, no Python, no network.
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use bof4::coordinator::{BatchedLm, QuantJob, QuantScheduler, ServiceConfig};
 use bof4::quant::{Method, Norm, QuantConfig};
-use bof4::runtime::{HostTensor, Meta, Runtime};
+use bof4::runtime::{HostTensor, Runtime};
 use bof4::testkit::{forall, Gen, Prop, USizeRange};
 use bof4::util::rng::Pcg64;
 
@@ -102,26 +104,83 @@ fn property_worker_count_invariant() {
     );
 }
 
+/// Exactly-once + submission order with 1 worker, 4 workers, and more
+/// workers than jobs (idle workers must exit cleanly, not hang or dup).
+#[test]
+fn scheduler_exactly_once_across_worker_counts() {
+    let n_jobs = 7usize;
+    let mut rng = Pcg64::seed_from_u64(99);
+    let jobs: Vec<QuantJob> = (0..n_jobs)
+        .map(|i| {
+            let mut data = vec![0.0f32; 257];
+            rng.fill_gaussian_f32(&mut data, 1.0);
+            QuantJob {
+                name: format!("tensor-{i}"),
+                data,
+            }
+        })
+        .collect();
+    for workers in [1usize, 4, n_jobs + 9] {
+        let sched = QuantScheduler::new(QuantConfig {
+            method: Method::Nf4,
+            ..Default::default()
+        })
+        .with_workers(workers);
+        let res = sched.run(jobs.clone()).unwrap();
+        assert_eq!(res.len(), n_jobs, "workers={workers}");
+        for (i, r) in res.iter().enumerate() {
+            assert_eq!(r.name, format!("tensor-{i}"), "workers={workers}");
+        }
+        assert_eq!(sched.metrics.get("tensors_done"), n_jobs as u64);
+    }
+}
+
+/// A worker panic must surface as an error, not a hang or a lost job.
+/// (block = 0 makes the quantizer divide by zero inside the worker.)
+#[test]
+fn scheduler_surfaces_worker_panics() {
+    let sched = QuantScheduler::new(QuantConfig {
+        method: Method::Nf4,
+        norm: Norm::Absmax,
+        block: 0, // invalid on purpose: panics inside quantize()
+        ..Default::default()
+    })
+    .with_workers(3);
+    let jobs = vec![
+        QuantJob {
+            name: "boom".into(),
+            data: vec![1.0, 2.0, 3.0],
+        },
+        QuantJob {
+            name: "boom2".into(),
+            data: vec![4.0, 5.0],
+        },
+    ];
+    let err = sched.run(jobs).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("panic"), "unexpected error: {msg}");
+}
+
 // ---------------------------------------------------------------------
-// batched service over the real runtime
+// batched service over the default CPU runtime
 // ---------------------------------------------------------------------
 
-fn service() -> Option<(Arc<Runtime>, BatchedLm)> {
-    if !Meta::default_dir().join("meta.json").exists() {
-        eprintln!("skipping: artifacts not built");
-        return None;
-    }
+fn service() -> (Arc<Runtime>, BatchedLm) {
+    service_with(ServiceConfig::default())
+}
+
+fn service_with(cfg: ServiceConfig) -> (Arc<Runtime>, BatchedLm) {
     let rt = Arc::new(Runtime::new().unwrap());
     let params = rt
         .run("init_params", &[HostTensor::scalar_u32(3)])
         .unwrap();
-    let svc = BatchedLm::start(rt.clone(), params, ServiceConfig::default()).unwrap();
-    Some((rt, svc))
+    let svc = BatchedLm::start(rt.clone(), params, cfg).unwrap();
+    (rt, svc)
 }
 
 #[test]
 fn every_request_answered_exactly_once() {
-    let Some((rt, svc)) = service() else { return };
+    let (rt, svc) = service();
     let n = 40;
     let mut rng = Pcg64::seed_from_u64(5);
     let prompts: Vec<Vec<u8>> = (0..n)
@@ -150,7 +209,7 @@ fn every_request_answered_exactly_once() {
 
 #[test]
 fn batch_size_never_exceeds_model_batch() {
-    let Some((rt, svc)) = service() else { return };
+    let (rt, svc) = service();
     let b = rt.meta.model.batch as u64;
     let n = 3 * b + 1;
     let rxs: Vec<_> = (0..n)
@@ -167,7 +226,7 @@ fn batch_size_never_exceeds_model_batch() {
 
 #[test]
 fn deterministic_responses_for_same_prompt() {
-    let Some((_rt, svc)) = service() else { return };
+    let (_rt, svc) = service();
     let p = vec![1u8, 2, 3, 4, 5];
     let a = svc.infer(&p).unwrap();
     let b = svc.infer(&p).unwrap();
@@ -176,7 +235,32 @@ fn deterministic_responses_for_same_prompt() {
 
 #[test]
 fn generate_extends_context() {
-    let Some((_rt, svc)) = service() else { return };
+    let (_rt, svc) = service();
     let out = svc.generate(&[1, 2, 3], 5).unwrap();
     assert_eq!(out.len(), 5);
+}
+
+/// A lone request must be answered after ~one batching window plus one
+/// forward pass — the batcher may not wait for a full batch that never
+/// arrives. We measure the wall clock of a warm single request and check
+/// it against the window plus a generous compute budget (the CPU forward
+/// itself is the dominant term on debug builds).
+#[test]
+fn lone_request_answered_within_batching_window() {
+    let window = Duration::from_millis(5);
+    let (_rt, svc) = service_with(ServiceConfig { window });
+    // warm-up: first request pays one-time costs
+    svc.infer(&[1, 2, 3]).unwrap();
+    let compute_budget = Duration::from_secs(30);
+    let t0 = Instant::now();
+    let resp = svc.infer(&[4, 5, 6]).unwrap();
+    let elapsed = t0.elapsed();
+    assert!((resp.next_token as usize) < 64);
+    assert!(
+        elapsed < window + compute_budget,
+        "lone request took {elapsed:?} (window {window:?})"
+    );
+    // it ran as a batch of one, not by waiting for batch-mates
+    assert_eq!(svc.metrics.get("batches"), 2);
+    assert_eq!(svc.metrics.get("batched_requests"), 2);
 }

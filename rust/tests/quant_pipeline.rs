@@ -6,6 +6,7 @@
 use bof4::eval::quantized::quantize_params;
 use bof4::models::{ParamSet, SyntheticModel};
 use bof4::quant::{quant_error, Method, Norm, OpqConfig, QuantConfig, Quantizer};
+use bof4::testkit::{forall, GaussianVec, Prop};
 use bof4::util::rng::Pcg64;
 
 fn gaussian(n: usize, seed: u64) -> Vec<f32> {
@@ -169,6 +170,113 @@ fn double_quant_signed_constants() {
     let b_plain = plain.quantize(&w).bytes();
     let b_dq = dq.quantize(&w).bytes();
     assert!(b_dq < b_plain);
+}
+
+/// Property: pack_u4/unpack_u4 round-trips for every length, including
+/// odd ones (the trailing half-byte), with shrinking via testkit::forall.
+#[test]
+fn property_pack_unpack_roundtrip_odd_lengths() {
+    let gen = GaussianVec {
+        max_len: 515, // odd cap so odd lengths are commonly drawn
+        max_scale: 2.0,
+    };
+    forall("pack-roundtrip-odd", 41, 120, &gen, |v| {
+        let codes: Vec<u8> = v
+            .iter()
+            .map(|x| ((x.abs() * 53.0) as usize % 16) as u8)
+            .collect();
+        let packed = bof4::quant::pack::pack_u4(&codes);
+        if packed.len() != codes.len().div_ceil(2) {
+            return Prop::Fail(format!("packed len {} for {}", packed.len(), codes.len()));
+        }
+        let rt = bof4::quant::pack::unpack_u4(&packed, codes.len());
+        if rt != codes {
+            return Prop::Fail(format!("roundtrip mismatch at len {}", codes.len()));
+        }
+        for (i, &c) in codes.iter().enumerate() {
+            if bof4::quant::pack::get_u4(&packed, i) != c {
+                return Prop::Fail(format!("get_u4 mismatch at {i}"));
+            }
+        }
+        Prop::Pass
+    });
+}
+
+/// Property: extract_outliers + restore_outliers is the identity up to
+/// bf16 rounding at the extracted positions, exact elsewhere.
+#[test]
+fn property_opq_extract_restore_identity() {
+    let gen = GaussianVec {
+        max_len: 640,
+        max_scale: 6.0,
+    };
+    forall("opq-extract-restore", 42, 60, &gen, |w| {
+        let mut work = w.clone();
+        let outliers =
+            bof4::quant::opq::extract_outliers(&mut work, 64, OpqConfig::default());
+        // extracted positions are zeroed in `work`
+        for o in &outliers {
+            if work[o.index as usize] != 0.0 {
+                return Prop::Fail(format!("index {} not zeroed", o.index));
+            }
+        }
+        bof4::quant::opq::restore_outliers(&mut work, &outliers);
+        let outlier_idx: std::collections::HashSet<usize> =
+            outliers.iter().map(|o| o.index as usize).collect();
+        for (i, (&orig, &got)) in w.iter().zip(&work).enumerate() {
+            if outlier_idx.contains(&i) {
+                // bf16 keeps ~8 mantissa bits; allow one truncation ULP
+                let tol = orig.abs() * (1.0 / 128.0) + 1e-30;
+                if (orig - got).abs() > tol {
+                    return Prop::Fail(format!("outlier {i}: {orig} vs bf16 {got}"));
+                }
+            } else if orig != got {
+                return Prop::Fail(format!("non-outlier {i} changed: {orig} vs {got}"));
+            }
+        }
+        Prop::Pass
+    });
+}
+
+/// Property: for NF4, BOF4 and BOF4-S under both normalizations, every
+/// dequantized weight stays within the codebook's worst-case error bound
+/// |m_b| * max_norm_error for its block.
+#[test]
+fn property_quantize_dequantize_error_bounded_all_methods() {
+    let gen = GaussianVec {
+        max_len: 400,
+        max_scale: 5.0,
+    };
+    let methods = [
+        Method::Nf4,
+        Method::Bof4 { mse: true },
+        Method::Bof4 { mse: false },
+    ];
+    for method in methods {
+        for norm in [Norm::Absmax, Norm::SignedAbsmax] {
+            let qz = Quantizer::new(QuantConfig {
+                method: method.clone(),
+                norm,
+                block: 64,
+                ..Default::default()
+            });
+            let gap = qz.codebook.max_norm_error();
+            let label = format!("quant-bound-{}-{:?}", qz.codebook.name, norm);
+            forall(&label, 43, 40, &gen, |w| {
+                let qt = qz.quantize(w);
+                let w_hat = qz.dequantize(&qt);
+                for (i, (&a, &b)) in w.iter().zip(&w_hat).enumerate() {
+                    let m = qt.absmax[i / 64].abs();
+                    if (a - b).abs() > m * gap + 1e-5 {
+                        return Prop::Fail(format!(
+                            "i={i} w={a} w_hat={b} m={m} gap={gap}"
+                        ));
+                    }
+                }
+                Prop::Pass
+            });
+        }
+    }
 }
 
 /// Exhaustive nibble consistency: every (code, absmax) survives the

@@ -1,14 +1,15 @@
-//! Batched serving demo: quantized weights behind the dynamic batcher,
-//! plus the 4-bit compute path — the fused Pallas dequant-matmul graph
-//! executed with rust-packed codes.
+//! Streaming serving demo: quantized weights (4-bit codes + 8-bit
+//! double-quantized constants, end-to-end) behind the session engine —
+//! KV-cached incremental decoding with multi-replica continuous batching
+//! — plus the fused 4-bit dequant-matmul kernel on its own.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example serve_batched
+//! cargo run --release --example serve_batched
 //! ```
 
 use std::sync::Arc;
 
-use bof4::coordinator::{BatchedLm, ServiceConfig};
+use bof4::coordinator::{Engine, EngineConfig, EngineParams};
 use bof4::models::Corpus;
 use bof4::quant::{Method, Norm, QuantConfig, Quantizer};
 use bof4::runtime::{HostTensor, Runtime};
@@ -19,39 +20,52 @@ fn main() -> bof4::Result<()> {
     let rt = Arc::new(Runtime::new()?);
     let base = bof4::eval::ensure_trained(&rt)?;
 
-    // --- 1. serving through the dynamic batcher -----------------------
+    // --- 1. streaming sessions over the quantized serving path --------
     let cfg = QuantConfig {
         method: Method::Bof4 { mse: true },
         norm: Norm::SignedAbsmax,
+        double_quant: true,
         ..Default::default()
     };
-    let qm = bof4::eval::quantize_params(&base, &cfg)?;
+    let qsp = bof4::eval::quantize_for_serving(&rt.meta, &base, &cfg)?;
     println!(
-        "serving {} with {}: quant MSE {:.3e}",
+        "serving {} with {}: weights stay 4-bit at rest ({} -> {} bytes, {:.2}x)",
         rt.platform(),
         cfg.label(),
-        qm.mse
+        qsp.orig_bytes,
+        qsp.quant_bytes,
+        qsp.orig_bytes as f64 / qsp.quant_bytes as f64
     );
-    let svc = BatchedLm::start(rt.clone(), qm.params.to_tensors(), ServiceConfig::default())?;
+    let engine = Engine::start(
+        rt.clone(),
+        EngineParams::QuantizedQ4(qsp.prefix),
+        EngineConfig {
+            replicas: 2,
+            ..EngineConfig::default()
+        },
+    )?;
 
     let corpus = Corpus::generate(100_000, 5);
-    let n_requests = 128;
+    let n_sessions = 64;
+    let tokens_per_session = 8;
     let sw = Stopwatch::start();
-    let pending: Vec<_> = (0..n_requests)
+    let sessions: Vec<_> = (0..n_sessions)
         .map(|i| {
-            let start = (i * 131) % (corpus.len() - 40);
-            svc.infer_async(&corpus.tokens[start..start + 40]).unwrap()
+            let start = (i * 131) % (corpus.len() - 48);
+            engine.session_with(&corpus.tokens[start..start + 48], tokens_per_session)
         })
-        .collect();
-    for rx in pending {
-        rx.recv().unwrap()?;
+        .collect::<bof4::Result<Vec<_>>>()?;
+    let mut streamed = 0usize;
+    for sess in sessions {
+        streamed += sess.collect_tokens()?.len();
     }
     let secs = sw.elapsed().as_secs_f64();
     println!(
-        "{n_requests} concurrent requests in {secs:.2}s -> {:.1} req/s",
-        n_requests as f64 / secs
+        "{n_sessions} concurrent sessions x {tokens_per_session} tokens in {secs:.2}s \
+         -> {:.1} tok/s streamed",
+        streamed as f64 / secs
     );
-    println!("{}", svc.metrics.summary());
+    println!("{}", engine.metrics.summary());
 
     // --- 2. the 4-bit compute path: fused dequant-matmul --------------
     let gm = rt.meta.graph("dequant_matmul")?.clone();

@@ -1,0 +1,65 @@
+//! Decode-throughput smoke benchmark and hermetic baseline recorder:
+//! greedy-decode N tokens through (a) the old full-recompute path (one
+//! whole-context `lm_logits_last` per token) and (b) the session
+//! engine's KV-cached prefill + `lm_decode_step` path, assert the engine
+//! wins, and record the numbers as JSON under `results/`.
+//!
+//! ```bash
+//! cargo bench --bench decode_throughput          # full run
+//! BOF4_BENCH_SCALE=0.5 cargo bench --bench decode_throughput  # smoke
+//! ```
+
+use std::sync::Arc;
+
+use bof4::bench::decode_throughput;
+use bof4::runtime::{HostTensor, Runtime};
+use bof4::util::json::Json;
+
+fn main() {
+    bof4::util::log::init_from_env();
+    let rt = Arc::new(Runtime::new().expect("runtime"));
+    let params = rt
+        .run("init_params", &[HostTensor::scalar_u32(1)])
+        .expect("init_params");
+    // N >= 16: the acceptance threshold where KV-cached decode must be
+    // measurably faster than full recompute
+    let n = bof4::bench::scaled(48).max(16);
+    let prompt: Vec<u8> = (0..8).map(|i| (i * 7 % 60) as u8).collect();
+
+    let r = decode_throughput(&rt, params, &prompt, n).expect("decode_throughput");
+    assert!(r.tokens > 0, "no tokens decoded");
+    assert!(
+        r.engine < r.full_recompute,
+        "KV-cached decode must beat full recompute at N={}: engine {:?} vs full {:?}",
+        r.tokens,
+        r.engine,
+        r.full_recompute
+    );
+    println!(
+        "decode {} tokens on {}: full-recompute {:.3}s ({:.1} tok/s) | engine {:.3}s ({:.1} tok/s) | speedup {:.1}x",
+        r.tokens,
+        rt.platform(),
+        r.full_recompute.as_secs_f64(),
+        r.full_tps(),
+        r.engine.as_secs_f64(),
+        r.engine_tps(),
+        r.speedup()
+    );
+
+    let json = bof4::util::json::obj(vec![
+        ("bench", Json::Str("decode_throughput".into())),
+        ("backend", Json::Str(rt.platform())),
+        ("tokens", Json::Num(r.tokens as f64)),
+        ("full_recompute_s", Json::Num(r.full_recompute.as_secs_f64())),
+        ("full_recompute_tokens_per_s", Json::Num(r.full_tps())),
+        ("engine_s", Json::Num(r.engine.as_secs_f64())),
+        ("engine_tokens_per_s", Json::Num(r.engine_tps())),
+        ("speedup", Json::Num(r.speedup())),
+    ])
+    .to_string();
+    let dir = bof4::eval::report::results_dir();
+    std::fs::create_dir_all(&dir).expect("results dir");
+    let path = dir.join("decode_throughput.json");
+    std::fs::write(&path, json + "\n").expect("write results json");
+    println!("wrote {path:?}");
+}

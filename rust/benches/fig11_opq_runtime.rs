@@ -10,7 +10,7 @@
 use std::sync::Arc;
 
 use bof4::bench::bench;
-use bof4::coordinator::{BatchedLm, ServiceConfig};
+use bof4::coordinator::{Engine, EngineConfig};
 use bof4::eval::quantize_params;
 use bof4::eval::report::Table;
 use bof4::quant::{Method, Norm, OpqConfig, QuantConfig, Quantizer};
@@ -87,20 +87,21 @@ fn main() {
             ..Default::default()
         };
         let qm = quantize_params(&base, &cfg).unwrap();
-        let svc = BatchedLm::start(rt.clone(), qm.params.to_tensors(), ServiceConfig::default())
-            .unwrap();
+        let engine = Engine::start(
+            rt.clone(),
+            qm.params.to_tensors(),
+            EngineConfig::default(),
+        )
+        .unwrap();
         let sw = bof4::util::timer::Stopwatch::start();
-        // 16 parallel streams x 63 tokens ≈ 1000 tokens
-        let mut streams: Vec<Vec<u8>> = (0..16).map(|i| vec![(i * 3) as u8; 8]).collect();
-        for _ in 0..63 {
-            let rxs: Vec<_> = streams
-                .iter()
-                .map(|s| svc.infer_async(s).unwrap())
-                .collect();
-            for (s, rx) in streams.iter_mut().zip(rxs) {
-                let r = rx.recv().unwrap().unwrap();
-                s.push(r.next_token);
-            }
+        // 16 parallel streaming sessions x 63 tokens = 1008 tokens,
+        // KV-cached after one shared prefill batch (1-token prompts keep
+        // prompt + generation within the seq_len-64 KV window)
+        let sessions: Vec<_> = (0..16)
+            .map(|i| engine.session_with(&[(i * 3) as u8], 63).unwrap())
+            .collect();
+        for sess in sessions {
+            assert_eq!(sess.collect_tokens().unwrap().len(), 63);
         }
         let secs = sw.elapsed().as_secs_f64();
         t2.row(vec![

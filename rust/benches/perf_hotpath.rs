@@ -85,6 +85,27 @@ fn main() {
     });
     push(&m, (1 << 20) as f64, "Gsamples/s");
 
+    // --- KV-cached decode vs full recompute ------------------------------
+    {
+        let rt = Arc::new(Runtime::new().unwrap());
+        let params = rt
+            .run("init_params", &[HostTensor::scalar_u32(1)])
+            .unwrap();
+        let n_tok = bof4::bench::scaled(32).max(16);
+        let r = bof4::bench::decode_throughput(&rt, params, &[1, 2, 3, 4, 5, 6, 7, 8], n_tok)
+            .unwrap();
+        table.row(vec![
+            format!("decode {n_tok} tok (full recompute)"),
+            bof4::util::timer::fmt_duration(r.full_recompute / n_tok as u32),
+            format!("{:.1} tok/s", r.full_tps()),
+        ]);
+        table.row(vec![
+            format!("decode {n_tok} tok (engine KV cache)"),
+            bof4::util::timer::fmt_duration(r.engine / n_tok as u32),
+            format!("{:.1} tok/s ({:.1}x)", r.engine_tps(), r.speedup()),
+        ]);
+    }
+
     // --- XLA graph latency (requires artifacts) --------------------------
     if Meta::default_dir().join("meta.json").exists() {
         let rt = Arc::new(Runtime::new().unwrap());

@@ -67,6 +67,84 @@ pub fn bench_auto<F: FnMut()>(name: &str, target: Duration, mut f: F) -> Measure
     bench(name, (iters / 10).max(1), iters, f)
 }
 
+/// Decode-throughput comparison between the pre-engine full-recompute
+/// path and the session engine's KV-cached prefill + decode_step path.
+#[derive(Clone, Copy, Debug)]
+pub struct DecodeThroughput {
+    pub tokens: usize,
+    pub full_recompute: Duration,
+    pub engine: Duration,
+}
+
+impl DecodeThroughput {
+    pub fn full_tps(&self) -> f64 {
+        self.tokens as f64 / self.full_recompute.as_secs_f64().max(1e-12)
+    }
+
+    pub fn engine_tps(&self) -> f64 {
+        self.tokens as f64 / self.engine.as_secs_f64().max(1e-12)
+    }
+
+    pub fn speedup(&self) -> f64 {
+        self.full_recompute.as_secs_f64() / self.engine.as_secs_f64().max(1e-12)
+    }
+}
+
+/// Greedy-decode `n_tokens` twice over the same parameters: (a) the old
+/// full-recompute loop — one whole-context `lm_logits_last` execution per
+/// emitted token, cost quadratic in sequence length — and (b) one
+/// [`crate::coordinator::Engine`] session (prefill once, then one
+/// incremental `lm_decode_step` per token).
+pub fn decode_throughput(
+    rt: &std::sync::Arc<crate::runtime::Runtime>,
+    params: Vec<crate::runtime::HostTensor>,
+    prompt: &[u8],
+    n_tokens: usize,
+) -> crate::error::Result<DecodeThroughput> {
+    use crate::coordinator::{greedy_argmax, Engine, EngineConfig};
+    use crate::models::corpus::TOK_SPACE;
+    use crate::runtime::HostTensor;
+    let m = rt.meta.model.clone();
+    let (b, s, v) = (m.batch, m.seq_len, m.vocab);
+
+    // (a) full recompute, exactly the pre-engine BatchedLm::generate
+    // shape: left-aligned pad, full forward per token
+    let mut ctx = prompt.to_vec();
+    let t0 = Instant::now();
+    for _ in 0..n_tokens {
+        let mut toks = vec![TOK_SPACE as i32; b * s];
+        let take = ctx.len().min(s);
+        let tail = &ctx[ctx.len() - take..];
+        for (dst, &t) in toks[s - take..s].iter_mut().zip(tail) {
+            *dst = t as i32;
+        }
+        let mut args = params.clone();
+        args.push(HostTensor::i32(toks, vec![b, s]));
+        let out = rt.run("lm_logits_last", &args)?;
+        let logits = out[0].as_f32()?;
+        let (tok, _) = greedy_argmax(&logits[..v]);
+        ctx.push(tok);
+    }
+    let full_recompute = t0.elapsed();
+
+    // (b) the session engine: prefill + incremental decode
+    let engine = Engine::start(rt.clone(), params, EngineConfig::default())?;
+    let t0 = Instant::now();
+    let toks = engine.generate(prompt, n_tokens)?;
+    let engine_elapsed = t0.elapsed();
+    if toks.len() != n_tokens {
+        return Err(crate::err!(
+            "engine decoded {} of {n_tokens} tokens",
+            toks.len()
+        ));
+    }
+    Ok(DecodeThroughput {
+        tokens: n_tokens,
+        full_recompute,
+        engine: engine_elapsed,
+    })
+}
+
 /// The paper's standard quantizer line-up (Tables 1/2/9/10 rows), in
 /// presentation order. `block` parameterizes every entry.
 pub fn paper_lineup(block: usize) -> Vec<crate::quant::QuantConfig> {

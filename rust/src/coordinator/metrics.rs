@@ -6,6 +6,10 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+/// Max samples retained per latency/value series (see
+/// [`Metrics::observe_value`]).
+pub const SERIES_CAP: usize = 16_384;
+
 /// Process-local metrics registry.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -39,12 +43,21 @@ impl Metrics {
     }
 
     pub fn observe(&self, name: &str, d: Duration) {
-        self.latencies
-            .lock()
-            .unwrap()
-            .entry(name.to_string())
-            .or_default()
-            .push(d.as_secs_f64() * 1e3);
+        self.observe_value(name, d.as_secs_f64() * 1e3);
+    }
+
+    /// Record a raw sample (milliseconds for latencies, but any unit-free
+    /// value works — e.g. the engine's slot-occupancy fraction). Series
+    /// are bounded: at [`SERIES_CAP`] samples the oldest half is dropped,
+    /// so per-token recording on a long-running engine cannot grow memory
+    /// without bound (stats then describe a recent window).
+    pub fn observe_value(&self, name: &str, v: f64) {
+        let mut g = self.latencies.lock().unwrap();
+        let series = g.entry(name.to_string()).or_default();
+        if series.len() >= SERIES_CAP {
+            series.drain(..SERIES_CAP / 2);
+        }
+        series.push(v);
     }
 
     /// (count, mean_ms, p50_ms, p95_ms, max_ms) for a latency series.
@@ -94,6 +107,90 @@ pub struct LatencyStats {
     pub max_ms: f64,
 }
 
+/// Per-token latency histogram bucket upper bounds, in milliseconds.
+const TOKEN_LATENCY_BOUNDS_MS: [f64; 10] =
+    [0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 100.0, 1000.0];
+
+/// Serving-engine metrics: the shared counter/latency registry plus a
+/// fixed-bucket per-token latency histogram and the prefill/decode token
+/// split. The `core` registry is what the legacy `BatchedLm` shim exposes
+/// as its `metrics` field, so the old counter names (`batches`,
+/// `batched_requests`) keep working.
+///
+/// Counter names: `batches` (prefill executions), `batched_requests`
+/// (sessions admitted), `sessions`, `prefill_tokens`, `decode_tokens`,
+/// `decode_steps`. Latency series: `prefill_exec`, `decode_step_exec`,
+/// `token_latency` (ms) and `slot_occupancy` (fraction, 0..=1).
+#[derive(Debug, Default)]
+pub struct EngineMetrics {
+    /// Shared counter/latency registry (cloneable handle: the `BatchedLm`
+    /// shim re-exposes this same registry as its `metrics` field).
+    pub core: std::sync::Arc<Metrics>,
+    buckets: [AtomicU64; TOKEN_LATENCY_BOUNDS_MS.len() + 1],
+}
+
+impl EngineMetrics {
+    pub fn new() -> EngineMetrics {
+        EngineMetrics::default()
+    }
+
+    /// Record one emitted token's latency (the wall time of the prefill
+    /// or decode step that produced it).
+    pub fn record_token_latency(&self, d: Duration) {
+        let ms = d.as_secs_f64() * 1e3;
+        self.core.observe_value("token_latency", ms);
+        let idx = TOKEN_LATENCY_BOUNDS_MS
+            .iter()
+            .position(|&b| ms < b)
+            .unwrap_or(TOKEN_LATENCY_BOUNDS_MS.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record the fraction of batch slots occupied at a decode step.
+    pub fn record_occupancy(&self, active: usize, slots: usize) {
+        self.core
+            .observe_value("slot_occupancy", active as f64 / slots.max(1) as f64);
+    }
+
+    /// `(bucket label, count)` pairs of the per-token latency histogram.
+    pub fn token_latency_histogram(&self) -> Vec<(String, u64)> {
+        let mut out = Vec::new();
+        let mut lo = 0.0;
+        for (i, &hi) in TOKEN_LATENCY_BOUNDS_MS.iter().enumerate() {
+            out.push((
+                format!("[{lo}, {hi}) ms"),
+                self.buckets[i].load(Ordering::Relaxed),
+            ));
+            lo = hi;
+        }
+        out.push((
+            format!(">= {lo} ms"),
+            self.buckets[TOKEN_LATENCY_BOUNDS_MS.len()].load(Ordering::Relaxed),
+        ));
+        out
+    }
+
+    /// Render counters/latencies plus the prefill-vs-decode token split
+    /// and the non-empty histogram buckets.
+    pub fn summary(&self) -> String {
+        let mut out = self.core.summary();
+        let pre = self.core.get("prefill_tokens");
+        let dec = self.core.get("decode_tokens");
+        if pre + dec > 0 {
+            let pct = 100.0 * dec as f64 / (pre + dec) as f64;
+            out.push_str(&format!(
+                "token split: {pre} prefill / {dec} decode ({pct:.0}% decode)\n"
+            ));
+        }
+        for (label, n) in self.token_latency_histogram() {
+            if n > 0 {
+                out.push_str(&format!("token_latency {label}: {n}\n"));
+            }
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,6 +234,35 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(m.get("x"), 4000);
+    }
+
+    #[test]
+    fn series_are_bounded() {
+        let m = Metrics::new();
+        for i in 0..(SERIES_CAP + 10) {
+            m.observe_value("tok", i as f64);
+        }
+        let s = m.latency_stats("tok").unwrap();
+        assert!(s.count <= SERIES_CAP, "series grew past cap: {}", s.count);
+        // recent samples survive the halving
+        assert_eq!(s.max_ms, (SERIES_CAP + 9) as f64);
+    }
+
+    #[test]
+    fn engine_metrics_histogram_and_split() {
+        let em = EngineMetrics::new();
+        em.record_token_latency(Duration::from_millis(2));
+        em.record_token_latency(Duration::from_micros(50));
+        em.record_occupancy(4, 16);
+        em.core.add("prefill_tokens", 10);
+        em.core.add("decode_tokens", 30);
+        let h = em.token_latency_histogram();
+        assert_eq!(h.iter().map(|(_, n)| n).sum::<u64>(), 2);
+        let s = em.summary();
+        assert!(s.contains("token split: 10 prefill / 30 decode (75% decode)"), "{s}");
+        assert!(s.contains("token_latency"), "{s}");
+        let st = em.core.latency_stats("slot_occupancy").unwrap();
+        assert!((st.mean_ms - 0.25).abs() < 1e-9);
     }
 
     #[test]

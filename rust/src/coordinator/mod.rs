@@ -2,15 +2,20 @@
 //!
 //! - [`scheduler`]: multithreaded tensor-quantization pipeline (work
 //!   queue with backpressure, deterministic result order)
-//! - [`service`]: batched inference service — request router + dynamic
-//!   batcher over the AOT'd `lm_logits_last` graph (vLLM-router-shaped,
-//!   scaled to this testbed)
-//! - [`metrics`]: counters/latency histograms shared by both
+//! - [`service`]: the session-based serving engine — KV-cached
+//!   incremental decoding behind [`Engine`]/[`DecodeSession`], with
+//!   multi-replica continuous batching (plus the deprecated
+//!   [`BatchedLm`] single-shot shim)
+//! - [`metrics`]: counters/latency histograms shared by both, plus the
+//!   engine's [`EngineMetrics`]
 
 pub mod metrics;
 pub mod scheduler;
 pub mod service;
 
-pub use metrics::Metrics;
+pub use metrics::{EngineMetrics, Metrics};
 pub use scheduler::{QuantJob, QuantScheduler};
-pub use service::{BatchedLm, InferenceRequest, ServiceConfig};
+pub use service::{
+    greedy_argmax, BatchedLm, DecodeSession, Engine, EngineConfig, EngineParams,
+    InferenceResponse, ServiceConfig,
+};

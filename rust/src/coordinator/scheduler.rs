@@ -8,6 +8,12 @@
 //! `rust/tests/coordinator_integration.rs`): every job is processed
 //! exactly once; results are order-stable; worker panics surface as
 //! errors, not hangs.
+//!
+//! Consumers: [`crate::eval::quantize_params`] (dequantize-for-eval) runs
+//! whole checkpoints through this pool; the serving engine's ABI-shaped
+//! quantization ([`crate::eval::quantize_for_serving`]) packs per-tensor
+//! results directly since it must also emit the double-quantized constant
+//! tensors next to the codes.
 
 use std::sync::mpsc;
 use std::sync::Arc;

@@ -1,14 +1,41 @@
-//! Batched inference service: a request router + dynamic batcher over the
-//! AOT'd `lm_logits_last` graph (the shape of a vLLM-style router, scaled
-//! to this testbed: one model replica, fixed-shape batches).
+//! Session-based serving engine: KV-cached incremental decoding with
+//! multi-replica continuous batching (the shape of a vLLM-style serving
+//! stack, scaled to this testbed).
 //!
-//! Requests carry a prompt (≤ seq_len tokens); the batcher collects up to
-//! the graph's batch size B within a deadline window, left-aligns pads
-//! with the corpus separator token, executes one XLA call, and answers
-//! every request with its greedy next token + logit. Invariants
-//! (integration-tested): every request answered exactly once; batch size
-//! never exceeds B; a lone request is answered within ~the window.
+//! [`Engine::start`] spins up N model replicas. Each replica owns a
+//! KV-cache slab sized for one graph batch (`batch` slots x `seq_len`
+//! positions) plus a private admission queue; the engine routes new
+//! sessions round-robin. A replica worker alternates between two moves:
+//!
+//! 1. **Admit**: pull queued sessions into free batch slots, run one
+//!    `lm_prefill` over the right-padded prompts, scatter the returned
+//!    per-layer K/V rows into the slab, and stream each session's first
+//!    token. When the replica is idle it waits up to
+//!    [`EngineConfig::window`] for batch-mates; while sessions are
+//!    mid-decode it admits instantly between steps (continuous batching —
+//!    a late-arriving session never waits for the batch to drain).
+//! 2. **Decode**: run one `lm_decode_step` over all active slots — one
+//!    token in per slot, one K/V column appended, attention over
+//!    `cache_len + 1` positions instead of a `seq_len^2` recompute — and
+//!    stream one token to every active session.
+//!
+//! Sessions end when their token budget is exhausted or the KV cache is
+//! full (`seq_len` positions). Quantized serving uses the `*_q4` graphs:
+//! 4-bit codes with 8-bit double-quantized block constants end-to-end,
+//! dequantized inside the fused matmul (see
+//! [`EngineParams::QuantizedQ4`]). On backends without the KV serving
+//! graphs (the XLA artifact ABI stops at the eval forwards), the engine
+//! transparently serves the same sessions full-context through
+//! `lm_logits_all` (see [`Engine::start_full_context`]) — identical
+//! token streams, quadratic decode cost.
+//!
+//! Invariants (integration-tested): every session streams its tokens
+//! exactly once and then closes; greedy tokens are bit-identical to
+//! full-context re-execution through `lm_logits_all`/`lm_logits_last`;
+//! batch size never exceeds the graph batch; a lone request is answered
+//! within ~the admission window.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -16,26 +43,20 @@ use std::time::{Duration, Instant};
 
 use crate::error::Result;
 
-use super::metrics::Metrics;
+use super::metrics::{EngineMetrics, Metrics};
 use crate::models::corpus::TOK_SPACE;
 use crate::runtime::{HostTensor, Runtime};
 
-/// One inference request.
-#[derive(Clone, Debug)]
-pub struct InferenceRequest {
-    pub prompt: Vec<u8>,
-}
-
-/// The service's answer.
+/// One streamed token: the greedy argmax and its logit value.
 #[derive(Clone, Debug, PartialEq)]
 pub struct InferenceResponse {
-    /// Greedy argmax token at the last position.
+    /// Greedy argmax token at this position.
     pub next_token: u8,
     /// Its logit value.
     pub logit: f32,
 }
 
-/// Batching policy.
+/// Batching policy of the legacy [`BatchedLm`] shim.
 #[derive(Clone, Copy, Debug)]
 pub struct ServiceConfig {
     /// Max time a request waits for batch-mates.
@@ -50,192 +71,769 @@ impl Default for ServiceConfig {
     }
 }
 
-type Pending = (InferenceRequest, mpsc::Sender<Result<InferenceResponse>>);
-
-/// Handle to the running service.
-pub struct BatchedLm {
-    tx: Option<mpsc::Sender<Pending>>,
-    worker: Option<JoinHandle<()>>,
-    pub metrics: Arc<Metrics>,
+/// Serving-engine configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// Number of model replicas. Each replica owns a full parameter copy,
+    /// a KV-cache slab of `batch` slots and a private admission queue;
+    /// sessions are routed round-robin.
+    pub replicas: usize,
+    /// How long an **idle** replica waits for batch-mates before
+    /// prefilling. Replicas with sessions mid-decode admit new sessions
+    /// instantly between decode steps.
+    pub window: Duration,
+    /// Default per-session token budget for [`Engine::session`]
+    /// ([`Engine::session_with`] overrides it). Independent of the
+    /// budget, a session's context can never exceed the model's
+    /// `seq_len`: once `prompt + generated` fills the KV cache, the
+    /// stream ends — the maximum session length is
+    /// `1 + seq_len - prompt_len` tokens.
+    pub max_session_tokens: usize,
 }
 
-impl BatchedLm {
-    /// Start the service thread over a fixed parameter set. `params` must
-    /// match the `lm_logits_last` ABI prefix (16 f32 tensors).
-    pub fn start(
-        rt: Arc<Runtime>,
-        params: Vec<HostTensor>,
-        cfg: ServiceConfig,
-    ) -> Result<BatchedLm> {
-        let gm = rt.meta.graph("lm_logits_last")?;
-        if params.len() + 1 != gm.args.len() {
-            return Err(crate::err!(
-                "lm_logits_last wants {} params, got {}",
-                gm.args.len() - 1,
-                params.len()
-            ));
-        }
-        // Force compilation/warm-up up-front so the first request isn't slow.
-        rt.prepare("lm_logits_last")?;
-        let metrics = Arc::new(Metrics::new());
-        let (tx, rx) = mpsc::channel::<Pending>();
-        let m = metrics.clone();
-        let worker = std::thread::Builder::new()
-            .name("batcher".into())
-            .spawn(move || Self::worker_loop(rt, params, cfg, rx, m))?;
-        Ok(BatchedLm {
-            tx: Some(tx),
-            worker: Some(worker),
-            metrics,
-        })
-    }
-
-    /// Submit a request; blocks until the batcher answers.
-    pub fn infer(&self, prompt: &[u8]) -> Result<InferenceResponse> {
-        let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .as_ref()
-            .expect("service running")
-            .send((
-                InferenceRequest {
-                    prompt: prompt.to_vec(),
-                },
-                rtx,
-            ))
-            .map_err(|_| crate::err!("service stopped"))?;
-        rrx.recv()
-            .map_err(|_| crate::err!("service dropped request"))?
-    }
-
-    /// Submit asynchronously; returns the response receiver.
-    pub fn infer_async(&self, prompt: &[u8]) -> Result<mpsc::Receiver<Result<InferenceResponse>>> {
-        let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .as_ref()
-            .expect("service running")
-            .send((
-                InferenceRequest {
-                    prompt: prompt.to_vec(),
-                },
-                rtx,
-            ))
-            .map_err(|_| crate::err!("service stopped"))?;
-        Ok(rrx)
-    }
-
-    fn worker_loop(
-        rt: Arc<Runtime>,
-        params: Vec<HostTensor>,
-        cfg: ServiceConfig,
-        rx: mpsc::Receiver<Pending>,
-        metrics: Arc<Metrics>,
-    ) {
-        let b = rt.meta.model.batch;
-        loop {
-            // block for the first request of a batch
-            let first = match rx.recv() {
-                Ok(p) => p,
-                Err(_) => break, // all senders dropped: shut down
-            };
-            let mut batch = vec![first];
-            let deadline = Instant::now() + cfg.window;
-            while batch.len() < b {
-                let now = Instant::now();
-                if now >= deadline {
-                    break;
-                }
-                match rx.recv_timeout(deadline - now) {
-                    Ok(p) => batch.push(p),
-                    Err(mpsc::RecvTimeoutError::Timeout) => break,
-                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
-                }
-            }
-            metrics.inc("batches");
-            metrics.add("batched_requests", batch.len() as u64);
-            let sw = crate::util::timer::Stopwatch::start();
-            let result = Self::run_batch(&rt, &params, &batch);
-            metrics.observe("batch_exec", sw.elapsed());
-            match result {
-                Ok(responses) => {
-                    for ((_, rtx), resp) in batch.into_iter().zip(responses) {
-                        let _ = rtx.send(Ok(resp));
-                    }
-                }
-                Err(e) => {
-                    let msg = format!("{e}");
-                    for (_, rtx) in batch {
-                        let _ = rtx.send(Err(crate::err!("{msg}")));
-                    }
-                }
-            }
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            replicas: 1,
+            window: Duration::from_millis(5),
+            max_session_tokens: usize::MAX,
         }
     }
+}
 
-    fn run_batch(
-        rt: &Runtime,
-        params: &[HostTensor],
-        batch: &[Pending],
-    ) -> Result<Vec<InferenceResponse>> {
-        let m = &rt.meta.model;
-        let (bsz, seq, vocab) = (m.batch, m.seq_len, m.vocab);
-        // Left-align pad with the separator token so every prompt *ends*
-        // at the final position (the graph returns last-position logits).
-        let mut toks = vec![TOK_SPACE as i32; bsz * seq];
-        for (i, (req, _)) in batch.iter().enumerate() {
-            let p = &req.prompt;
-            let take = p.len().min(seq);
-            let tail = &p[p.len() - take..];
-            let row = &mut toks[i * seq..(i + 1) * seq];
-            for (dst, &t) in row[seq - take..].iter_mut().zip(tail) {
-                *dst = t as i32;
-            }
-        }
-        let mut args: Vec<HostTensor> = params.to_vec();
-        args.push(HostTensor::i32(toks, vec![bsz, seq]));
-        let out = rt.run("lm_logits_last", &args)?;
-        let logits = out[0].as_f32()?;
-        let mut responses = Vec::with_capacity(batch.len());
-        for i in 0..batch.len() {
-            let row = &logits[i * vocab..(i + 1) * vocab];
-            let (arg, max) = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap();
-            responses.push(InferenceResponse {
-                next_token: arg as u8,
-                logit: *max,
-            });
-        }
-        Ok(responses)
+/// Parameters the engine serves.
+#[derive(Clone, Debug)]
+pub enum EngineParams {
+    /// The 16 dense f32 tensors in canonical ABI order (what
+    /// `init_params` returns / `ParamSet::to_tensors` produces). Served
+    /// through `lm_prefill` / `lm_decode_step`.
+    Dense(Vec<HostTensor>),
+    /// Argument prefix for the `lm_prefill_q4` / `lm_decode_step_q4`
+    /// graphs: non-matmul f32 params, unpacked 4-bit codes, 8-bit
+    /// double-quantized block constants and the codebook levels, in ABI
+    /// order. Block constants stay 8-bit end-to-end and are dequantized
+    /// inside the fused CPU matmul. Build with
+    /// [`crate::eval::quantize_for_serving`].
+    QuantizedQ4(Vec<HostTensor>),
+}
+
+impl From<Vec<HostTensor>> for EngineParams {
+    fn from(v: Vec<HostTensor>) -> Self {
+        EngineParams::Dense(v)
+    }
+}
+
+/// Greedy sampling helper: `(argmax index, max logit)`. Ties resolve to
+/// the highest index (`Iterator::max_by` keeps the last maximum) — the
+/// equivalence tests rely on the engine and the full-context oracle
+/// sharing this exact rule.
+pub fn greedy_argmax(row: &[f32]) -> (u8, f32) {
+    let (arg, max) = row
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .expect("non-empty logits row");
+    (arg as u8, *max)
+}
+
+/// A queued session request.
+struct SessionReq {
+    prompt: Vec<u8>,
+    max_tokens: usize,
+    tx: mpsc::Sender<Result<InferenceResponse>>,
+}
+
+/// A live decoding session: a stream of greedy tokens. Iterate it (or
+/// call [`DecodeSession::next_token`]) to receive tokens; the stream
+/// closes when the token budget is exhausted or the KV cache fills.
+/// Dropping the session cancels it — the replica frees its slot at the
+/// next step.
+pub struct DecodeSession {
+    rx: mpsc::Receiver<Result<InferenceResponse>>,
+}
+
+impl DecodeSession {
+    /// Block for the next token; `None` once the stream has closed.
+    pub fn next_token(&mut self) -> Option<Result<InferenceResponse>> {
+        self.rx.recv().ok()
     }
 
-    /// Greedy-decode `n` tokens from a prompt (serving example / fine-tune
-    /// task evaluation).
-    pub fn generate(&self, prompt: &[u8], n: usize) -> Result<Vec<u8>> {
-        let mut ctx = prompt.to_vec();
-        let mut out = Vec::with_capacity(n);
-        for _ in 0..n {
-            let resp = self.infer(&ctx)?;
-            out.push(resp.next_token);
-            ctx.push(resp.next_token);
+    /// Drain the stream into the generated token vector.
+    pub fn collect_tokens(self) -> Result<Vec<u8>> {
+        let mut out = Vec::new();
+        for ev in self {
+            out.push(ev?.next_token);
         }
         Ok(out)
     }
 }
 
-impl Drop for BatchedLm {
+impl Iterator for DecodeSession {
+    type Item = Result<InferenceResponse>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        self.rx.recv().ok()
+    }
+}
+
+struct ReplicaHandle {
+    tx: Option<mpsc::Sender<SessionReq>>,
+    worker: Option<JoinHandle<()>>,
+}
+
+/// Handle to a running serving engine.
+pub struct Engine {
+    replicas: Vec<ReplicaHandle>,
+    next: AtomicUsize,
+    pub metrics: Arc<EngineMetrics>,
+    max_session_tokens: usize,
+    seq_len: usize,
+}
+
+impl Engine {
+    /// Start `cfg.replicas` replica workers over one parameter set.
+    /// `params` is anything convertible into [`EngineParams`]; plain
+    /// `Vec<HostTensor>` (the 16 dense tensors) converts to
+    /// [`EngineParams::Dense`].
+    pub fn start(
+        rt: Arc<Runtime>,
+        params: impl Into<EngineParams>,
+        cfg: EngineConfig,
+    ) -> Result<Engine> {
+        Self::start_inner(rt, params.into(), cfg, false)
+    }
+
+    /// Start the engine in full-context fallback mode: identical session
+    /// semantics (streaming, continuous batching, replicas), but every
+    /// step re-executes the whole context through `lm_logits_all` instead
+    /// of using KV caches. [`Engine::start`] selects this automatically
+    /// when the backend's graph set lacks the KV serving graphs (the XLA
+    /// artifact ABI stops at the eval forwards); this constructor forces
+    /// it, which the equivalence tests use to pin both modes against each
+    /// other on the CPU backend.
+    pub fn start_full_context(
+        rt: Arc<Runtime>,
+        params: Vec<HostTensor>,
+        cfg: EngineConfig,
+    ) -> Result<Engine> {
+        Self::start_inner(rt, EngineParams::Dense(params), cfg, true)
+    }
+
+    fn start_inner(
+        rt: Arc<Runtime>,
+        params: EngineParams,
+        cfg: EngineConfig,
+        force_full_context: bool,
+    ) -> Result<Engine> {
+        let (mode, prefill_graph, decode_graph, prefix) = match params {
+            EngineParams::Dense(p) => {
+                if !force_full_context && rt.meta.graphs.contains_key("lm_prefill") {
+                    (ServingMode::KvCached, "lm_prefill", "lm_decode_step", p)
+                } else {
+                    // fallback: the eval forward exists on every backend
+                    (
+                        ServingMode::FullContext,
+                        "lm_logits_all",
+                        "lm_logits_all",
+                        p,
+                    )
+                }
+            }
+            EngineParams::QuantizedQ4(p) => {
+                if !rt.meta.graphs.contains_key("lm_prefill_q4") {
+                    return Err(crate::err!(
+                        "this backend's graph set has no q4 serving graphs; \
+                         serve the exactly-dequantized weights instead \
+                         (EngineParams::Dense(QuantizedServingParams::dense))"
+                    ));
+                }
+                (
+                    ServingMode::KvCached,
+                    "lm_prefill_q4",
+                    "lm_decode_step_q4",
+                    p,
+                )
+            }
+        };
+        let gm = rt.meta.graph(prefill_graph)?;
+        let tail_args = match mode {
+            ServingMode::KvCached => 2, // tokens + lens
+            ServingMode::FullContext => 1, // tokens
+        };
+        if prefix.len() + tail_args != gm.args.len() {
+            return Err(crate::err!(
+                "{prefill_graph} wants {} leading args, got {}",
+                gm.args.len() - tail_args,
+                prefix.len()
+            ));
+        }
+        // Force compilation/warm-up up-front so the first session isn't
+        // slow.
+        rt.prepare(prefill_graph)?;
+        rt.prepare(decode_graph)?;
+        let metrics = Arc::new(EngineMetrics::new());
+        let n_replicas = cfg.replicas.max(1);
+        let mut replicas = Vec::with_capacity(n_replicas);
+        for r in 0..n_replicas {
+            let (tx, rx) = mpsc::channel::<SessionReq>();
+            let replica = Replica::new(
+                rt.clone(),
+                prefix.clone(),
+                mode,
+                prefill_graph,
+                decode_graph,
+                cfg.window,
+                metrics.clone(),
+            );
+            let worker = std::thread::Builder::new()
+                .name(format!("engine-replica-{r}"))
+                .spawn(move || replica.run(rx))?;
+            replicas.push(ReplicaHandle {
+                tx: Some(tx),
+                worker: Some(worker),
+            });
+        }
+        Ok(Engine {
+            replicas,
+            next: AtomicUsize::new(0),
+            metrics,
+            max_session_tokens: cfg.max_session_tokens,
+            seq_len: rt.meta.model.seq_len,
+        })
+    }
+
+    /// Open a streaming session with the default token budget
+    /// ([`EngineConfig::max_session_tokens`]; the KV-cache capacity still
+    /// bounds the stream).
+    pub fn session(&self, prompt: &[u8]) -> Result<DecodeSession> {
+        self.session_with(prompt, self.max_session_tokens)
+    }
+
+    /// Open a streaming session that emits at most `max_tokens` tokens.
+    pub fn session_with(&self, prompt: &[u8], max_tokens: usize) -> Result<DecodeSession> {
+        Ok(DecodeSession {
+            rx: self.submit(prompt, max_tokens.max(1))?,
+        })
+    }
+
+    /// Greedy-decode `n` tokens from a prompt. When the context outgrows
+    /// the KV cache, the session is transparently restarted over a
+    /// truncated tail of the context: each restart leaves `seq_len / 4`
+    /// positions of headroom so one prefill amortizes a whole chunk of
+    /// decode steps (restarting over the full window would degenerate to
+    /// one quadratic prefill per token), at the cost of a slightly
+    /// shorter context for windowed continuations.
+    pub fn generate(&self, prompt: &[u8], n: usize) -> Result<Vec<u8>> {
+        let mut ctx = prompt.to_vec();
+        let mut out = Vec::with_capacity(n);
+        let headroom = (self.seq_len / 4).max(1);
+        while out.len() < n {
+            let window = if ctx.len() >= self.seq_len {
+                &ctx[ctx.len() - (self.seq_len - headroom)..]
+            } else {
+                &ctx[..]
+            };
+            let mut sess = self.session_with(window, n - out.len())?;
+            let mut progressed = false;
+            while out.len() < n {
+                match sess.next_token() {
+                    Some(ev) => {
+                        let ev = ev?;
+                        out.push(ev.next_token);
+                        ctx.push(ev.next_token);
+                        progressed = true;
+                    }
+                    None => break,
+                }
+            }
+            if !progressed {
+                return Err(crate::err!("engine session made no progress"));
+            }
+        }
+        Ok(out)
+    }
+
+    fn submit(
+        &self,
+        prompt: &[u8],
+        max_tokens: usize,
+    ) -> Result<mpsc::Receiver<Result<InferenceResponse>>> {
+        let (tx, rx) = mpsc::channel();
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.replicas.len();
+        self.replicas[i]
+            .tx
+            .as_ref()
+            .expect("engine running")
+            .send(SessionReq {
+                prompt: prompt.to_vec(),
+                max_tokens,
+                tx,
+            })
+            .map_err(|_| crate::err!("engine stopped"))?;
+        Ok(rx)
+    }
+}
+
+impl Drop for Engine {
     fn drop(&mut self) {
-        // close the channel, then join the worker
-        self.tx.take();
-        if let Some(h) = self.worker.take() {
-            let _ = h.join();
+        // close every admission queue, then join the workers (they finish
+        // in-flight sessions first)
+        for r in &mut self.replicas {
+            r.tx.take();
+        }
+        for r in &mut self.replicas {
+            if let Some(h) = r.worker.take() {
+                let _ = h.join();
+            }
         }
     }
 }
 
+/// How a replica executes its sessions.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum ServingMode {
+    /// Prefill once, then incremental decode over per-session KV caches.
+    KvCached,
+    /// Re-execute the full context through `lm_logits_all` every step —
+    /// the fallback for backends whose graph set stops at the eval
+    /// forwards. Same session semantics, O(seq_len^2) decode cost.
+    FullContext,
+}
+
+/// One live batch slot: a session mid-decode.
+struct Slot {
+    /// Positions filled in the KV cache (prompt + already-placed tokens).
+    /// In full-context mode this is `ctx.len() - 1`: the last streamed
+    /// token is in `ctx` but its K/V column is "not placed yet".
+    len: usize,
+    /// Last streamed token — the next decode step's input.
+    last: u8,
+    /// Tokens still owed to the session.
+    remaining: usize,
+    /// Full context (prompt tail + streamed tokens); maintained only in
+    /// [`ServingMode::FullContext`], empty under KV caching.
+    ctx: Vec<u8>,
+    tx: mpsc::Sender<Result<InferenceResponse>>,
+}
+
+/// Worker-thread state of one model replica.
+struct Replica {
+    rt: Arc<Runtime>,
+    mode: ServingMode,
+    prefill_graph: &'static str,
+    decode_graph: &'static str,
+    window: Duration,
+    metrics: Arc<EngineMetrics>,
+    slots: Vec<Option<Slot>>,
+    /// Persistent decode args: `[prefix.., k/v caches.., token, pos]` —
+    /// the caches are moved out/in around each graph call so the engine
+    /// side never re-clones parameters on the hot path. (The CPU backend
+    /// still copies the slab across the immutable `Backend::execute` ABI
+    /// once per step; see the ROADMAP item about an in-place cache
+    /// handle.)
+    decode_args: Vec<HostTensor>,
+    /// Persistent prefill args: `[prefix.., tokens, lens]`.
+    prefill_args: Vec<HostTensor>,
+    n_prefix: usize,
+    n_layers: usize,
+    batch: usize,
+    seq: usize,
+    d_model: usize,
+    vocab: usize,
+}
+
+impl Replica {
+    fn new(
+        rt: Arc<Runtime>,
+        prefix: Vec<HostTensor>,
+        mode: ServingMode,
+        prefill_graph: &'static str,
+        decode_graph: &'static str,
+        window: Duration,
+        metrics: Arc<EngineMetrics>,
+    ) -> Replica {
+        let m = rt.meta.model.clone();
+        let (b, s, d) = (m.batch, m.seq_len, m.d_model);
+        let n_prefix = prefix.len();
+        let mut decode_args = prefix.clone();
+        if mode == ServingMode::KvCached {
+            for _ in 0..2 * m.n_layers {
+                decode_args.push(HostTensor::f32(vec![0.0; b * s * d], vec![b, s, d]));
+            }
+            decode_args.push(HostTensor::i32(vec![0; b], vec![b]));
+            decode_args.push(HostTensor::i32(vec![-1; b], vec![b]));
+        }
+        let mut prefill_args = prefix;
+        prefill_args.push(HostTensor::i32(vec![TOK_SPACE as i32; b * s], vec![b, s]));
+        if mode == ServingMode::KvCached {
+            prefill_args.push(HostTensor::i32(vec![1; b], vec![b]));
+        }
+        Replica {
+            rt,
+            mode,
+            prefill_graph,
+            decode_graph,
+            window,
+            metrics,
+            slots: (0..b).map(|_| None).collect(),
+            decode_args,
+            prefill_args,
+            n_prefix,
+            n_layers: m.n_layers,
+            batch: b,
+            seq: s,
+            d_model: d,
+            vocab: m.vocab,
+        }
+    }
+
+    fn run(mut self, rx: mpsc::Receiver<SessionReq>) {
+        loop {
+            let free: Vec<usize> = self
+                .slots
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.is_none())
+                .map(|(i, _)| i)
+                .collect();
+            let idle = free.len() == self.batch;
+            let mut pending: Vec<SessionReq> = Vec::new();
+            if idle {
+                // block for the first session of a batch; a closed queue
+                // with nothing in flight means shutdown
+                match rx.recv() {
+                    Ok(r) => pending.push(r),
+                    Err(_) => break,
+                }
+                let deadline = Instant::now() + self.window;
+                while pending.len() < free.len() {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(r) => pending.push(r),
+                        Err(_) => break,
+                    }
+                }
+            } else {
+                // continuous batching: admit whatever is queued right
+                // now, without stalling the sessions mid-decode
+                while pending.len() < free.len() {
+                    match rx.try_recv() {
+                        Ok(r) => pending.push(r),
+                        Err(_) => break,
+                    }
+                }
+            }
+            if !pending.is_empty() {
+                self.admit(pending, &free);
+            }
+            if self.slots.iter().any(|s| s.is_some()) {
+                self.decode_once();
+            }
+        }
+    }
+
+    /// Prefill `pending` sessions into the given free slots and stream
+    /// each one's first token.
+    fn admit(&mut self, pending: Vec<SessionReq>, free: &[usize]) {
+        let (b, s, v) = (self.batch, self.seq, self.vocab);
+        // run() caps admissions at the free-slot count; n/take(n) only
+        // defend against future edits breaking that invariant.
+        debug_assert!(pending.len() <= free.len());
+        let n = pending.len().min(free.len());
+        // Right-pad: prompt tail at positions 0..len-1 (padding after the
+        // prompt is causally invisible to it, so the prefilled rows are
+        // bit-identical to running the bare context).
+        let mut toks = vec![TOK_SPACE as i32; b * s];
+        let mut lens = vec![1i32; b];
+        for (i, req) in pending.iter().enumerate().take(n) {
+            let p = &req.prompt;
+            let take = p.len().min(s);
+            let tail = &p[p.len() - take..];
+            for (dst, &t) in toks[i * s..i * s + take].iter_mut().zip(tail) {
+                *dst = t as i32;
+            }
+            lens[i] = take.max(1) as i32; // an empty prompt is one separator
+        }
+        self.prefill_args[self.n_prefix] = HostTensor::i32(toks, vec![b, s]);
+        if self.mode == ServingMode::KvCached {
+            self.prefill_args[self.n_prefix + 1] = HostTensor::i32(lens.clone(), vec![b]);
+        }
+
+        let sw = crate::util::timer::Stopwatch::start();
+        let out = match self.rt.run(self.prefill_graph, &self.prefill_args) {
+            Ok(o) => o,
+            Err(e) => {
+                let msg = format!("{e}");
+                for req in pending {
+                    let _ = req.tx.send(Err(crate::err!("{msg}")));
+                }
+                return;
+            }
+        };
+        let elapsed = sw.elapsed();
+        self.metrics.core.inc("batches");
+        self.metrics.core.add("batched_requests", n as u64);
+        self.metrics.core.observe("prefill_exec", elapsed);
+        let prompt_tokens: u64 = lens[..n].iter().map(|&l| l as u64).sum();
+        self.metrics.core.add("prefill_tokens", prompt_tokens);
+
+        let logits = out[0].as_f32().expect("prefill logits are f32");
+        let row = s * self.d_model;
+        for (i, req) in pending.into_iter().enumerate() {
+            if i >= n {
+                let _ = req.tx.send(Err(crate::err!("no free batch slot")));
+                continue;
+            }
+            let slot = free[i];
+            let len = lens[i] as usize;
+            let (tok, logit) = match self.mode {
+                ServingMode::KvCached => {
+                    // scatter this session's K/V rows into the replica
+                    // slab; logits are already last-valid-position [B, V]
+                    for c in 0..2 * self.n_layers {
+                        let src = out[1 + c].as_f32().expect("prefill cache is f32");
+                        let dst = self.decode_args[self.n_prefix + c]
+                            .as_f32_mut()
+                            .expect("slab cache is f32");
+                        dst[slot * row..(slot + 1) * row]
+                            .copy_from_slice(&src[i * row..(i + 1) * row]);
+                    }
+                    greedy_argmax(&logits[i * v..(i + 1) * v])
+                }
+                ServingMode::FullContext => {
+                    // lm_logits_all returns [B, S, V]: read position len-1
+                    let ti = i * s + len - 1;
+                    greedy_argmax(&logits[ti * v..(ti + 1) * v])
+                }
+            };
+            self.metrics.core.inc("sessions");
+            self.metrics.record_token_latency(elapsed);
+            let mut ctx = Vec::new();
+            if self.mode == ServingMode::FullContext {
+                let take = req.prompt.len().min(s);
+                ctx = req.prompt[req.prompt.len() - take..].to_vec();
+                if ctx.is_empty() {
+                    ctx.push(TOK_SPACE);
+                }
+                ctx.push(tok);
+            }
+            let alive = req
+                .tx
+                .send(Ok(InferenceResponse {
+                    next_token: tok,
+                    logit,
+                }))
+                .is_ok();
+            let remaining = req.max_tokens.saturating_sub(1);
+            if alive && remaining > 0 && len < s {
+                self.slots[slot] = Some(Slot {
+                    len,
+                    last: tok,
+                    remaining,
+                    ctx,
+                    tx: req.tx,
+                });
+            }
+            // else: budget spent, cache full, or the session was dropped
+            // — closing the channel ends the stream
+        }
+    }
+
+    /// One decode step over every active slot.
+    fn decode_once(&mut self) {
+        match self.mode {
+            ServingMode::KvCached => self.decode_once_kv(),
+            ServingMode::FullContext => self.decode_once_full(),
+        }
+    }
+
+    /// Full-context fallback step: re-execute every active context
+    /// through `lm_logits_all` and stream one token per slot.
+    fn decode_once_full(&mut self) {
+        let (b, s, v) = (self.batch, self.seq, self.vocab);
+        let mut toks = vec![TOK_SPACE as i32; b * s];
+        let mut active = 0usize;
+        for (i, slot) in self.slots.iter().enumerate() {
+            if let Some(sl) = slot {
+                for (j, &t) in sl.ctx.iter().enumerate().take(s) {
+                    toks[i * s + j] = t as i32;
+                }
+                active += 1;
+            }
+        }
+        self.prefill_args[self.n_prefix] = HostTensor::i32(toks, vec![b, s]);
+        self.metrics.record_occupancy(active, b);
+
+        let sw = crate::util::timer::Stopwatch::start();
+        let out = match self.rt.run(self.decode_graph, &self.prefill_args) {
+            Ok(o) => o,
+            Err(e) => {
+                let msg = format!("{e}");
+                for slot in self.slots.iter_mut() {
+                    if let Some(sl) = slot.take() {
+                        let _ = sl.tx.send(Err(crate::err!("{msg}")));
+                    }
+                }
+                return;
+            }
+        };
+        let elapsed = sw.elapsed();
+        self.metrics.core.inc("decode_steps");
+        self.metrics.core.add("decode_tokens", active as u64);
+        self.metrics.core.observe("decode_step_exec", elapsed);
+
+        let logits = out[0].as_f32().expect("logits are f32");
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            if let Some(sl) = slot.as_mut() {
+                // the next token lives at row position ctx.len()-1 == len
+                let ti = i * s + sl.len;
+                let (tok, logit) = greedy_argmax(&logits[ti * v..(ti + 1) * v]);
+                sl.len += 1;
+                sl.last = tok;
+                sl.ctx.push(tok);
+                sl.remaining -= 1;
+                self.metrics.record_token_latency(elapsed);
+                let alive = sl
+                    .tx
+                    .send(Ok(InferenceResponse {
+                        next_token: tok,
+                        logit,
+                    }))
+                    .is_ok();
+                if !alive || sl.remaining == 0 || sl.len >= s {
+                    *slot = None;
+                }
+            }
+        }
+    }
+
+    /// One incremental KV-cached decode step over every active slot.
+    fn decode_once_kv(&mut self) {
+        let (b, s, v) = (self.batch, self.seq, self.vocab);
+        let mut token = vec![0i32; b];
+        let mut pos = vec![-1i32; b];
+        let mut active = 0usize;
+        for (i, slot) in self.slots.iter().enumerate() {
+            if let Some(sl) = slot {
+                token[i] = sl.last as i32;
+                pos[i] = sl.len as i32;
+                active += 1;
+            }
+        }
+        let nt = self.decode_args.len();
+        self.decode_args[nt - 2] = HostTensor::i32(token, vec![b]);
+        self.decode_args[nt - 1] = HostTensor::i32(pos, vec![b]);
+        self.metrics.record_occupancy(active, b);
+
+        let sw = crate::util::timer::Stopwatch::start();
+        let out = match self.rt.run(self.decode_graph, &self.decode_args) {
+            Ok(o) => o,
+            Err(e) => {
+                let msg = format!("{e}");
+                for slot in self.slots.iter_mut() {
+                    if let Some(sl) = slot.take() {
+                        let _ = sl.tx.send(Err(crate::err!("{msg}")));
+                    }
+                }
+                return;
+            }
+        };
+        let elapsed = sw.elapsed();
+        self.metrics.core.inc("decode_steps");
+        self.metrics.core.add("decode_tokens", active as u64);
+        self.metrics.core.observe("decode_step_exec", elapsed);
+
+        // move the updated caches back into the persistent args
+        let mut outs = out.into_iter();
+        let logits_t = outs.next().expect("decode logits");
+        for c in 0..2 * self.n_layers {
+            self.decode_args[self.n_prefix + c] = outs.next().expect("decode cache");
+        }
+        let logits = logits_t.as_f32().expect("decode logits are f32");
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            if let Some(sl) = slot.as_mut() {
+                let (tok, logit) = greedy_argmax(&logits[i * v..(i + 1) * v]);
+                sl.len += 1;
+                sl.last = tok;
+                sl.remaining -= 1;
+                self.metrics.record_token_latency(elapsed);
+                let alive = sl
+                    .tx
+                    .send(Ok(InferenceResponse {
+                        next_token: tok,
+                        logit,
+                    }))
+                    .is_ok();
+                if !alive || sl.remaining == 0 || sl.len >= s {
+                    *slot = None;
+                }
+            }
+        }
+    }
+}
+
+/// **Deprecated** single-shot service facade, kept for compatibility:
+/// a thin shim over [`Engine`] (one replica, one-token sessions). New
+/// code should use [`Engine::session`] / [`Engine::generate`] directly —
+/// they expose streaming, KV-cached decoding and continuous batching
+/// that this request/response API cannot.
+pub struct BatchedLm {
+    engine: Engine,
+    /// The engine's shared counter registry (`batches`,
+    /// `batched_requests`, ... — see [`EngineMetrics`]).
+    pub metrics: Arc<Metrics>,
+}
+
+impl BatchedLm {
+    /// Start the service over a fixed parameter set. `params` must match
+    /// the dense ABI prefix (16 f32 tensors).
+    pub fn start(
+        rt: Arc<Runtime>,
+        params: Vec<HostTensor>,
+        cfg: ServiceConfig,
+    ) -> Result<BatchedLm> {
+        let engine = Engine::start(
+            rt,
+            params,
+            EngineConfig {
+                window: cfg.window,
+                ..EngineConfig::default()
+            },
+        )?;
+        let metrics = engine.metrics.core.clone();
+        Ok(BatchedLm { engine, metrics })
+    }
+
+    /// The underlying engine (escape hatch for migration).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Submit a request; blocks until the engine answers.
+    pub fn infer(&self, prompt: &[u8]) -> Result<InferenceResponse> {
+        self.infer_async(prompt)?
+            .recv()
+            .map_err(|_| crate::err!("service dropped request"))?
+    }
+
+    /// Submit asynchronously; returns the response receiver (a one-token
+    /// session's stream).
+    pub fn infer_async(&self, prompt: &[u8]) -> Result<mpsc::Receiver<Result<InferenceResponse>>> {
+        self.engine.submit(prompt, 1)
+    }
+
+    /// Greedy-decode `n` tokens from a prompt.
+    pub fn generate(&self, prompt: &[u8], n: usize) -> Result<Vec<u8>> {
+        self.engine.generate(prompt, n)
+    }
+}
+
 // Runtime-dependent behaviour is covered by
-// rust/tests/coordinator_integration.rs; unit tests here cover padding.
+// rust/tests/coordinator_integration.rs and rust/tests/runtime_e2e.rs;
+// unit tests here cover the pure pieces.
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -243,6 +841,10 @@ mod tests {
     #[test]
     fn config_default_window() {
         assert_eq!(ServiceConfig::default().window, Duration::from_millis(5));
+        let e = EngineConfig::default();
+        assert_eq!(e.replicas, 1);
+        assert_eq!(e.window, Duration::from_millis(5));
+        assert_eq!(e.max_session_tokens, usize::MAX);
     }
 
     #[test]
@@ -258,5 +860,20 @@ mod tests {
                 logit: 0.5
             }
         );
+    }
+
+    #[test]
+    fn greedy_argmax_takes_last_max_on_ties() {
+        assert_eq!(greedy_argmax(&[0.0, 2.0, 2.0, 1.0]), (2, 2.0));
+        assert_eq!(greedy_argmax(&[-1.0]), (0, -1.0));
+    }
+
+    #[test]
+    fn engine_params_from_dense_vec() {
+        let p: EngineParams = vec![HostTensor::scalar_u32(1)].into();
+        match p {
+            EngineParams::Dense(v) => assert_eq!(v.len(), 1),
+            _ => panic!("expected dense"),
+        }
     }
 }

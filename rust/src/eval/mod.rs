@@ -4,8 +4,10 @@
 //! - [`trainer`]: pre-train the in-repo LM via the AOT'd `train_step`
 //!   graph (cached in `artifacts/trained_model.wbin`)
 //! - [`ppl`]: held-out perplexity via `lm_nll`
-//! - [`quantized`]: quantize a trained [`ParamSet`] with any
-//!   [`crate::quant::QuantConfig`] and rebuild eval tensors
+//! - [`quantized`]: quantize a trained [`ParamSet`](crate::models::ParamSet) with any
+//!   [`crate::quant::QuantConfig`] and rebuild eval tensors, or pack the
+//!   serving engine's end-to-end q4 + double-quantized representation
+//!   ([`quantize_for_serving`])
 //! - [`lora`]: QLoRA-style fine-tuning via `lora_step` (Tables 3/4 proxy)
 //! - [`tasks`]: synthetic multiple-choice suite + NAV ACC (eq. 74) and the
 //!   two fine-tuning tasks (instruction echo / bracket code)
@@ -19,5 +21,5 @@ pub mod tasks;
 pub mod trainer;
 
 pub use ppl::perplexity;
-pub use quantized::quantize_params;
+pub use quantized::{quantize_for_serving, quantize_params, QuantizedServingParams};
 pub use trainer::ensure_trained;

@@ -8,7 +8,9 @@
 use crate::coordinator::{QuantJob, QuantScheduler};
 use crate::error::Result;
 use crate::models::ParamSet;
-use crate::quant::QuantConfig;
+use crate::quant::{pack, QuantConfig, Quantizer};
+use crate::runtime::meta::{matmul_param_names, param_specs};
+use crate::runtime::{HostTensor, Meta};
 
 /// Which parameters get quantized: 2-D weights except the embedding table
 /// (QLoRA quantizes linear layers; embeddings stay high-precision).
@@ -79,6 +81,136 @@ pub fn quantize_params(params: &ParamSet, config: &QuantConfig) -> Result<Quanti
         quant_bytes,
         orig_bytes,
         outliers,
+    })
+}
+
+/// A model quantized **for the serving engine**: 4-bit codes plus 8-bit
+/// double-quantized block constants, laid out as the argument prefix of
+/// the `lm_prefill_q4` / `lm_decode_step_q4` graphs. Unlike
+/// [`quantize_params`] (which dequantizes back to f32 for the eval
+/// graphs), the weights here stay quantized at rest end-to-end: the CPU
+/// backend dequantizes block constants inside the fused q4 matmul.
+#[derive(Clone, Debug)]
+pub struct QuantizedServingParams {
+    /// ABI-ordered prefix: non-matmul f32 params, per-matrix unpacked
+    /// codes, per-matrix 8-bit constant codes, per-matrix chunk
+    /// `(min, scale)` pairs, codebook levels. Feed to
+    /// [`crate::coordinator::EngineParams::QuantizedQ4`].
+    pub prefix: Vec<HostTensor>,
+    /// Exact dequantization of the same weights (bit-identical to what
+    /// the fused kernel computes) in canonical dense ABI order — the
+    /// equivalence oracle and the fallback for backends without the q4
+    /// serving graphs.
+    pub dense: Vec<HostTensor>,
+    /// Storage bytes of the quantized matmul weights (codes + DQ'd
+    /// constants).
+    pub quant_bytes: usize,
+    /// f32 bytes of the same tensors.
+    pub orig_bytes: usize,
+}
+
+/// Quantize a [`ParamSet`] for the serving engine's q4 graphs. The
+/// config's `double_quant` flag is implied (constants are always stored
+/// 8-bit on this path); OPQ is rejected — outlier side-tables are not
+/// representable in the serving ABI. `cfg.block` must match the model's
+/// block size.
+pub fn quantize_for_serving(
+    meta: &Meta,
+    params: &ParamSet,
+    cfg: &QuantConfig,
+) -> Result<QuantizedServingParams> {
+    let m = &meta.model;
+    if cfg.block != m.block {
+        return Err(crate::err!(
+            "serving block size {} != model block {}",
+            cfg.block,
+            m.block
+        ));
+    }
+    if cfg.opq.is_some() {
+        return Err(crate::err!(
+            "OPQ outliers are not representable in the q4 serving ABI"
+        ));
+    }
+    let q = Quantizer::new(QuantConfig {
+        double_quant: true,
+        ..cfg.clone()
+    });
+    let mm = matmul_param_names(m);
+    let mut f32s = Vec::new();
+    let mut codes_t = Vec::new();
+    let mut am_codes_t = Vec::new();
+    let mut am_params_t = Vec::new();
+    let mut dense = Vec::new();
+    let mut quant_bytes = 0usize;
+    let mut orig_bytes = 0usize;
+    for (name, shape) in param_specs(m) {
+        let (pshape, data) = params
+            .get(&name)
+            .ok_or_else(|| crate::err!("param '{name}' missing from ParamSet"))?;
+        if pshape != shape.as_slice() {
+            return Err(crate::err!(
+                "param '{name}': shape {pshape:?} != canonical {shape:?}"
+            ));
+        }
+        if !mm.contains(&name) {
+            f32s.push(HostTensor::f32(data.to_vec(), shape.clone()));
+            dense.push(HostTensor::f32(data.to_vec(), shape));
+            continue;
+        }
+        let (k, n) = (shape[0], shape[1]);
+        if n % m.block != 0 {
+            return Err(crate::err!(
+                "param '{name}': row length {n} not a multiple of block {}",
+                m.block
+            ));
+        }
+        let qt = q.quantize(data);
+        let dq = qt.dq.as_ref().expect("double_quant is on");
+        let codes = pack::unpack_u4(&qt.codes, k * n);
+        let nb = n / m.block;
+        // reconstruct the constants and weights through the shared
+        // `double_quant::reconstruct` expression, then `levels[c] * am`,
+        // so the dense oracle is bit-identical to the fused kernel path
+        let mut w = vec![0.0f32; k * n];
+        for kk in 0..k {
+            for jb in 0..nb {
+                let bi = kk * nb + jb;
+                let chunk = bi / crate::quant::double_quant::CHUNK;
+                let (mn, scale) = dq.chunk_params[chunk];
+                let am = crate::quant::double_quant::reconstruct(mn, scale, dq.codes[bi]);
+                for i in 0..m.block {
+                    let j = jb * m.block + i;
+                    w[kk * n + j] =
+                        q.codebook.levels[(codes[kk * n + j] & 0x0f) as usize] * am;
+                }
+            }
+        }
+        let mut chunk_flat = Vec::with_capacity(dq.chunk_params.len() * 2);
+        for &(mn, scale) in &dq.chunk_params {
+            chunk_flat.push(mn);
+            chunk_flat.push(scale);
+        }
+        quant_bytes += qt.codes.len() + dq.bytes();
+        orig_bytes += 4 * k * n;
+        codes_t.push(HostTensor::u8(codes, vec![k, n]));
+        am_codes_t.push(HostTensor::u8(dq.codes.clone(), vec![k, nb]));
+        am_params_t.push(HostTensor::f32(
+            chunk_flat,
+            vec![dq.chunk_params.len(), 2],
+        ));
+        dense.push(HostTensor::f32(w, shape));
+    }
+    let mut prefix = f32s;
+    prefix.extend(codes_t);
+    prefix.extend(am_codes_t);
+    prefix.extend(am_params_t);
+    prefix.push(HostTensor::f32(q.codebook.levels.to_vec(), vec![16]));
+    Ok(QuantizedServingParams {
+        prefix,
+        dense,
+        quant_bytes,
+        orig_bytes,
     })
 }
 

@@ -83,7 +83,29 @@ impl Table {
         out
     }
 
-    /// Print to stdout and persist both renderings under `results/`.
+    /// Render as a JSON object (`{"title", "header", "rows"}`) so table
+    /// baselines are machine-diffable under `results/`. Serialization
+    /// goes through [`crate::util::json::Json`], which escapes control
+    /// characters correctly.
+    pub fn to_json(&self) -> String {
+        use crate::util::json::Json;
+        let str_arr = |cells: &[String]| -> Json {
+            Json::Arr(cells.iter().map(|c| Json::Str(c.clone())).collect())
+        };
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("title".to_string(), Json::Str(self.title.clone()));
+        obj.insert("header".to_string(), str_arr(&self.header));
+        obj.insert(
+            "rows".to_string(),
+            Json::Arr(self.rows.iter().map(|r| str_arr(r)).collect()),
+        );
+        let mut out = Json::Obj(obj).to_string();
+        out.push('\n');
+        out
+    }
+
+    /// Print to stdout and persist the markdown/CSV/JSON renderings under
+    /// `results/`.
     pub fn emit(&self, stem: &str) -> Result<()> {
         println!("{}", self.to_markdown());
         let dir = results_dir();
@@ -92,6 +114,8 @@ impl Table {
             .with_context(|| format!("writing {stem}.md"))?;
         std::fs::write(dir.join(format!("{stem}.csv")), self.to_csv())
             .with_context(|| format!("writing {stem}.csv"))?;
+        std::fs::write(dir.join(format!("{stem}.json")), self.to_json())
+            .with_context(|| format!("writing {stem}.json"))?;
         Ok(())
     }
 }
@@ -186,6 +210,20 @@ mod tests {
         assert!(md.contains("### Demo"));
         assert!(md.contains("| NF4"));
         assert!(md.lines().count() >= 5);
+    }
+
+    #[test]
+    fn json_rendering_escapes() {
+        let mut t = Table::new("Ti\"tle", &["a", "b"]);
+        t.row(vec!["x\"y".into(), "multi\nline\tcell".into()]);
+        let j = t.to_json();
+        assert!(j.contains("\"title\":\"Ti\\\"tle\""), "{j}");
+        assert!(j.contains("\"x\\\"y\""), "{j}");
+        assert!(j.contains("\"multi\\nline\\tcell\""), "{j}");
+        assert!(j.contains("\"rows\":[["), "{j}");
+        // and it parses back
+        let parsed = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("title").unwrap().as_str(), Some("Ti\"tle"));
     }
 
     #[test]

@@ -15,9 +15,10 @@
 //!   design, OPQ, packing), a **multi-backend runtime** behind
 //!   [`runtime::Backend`] — a pure-Rust CPU interpreter (default, fully
 //!   hermetic) and the PJRT/XLA executor (behind the `xla` feature) — the
-//!   multithreaded quantization scheduler, the batched inference service,
-//!   and the experiment harness regenerating every table and figure of
-//!   the paper.
+//!   multithreaded quantization scheduler, the session-based serving
+//!   engine ([`coordinator::Engine`]: KV-cached incremental decoding with
+//!   multi-replica continuous batching), and the experiment harness
+//!   regenerating every table and figure of the paper.
 //!
 //! Python never runs on the request path. The default build needs no
 //! Python at all: the CPU backend interprets every graph (embedding
@@ -61,9 +62,40 @@
 //! assert_eq!(params[0].shape(), &[rt.meta.model.vocab, rt.meta.model.d_model]);
 //! ```
 //!
+//! Stream tokens from the serving engine — prompts are prefilled once
+//! into per-session KV caches, then each token costs one incremental
+//! `lm_decode_step` (attention over `cache_len + 1` positions) instead of
+//! a full-context recompute. Sessions admit into free batch slots while
+//! others are mid-decode (continuous batching), and
+//! [`coordinator::EngineConfig`] scales replicas:
+//!
+//! ```
+//! use std::sync::Arc;
+//! use bof4::coordinator::{Engine, EngineConfig};
+//! use bof4::runtime::{HostTensor, Runtime};
+//!
+//! let rt = Arc::new(Runtime::new().unwrap());
+//! let params = rt.run("init_params", &[HostTensor::scalar_u32(0)]).unwrap();
+//! let engine = Engine::start(rt, params, EngineConfig::default()).unwrap();
+//! let session = engine.session_with(&[1, 2, 3], 4).unwrap();
+//! let tokens: Vec<u8> = session.map(|ev| ev.unwrap().next_token).collect();
+//! assert_eq!(tokens.len(), 4);
+//! ```
+//!
+//! Greedy streams are bit-identical to full-context re-execution through
+//! `lm_logits_last`/`lm_logits_all` (integration-tested for every prompt
+//! length, dense and 4-bit + double-quantized weights). The former
+//! single-shot service, [`coordinator::BatchedLm`], survives as a thin
+//! deprecated shim over the engine.
+//!
 //! With the off-by-default `xla` cargo feature (plus vendored `xla` crate
 //! and `make artifacts`), the same calls execute the AOT'd HLO graphs
-//! through PJRT instead — see [`runtime::Backend`].
+//! through PJRT instead — see [`runtime::Backend`]. The XLA artifact set
+//! stops at the eval forwards: the engine's `lm_prefill`/`lm_decode_step`
+//! graphs are CPU-builtin, and [`coordinator::Engine::start`]
+//! automatically falls back to full-context serving through
+//! `lm_logits_all` (same session semantics, quadratic decode cost) on
+//! backends without them.
 
 pub mod bench;
 pub mod coordinator;

@@ -221,37 +221,44 @@ fn eval_cmd(rest: Vec<String>) -> Result<()> {
 }
 
 fn serve(rest: Vec<String>) -> Result<()> {
-    let p = quant_flags(Args::new("run the batched inference service (demo)"))
-        .opt("requests", Some("64"), "demo request count")
+    let p = quant_flags(Args::new("run the streaming session engine (demo)"))
+        .opt("requests", Some("64"), "demo session count")
+        .opt("tokens", Some("8"), "tokens streamed per session")
+        .opt("replicas", Some("1"), "model replicas behind the router")
         .parse_from(rest);
     let rt = Arc::new(Runtime::new()?);
     let base = eval::ensure_trained(&rt)?;
     let cfg = quant_config(&p);
     let qm = eval::quantize_params(&base, &cfg)?;
-    let svc = bof4::coordinator::BatchedLm::start(
+    let engine = bof4::coordinator::Engine::start(
         rt.clone(),
         qm.params.to_tensors(),
-        bof4::coordinator::ServiceConfig::default(),
+        bof4::coordinator::EngineConfig {
+            replicas: p.get_usize("replicas").unwrap_or(1),
+            ..Default::default()
+        },
     )?;
     let n = p.get_usize("requests").unwrap_or(64);
+    let tokens = p.get_usize("tokens").unwrap_or(8);
     let corpus = bof4::models::Corpus::generate(50_000, 5);
     let sw = bof4::util::timer::Stopwatch::start();
-    let mut pending = Vec::new();
+    let mut sessions = Vec::new();
     for i in 0..n {
         let start = (i * 97) % (corpus.len() - 48);
-        pending.push(svc.infer_async(&corpus.tokens[start..start + 48])?);
+        sessions.push(engine.session_with(&corpus.tokens[start..start + 48], tokens)?);
     }
     let mut answered = 0;
-    for rx in pending {
-        let resp = rx.recv()??;
-        let _ = resp.next_token;
+    let mut streamed = 0usize;
+    for sess in sessions {
+        streamed += sess.collect_tokens()?.len();
         answered += 1;
     }
     let secs = sw.elapsed().as_secs_f64();
     println!(
-        "served {answered}/{n} requests in {secs:.2}s ({:.1} req/s)\n{}",
-        n as f64 / secs,
-        svc.metrics.summary()
+        "served {answered}/{n} sessions ({streamed} tokens) in {secs:.2}s \
+         ({:.1} tok/s)\n{}",
+        streamed as f64 / secs,
+        engine.metrics.summary()
     );
     Ok(())
 }

@@ -9,6 +9,17 @@
 /// Constants per double-quantization chunk.
 pub const CHUNK: usize = 256;
 
+/// Reconstruct one constant from its chunk parameters. Every consumer of
+/// double-quantized constants — [`DoubleQuant::dequantize`], the CPU
+/// backend's fused q4 serving kernels, and the serving-path dense oracle
+/// — must go through this helper so the floating-point expression (and
+/// therefore bit-exact equivalence between those paths) stays structural
+/// rather than comment-enforced.
+#[inline]
+pub fn reconstruct(mn: f32, scale: f32, code: u8) -> f32 {
+    mn + code as f32 * scale
+}
+
 /// 8-bit affine-quantized block constants.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DoubleQuant {
@@ -50,7 +61,7 @@ impl DoubleQuant {
         for (ci, chunk) in self.codes.chunks(CHUNK).enumerate() {
             let (mn, scale) = self.chunk_params[ci];
             for &c in chunk {
-                out.push(mn + c as f32 * scale);
+                out.push(reconstruct(mn, scale, c));
             }
         }
         out

@@ -14,6 +14,14 @@
 //! - `lm_nll_q4` and `dequant_matmul`: the 4-bit serving path, with the
 //!   dequantization fused into the matmul inner loop (one LUT multiply
 //!   per weight, per-block absmax hoisted);
+//! - `lm_prefill` / `lm_decode_step` (+ `_q4` variants): the KV-cached
+//!   serving pair — prefill returns per-layer K/V next to the last-valid
+//!   logits; the decode step appends one K/V column per active row and
+//!   attends over `pos+1` cached positions. Every per-row kernel runs in
+//!   the full forward's exact loop order, so incremental logits are
+//!   bit-identical to full-context re-execution; the `_q4` variants keep
+//!   weights 4-bit with 8-bit double-quantized block constants,
+//!   dequantized inside the fused matmul;
 //! - `quantize_blocks_{abs,signed}`: the block-wise encoder kernels;
 //! - `train_step` / `lora_step`: full reverse-mode backprop through the
 //!   model plus the AdamW update (global-norm clipping, bias correction,
@@ -75,6 +83,10 @@ impl Backend for CpuBackend {
             "lm_logits_last_lora" => self.lm_logits(args, true, true),
             "lm_logits_all_lora" => self.lm_logits(args, true, false),
             "lm_nll_q4" => self.lm_nll_q4(args),
+            "lm_prefill" => self.prefill(args, false),
+            "lm_prefill_q4" => self.prefill(args, true),
+            "lm_decode_step" => self.decode_step(args, false),
+            "lm_decode_step_q4" => self.decode_step(args, true),
             "train_step" => self.train_step(args),
             "lora_step" => self.lora_step(args),
             "dequant_matmul" => self.dequant_matmul_graph(gm, args),
@@ -281,6 +293,121 @@ fn lin_bwd(
         add_in_place(&mut dx, &dxl);
     }
     (dx, dw, dlora)
+}
+
+// ---------------------------------------------------------------------
+// KV-cached serving kernels (lm_prefill / lm_decode_step)
+// ---------------------------------------------------------------------
+
+/// One matmul weight on the serving decode path: dense f32 rows, or 4-bit
+/// codes whose per-block constants are stored 8-bit (double-quantized) and
+/// dequantized inside the fused inner loop.
+enum MatW<'a> {
+    Dense(&'a [f32]),
+    Q4 {
+        /// Unpacked codes, `[k, n]`.
+        codes: &'a [u8],
+        /// 8-bit constant codes, `[k * n / block]` flat.
+        am_codes: &'a [u8],
+        /// Flattened per-chunk `(min, scale)` pairs.
+        am_params: &'a [f32],
+        levels: &'a [f32],
+        block: usize,
+    },
+}
+
+/// Reconstruct one double-quantized block constant (shares the exact
+/// expression of [`crate::quant::DoubleQuant::dequantize`] via
+/// [`crate::quant::double_quant::reconstruct`]).
+#[inline]
+fn dq_constant(am_codes: &[u8], am_params: &[f32], idx: usize) -> f32 {
+    let chunk = idx / crate::quant::double_quant::CHUNK;
+    crate::quant::double_quant::reconstruct(
+        am_params[2 * chunk],
+        am_params[2 * chunk + 1],
+        am_codes[idx],
+    )
+}
+
+/// `y = x @ w` for a single activation row. The dense arm reuses
+/// [`matmul`] so decode logits are bit-identical to the full forward; the
+/// q4 arm multiplies in the exact order `xv * (levels[c] * am)` so it is
+/// bit-identical to the dense path over pre-dequantized weights.
+fn row_matmul(x: &[f32], w: &MatW<'_>, k: usize, n: usize) -> Vec<f32> {
+    match w {
+        MatW::Dense(w) => matmul(x, w, 1, k, n),
+        MatW::Q4 {
+            codes,
+            am_codes,
+            am_params,
+            levels,
+            block,
+        } => {
+            let nb = n / block;
+            let mut y = vec![0.0f32; n];
+            for (kk, &xv) in x.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let crow = &codes[kk * n..(kk + 1) * n];
+                for jb in 0..nb {
+                    let am = dq_constant(am_codes, am_params, kk * nb + jb);
+                    let cblk = &crow[jb * block..(jb + 1) * block];
+                    let yblk = &mut y[jb * block..(jb + 1) * block];
+                    for (yv, &c) in yblk.iter_mut().zip(cblk) {
+                        *yv += xv * (levels[(c & 0x0f) as usize] * am);
+                    }
+                }
+            }
+            y
+        }
+    }
+}
+
+/// Materialize a q4 weight back to f32 with the same expression the fused
+/// kernel uses (`levels[c] * am`), so prefill (dense forward over these)
+/// and decode (fused) stay bit-identical.
+fn dequant_q4_weight(
+    codes: &[u8],
+    am_codes: &[u8],
+    am_params: &[f32],
+    levels: &[f32],
+    k: usize,
+    n: usize,
+    block: usize,
+) -> Vec<f32> {
+    let nb = n / block;
+    let mut w = vec![0.0f32; k * n];
+    for kk in 0..k {
+        for jb in 0..nb {
+            let am = dq_constant(am_codes, am_params, kk * nb + jb);
+            let crow = &codes[kk * n + jb * block..kk * n + (jb + 1) * block];
+            let wrow = &mut w[kk * n + jb * block..kk * n + (jb + 1) * block];
+            for (wv, &c) in wrow.iter_mut().zip(crow) {
+                *wv = levels[(c & 0x0f) as usize] * am;
+            }
+        }
+    }
+    w
+}
+
+/// Per-layer weight views for the decode step.
+struct LayerW<'a> {
+    g1: &'a [f32],
+    wqkv: MatW<'a>,
+    wo: MatW<'a>,
+    g2: &'a [f32],
+    win: MatW<'a>,
+    wout: MatW<'a>,
+}
+
+/// Whole-model weight views for the decode step (dense or q4).
+struct ModelW<'a> {
+    embed: &'a [f32],
+    pos: &'a [f32],
+    layers: Vec<LayerW<'a>>,
+    lnf: &'a [f32],
+    head: &'a [f32],
 }
 
 // ---------------------------------------------------------------------
@@ -963,6 +1090,266 @@ impl CpuBackend {
         Ok(vec![HostTensor::f32(per_seq, vec![self.m.batch])])
     }
 
+    // -----------------------------------------------------------------
+    // KV-cached serving: prefill + incremental decode
+    // -----------------------------------------------------------------
+
+    /// Assemble the 16 canonical dense parameter views from a q4 serving
+    /// argument prefix, materializing the matmul weights (prefill pays
+    /// this once per admitted batch; the decode step stays fused).
+    /// Returns (weight storage, index of the first tail argument).
+    fn q4_dense_weights(&self, args: &[HostTensor]) -> Result<(Vec<Vec<f32>>, usize)> {
+        let pspecs = param_specs(&self.m);
+        let mm = matmul_param_names(&self.m);
+        let (n_mm, n_f32) = (mm.len(), pspecs.len() - mm.len());
+        let levels = args[n_f32 + 3 * n_mm].as_f32()?;
+        let shapes: std::collections::HashMap<String, Vec<usize>> =
+            pspecs.iter().cloned().collect();
+        let mut deq = Vec::with_capacity(n_mm);
+        for (i, name) in mm.iter().enumerate() {
+            let shp = &shapes[name];
+            deq.push(dequant_q4_weight(
+                args[n_f32 + i].as_u8()?,
+                args[n_f32 + n_mm + i].as_u8()?,
+                args[n_f32 + 2 * n_mm + i].as_f32()?,
+                levels,
+                shp[0],
+                shp[1],
+                self.m.block,
+            ));
+        }
+        Ok((deq, n_f32 + 3 * n_mm + 1))
+    }
+
+    /// `lm_prefill` / `lm_prefill_q4`: full forward over a right-padded
+    /// prompt batch; returns per-row logits at position `lens[b]-1` plus
+    /// the per-layer K/V tensors extracted from the attention cache.
+    fn prefill(&self, args: &[HostTensor], q4: bool) -> Result<Vec<HostTensor>> {
+        let (b, s, d, _, _, _, v) = self.dims();
+        let nl = self.m.n_layers;
+        let np = param_specs(&self.m).len();
+        let deq_store;
+        let (p, tail): (Vec<&[f32]>, usize) = if q4 {
+            let (deq, tail) = self.q4_dense_weights(args)?;
+            deq_store = deq;
+            let pspecs = param_specs(&self.m);
+            let mm = matmul_param_names(&self.m);
+            let f32_views = self.param_views(args, 0, np - mm.len())?;
+            let mut p = Vec::with_capacity(np);
+            let (mut fi, mut qi) = (0usize, 0usize);
+            for (name, _) in &pspecs {
+                if mm.contains(name) {
+                    p.push(deq_store[qi].as_slice());
+                    qi += 1;
+                } else {
+                    p.push(f32_views[fi]);
+                    fi += 1;
+                }
+            }
+            (p, tail)
+        } else {
+            (self.param_views(args, 0, np)?, np)
+        };
+        let tokens = args[tail].as_i32()?;
+        let lens = args[tail + 1].as_i32()?;
+
+        let (logits, cache) = self.forward(&p, None, tokens);
+        let mut last = vec![0.0f32; b * v];
+        for bi in 0..b {
+            let len = (lens[bi].max(1) as usize).min(s);
+            let ti = bi * s + (len - 1);
+            last[bi * v..(bi + 1) * v].copy_from_slice(&logits[ti * v..(ti + 1) * v]);
+        }
+        let mut out = vec![HostTensor::f32(last, vec![b, v])];
+        for l in 0..nl {
+            let qkv = &cache.layers[l].qkv;
+            let mut kc = vec![0.0f32; b * s * d];
+            let mut vc = vec![0.0f32; b * s * d];
+            for t in 0..b * s {
+                kc[t * d..(t + 1) * d].copy_from_slice(&qkv[t * 3 * d + d..t * 3 * d + 2 * d]);
+                vc[t * d..(t + 1) * d]
+                    .copy_from_slice(&qkv[t * 3 * d + 2 * d..t * 3 * d + 3 * d]);
+            }
+            out.push(HostTensor::f32(kc, vec![b, s, d]));
+            out.push(HostTensor::f32(vc, vec![b, s, d]));
+        }
+        Ok(out)
+    }
+
+    /// Weight views for the decode step (dense variant).
+    fn model_w_dense<'a>(&self, args: &'a [HostTensor]) -> Result<(ModelW<'a>, usize)> {
+        let np = param_specs(&self.m).len();
+        let p = self.param_views(args, 0, np)?;
+        let nl = self.m.n_layers;
+        let mut layers = Vec::with_capacity(nl);
+        for l in 0..nl {
+            let base = p_layer(l);
+            layers.push(LayerW {
+                g1: p[base],
+                wqkv: MatW::Dense(p[base + 1]),
+                wo: MatW::Dense(p[base + 2]),
+                g2: p[base + 3],
+                win: MatW::Dense(p[base + 4]),
+                wout: MatW::Dense(p[base + 5]),
+            });
+        }
+        Ok((
+            ModelW {
+                embed: p[p_embed()],
+                pos: p[p_pos()],
+                layers,
+                lnf: p[p_lnf(nl)],
+                head: p[p_head(nl)],
+            },
+            np,
+        ))
+    }
+
+    /// Weight views for the decode step (q4 + double-quantized constants).
+    fn model_w_q4<'a>(&self, args: &'a [HostTensor]) -> Result<(ModelW<'a>, usize)> {
+        let pspecs = param_specs(&self.m);
+        let n_mm = matmul_param_names(&self.m).len();
+        let n_f32 = pspecs.len() - n_mm;
+        let nl = self.m.n_layers;
+        let f = self.param_views(args, 0, n_f32)?;
+        let levels = args[n_f32 + 3 * n_mm].as_f32()?;
+        let block = self.m.block;
+        fn matw<'a>(
+            args: &'a [HostTensor],
+            n_f32: usize,
+            n_mm: usize,
+            i: usize,
+            levels: &'a [f32],
+            block: usize,
+        ) -> Result<MatW<'a>> {
+            Ok(MatW::Q4 {
+                codes: args[n_f32 + i].as_u8()?,
+                am_codes: args[n_f32 + n_mm + i].as_u8()?,
+                am_params: args[n_f32 + 2 * n_mm + i].as_f32()?,
+                levels,
+                block,
+            })
+        }
+        let mut layers = Vec::with_capacity(nl);
+        for l in 0..nl {
+            layers.push(LayerW {
+                g1: f[2 + 2 * l],
+                wqkv: matw(args, n_f32, n_mm, 4 * l, levels, block)?,
+                wo: matw(args, n_f32, n_mm, 4 * l + 1, levels, block)?,
+                g2: f[3 + 2 * l],
+                win: matw(args, n_f32, n_mm, 4 * l + 2, levels, block)?,
+                wout: matw(args, n_f32, n_mm, 4 * l + 3, levels, block)?,
+            });
+        }
+        Ok((
+            ModelW {
+                embed: f[0],
+                pos: f[1],
+                layers,
+                lnf: f[2 + 2 * nl],
+                head: f[3 + 2 * nl],
+            },
+            n_f32 + 3 * n_mm + 1,
+        ))
+    }
+
+    /// `lm_decode_step` / `lm_decode_step_q4`: one token per active row.
+    /// Appends one K/V column at `pos[b]` and attends over `pos[b]+1`
+    /// cached positions; every per-row kernel runs in the same order as
+    /// the full forward, so logits are bit-identical to full-context
+    /// re-execution over the same context. Rows with `pos < 0` are
+    /// inactive: zero logits, caches untouched.
+    fn decode_step(&self, args: &[HostTensor], q4: bool) -> Result<Vec<HostTensor>> {
+        let (b, s, d, h, hd, ff, v) = self.dims();
+        let nl = self.m.n_layers;
+        let (mw, tail) = if q4 {
+            self.model_w_q4(args)?
+        } else {
+            self.model_w_dense(args)?
+        };
+        let mut caches: Vec<Vec<f32>> = (0..2 * nl)
+            .map(|i| args[tail + i].as_f32().map(|x| x.to_vec()))
+            .collect::<Result<_>>()?;
+        let token = args[tail + 2 * nl].as_i32()?;
+        let pos = args[tail + 2 * nl + 1].as_i32()?;
+        let inv_sqrt_hd = 1.0 / (hd as f32).sqrt();
+
+        let mut logits_out = vec![0.0f32; b * v];
+        for bi in 0..b {
+            if pos[bi] < 0 || pos[bi] as usize >= s {
+                continue;
+            }
+            let p = pos[bi] as usize;
+            let tok = (token[bi].max(0) as usize).min(v - 1);
+            let mut x = vec![0.0f32; d];
+            for j in 0..d {
+                x[j] = mw.embed[tok * d + j] + mw.pos[p * d + j];
+            }
+            for (li, lw) in mw.layers.iter().enumerate() {
+                let (a1, _) = rmsnorm(&x, lw.g1, d);
+                let qkv = row_matmul(&a1, &lw.wqkv, d, 3 * d);
+                caches[2 * li][(bi * s + p) * d..(bi * s + p + 1) * d]
+                    .copy_from_slice(&qkv[d..2 * d]);
+                caches[2 * li + 1][(bi * s + p) * d..(bi * s + p + 1) * d]
+                    .copy_from_slice(&qkv[2 * d..3 * d]);
+                let kc = &caches[2 * li];
+                let vc = &caches[2 * li + 1];
+                let mut y = vec![0.0f32; d];
+                for hi in 0..h {
+                    let hoff = hi * hd;
+                    let q1 = &qkv[hoff..hoff + hd];
+                    let mut row = vec![0.0f32; p + 1];
+                    let mut maxv = f32::NEG_INFINITY;
+                    for (s2, rv) in row.iter_mut().enumerate() {
+                        let k2 = &kc[(bi * s + s2) * d + hoff..(bi * s + s2) * d + hoff + hd];
+                        let mut dot = 0.0f32;
+                        for e in 0..hd {
+                            dot += q1[e] * k2[e];
+                        }
+                        let sc = dot * inv_sqrt_hd;
+                        *rv = sc;
+                        if sc > maxv {
+                            maxv = sc;
+                        }
+                    }
+                    let mut denom = 0.0f32;
+                    for rv in row.iter_mut() {
+                        *rv = (*rv - maxv).exp();
+                        denom += *rv;
+                    }
+                    let inv = 1.0 / denom;
+                    let yr = &mut y[hoff..hoff + hd];
+                    for (s2, rv) in row.iter().enumerate() {
+                        let prob = rv * inv;
+                        let v2 = &vc[(bi * s + s2) * d + hoff..(bi * s + s2) * d + hoff + hd];
+                        for e in 0..hd {
+                            yr[e] += prob * v2[e];
+                        }
+                    }
+                }
+                let attn_out = row_matmul(&y, &lw.wo, d, d);
+                add_in_place(&mut x, &attn_out);
+                let (a2, _) = rmsnorm(&x, lw.g2, d);
+                let h_pre = row_matmul(&a2, &lw.win, d, ff);
+                let mut hact = vec![0.0f32; ff];
+                for (o, &i) in hact.iter_mut().zip(&h_pre) {
+                    *o = gelu(i);
+                }
+                let mlp_out = row_matmul(&hact, &lw.wout, ff, d);
+                add_in_place(&mut x, &mlp_out);
+            }
+            let (xf, _) = rmsnorm(&x, mw.lnf, d);
+            let lrow = matmul(&xf, mw.head, 1, d, v);
+            logits_out[bi * v..(bi + 1) * v].copy_from_slice(&lrow);
+        }
+
+        let mut out = vec![HostTensor::f32(logits_out, vec![b, v])];
+        for c in caches {
+            out.push(HostTensor::f32(c, vec![b, s, d]));
+        }
+        Ok(out)
+    }
+
     fn train_step(&self, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
         let pspecs = param_specs(&self.m);
         let np = pspecs.len();
@@ -1350,6 +1737,68 @@ mod tests {
                     assert_eq!(l1[ti * v + j], l2[ti * v + j], "b={bi} s={si}");
                 }
             }
+        }
+    }
+
+    /// Unit-level KV equivalence on the tiny model: prefill logits and a
+    /// decode step must be bit-identical to the full forward.
+    #[test]
+    fn prefill_decode_matches_forward_on_tiny_model() {
+        let be = tiny();
+        let (b, s, v) = (be.m.batch, be.m.seq_len, be.m.vocab);
+        let params = tiny_params(&be, 20);
+        let toks = tiny_tokens(&be, 21);
+        let specs = param_specs(&be.m);
+        let param_tensors = |p: &[Vec<f32>]| -> Vec<HostTensor> {
+            specs
+                .iter()
+                .zip(p)
+                .map(|((_, shp), data)| HostTensor::f32(data.clone(), shp.clone()))
+                .collect()
+        };
+
+        // right-padded prompts of length 3 in every row
+        let plen = 3usize;
+        let mut ptoks = vec![0i32; b * s];
+        for bi in 0..b {
+            for j in 0..plen {
+                ptoks[bi * s + j] = toks[bi * s + j];
+            }
+        }
+        let mut args = param_tensors(&params);
+        args.push(HostTensor::i32(ptoks.clone(), vec![b, s]));
+        args.push(HostTensor::i32(vec![plen as i32; b], vec![b]));
+        let out = be.prefill(&args, false).unwrap();
+
+        let pv = views(&params);
+        let (logits, _) = be.forward(&pv, None, &ptoks);
+        let pre = out[0].as_f32().unwrap();
+        for bi in 0..b {
+            let ti = bi * s + plen - 1;
+            assert_eq!(&pre[bi * v..(bi + 1) * v], &logits[ti * v..(ti + 1) * v]);
+        }
+
+        // one decode step at position plen for every row
+        let mut dargs = param_tensors(&params);
+        dargs.extend(out[1..].iter().cloned());
+        let token: Vec<i32> = (0..b).map(|bi| toks[bi * s + plen]).collect();
+        dargs.push(HostTensor::i32(token, vec![b]));
+        dargs.push(HostTensor::i32(vec![plen as i32; b], vec![b]));
+        let dout = be.decode_step(&dargs, false).unwrap();
+
+        let mut ftoks = ptoks;
+        for bi in 0..b {
+            ftoks[bi * s + plen] = toks[bi * s + plen];
+        }
+        let (flogits, _) = be.forward(&pv, None, &ftoks);
+        let dl = dout[0].as_f32().unwrap();
+        for bi in 0..b {
+            let ti = bi * s + plen;
+            assert_eq!(
+                &dl[bi * v..(bi + 1) * v],
+                &flogits[ti * v..(ti + 1) * v],
+                "row {bi}"
+            );
         }
     }
 

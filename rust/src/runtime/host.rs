@@ -103,6 +103,18 @@ impl HostTensor {
         }
     }
 
+    /// Mutable f32 view (the serving engine scatters prefilled K/V rows
+    /// into its cache slabs in place).
+    pub fn as_f32_mut(&mut self) -> Result<&mut Vec<f32>> {
+        match self {
+            HostTensor::F32(d, _) => Ok(d),
+            other => Err(crate::err!(
+                "expected f32 tensor, got {}",
+                other.dtype_str()
+            )),
+        }
+    }
+
     pub fn into_f32(self) -> Result<Vec<f32>> {
         match self {
             HostTensor::F32(d, _) => Ok(d),

@@ -15,6 +15,7 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use crate::error::{Context, Result};
+use crate::quant::double_quant::CHUNK as DQ_CHUNK;
 use crate::util::json::Json;
 
 /// One graph argument/result descriptor.
@@ -139,8 +140,11 @@ pub struct Meta {
 
 impl Meta {
     /// Build the full graph ABI in Rust, without any artifact files —
-    /// the hermetic path the CPU backend uses. Graph names, argument
-    /// order, shapes and dtypes match `aot.py::lower_graphs` exactly.
+    /// the hermetic path the CPU backend uses. For every graph that
+    /// `aot.py::lower_graphs` lowers, names, argument order, shapes and
+    /// dtypes match it exactly; the KV-cached serving graphs
+    /// (`lm_prefill*`/`lm_decode_step*`) are builtin-only extensions the
+    /// XLA artifact set does not carry.
     pub fn builtin() -> Meta {
         let m = ModelMeta::canonical();
         let dir = Self::default_dir();
@@ -251,6 +255,90 @@ impl Meta {
         ll.push(tokens_arg());
         add("lm_logits_last_lora", ll.clone(), vec!["logits_last".into()]);
         add("lm_logits_all_lora", ll, vec!["logits".into()]);
+
+        // --- KV-cached serving (prefill + incremental decode) -----------
+        //
+        // These graphs exist only in the builtin (CPU) ABI: the XLA
+        // artifact set stops at the eval forwards, so on that backend the
+        // session engine falls back to full-context serving through
+        // `lm_logits_all`, and `lm_logits_last`/`lm_logits_all` double as
+        // the equivalence oracles for these kernels.
+        //
+        // `lm_prefill` runs the full forward over a right-padded prompt
+        // batch and returns the last-valid-position logits per row plus
+        // the per-layer K/V tensors; `lm_decode_step` consumes one token
+        // per row, appends one K/V column at `pos` and attends over
+        // `pos+1` cached positions instead of recomputing `seq_len^2`.
+        // Rows with `pos < 0` are inactive (logits zero, cache untouched).
+        let cache_shape = vec![m.batch, m.seq_len, m.d_model];
+        let cache_args = |v: &mut Vec<ArgMeta>| {
+            for l in 0..m.n_layers {
+                v.push(arg(&format!("l{l}.k_cache"), cache_shape.clone(), &f32s));
+                v.push(arg(&format!("l{l}.v_cache"), cache_shape.clone(), &f32s));
+            }
+        };
+        let cache_results = || -> Vec<String> {
+            (0..m.n_layers)
+                .flat_map(|l| [format!("l{l}.k_cache"), format!("l{l}.v_cache")])
+                .collect()
+        };
+        let prefill_tail = |v: &mut Vec<ArgMeta>| {
+            v.push(tokens_arg());
+            v.push(arg("lens", vec![m.batch], "int32"));
+        };
+        let decode_tail = |v: &mut Vec<ArgMeta>| {
+            cache_args(v);
+            v.push(arg("token", vec![m.batch], "int32"));
+            v.push(arg("pos", vec![m.batch], "int32"));
+        };
+
+        let mut pf = params_args("");
+        prefill_tail(&mut pf);
+        let mut pf_res = vec!["logits_last".to_string()];
+        pf_res.extend(cache_results());
+        add("lm_prefill", pf, pf_res.clone());
+
+        let mut ds = params_args("");
+        decode_tail(&mut ds);
+        let mut ds_res = vec!["logits".to_string()];
+        ds_res.extend(cache_results());
+        add("lm_decode_step", ds, ds_res.clone());
+
+        // Quantized-serving variants: matmul weights as 4-bit codes with
+        // the per-block constants stored 8-bit (double-quantized) and
+        // dequantized inside the fused matmul — the end-to-end DQ path.
+        let q4_serving_prefix = || -> Vec<ArgMeta> {
+            let mut v = Vec::new();
+            for (n, s) in &pspecs {
+                if !mm.contains(n) {
+                    v.push(arg(n, s.clone(), &f32s));
+                }
+            }
+            for n in &mm {
+                v.push(arg(&format!("{n}.codes"), pshapes[n].clone(), "uint8"));
+            }
+            for n in &mm {
+                let s = &pshapes[n];
+                v.push(arg(
+                    &format!("{n}.absmax_codes"),
+                    vec![s[0], s[1] / m.block],
+                    "uint8",
+                ));
+            }
+            for n in &mm {
+                let s = &pshapes[n];
+                let nchunks = (s[0] * s[1] / m.block).div_ceil(DQ_CHUNK);
+                v.push(arg(&format!("{n}.absmax_params"), vec![nchunks, 2], &f32s));
+            }
+            v.push(arg("levels", vec![16], &f32s));
+            v
+        };
+        let mut pfq = q4_serving_prefix();
+        prefill_tail(&mut pfq);
+        add("lm_prefill_q4", pfq, pf_res);
+        let mut dsq = q4_serving_prefix();
+        decode_tail(&mut dsq);
+        add("lm_decode_step_q4", dsq, ds_res);
 
         // --- standalone kernels -----------------------------------------
         let (mk, kk, nn) = (128usize, 256usize, 256usize);
@@ -489,6 +577,38 @@ mod tests {
         assert_eq!(q4.arg_index("l0.wqkv.codes"), Some(8));
         let am = &q4.args[q4.arg_index("l0.wqkv.absmax").unwrap()];
         assert_eq!(am.shape, vec![128, 6]);
+    }
+
+    #[test]
+    fn builtin_kv_serving_graphs() {
+        let meta = Meta::builtin();
+        let pf = meta.graph("lm_prefill").unwrap();
+        // 16 params + tokens + lens
+        assert_eq!(pf.args.len(), 18);
+        assert_eq!(pf.args[16].name, "tokens");
+        assert_eq!(pf.args[17].name, "lens");
+        assert_eq!(pf.args[17].shape, vec![16]);
+        assert_eq!(pf.results[0], "logits_last");
+        assert_eq!(pf.results.len(), 1 + 2 * meta.model.n_layers);
+        let ds = meta.graph("lm_decode_step").unwrap();
+        // 16 params + 4 caches + token + pos
+        assert_eq!(ds.args.len(), 16 + 4 + 2);
+        assert_eq!(ds.args[16].name, "l0.k_cache");
+        assert_eq!(ds.args[16].shape, vec![16, 64, 128]);
+        assert_eq!(ds.args[20].name, "token");
+        assert_eq!(ds.args[21].name, "pos");
+        assert_eq!(ds.results[0], "logits");
+        // q4: 8 f32 + 8 codes + 8 absmax_codes + 8 absmax_params + levels
+        let pq = meta.graph("lm_prefill_q4").unwrap();
+        assert_eq!(pq.args.len(), 8 + 3 * 8 + 1 + 2);
+        let amp = &pq.args[pq.arg_index("l0.wqkv.absmax_params").unwrap()];
+        assert_eq!(amp.shape, vec![3, 2]); // 768 constants in 256-chunks
+        let amc = &pq.args[pq.arg_index("l0.wqkv.absmax_codes").unwrap()];
+        assert_eq!(amc.shape, vec![128, 6]);
+        assert_eq!(amc.dtype, "uint8");
+        let dq = meta.graph("lm_decode_step_q4").unwrap();
+        assert_eq!(dq.args.len(), 8 + 3 * 8 + 1 + 4 + 2);
+        assert_eq!(dq.results.len(), 5);
     }
 
     #[test]

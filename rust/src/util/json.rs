@@ -86,12 +86,12 @@ impl Json {
         }
     }
 
-    /// Array of numbers -> Vec<f64>.
+    /// Array of numbers -> `Vec<f64>`.
     pub fn as_f64_vec(&self) -> Option<Vec<f64>> {
         self.as_arr()?.iter().map(|j| j.as_f64()).collect()
     }
 
-    /// Array of numbers -> Vec<f32>.
+    /// Array of numbers -> `Vec<f32>`.
     pub fn as_f32_vec(&self) -> Option<Vec<f32>> {
         self.as_arr()?
             .iter()
@@ -180,12 +180,19 @@ pub fn arr_str(xs: &[&str]) -> Json {
     Json::Arr(xs.iter().map(|s| Json::Str(s.to_string())).collect())
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("json error at byte {pos}: {msg}")]
+#[derive(Debug)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 struct Parser<'a> {
     bytes: &'a [u8],

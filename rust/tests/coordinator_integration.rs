@@ -5,7 +5,9 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use bof4::coordinator::{BatchedLm, QuantJob, QuantScheduler, ServiceConfig};
+use bof4::coordinator::{
+    BatchedLm, Engine, EngineConfig, QuantJob, QuantScheduler, ServiceConfig,
+};
 use bof4::quant::{Method, Norm, QuantConfig};
 use bof4::runtime::{HostTensor, Runtime};
 use bof4::testkit::{forall, Gen, Prop, USizeRange};
@@ -238,6 +240,150 @@ fn generate_extends_context() {
     let (_rt, svc) = service();
     let out = svc.generate(&[1, 2, 3], 5).unwrap();
     assert_eq!(out.len(), 5);
+}
+
+// ---------------------------------------------------------------------
+// session engine: streaming, continuous batching, replicas
+// ---------------------------------------------------------------------
+
+fn engine_with(cfg: EngineConfig) -> (Arc<Runtime>, Engine) {
+    let rt = Arc::new(Runtime::new().unwrap());
+    let params = rt
+        .run("init_params", &[HostTensor::scalar_u32(3)])
+        .unwrap();
+    let engine = Engine::start(rt.clone(), params, cfg).unwrap();
+    (rt, engine)
+}
+
+#[test]
+fn session_streams_exact_token_count() {
+    let (_rt, engine) = engine_with(EngineConfig::default());
+    let toks = engine
+        .session_with(&[1, 2, 3], 7)
+        .unwrap()
+        .collect_tokens()
+        .unwrap();
+    assert_eq!(toks.len(), 7);
+    // 1 prefill token stream start + 6 incremental decode tokens
+    assert_eq!(engine.metrics.core.get("sessions"), 1);
+    assert_eq!(engine.metrics.core.get("decode_tokens"), 6);
+    assert_eq!(engine.metrics.core.get("prefill_tokens"), 3);
+}
+
+/// Session streams are capped by the KV-cache capacity: a prompt of
+/// `seq_len - 2` can produce at most 3 tokens however large the budget.
+#[test]
+fn session_ends_when_kv_cache_fills() {
+    let (rt, engine) = engine_with(EngineConfig::default());
+    let s = rt.meta.model.seq_len;
+    let prompt = vec![7u8; s - 2];
+    let toks = engine
+        .session(&prompt)
+        .unwrap()
+        .collect_tokens()
+        .unwrap();
+    assert_eq!(toks.len(), 3); // prefill token + 2 decode columns
+}
+
+/// Continuous batching: a session that arrives while another is
+/// mid-decode is admitted into a free slot (no waiting for the batch to
+/// drain) and both still stream exactly-once token counts.
+#[test]
+fn late_session_admitted_mid_decode_exactly_once() {
+    let (_rt, engine) = engine_with(EngineConfig::default());
+    let mut a = engine.session_with(&[5; 8], 40).unwrap();
+    let mut a_tokens = Vec::new();
+    // A is demonstrably mid-decode once its first tokens arrive
+    for _ in 0..2 {
+        a_tokens.push(a.next_token().unwrap().unwrap().next_token);
+    }
+    let b = engine.session_with(&[9; 4], 5).unwrap();
+    let b_tokens = b.collect_tokens().unwrap();
+    assert_eq!(b_tokens.len(), 5, "late session must stream its budget");
+    for ev in a {
+        a_tokens.push(ev.unwrap().next_token);
+    }
+    assert_eq!(a_tokens.len(), 40, "first session must stream its budget");
+    // exactly-once accounting: two sessions, two separate prefills
+    assert_eq!(engine.metrics.core.get("sessions"), 2);
+    assert_eq!(engine.metrics.core.get("batched_requests"), 2);
+    assert_eq!(engine.metrics.core.get("batches"), 2);
+    // overlap actually happened: some decode step ran with both slots live
+    let occ = engine
+        .metrics
+        .core
+        .latency_stats("slot_occupancy")
+        .expect("occupancy recorded");
+    assert!(
+        occ.max_ms >= 2.0 / 16.0 - 1e-9,
+        "no decode step saw both sessions live: {occ:?}"
+    );
+}
+
+#[test]
+fn multi_replica_engine_serves_all_sessions() {
+    let (_rt, engine) = engine_with(EngineConfig {
+        replicas: 2,
+        ..EngineConfig::default()
+    });
+    let sessions: Vec<_> = (0..6)
+        .map(|i| engine.session_with(&[i as u8 + 1; 5], 4).unwrap())
+        .collect();
+    for sess in sessions {
+        assert_eq!(sess.collect_tokens().unwrap().len(), 4);
+    }
+    assert_eq!(engine.metrics.core.get("sessions"), 6);
+    // round-robin over 2 replicas: at least 2 prefill batches ran
+    assert!(engine.metrics.core.get("batches") >= 2);
+    assert!(engine.metrics.summary().contains("sessions: 6"));
+}
+
+/// The full-context fallback mode (what `Engine::start` auto-selects on
+/// backends without the KV serving graphs, e.g. the XLA artifact ABI)
+/// must stream exactly the same tokens and logits as KV-cached serving.
+#[test]
+fn full_context_fallback_matches_kv_engine() {
+    let rt = Arc::new(Runtime::new().unwrap());
+    let params = rt
+        .run("init_params", &[HostTensor::scalar_u32(3)])
+        .unwrap();
+    let kv = Engine::start(rt.clone(), params.clone(), EngineConfig::default()).unwrap();
+    let full = Engine::start_full_context(rt.clone(), params, EngineConfig::default()).unwrap();
+    for prompt in [&[1u8, 2, 3][..], &[7; 10][..]] {
+        let a: Vec<_> = kv
+            .session_with(prompt, 5)
+            .unwrap()
+            .map(|ev| {
+                let ev = ev.unwrap();
+                (ev.next_token, ev.logit)
+            })
+            .collect();
+        let b: Vec<_> = full
+            .session_with(prompt, 5)
+            .unwrap()
+            .map(|ev| {
+                let ev = ev.unwrap();
+                (ev.next_token, ev.logit)
+            })
+            .collect();
+        assert_eq!(a, b, "modes diverged for prompt {prompt:?}");
+        assert_eq!(a.len(), 5);
+    }
+}
+
+/// The engine's generate must agree with the deprecated shim's generate
+/// (same implementation, one KV-cached session under the hood).
+#[test]
+fn engine_generate_matches_shim_generate() {
+    let (rt, engine) = engine_with(EngineConfig::default());
+    let params = rt
+        .run("init_params", &[HostTensor::scalar_u32(3)])
+        .unwrap();
+    let svc = BatchedLm::start(rt.clone(), params, ServiceConfig::default()).unwrap();
+    let a = engine.generate(&[1, 2, 3, 4], 6).unwrap();
+    let b = svc.generate(&[1, 2, 3, 4], 6).unwrap();
+    assert_eq!(a, b);
+    assert_eq!(a.len(), 6);
 }
 
 /// A lone request must be answered after ~one batching window plus one

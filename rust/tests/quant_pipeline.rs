@@ -3,9 +3,11 @@
 //! model-level quantize_params — checking the paper's ordering claims on
 //! synthetic LLM weights.
 
-use bof4::eval::quantized::quantize_params;
+use bof4::eval::quantized::{quantize_for_serving, quantize_params};
 use bof4::models::{ParamSet, SyntheticModel};
 use bof4::quant::{quant_error, Method, Norm, OpqConfig, QuantConfig, Quantizer};
+use bof4::runtime::meta::param_specs;
+use bof4::runtime::Meta;
 use bof4::testkit::{forall, GaussianVec, Prop};
 use bof4::util::rng::Pcg64;
 
@@ -170,6 +172,79 @@ fn double_quant_signed_constants() {
     let b_plain = plain.quantize(&w).bytes();
     let b_dq = dq.quantize(&w).bytes();
     assert!(b_dq < b_plain);
+}
+
+/// The serving-path quantization (4-bit codes + 8-bit DQ constants in the
+/// `*_q4` graph ABI) must produce ABI-exact tensors, and its dense oracle
+/// must equal the storage-layer `Quantizer` dequantization bit-for-bit —
+/// both compute `levels[c] * (min + code * scale)` in the same order.
+#[test]
+fn serving_quantization_matches_storage_dequant() {
+    let meta = Meta::builtin();
+    let mut rng = Pcg64::seed_from_u64(404);
+    let entries: Vec<(String, Vec<usize>, Vec<f32>)> = param_specs(&meta.model)
+        .into_iter()
+        .map(|(name, shape)| {
+            let n: usize = shape.iter().product();
+            let mut v = vec![0.0f32; n];
+            rng.fill_gaussian_f32(&mut v, 0.05);
+            (name, shape, v)
+        })
+        .collect();
+    let pset = ParamSet { entries };
+    let cfg = QuantConfig {
+        method: Method::Bof4 { mse: true },
+        norm: Norm::SignedAbsmax,
+        block: meta.model.block,
+        opq: None,
+        double_quant: true,
+    };
+    let qsp = quantize_for_serving(&meta, &pset, &cfg).unwrap();
+
+    // prefix matches the q4 serving graph ABI exactly
+    for graph in ["lm_prefill_q4", "lm_decode_step_q4"] {
+        let gm = meta.graph(graph).unwrap();
+        assert!(qsp.prefix.len() < gm.args.len());
+        for (t, a) in qsp.prefix.iter().zip(&gm.args) {
+            assert_eq!(t.shape(), a.shape.as_slice(), "{graph} arg {}", a.name);
+            assert_eq!(t.dtype_str(), a.dtype, "{graph} arg {}", a.name);
+        }
+    }
+    assert_eq!(qsp.dense.len(), 16);
+    assert!(qsp.quant_bytes * 6 < qsp.orig_bytes, "~4.1 bits vs 32");
+
+    // dense oracle == storage-layer dequantization, bit-for-bit
+    let qz = Quantizer::new(cfg.clone());
+    for (idx, (name, shape, data)) in pset.entries.iter().enumerate() {
+        let is_mm = shape.len() == 2 && name.contains(".w");
+        let served = qsp.dense[idx].as_f32().unwrap();
+        if is_mm {
+            let want = qz.dequantize(&qz.quantize(data));
+            assert_eq!(served, &want[..], "{name} dense oracle diverged");
+        } else {
+            assert_eq!(served, &data[..], "{name} must pass through");
+        }
+    }
+
+    // OPQ and block mismatches are rejected on the serving path
+    assert!(quantize_for_serving(
+        &meta,
+        &pset,
+        &QuantConfig {
+            opq: Some(OpqConfig::default()),
+            ..cfg.clone()
+        }
+    )
+    .is_err());
+    assert!(quantize_for_serving(
+        &meta,
+        &pset,
+        &QuantConfig {
+            block: meta.model.block * 2,
+            ..cfg
+        }
+    )
+    .is_err());
 }
 
 /// Property: pack_u4/unpack_u4 round-trips for every length, including

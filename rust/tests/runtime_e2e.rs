@@ -3,6 +3,12 @@
 //! crate. The python-oracle fixture comparisons at the bottom still run
 //! when `make artifacts` has been built, and skip gracefully otherwise.
 
+use std::sync::Arc;
+
+use bof4::coordinator::{greedy_argmax, Engine, EngineConfig, EngineParams};
+use bof4::eval::quantize_for_serving;
+use bof4::models::corpus::TOK_SPACE;
+use bof4::models::ParamSet;
 use bof4::quant::{self, Method, Norm, QuantConfig, Quantizer};
 use bof4::runtime::{HostTensor, Meta, Runtime};
 use bof4::util::json::Json;
@@ -317,6 +323,246 @@ fn quantize_blocks_graph_matches_rust_encoder() {
     assert_eq!(codes_xla, codes_rust, "codes mismatch");
     for (a, b) in absmax_xla.iter().zip(&qt.absmax) {
         assert_eq!(a, b);
+    }
+}
+
+// ---------------------------------------------------------------------
+// KV-cached serving: prefill + decode_step equivalence vs full context
+// ---------------------------------------------------------------------
+
+/// With every row's `len == seq_len`, `lm_prefill`'s logits must be
+/// bit-identical to `lm_logits_last` — the fallback/equivalence oracle.
+#[test]
+fn prefill_full_rows_match_lm_logits_last() {
+    let rt = runtime();
+    let m = rt.meta.model.clone();
+    let params = init_params(&rt, 2);
+    let tokens = random_tokens(&rt, 3);
+    let mut args = params.clone();
+    args.push(tokens.clone());
+    let last = rt.run("lm_logits_last", &args).expect("lm_logits_last");
+    let mut pargs = params;
+    pargs.push(tokens);
+    pargs.push(HostTensor::i32(
+        vec![m.seq_len as i32; m.batch],
+        vec![m.batch],
+    ));
+    let pre = rt.run("lm_prefill", &pargs).expect("lm_prefill");
+    assert_eq!(pre.len(), 1 + 2 * m.n_layers);
+    assert_eq!(pre[0], last[0]);
+}
+
+/// Drive the graphs by hand for one prompt: every decode step's logits
+/// row must be bit-identical to full-context re-execution through
+/// `lm_logits_all`, and inactive rows must stay zero/untouched.
+#[test]
+fn decode_step_extends_prefill_bit_exactly() {
+    let rt = runtime();
+    let m = rt.meta.model.clone();
+    let (b, s, v) = (m.batch, m.seq_len, m.vocab);
+    let params = init_params(&rt, 5);
+    let mut rng = Pcg64::seed_from_u64(17);
+    let plen = 7usize;
+    let prompt: Vec<u8> = (0..plen).map(|_| rng.next_below(v as u64) as u8).collect();
+
+    // full-context oracle logits for an arbitrary context (right-padded)
+    let oracle = |ctx: &[u8]| -> Vec<f32> {
+        let mut toks = vec![TOK_SPACE as i32; b * s];
+        for (j, &t) in ctx.iter().enumerate() {
+            toks[j] = t as i32;
+        }
+        let mut args = params.clone();
+        args.push(HostTensor::i32(toks, vec![b, s]));
+        let out = rt.run("lm_logits_all", &args).expect("lm_logits_all");
+        let logits = out[0].as_f32().unwrap();
+        logits[(ctx.len() - 1) * v..ctx.len() * v].to_vec()
+    };
+
+    // prefill row 0 with the prompt
+    let mut toks = vec![TOK_SPACE as i32; b * s];
+    for (j, &t) in prompt.iter().enumerate() {
+        toks[j] = t as i32;
+    }
+    let mut lens = vec![1i32; b];
+    lens[0] = plen as i32;
+    let mut pargs = params.clone();
+    pargs.push(HostTensor::i32(toks, vec![b, s]));
+    pargs.push(HostTensor::i32(lens, vec![b]));
+    let out = rt.run("lm_prefill", &pargs).expect("lm_prefill");
+    let pre_logits = out[0].as_f32().unwrap();
+    assert_eq!(&pre_logits[..v], &oracle(&prompt)[..]);
+    let (mut tok, _) = greedy_argmax(&pre_logits[..v]);
+    let mut caches: Vec<HostTensor> = out[1..].to_vec();
+    let mut ctx = prompt.clone();
+    ctx.push(tok);
+
+    for step in 0..3usize {
+        let mut dargs = params.clone();
+        dargs.extend(caches.iter().cloned());
+        let mut token = vec![0i32; b];
+        token[0] = tok as i32;
+        let mut pos = vec![-1i32; b];
+        pos[0] = (plen + step) as i32;
+        dargs.push(HostTensor::i32(token, vec![b]));
+        dargs.push(HostTensor::i32(pos, vec![b]));
+        let dout = rt.run("lm_decode_step", &dargs).expect("lm_decode_step");
+        let logits = dout[0].as_f32().unwrap();
+        // active row: bit-identical to full-context re-execution
+        assert_eq!(&logits[..v], &oracle(&ctx)[..], "step {step}");
+        // inactive rows: zero logits, caches untouched
+        assert!(logits[v..].iter().all(|&x| x == 0.0));
+        for (c, dc) in caches.iter().zip(&dout[1..]) {
+            let (a, d) = (c.as_f32().unwrap(), dc.as_f32().unwrap());
+            assert_eq!(a[s * m.d_model..], d[s * m.d_model..], "row 1.. changed");
+        }
+        let (t, _) = greedy_argmax(&logits[..v]);
+        tok = t;
+        ctx.push(tok);
+        caches = dout[1..].to_vec();
+    }
+}
+
+/// Oracle greedy streams via batched full-context `lm_logits_all` calls:
+/// one row per session, right-padded; token `j` of session `i` is the
+/// greedy argmax at position `len-1` of its current context.
+fn oracle_streams(
+    rt: &Runtime,
+    dense: &[HostTensor],
+    prompts: &[Vec<u8>],
+    expected: &[usize],
+) -> Vec<Vec<(u8, f32)>> {
+    let m = rt.meta.model.clone();
+    let (b, s, v) = (m.batch, m.seq_len, m.vocab);
+    assert!(prompts.len() <= b);
+    let mut ctxs: Vec<Vec<u8>> = prompts.to_vec();
+    let mut streams: Vec<Vec<(u8, f32)>> = vec![Vec::new(); prompts.len()];
+    let max_len = expected.iter().copied().max().unwrap_or(0);
+    for _ in 0..max_len {
+        let mut toks = vec![TOK_SPACE as i32; b * s];
+        for (i, c) in ctxs.iter().enumerate() {
+            for (j, &t) in c.iter().enumerate().take(s) {
+                toks[i * s + j] = t as i32;
+            }
+        }
+        let mut args = dense.to_vec();
+        args.push(HostTensor::i32(toks, vec![b, s]));
+        let out = rt.run("lm_logits_all", &args).expect("lm_logits_all");
+        let logits = out[0].as_f32().unwrap();
+        for i in 0..ctxs.len() {
+            if streams[i].len() >= expected[i] {
+                continue;
+            }
+            let len = ctxs[i].len();
+            assert!(len >= 1 && len <= s, "oracle context must fit the window");
+            let row = &logits[(i * s + len - 1) * v..(i * s + len) * v];
+            let (tok, logit) = greedy_argmax(row);
+            streams[i].push((tok, logit));
+            ctxs[i].push(tok);
+        }
+    }
+    streams
+}
+
+/// Run one engine configuration over prompt lengths `lens` (in waves of
+/// up to `batch` sessions) and assert every session's greedy stream —
+/// tokens AND logit values — equals full-context re-execution.
+fn check_engine_equivalence(
+    rt: &Arc<Runtime>,
+    engine_params: EngineParams,
+    dense: &[HostTensor],
+    lens: &[usize],
+    budget: usize,
+    seed: u64,
+) {
+    let m = rt.meta.model.clone();
+    let engine = Engine::start(rt.clone(), engine_params, EngineConfig::default())
+        .expect("engine start");
+    let mut rng = Pcg64::seed_from_u64(seed);
+    for wave in lens.chunks(m.batch) {
+        let prompts: Vec<Vec<u8>> = wave
+            .iter()
+            .map(|&l| {
+                (0..l)
+                    .map(|_| rng.next_below(m.vocab as u64) as u8)
+                    .collect()
+            })
+            .collect();
+        let expected: Vec<usize> = wave
+            .iter()
+            .map(|&l| budget.min(1 + m.seq_len - l.min(m.seq_len)))
+            .collect();
+        let want = oracle_streams(rt, dense, &prompts, &expected);
+        let sessions: Vec<_> = prompts
+            .iter()
+            .map(|p| engine.session_with(p, budget).expect("session"))
+            .collect();
+        for ((sess, want), &plen) in sessions.into_iter().zip(&want).zip(wave) {
+            let got: Vec<(u8, f32)> = sess
+                .map(|ev| {
+                    let ev = ev.expect("stream ok");
+                    (ev.next_token, ev.logit)
+                })
+                .collect();
+            assert_eq!(
+                got.len(),
+                want.len(),
+                "prompt len {plen}: stream length mismatch"
+            );
+            for (j, (g, w)) in got.iter().zip(want).enumerate() {
+                assert_eq!(g.0, w.0, "prompt len {plen}, token {j}");
+                assert_eq!(g.1, w.1, "prompt len {plen}, logit {j} not bit-identical");
+            }
+        }
+    }
+}
+
+/// Dense engine vs full-context oracle, every prompt length 1..=seq_len.
+#[test]
+fn engine_streams_match_full_context_dense() {
+    let rt = Arc::new(runtime());
+    let params = init_params(&rt, 21);
+    let lens: Vec<usize> = (1..=rt.meta.model.seq_len).collect();
+    check_engine_equivalence(
+        &rt,
+        EngineParams::Dense(params.clone()),
+        &params,
+        &lens,
+        3,
+        100,
+    );
+}
+
+/// Quantized (q4 + 8-bit double-quantized constants) engine vs the same
+/// oracle over the exactly-dequantized weights — both norms.
+#[test]
+fn engine_streams_match_full_context_q4_dq() {
+    let rt = Arc::new(runtime());
+    let params = init_params(&rt, 22);
+    let gm = rt.meta.graph("lm_nll").unwrap().clone();
+    let pset = ParamSet::from_tensors(&gm, &params).unwrap();
+    let lens = [1usize, 2, 5, 16, 33, 63, 64];
+    for (norm, seed) in [(Norm::Absmax, 200u64), (Norm::SignedAbsmax, 300u64)] {
+        let qsp = quantize_for_serving(
+            &rt.meta,
+            &pset,
+            &QuantConfig {
+                method: Method::Bof4 { mse: true },
+                norm,
+                block: rt.meta.model.block,
+                opq: None,
+                double_quant: true,
+            },
+        )
+        .expect("quantize_for_serving");
+        assert!(qsp.quant_bytes * 2 < qsp.orig_bytes);
+        check_engine_equivalence(
+            &rt,
+            EngineParams::QuantizedQ4(qsp.prefix.clone()),
+            &qsp.dense,
+            &lens,
+            3,
+            seed,
+        );
     }
 }
 

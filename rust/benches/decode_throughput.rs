@@ -1,8 +1,11 @@
 //! Decode-throughput smoke benchmark and hermetic baseline recorder:
 //! greedy-decode N tokens through (a) the old full-recompute path (one
-//! whole-context `lm_logits_last` per token) and (b) the session
-//! engine's KV-cached prefill + `lm_decode_step` path, assert the engine
-//! wins, and record the numbers as JSON under `results/`.
+//! whole-context `lm_logits_last` per token), (b) the session engine at
+//! `BOF4_THREADS=1` (the PR-2-shaped single-thread baseline), and (c)
+//! the engine at the default thread count (threaded kernels + in-place
+//! KV caches); assert the engine beats full recompute and that threading
+//! does not lose to the 1-thread baseline, then record all three (with a
+//! `threads` field) as JSON under `results/`.
 //!
 //! ```bash
 //! cargo bench --bench decode_throughput          # full run
@@ -35,26 +38,47 @@ fn main() {
         r.engine,
         r.full_recompute
     );
+    // release smoke: the threaded engine must not lose to the PR-2-shaped
+    // single-thread baseline (10% noise allowance; on a single-core host
+    // the two runs are the same measurement)
+    assert!(
+        r.engine.as_secs_f64() <= r.engine_single.as_secs_f64() * 1.10,
+        "threaded engine ({} threads, {:?}) lost to the 1-thread baseline ({:?})",
+        r.threads,
+        r.engine,
+        r.engine_single
+    );
     println!(
-        "decode {} tokens on {}: full-recompute {:.3}s ({:.1} tok/s) | engine {:.3}s ({:.1} tok/s) | speedup {:.1}x",
+        "decode {} tokens on {}: full-recompute {:.3}s ({:.1} tok/s) | engine@1t {:.3}s ({:.1} tok/s) | engine@{}t {:.3}s ({:.1} tok/s) | speedup {:.1}x vs full, {:.1}x vs 1t",
         r.tokens,
         rt.platform(),
         r.full_recompute.as_secs_f64(),
         r.full_tps(),
+        r.engine_single.as_secs_f64(),
+        r.engine_single_tps(),
+        r.threads,
         r.engine.as_secs_f64(),
         r.engine_tps(),
-        r.speedup()
+        r.speedup(),
+        r.thread_speedup()
     );
 
     let json = bof4::util::json::obj(vec![
         ("bench", Json::Str("decode_throughput".into())),
         ("backend", Json::Str(rt.platform())),
+        ("threads", Json::Num(r.threads as f64)),
         ("tokens", Json::Num(r.tokens as f64)),
         ("full_recompute_s", Json::Num(r.full_recompute.as_secs_f64())),
         ("full_recompute_tokens_per_s", Json::Num(r.full_tps())),
+        ("engine_single_thread_s", Json::Num(r.engine_single.as_secs_f64())),
+        (
+            "engine_single_thread_tokens_per_s",
+            Json::Num(r.engine_single_tps()),
+        ),
         ("engine_s", Json::Num(r.engine.as_secs_f64())),
         ("engine_tokens_per_s", Json::Num(r.engine_tps())),
         ("speedup", Json::Num(r.speedup())),
+        ("thread_speedup", Json::Num(r.thread_speedup())),
     ])
     .to_string();
     let dir = bof4::eval::report::results_dir();

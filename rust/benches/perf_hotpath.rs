@@ -7,6 +7,7 @@ use std::sync::Arc;
 use bof4::bench::{bench, Measurement};
 use bof4::eval::report::Table;
 use bof4::quant::{Method, Norm, QuantConfig, Quantizer};
+use bof4::runtime::kernels::{self, ThreadPool};
 use bof4::runtime::{HostTensor, Meta, Runtime};
 use bof4::util::rng::Pcg64;
 
@@ -85,6 +86,79 @@ fn main() {
     });
     push(&m, (1 << 20) as f64, "Gsamples/s");
 
+    // --- runtime::kernels per-kernel rows (1 thread vs default pool) -----
+    // makes the decode/forward speedups attributable kernel by kernel
+    {
+        let pool1 = ThreadPool::with_threads(1);
+        let pool_n = kernels::default_pool();
+        let nt = pool_n.threads();
+        let nt_tag = format!("{nt}t");
+        let pools: [(&str, &ThreadPool); 2] = [("1t", &pool1), (&nt_tag, pool_n.as_ref())];
+        let mm = Meta::builtin().model;
+        let (b, s, d, h, ff) = (mm.batch, mm.seq_len, mm.d_model, mm.n_heads, mm.d_ff);
+        let t = b * s;
+        let mut rng = Pcg64::seed_from_u64(21);
+        let mut x = vec![0.0f32; t * d];
+        let mut w = vec![0.0f32; d * ff];
+        rng.fill_gaussian_f32(&mut x, 0.5);
+        rng.fill_gaussian_f32(&mut w, 0.05);
+        let gemm_flops = 2.0 * t as f64 * d as f64 * ff as f64;
+        for (tag, pool) in pools {
+            let m = bench(&format!("dense gemm {t}x{d}x{ff} ({tag})"), 2, 10, || {
+                std::hint::black_box(kernels::tiling::matmul(pool, &x, &w, t, d, ff));
+            });
+            push(&m, gemm_flops, "GFLOP/s");
+        }
+
+        // fused q4 gemm at the dequant_matmul graph shape
+        let (qm, qk, qn, blk) = (128usize, 256usize, 256usize, mm.block);
+        let mut qx = vec![0.0f32; qm * qk];
+        rng.fill_gaussian_f32(&mut qx, 0.5);
+        let codes: Vec<u8> = (0..qk * qn).map(|i| (i % 16) as u8).collect();
+        let absmax: Vec<f32> = (0..qk * qn / blk).map(|i| 0.05 + (i % 7) as f32 * 0.01).collect();
+        let levels: Vec<f32> = (0..16).map(|i| (i as f32 - 7.5) / 7.5).collect();
+        let q4_flops = 2.0 * qm as f64 * qk as f64 * qn as f64;
+        for (tag, pool) in pools {
+            let m = bench(&format!("q4 gemm {qm}x{qk}x{qn} ({tag})"), 2, 10, || {
+                std::hint::black_box(kernels::q4::q4_matmul(
+                    pool, &qx, &codes, &absmax, &levels, qm, qk, qn, blk,
+                ));
+            });
+            push(&m, q4_flops, "GFLOP/s");
+        }
+
+        // attention: full forward and one incremental decode-step row
+        let mut qkv = vec![0.0f32; t * 3 * d];
+        rng.fill_gaussian_f32(&mut qkv, 0.5);
+        // ~2 gemms of s*s*hd per (b,h) plus softmax; count the gemm flops
+        let att_flops = 2.0 * (b * h) as f64 * (s * s) as f64 * (d / h) as f64 * 2.0;
+        for (tag, pool) in pools {
+            let m = bench(&format!("attention fwd b{b} h{h} s{s} ({tag})"), 2, 10, || {
+                std::hint::black_box(kernels::attention::mha_forward(pool, &qkv, b, h, s, d));
+            });
+            push(&m, att_flops, "GFLOP/s");
+        }
+        let mut kc = vec![0.0f32; s * d];
+        let mut vc = vec![0.0f32; s * d];
+        rng.fill_gaussian_f32(&mut kc, 0.5);
+        rng.fill_gaussian_f32(&mut vc, 0.5);
+        let step_flops = 2.0 * s as f64 * d as f64 * 2.0;
+        for (tag, pool) in pools {
+            let m = bench(&format!("attention step p={} ({tag})", s - 1), 2, 200, || {
+                std::hint::black_box(kernels::attention::decode_attention(
+                    pool,
+                    &qkv[..3 * d],
+                    &kc,
+                    &vc,
+                    d,
+                    h,
+                    s - 1,
+                ));
+            });
+            push(&m, step_flops, "GFLOP/s");
+        }
+    }
+
     // --- KV-cached decode vs full recompute ------------------------------
     {
         let rt = Arc::new(Runtime::new().unwrap());
@@ -100,9 +174,19 @@ fn main() {
             format!("{:.1} tok/s", r.full_tps()),
         ]);
         table.row(vec![
-            format!("decode {n_tok} tok (engine KV cache)"),
+            format!("decode {n_tok} tok (engine, 1 thread)"),
+            bof4::util::timer::fmt_duration(r.engine_single / n_tok as u32),
+            format!("{:.1} tok/s", r.engine_single_tps()),
+        ]);
+        table.row(vec![
+            format!("decode {n_tok} tok (engine, {} threads)", r.threads),
             bof4::util::timer::fmt_duration(r.engine / n_tok as u32),
-            format!("{:.1} tok/s ({:.1}x)", r.engine_tps(), r.speedup()),
+            format!(
+                "{:.1} tok/s ({:.1}x vs full, {:.1}x vs 1t)",
+                r.engine_tps(),
+                r.speedup(),
+                r.thread_speedup()
+            ),
         ]);
     }
 

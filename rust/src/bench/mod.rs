@@ -68,12 +68,20 @@ pub fn bench_auto<F: FnMut()>(name: &str, target: Duration, mut f: F) -> Measure
 }
 
 /// Decode-throughput comparison between the pre-engine full-recompute
-/// path and the session engine's KV-cached prefill + decode_step path.
+/// path, the engine at one kernel thread, and the engine at the default
+/// thread count (threaded kernels + in-place KV caches).
 #[derive(Clone, Copy, Debug)]
 pub struct DecodeThroughput {
     pub tokens: usize,
     pub full_recompute: Duration,
+    /// Engine wall time at the default thread count.
     pub engine: Duration,
+    /// Engine wall time with a 1-thread kernel pool (the PR-2-shaped
+    /// single-thread baseline; equals `engine` on non-CPU backends or
+    /// when the pool already has one thread).
+    pub engine_single: Duration,
+    /// Kernel-pool width the `engine` measurement ran at.
+    pub threads: usize,
 }
 
 impl DecodeThroughput {
@@ -85,16 +93,29 @@ impl DecodeThroughput {
         self.tokens as f64 / self.engine.as_secs_f64().max(1e-12)
     }
 
+    pub fn engine_single_tps(&self) -> f64 {
+        self.tokens as f64 / self.engine_single.as_secs_f64().max(1e-12)
+    }
+
     pub fn speedup(&self) -> f64 {
         self.full_recompute.as_secs_f64() / self.engine.as_secs_f64().max(1e-12)
     }
+
+    /// Threaded engine vs the 1-thread engine (1.0 when no comparison
+    /// ran).
+    pub fn thread_speedup(&self) -> f64 {
+        self.engine_single.as_secs_f64() / self.engine.as_secs_f64().max(1e-12)
+    }
 }
 
-/// Greedy-decode `n_tokens` twice over the same parameters: (a) the old
-/// full-recompute loop — one whole-context `lm_logits_last` execution per
-/// emitted token, cost quadratic in sequence length — and (b) one
-/// [`crate::coordinator::Engine`] session (prefill once, then one
-/// incremental `lm_decode_step` per token).
+/// Greedy-decode `n_tokens` over the same parameters three ways: (a) the
+/// old full-recompute loop — one whole-context `lm_logits_last`
+/// execution per emitted token, cost quadratic in sequence length; (b)
+/// one [`crate::coordinator::Engine`] session over a 1-thread CPU
+/// backend (the PR-2-shaped single-thread baseline; skipped off-CPU);
+/// (c) one engine session at the default kernel thread count (threaded
+/// kernels + in-place KV caches). All three streams must agree — the
+/// bench doubles as a determinism smoke test.
 pub fn decode_throughput(
     rt: &std::sync::Arc<crate::runtime::Runtime>,
     params: Vec<crate::runtime::HostTensor>,
@@ -103,7 +124,8 @@ pub fn decode_throughput(
 ) -> crate::error::Result<DecodeThroughput> {
     use crate::coordinator::{greedy_argmax, Engine, EngineConfig};
     use crate::models::corpus::TOK_SPACE;
-    use crate::runtime::HostTensor;
+    use crate::runtime::{CpuBackend, HostTensor, Meta, Runtime};
+    use std::sync::Arc;
     let m = rt.meta.model.clone();
     let (b, s, v) = (m.batch, m.seq_len, m.vocab);
 
@@ -127,7 +149,26 @@ pub fn decode_throughput(
     }
     let full_recompute = t0.elapsed();
 
-    // (b) the session engine: prefill + incremental decode
+    // the measured engine's actual pool width (not the env derivation —
+    // a runtime built via CpuBackend::with_threads must be reported as
+    // built)
+    let threads = rt.pool_threads().unwrap_or(1);
+
+    // (b) the engine over a 1-thread kernel pool (CPU backend only)
+    let mut engine_single = None;
+    let mut single_toks = None;
+    if rt.platform() == "cpu-interpreter" && threads > 1 {
+        let meta = Meta::builtin();
+        let be = CpuBackend::with_threads(meta.model.clone(), 1);
+        let rt1 = Arc::new(Runtime::with_backend(meta, Box::new(be)));
+        let engine1 = Engine::start(rt1, params.clone(), EngineConfig::default())?;
+        let t0 = Instant::now();
+        let toks1 = engine1.generate(prompt, n_tokens)?;
+        engine_single = Some(t0.elapsed());
+        single_toks = Some(toks1);
+    }
+
+    // (c) the session engine: prefill + incremental in-place decode
     let engine = Engine::start(rt.clone(), params, EngineConfig::default())?;
     let t0 = Instant::now();
     let toks = engine.generate(prompt, n_tokens)?;
@@ -138,10 +179,19 @@ pub fn decode_throughput(
             toks.len()
         ));
     }
+    if let Some(t1) = &single_toks {
+        if t1 != &toks {
+            return Err(crate::err!(
+                "threaded engine stream diverged from the 1-thread stream"
+            ));
+        }
+    }
     Ok(DecodeThroughput {
         tokens: n_tokens,
         full_recompute,
         engine: engine_elapsed,
+        engine_single: engine_single.unwrap_or(engine_elapsed),
+        threads,
     })
 }
 

@@ -120,7 +120,12 @@ const TOKEN_LATENCY_BOUNDS_MS: [f64; 10] =
 /// Counter names: `batches` (prefill executions), `batched_requests`
 /// (sessions admitted), `sessions`, `prefill_tokens`, `decode_tokens`,
 /// `decode_steps`. Latency series: `prefill_exec`, `decode_step_exec`,
-/// `token_latency` (ms) and `slot_occupancy` (fraction, 0..=1).
+/// `token_latency` (ms), `slot_occupancy` (fraction, 0..=1) and
+/// `pool_busy` (kernel-pool lane occupancy, fraction 0..=1 — the
+/// replica-worker saturation counterpart of `slot_occupancy`, sampled
+/// after every prefill/decode step on backends with a thread pool; each
+/// sample covers the launches since the previous one, so the series
+/// tracks current saturation, not a lifetime mean).
 #[derive(Debug, Default)]
 pub struct EngineMetrics {
     /// Shared counter/latency registry (cloneable handle: the `BatchedLm`
@@ -150,6 +155,13 @@ impl EngineMetrics {
     pub fn record_occupancy(&self, active: usize, slots: usize) {
         self.core
             .observe_value("slot_occupancy", active as f64 / slots.max(1) as f64);
+    }
+
+    /// Record the kernel-pool lane occupancy (0..=1) observed at a
+    /// prefill/decode step — makes thread-pool saturation visible in
+    /// `bof4 serve` output next to `slot_occupancy`.
+    pub fn record_pool_busy(&self, fraction: f64) {
+        self.core.observe_value("pool_busy", fraction.clamp(0.0, 1.0));
     }
 
     /// `(bucket label, count)` pairs of the per-token latency histogram.
@@ -246,6 +258,17 @@ mod tests {
         assert!(s.count <= SERIES_CAP, "series grew past cap: {}", s.count);
         // recent samples survive the halving
         assert_eq!(s.max_ms, (SERIES_CAP + 9) as f64);
+    }
+
+    #[test]
+    fn pool_busy_gauge_records_and_clamps() {
+        let em = EngineMetrics::new();
+        em.record_pool_busy(0.5);
+        em.record_pool_busy(7.0); // clamped
+        let s = em.core.latency_stats("pool_busy").unwrap();
+        assert_eq!(s.count, 2);
+        assert_eq!(s.max_ms, 1.0);
+        assert!(em.summary().contains("pool_busy"));
     }
 
     #[test]

@@ -17,7 +17,12 @@
 //! 2. **Decode**: run one `lm_decode_step` over all active slots — one
 //!    token in per slot, one K/V column appended, attention over
 //!    `cache_len + 1` positions instead of a `seq_len^2` recompute — and
-//!    stream one token to every active session.
+//!    stream one token to every active session. On backends that support
+//!    the in-place cache protocol (the CPU backend does), the per-layer
+//!    cache slabs live in a backend-resident
+//!    [`crate::runtime::DecodeState`] and the step mutates them in place
+//!    — no per-step slab round-trip through `HostTensor` args/results;
+//!    other backends keep the clone-based path.
 //!
 //! Sessions end when their token budget is exhausted or the KV cache is
 //! full (`seq_len` positions). Quantized serving uses the `*_q4` graphs:
@@ -45,7 +50,7 @@ use crate::error::Result;
 
 use super::metrics::{EngineMetrics, Metrics};
 use crate::models::corpus::TOK_SPACE;
-use crate::runtime::{HostTensor, Runtime};
+use crate::runtime::{DecodeState, HostTensor, Runtime};
 
 /// One streamed token: the greedy argmax and its logit value.
 #[derive(Clone, Debug, PartialEq)]
@@ -284,7 +289,7 @@ impl Engine {
                 decode_graph,
                 cfg.window,
                 metrics.clone(),
-            );
+            )?;
             let worker = std::thread::Builder::new()
                 .name(format!("engine-replica-{r}"))
                 .spawn(move || replica.run(rx))?;
@@ -425,12 +430,18 @@ struct Replica {
     window: Duration,
     metrics: Arc<EngineMetrics>,
     slots: Vec<Option<Slot>>,
-    /// Persistent decode args: `[prefix.., k/v caches.., token, pos]` —
-    /// the caches are moved out/in around each graph call so the engine
-    /// side never re-clones parameters on the hot path. (The CPU backend
-    /// still copies the slab across the immutable `Backend::execute` ABI
-    /// once per step; see the ROADMAP item about an in-place cache
-    /// handle.)
+    /// Backend-resident KV caches (the in-place decode protocol): when
+    /// the backend hands one out, the per-layer cache slabs live here and
+    /// `lm_decode_step` mutates them without crossing the `HostTensor`
+    /// ABI — no per-step slab memcpy. `None` on backends without support
+    /// (then the caches ride inside `decode_args`, the clone path).
+    kv_state: Option<Box<dyn DecodeState>>,
+    /// Persistent decode args. In-place: `[prefix.., token, pos]` (the
+    /// caches live in `kv_state`). Clone path: `[prefix.., k/v caches..,
+    /// token, pos]` — the caches are moved out/in around each graph call
+    /// so the engine side never re-clones parameters on the hot path, but
+    /// the backend still copies the slab across the immutable
+    /// `Backend::execute` ABI once per step.
     decode_args: Vec<HostTensor>,
     /// Persistent prefill args: `[prefix.., tokens, lens]`.
     prefill_args: Vec<HostTensor>,
@@ -451,14 +462,24 @@ impl Replica {
         decode_graph: &'static str,
         window: Duration,
         metrics: Arc<EngineMetrics>,
-    ) -> Replica {
+    ) -> Result<Replica> {
         let m = rt.meta.model.clone();
         let (b, s, d) = (m.batch, m.seq_len, m.d_model);
         let n_prefix = prefix.len();
+        // Ok(None) means the backend has no in-place support (fall back
+        // to the clone path); an Err is a real allocation failure and
+        // must surface rather than silently degrade to the slow path.
+        let kv_state = if mode == ServingMode::KvCached {
+            rt.alloc_decode_state(decode_graph)?
+        } else {
+            None
+        };
         let mut decode_args = prefix.clone();
         if mode == ServingMode::KvCached {
-            for _ in 0..2 * m.n_layers {
-                decode_args.push(HostTensor::f32(vec![0.0; b * s * d], vec![b, s, d]));
+            if kv_state.is_none() {
+                for _ in 0..2 * m.n_layers {
+                    decode_args.push(HostTensor::zeros_f32(vec![b, s, d]));
+                }
             }
             decode_args.push(HostTensor::i32(vec![0; b], vec![b]));
             decode_args.push(HostTensor::i32(vec![-1; b], vec![b]));
@@ -468,7 +489,7 @@ impl Replica {
         if mode == ServingMode::KvCached {
             prefill_args.push(HostTensor::i32(vec![1; b], vec![b]));
         }
-        Replica {
+        Ok(Replica {
             rt,
             mode,
             prefill_graph,
@@ -476,6 +497,7 @@ impl Replica {
             window,
             metrics,
             slots: (0..b).map(|_| None).collect(),
+            kv_state,
             decode_args,
             prefill_args,
             n_prefix,
@@ -484,7 +506,7 @@ impl Replica {
             seq: s,
             d_model: d,
             vocab: m.vocab,
-        }
+        })
     }
 
     fn run(mut self, rx: mpsc::Receiver<SessionReq>) {
@@ -535,6 +557,15 @@ impl Replica {
         }
     }
 
+    /// Sample the backend's kernel-pool occupancy into the `pool_busy`
+    /// gauge — the worker-saturation counterpart of `slot_occupancy`
+    /// (no-op on backends without a thread pool).
+    fn record_pool_busy(&self) {
+        if let Some(f) = self.rt.pool_occupancy() {
+            self.metrics.record_pool_busy(f);
+        }
+    }
+
     /// Prefill `pending` sessions into the given free slots and stream
     /// each one's first token.
     fn admit(&mut self, pending: Vec<SessionReq>, free: &[usize]) {
@@ -577,6 +608,7 @@ impl Replica {
         self.metrics.core.inc("batches");
         self.metrics.core.add("batched_requests", n as u64);
         self.metrics.core.observe("prefill_exec", elapsed);
+        self.record_pool_busy();
         let prompt_tokens: u64 = lens[..n].iter().map(|&l| l as u64).sum();
         self.metrics.core.add("prefill_tokens", prompt_tokens);
 
@@ -591,15 +623,23 @@ impl Replica {
             let len = lens[i] as usize;
             let (tok, logit) = match self.mode {
                 ServingMode::KvCached => {
-                    // scatter this session's K/V rows into the replica
-                    // slab; logits are already last-valid-position [B, V]
+                    // scatter this session's K/V rows into the resident
+                    // state (in-place protocol) or the replica slab;
+                    // logits are already last-valid-position [B, V]
                     for c in 0..2 * self.n_layers {
                         let src = out[1 + c].as_f32().expect("prefill cache is f32");
-                        let dst = self.decode_args[self.n_prefix + c]
-                            .as_f32_mut()
-                            .expect("slab cache is f32");
-                        dst[slot * row..(slot + 1) * row]
-                            .copy_from_slice(&src[i * row..(i + 1) * row]);
+                        let rows = &src[i * row..(i + 1) * row];
+                        match self.kv_state.as_mut() {
+                            Some(st) => st
+                                .load_slot(c, slot, rows)
+                                .expect("scatter prefill rows into resident cache"),
+                            None => {
+                                let dst = self.decode_args[self.n_prefix + c]
+                                    .as_f32_mut()
+                                    .expect("slab cache is f32");
+                                dst[slot * row..(slot + 1) * row].copy_from_slice(rows);
+                            }
+                        }
                     }
                     greedy_argmax(&logits[i * v..(i + 1) * v])
                 }
@@ -729,7 +769,16 @@ impl Replica {
         self.metrics.record_occupancy(active, b);
 
         let sw = crate::util::timer::Stopwatch::start();
-        let out = match self.rt.run(self.decode_graph, &self.decode_args) {
+        let run = match self.kv_state.as_mut() {
+            // in-place: the caches stay resident in the backend state;
+            // only [prefix.., token, pos] crosses the ABI and only the
+            // logits come back
+            Some(st) => self
+                .rt
+                .run_decode_step_inplace(self.decode_graph, st.as_mut(), &self.decode_args),
+            None => self.rt.run(self.decode_graph, &self.decode_args),
+        };
+        let out = match run {
             Ok(o) => o,
             Err(e) => {
                 let msg = format!("{e}");
@@ -745,12 +794,15 @@ impl Replica {
         self.metrics.core.inc("decode_steps");
         self.metrics.core.add("decode_tokens", active as u64);
         self.metrics.core.observe("decode_step_exec", elapsed);
+        self.record_pool_busy();
 
-        // move the updated caches back into the persistent args
+        // clone path: move the updated caches back into the persistent args
         let mut outs = out.into_iter();
         let logits_t = outs.next().expect("decode logits");
-        for c in 0..2 * self.n_layers {
-            self.decode_args[self.n_prefix + c] = outs.next().expect("decode cache");
+        if self.kv_state.is_none() {
+            for c in 0..2 * self.n_layers {
+                self.decode_args[self.n_prefix + c] = outs.next().expect("decode cache");
+            }
         }
         let logits = logits_t.as_f32().expect("decode logits are f32");
         for (i, slot) in self.slots.iter_mut().enumerate() {

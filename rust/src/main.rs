@@ -267,6 +267,11 @@ fn info_cmd(_rest: Vec<String>) -> Result<()> {
     let rt = Runtime::new()?;
     println!("{}", bof4::PAPER);
     println!("platform: {}", rt.platform());
+    println!(
+        "kernel threads: {} (set BOF4_THREADS to override; results are \
+         bit-identical at any width)",
+        bof4::runtime::kernels::threads_from_env()
+    );
     println!("model: {:?}", rt.meta.model);
     println!("graphs:");
     for (name, g) in &rt.meta.graphs {

@@ -30,13 +30,25 @@
 //!
 //! Everything is plain `f32` loops over flat row-major buffers; the
 //! layouts match the ABI exactly, so tensors cross [`HostTensor`]
-//! unchanged.
+//! unchanged. The hot paths (matmuls, attention, RMS-norm, the fused q4
+//! kernels, AdamW) execute through [`super::kernels`] — a tiled,
+//! thread-pooled kernel library whose results are **bit-identical to the
+//! serial loops at every `BOF4_THREADS` setting** (deterministic tile
+//! ownership, fixed per-element reduction order). The KV decode step
+//! additionally supports the in-place cache protocol
+//! ([`Backend::alloc_decode_state`] / [`Backend::execute_decode_inplace`]):
+//! the serving engine keeps the per-layer cache slabs resident in a
+//! [`CpuDecodeState`] instead of round-tripping ~2 MB of `HostTensor`
+//! per step, with the decode row loop fanned out across the pool.
 
 // Index-heavy numeric kernels read better as explicit loops.
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
+use std::sync::Arc;
+
+use super::kernels::{attention, q4, tiling, MatW, SyncSlice, ThreadPool};
 use super::meta::{lora_specs, matmul_param_names, param_specs, GraphMeta, ModelMeta};
-use super::{Backend, HostTensor};
+use super::{Backend, DecodeState, HostTensor};
 use crate::error::Result;
 use crate::quant::absmax::{block_constant, safe_constant};
 use crate::quant::Norm;
@@ -50,17 +62,80 @@ const ADAM_EPS: f32 = 1e-8;
 const WEIGHT_DECAY: f32 = 0.01;
 const GRAD_CLIP: f32 = 1.0;
 const LORA_ALPHA: f32 = 16.0;
-const NORM_EPS: f32 = 1e-6;
 const GELU_C: f32 = 0.797_884_56; // sqrt(2/pi)
 
 /// The pure-Rust CPU interpreter backend.
 pub struct CpuBackend {
     m: ModelMeta,
+    pool: Arc<ThreadPool>,
 }
 
 impl CpuBackend {
+    /// Backend over the process-wide kernel pool (sized by
+    /// `BOF4_THREADS`, else the detected core count).
     pub fn new(m: ModelMeta) -> CpuBackend {
-        CpuBackend { m }
+        CpuBackend {
+            m,
+            pool: super::kernels::default_pool(),
+        }
+    }
+
+    /// Backend over a private pool of an explicit width — what the
+    /// determinism tests and the thread-scaling benches use to compare
+    /// thread counts within one process.
+    pub fn with_threads(m: ModelMeta, threads: usize) -> CpuBackend {
+        CpuBackend {
+            m,
+            pool: Arc::new(ThreadPool::with_threads(threads)),
+        }
+    }
+
+    /// The kernel pool this backend executes on.
+    pub fn pool(&self) -> &ThreadPool {
+        &self.pool
+    }
+}
+
+/// Resident KV-cache slabs for the in-place decode protocol: one
+/// `[batch * seq_len * d_model]` f32 buffer per cache tensor (K and V per
+/// layer), mutated by `lm_decode_step(_q4)` without crossing the
+/// `HostTensor` ABI.
+pub struct CpuDecodeState {
+    caches: Vec<Vec<f32>>,
+    /// Elements per batch slot (`seq_len * d_model`).
+    slot_elems: usize,
+}
+
+impl CpuDecodeState {
+    /// Read-only view of cache `c` (tests / diagnostics).
+    pub fn cache(&self, c: usize) -> &[f32] {
+        &self.caches[c]
+    }
+}
+
+impl DecodeState for CpuDecodeState {
+    fn load_slot(&mut self, c: usize, slot: usize, rows: &[f32]) -> Result<()> {
+        if rows.len() != self.slot_elems {
+            return Err(crate::err!(
+                "load_slot: got {} elements, slot holds {}",
+                rows.len(),
+                self.slot_elems
+            ));
+        }
+        let cache = self
+            .caches
+            .get_mut(c)
+            .ok_or_else(|| crate::err!("load_slot: no cache {c}"))?;
+        let lo = slot * rows.len();
+        if lo + rows.len() > cache.len() {
+            return Err(crate::err!("load_slot: slot {slot} out of range"));
+        }
+        cache[lo..lo + rows.len()].copy_from_slice(rows);
+        Ok(())
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
     }
 }
 
@@ -71,6 +146,57 @@ impl Backend for CpuBackend {
 
     fn compile(&self, _gm: &GraphMeta) -> Result<()> {
         Ok(()) // nothing to compile
+    }
+
+    fn alloc_decode_state(&self, gm: &GraphMeta) -> Result<Option<Box<dyn DecodeState>>> {
+        match gm.name.as_str() {
+            "lm_decode_step" | "lm_decode_step_q4" => {
+                let m = &self.m;
+                let slot_elems = m.seq_len * m.d_model;
+                Ok(Some(Box::new(CpuDecodeState {
+                    caches: vec![vec![0.0; m.batch * slot_elems]; 2 * m.n_layers],
+                    slot_elems,
+                })))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    fn execute_decode_inplace(
+        &self,
+        gm: &GraphMeta,
+        state: &mut dyn DecodeState,
+        args: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let q4 = match gm.name.as_str() {
+            "lm_decode_step" => false,
+            "lm_decode_step_q4" => true,
+            other => return Err(crate::err!("cpu backend: no in-place decode for '{other}'")),
+        };
+        let st = state
+            .as_any_mut()
+            .downcast_mut::<CpuDecodeState>()
+            .ok_or_else(|| crate::err!("decode state is not a CpuDecodeState"))?;
+        let (mw, tail) = if q4 {
+            self.model_w_q4(args)?
+        } else {
+            self.model_w_dense(args)?
+        };
+        let token = args[tail].as_i32()?;
+        let pos = args[tail + 1].as_i32()?;
+        let logits = self.decode_step_core(&mw, &mut st.caches, token, pos);
+        Ok(vec![HostTensor::f32(
+            logits,
+            vec![self.m.batch, self.m.vocab],
+        )])
+    }
+
+    fn pool_occupancy(&self) -> Option<f64> {
+        Some(self.pool.occupancy())
+    }
+
+    fn pool_threads(&self) -> Option<usize> {
+        Some(self.pool.threads())
     }
 
     fn execute(&self, gm: &GraphMeta, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
@@ -98,64 +224,9 @@ impl Backend for CpuBackend {
 }
 
 // ---------------------------------------------------------------------
-// dense kernels
+// small element-wise helpers (the tiled matmul/norm/attention kernels
+// live in super::kernels)
 // ---------------------------------------------------------------------
-
-/// `y = x @ w` with `x [t,k]`, `w [k,n]`.
-fn matmul(x: &[f32], w: &[f32], t: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut y = vec![0.0f32; t * n];
-    for i in 0..t {
-        let xr = &x[i * k..(i + 1) * k];
-        let yr = &mut y[i * n..(i + 1) * n];
-        for (kk, &xv) in xr.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let wr = &w[kk * n..(kk + 1) * n];
-            for (yv, &wv) in yr.iter_mut().zip(wr) {
-                *yv += xv * wv;
-            }
-        }
-    }
-    y
-}
-
-/// `dx = dy @ w^T` with `dy [t,n]`, `w [k,n]` -> `[t,k]`.
-fn matmul_nt(dy: &[f32], w: &[f32], t: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut dx = vec![0.0f32; t * k];
-    for i in 0..t {
-        let dyr = &dy[i * n..(i + 1) * n];
-        let dxr = &mut dx[i * k..(i + 1) * k];
-        for (kk, dv) in dxr.iter_mut().enumerate() {
-            let wr = &w[kk * n..(kk + 1) * n];
-            let mut s = 0.0f32;
-            for (a, b) in dyr.iter().zip(wr) {
-                s += a * b;
-            }
-            *dv = s;
-        }
-    }
-    dx
-}
-
-/// `dw = x^T @ dy` with `x [t,k]`, `dy [t,n]` -> `[k,n]`.
-fn matmul_tn(x: &[f32], dy: &[f32], t: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut dw = vec![0.0f32; k * n];
-    for i in 0..t {
-        let xr = &x[i * k..(i + 1) * k];
-        let dyr = &dy[i * n..(i + 1) * n];
-        for (kk, &xv) in xr.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let dwr = &mut dw[kk * n..(kk + 1) * n];
-            for (dv, &g) in dwr.iter_mut().zip(dyr) {
-                *dv += xv * g;
-            }
-        }
-    }
-    dw
-}
 
 fn add_in_place(dst: &mut [f32], src: &[f32]) {
     for (d, &s) in dst.iter_mut().zip(src) {
@@ -181,47 +252,6 @@ fn gelu_grad(x: f32) -> f32 {
     0.5 * (1.0 + th) + 0.5 * x * (1.0 - th * th) * GELU_C * (1.0 + 3.0 * 0.044715 * x2)
 }
 
-/// Row-wise RMS norm `y = x / rms * g`; returns (y, rms per row).
-fn rmsnorm(x: &[f32], g: &[f32], d: usize) -> (Vec<f32>, Vec<f32>) {
-    let rows = x.len() / d;
-    let mut y = vec![0.0f32; x.len()];
-    let mut rms = vec![0.0f32; rows];
-    for i in 0..rows {
-        let xr = &x[i * d..(i + 1) * d];
-        let ms = xr.iter().map(|&v| v * v).sum::<f32>() / d as f32;
-        let r = (ms + NORM_EPS).sqrt();
-        rms[i] = r;
-        let yr = &mut y[i * d..(i + 1) * d];
-        for j in 0..d {
-            yr[j] = xr[j] / r * g[j];
-        }
-    }
-    (y, rms)
-}
-
-/// Backward of [`rmsnorm`]: returns (dx, dg).
-fn rmsnorm_bwd(x: &[f32], g: &[f32], rms: &[f32], dy: &[f32], d: usize) -> (Vec<f32>, Vec<f32>) {
-    let rows = x.len() / d;
-    let mut dx = vec![0.0f32; x.len()];
-    let mut dg = vec![0.0f32; d];
-    for i in 0..rows {
-        let xr = &x[i * d..(i + 1) * d];
-        let dyr = &dy[i * d..(i + 1) * d];
-        let r = rms[i];
-        let mut s = 0.0f32;
-        for j in 0..d {
-            dg[j] += dyr[j] * xr[j] / r;
-            s += dyr[j] * g[j] * xr[j];
-        }
-        let c = s / (d as f32 * r * r * r);
-        let dxr = &mut dx[i * d..(i + 1) * d];
-        for j in 0..d {
-            dxr[j] = g[j] * dyr[j] / r - xr[j] * c;
-        }
-    }
-    (dx, dg)
-}
-
 // ---------------------------------------------------------------------
 // linear (+ optional LoRA adapter) forward/backward
 // ---------------------------------------------------------------------
@@ -237,6 +267,7 @@ struct Lora<'a> {
 
 /// `y = x @ w (+ lora)`; returns (y, cached `x @ a`).
 fn lin_fwd(
+    pool: &ThreadPool,
     x: &[f32],
     w: &[f32],
     t: usize,
@@ -244,11 +275,11 @@ fn lin_fwd(
     n: usize,
     lora: Option<Lora<'_>>,
 ) -> (Vec<f32>, Option<Vec<f32>>) {
-    let mut y = matmul(x, w, t, k, n);
+    let mut y = tiling::matmul(pool, x, w, t, k, n);
     let mut xa_cache = None;
     if let Some(l) = lora {
-        let xa = matmul(x, l.a, t, k, l.r);
-        let mut delta = matmul(&xa, l.b, t, l.r, n);
+        let xa = tiling::matmul(pool, x, l.a, t, k, l.r);
+        let mut delta = tiling::matmul(pool, &xa, l.b, t, l.r, n);
         scale_in_place(&mut delta, l.scale);
         add_in_place(&mut y, &delta);
         xa_cache = Some(xa);
@@ -259,6 +290,7 @@ fn lin_fwd(
 /// Backward of [`lin_fwd`]: returns (dx, dw?, (da, db)?).
 #[allow(clippy::too_many_arguments)]
 fn lin_bwd(
+    pool: &ThreadPool,
     x: &[f32],
     w: &[f32],
     xa: Option<&Vec<f32>>,
@@ -270,26 +302,26 @@ fn lin_bwd(
     want_dw: bool,
     want_dlora: bool,
 ) -> (Vec<f32>, Option<Vec<f32>>, Option<(Vec<f32>, Vec<f32>)>) {
-    let mut dx = matmul_nt(dy, w, t, k, n);
+    let mut dx = tiling::matmul_nt(pool, dy, w, t, k, n);
     let dw = if want_dw {
-        Some(matmul_tn(x, dy, t, k, n))
+        Some(tiling::matmul_tn(pool, x, dy, t, k, n))
     } else {
         None
     };
     let mut dlora = None;
     if let Some(l) = lora {
         // dxa = scale * dy @ b^T  [t, r]
-        let mut dxa = matmul_nt(dy, l.b, t, l.r, n);
+        let mut dxa = tiling::matmul_nt(pool, dy, l.b, t, l.r, n);
         scale_in_place(&mut dxa, l.scale);
         if want_dlora {
-            let da = matmul_tn(x, &dxa, t, k, l.r);
+            let da = tiling::matmul_tn(pool, x, &dxa, t, k, l.r);
             let xa = xa.expect("lora forward cache");
-            let mut db = matmul_tn(xa, dy, t, l.r, n);
+            let mut db = tiling::matmul_tn(pool, xa, dy, t, l.r, n);
             scale_in_place(&mut db, l.scale);
             dlora = Some((da, db));
         }
         // dx += dxa @ a^T
-        let dxl = matmul_nt(&dxa, l.a, t, k, l.r);
+        let dxl = tiling::matmul_nt(pool, &dxa, l.a, t, k, l.r);
         add_in_place(&mut dx, &dxl);
     }
     (dx, dw, dlora)
@@ -298,98 +330,6 @@ fn lin_bwd(
 // ---------------------------------------------------------------------
 // KV-cached serving kernels (lm_prefill / lm_decode_step)
 // ---------------------------------------------------------------------
-
-/// One matmul weight on the serving decode path: dense f32 rows, or 4-bit
-/// codes whose per-block constants are stored 8-bit (double-quantized) and
-/// dequantized inside the fused inner loop.
-enum MatW<'a> {
-    Dense(&'a [f32]),
-    Q4 {
-        /// Unpacked codes, `[k, n]`.
-        codes: &'a [u8],
-        /// 8-bit constant codes, `[k * n / block]` flat.
-        am_codes: &'a [u8],
-        /// Flattened per-chunk `(min, scale)` pairs.
-        am_params: &'a [f32],
-        levels: &'a [f32],
-        block: usize,
-    },
-}
-
-/// Reconstruct one double-quantized block constant (shares the exact
-/// expression of [`crate::quant::DoubleQuant::dequantize`] via
-/// [`crate::quant::double_quant::reconstruct`]).
-#[inline]
-fn dq_constant(am_codes: &[u8], am_params: &[f32], idx: usize) -> f32 {
-    let chunk = idx / crate::quant::double_quant::CHUNK;
-    crate::quant::double_quant::reconstruct(
-        am_params[2 * chunk],
-        am_params[2 * chunk + 1],
-        am_codes[idx],
-    )
-}
-
-/// `y = x @ w` for a single activation row. The dense arm reuses
-/// [`matmul`] so decode logits are bit-identical to the full forward; the
-/// q4 arm multiplies in the exact order `xv * (levels[c] * am)` so it is
-/// bit-identical to the dense path over pre-dequantized weights.
-fn row_matmul(x: &[f32], w: &MatW<'_>, k: usize, n: usize) -> Vec<f32> {
-    match w {
-        MatW::Dense(w) => matmul(x, w, 1, k, n),
-        MatW::Q4 {
-            codes,
-            am_codes,
-            am_params,
-            levels,
-            block,
-        } => {
-            let nb = n / block;
-            let mut y = vec![0.0f32; n];
-            for (kk, &xv) in x.iter().enumerate() {
-                if xv == 0.0 {
-                    continue;
-                }
-                let crow = &codes[kk * n..(kk + 1) * n];
-                for jb in 0..nb {
-                    let am = dq_constant(am_codes, am_params, kk * nb + jb);
-                    let cblk = &crow[jb * block..(jb + 1) * block];
-                    let yblk = &mut y[jb * block..(jb + 1) * block];
-                    for (yv, &c) in yblk.iter_mut().zip(cblk) {
-                        *yv += xv * (levels[(c & 0x0f) as usize] * am);
-                    }
-                }
-            }
-            y
-        }
-    }
-}
-
-/// Materialize a q4 weight back to f32 with the same expression the fused
-/// kernel uses (`levels[c] * am`), so prefill (dense forward over these)
-/// and decode (fused) stay bit-identical.
-fn dequant_q4_weight(
-    codes: &[u8],
-    am_codes: &[u8],
-    am_params: &[f32],
-    levels: &[f32],
-    k: usize,
-    n: usize,
-    block: usize,
-) -> Vec<f32> {
-    let nb = n / block;
-    let mut w = vec![0.0f32; k * n];
-    for kk in 0..k {
-        for jb in 0..nb {
-            let am = dq_constant(am_codes, am_params, kk * nb + jb);
-            let crow = &codes[kk * n + jb * block..kk * n + (jb + 1) * block];
-            let wrow = &mut w[kk * n + jb * block..kk * n + (jb + 1) * block];
-            for (wv, &c) in wrow.iter_mut().zip(crow) {
-                *wv = levels[(c & 0x0f) as usize] * am;
-            }
-        }
-    }
-    w
-}
 
 /// Per-layer weight views for the decode step.
 struct LayerW<'a> {
@@ -482,28 +422,30 @@ impl CpuBackend {
 
     /// Full forward pass; returns (logits [B*S, V], cache).
     fn forward(&self, p: &[&[f32]], lora: Option<&[&[f32]]>, tokens: &[i32]) -> (Vec<f32>, Cache) {
-        let (b, s, d, h, hd, ff, v) = self.dims();
+        let (b, s, d, h, _hd, ff, v) = self.dims();
         let t = b * s;
         let nl = self.m.n_layers;
+        let pool = &*self.pool;
 
-        // embedding gather + positional
+        // embedding gather + positional, row-parallel
         let embed = p[p_embed()];
         let pos = p[p_pos()];
         let mut x = vec![0.0f32; t * d];
-        for bi in 0..b {
-            for si in 0..s {
-                let ti = bi * s + si;
+        {
+            let xs = SyncSlice::new(&mut x);
+            pool.run(t, |ti| {
+                let si = ti % s;
                 let tok = (tokens[ti].max(0) as usize).min(v - 1);
-                let xr = &mut x[ti * d..(ti + 1) * d];
+                // SAFETY: row ti is written only by task ti.
+                let xr = unsafe { xs.slice_mut(ti * d, d) };
                 let er = &embed[tok * d..(tok + 1) * d];
                 let pr = &pos[si * d..(si + 1) * d];
                 for j in 0..d {
                     xr[j] = er[j] + pr[j];
                 }
-            }
+            });
         }
 
-        let inv_sqrt_hd = 1.0 / (hd as f32).sqrt();
         let mut layers = Vec::with_capacity(nl);
         for l in 0..nl {
             let base = p_layer(l);
@@ -516,67 +458,20 @@ impl CpuBackend {
                 p[base + 5],
             );
             let x_in = x.clone();
-            let (a1, rms1) = rmsnorm(&x, g1, d);
-            let (qkv, xa_qkv) = lin_fwd(&a1, wqkv, t, d, 3 * d, self.lora_at(lora, l, 0));
+            let (a1, rms1) = tiling::rmsnorm(pool, &x, g1, d);
+            let (qkv, xa_qkv) = lin_fwd(pool, &a1, wqkv, t, d, 3 * d, self.lora_at(lora, l, 0));
 
-            // causal multi-head attention
-            let mut att = vec![0.0f32; b * h * s * s];
-            let mut y = vec![0.0f32; t * d];
-            for bi in 0..b {
-                for hi in 0..h {
-                    let hoff = hi * hd;
-                    let aoff = (bi * h + hi) * s * s;
-                    for s1 in 0..s {
-                        let t1 = bi * s + s1;
-                        let q1 = &qkv[t1 * 3 * d + hoff..t1 * 3 * d + hoff + hd];
-                        // scores over s2 <= s1
-                        let mut row = vec![0.0f32; s1 + 1];
-                        let mut maxv = f32::NEG_INFINITY;
-                        for (s2, rv) in row.iter_mut().enumerate() {
-                            let t2 = bi * s + s2;
-                            let k2 = &qkv[t2 * 3 * d + d + hoff..t2 * 3 * d + d + hoff + hd];
-                            let mut dot = 0.0f32;
-                            for e in 0..hd {
-                                dot += q1[e] * k2[e];
-                            }
-                            let sc = dot * inv_sqrt_hd;
-                            *rv = sc;
-                            if sc > maxv {
-                                maxv = sc;
-                            }
-                        }
-                        let mut denom = 0.0f32;
-                        for rv in row.iter_mut() {
-                            *rv = (*rv - maxv).exp();
-                            denom += *rv;
-                        }
-                        let inv = 1.0 / denom;
-                        let yr = &mut y[t1 * d + hoff..t1 * d + hoff + hd];
-                        for (s2, rv) in row.iter().enumerate() {
-                            let prob = rv * inv;
-                            att[aoff + s1 * s + s2] = prob;
-                            let t2 = bi * s + s2;
-                            let v2 =
-                                &qkv[t2 * 3 * d + 2 * d + hoff..t2 * 3 * d + 2 * d + hoff + hd];
-                            for e in 0..hd {
-                                yr[e] += prob * v2[e];
-                            }
-                        }
-                    }
-                }
-            }
+            // causal multi-head attention, fanned out over (row x head)
+            let (att, y) = attention::mha_forward(pool, &qkv, b, h, s, d);
 
-            let (attn_out, xa_wo) = lin_fwd(&y, wo, t, d, d, self.lora_at(lora, l, 1));
+            let (attn_out, xa_wo) = lin_fwd(pool, &y, wo, t, d, d, self.lora_at(lora, l, 1));
             add_in_place(&mut x, &attn_out);
             let x_mid = x.clone();
 
-            let (a2, rms2) = rmsnorm(&x, g2, d);
-            let (h_pre, xa_win) = lin_fwd(&a2, win, t, d, ff, self.lora_at(lora, l, 2));
-            let mut hact = vec![0.0f32; h_pre.len()];
-            for (o, &i) in hact.iter_mut().zip(&h_pre) {
-                *o = gelu(i);
-            }
-            let (mlp_out, xa_wout) = lin_fwd(&hact, wout, t, ff, d, self.lora_at(lora, l, 3));
+            let (a2, rms2) = tiling::rmsnorm(pool, &x, g2, d);
+            let (h_pre, xa_win) = lin_fwd(pool, &a2, win, t, d, ff, self.lora_at(lora, l, 2));
+            let hact = tiling::par_map(pool, &h_pre, gelu);
+            let (mlp_out, xa_wout) = lin_fwd(pool, &hact, wout, t, ff, d, self.lora_at(lora, l, 3));
             add_in_place(&mut x, &mlp_out);
 
             layers.push(LayerCache {
@@ -599,8 +494,8 @@ impl CpuBackend {
         }
 
         let x_out = x.clone();
-        let (xf, rmsf) = rmsnorm(&x, p[p_lnf(nl)], d);
-        let logits = matmul(&xf, p[p_head(nl)], t, d, v);
+        let (xf, rmsf) = tiling::rmsnorm(pool, &x, p[p_lnf(nl)], d);
+        let logits = tiling::matmul(pool, &xf, p[p_head(nl)], t, d, v);
         (
             logits,
             Cache {
@@ -625,10 +520,10 @@ impl CpuBackend {
         want_base: bool,
         want_lora: bool,
     ) -> (Option<Vec<Vec<f32>>>, Option<Vec<Vec<f32>>>) {
-        let (b, s, d, h, hd, ff, v) = self.dims();
+        let (b, s, d, h, _hd, ff, v) = self.dims();
         let t = b * s;
         let nl = self.m.n_layers;
-        let inv_sqrt_hd = 1.0 / (hd as f32).sqrt();
+        let pool = &*self.pool;
 
         let mut base_grads: Vec<Vec<f32>> = if want_base {
             p.iter().map(|w| vec![0.0f32; w.len()]).collect()
@@ -646,11 +541,12 @@ impl CpuBackend {
 
         // head + final norm
         let head = p[p_head(nl)];
-        let mut dx = matmul_nt(dlogits, head, t, d, v);
+        let mut dx = tiling::matmul_nt(pool, dlogits, head, t, d, v);
         if want_base {
-            base_grads[p_head(nl)] = matmul_tn(&cache.xf, dlogits, t, d, v);
+            base_grads[p_head(nl)] = tiling::matmul_tn(pool, &cache.xf, dlogits, t, d, v);
         }
-        let (dx_ln, dgf) = rmsnorm_bwd(&cache.x_out, p[p_lnf(nl)], &cache.rmsf, &dx, d);
+        let (dx_ln, dgf) =
+            tiling::rmsnorm_bwd(pool, &cache.x_out, p[p_lnf(nl)], &cache.rmsf, &dx, d);
         dx = dx_ln;
         if want_base {
             base_grads[p_lnf(nl)] = dgf;
@@ -670,6 +566,7 @@ impl CpuBackend {
 
             // ---- MLP block: x = x_mid + wout(gelu(win(rmsnorm(x_mid)))) ----
             let (dh, dwout, dl_wout) = lin_bwd(
+                pool,
                 &lc.h,
                 wout,
                 lc.xa_wout.as_ref(),
@@ -682,10 +579,9 @@ impl CpuBackend {
                 want_lora,
             );
             let mut dh_pre = dh;
-            for (g, &xp) in dh_pre.iter_mut().zip(&lc.h_pre) {
-                *g *= gelu_grad(xp);
-            }
+            tiling::par_zip_apply(pool, &mut dh_pre, &lc.h_pre, |g, xp| g * gelu_grad(xp));
             let (da2, dwin, dl_win) = lin_bwd(
+                pool,
                 &lc.a2,
                 win,
                 lc.xa_win.as_ref(),
@@ -697,11 +593,12 @@ impl CpuBackend {
                 want_base,
                 want_lora,
             );
-            let (dx_ln2, dg2) = rmsnorm_bwd(&lc.x_mid, g2, &lc.rms2, &da2, d);
+            let (dx_ln2, dg2) = tiling::rmsnorm_bwd(pool, &lc.x_mid, g2, &lc.rms2, &da2, d);
             add_in_place(&mut dx, &dx_ln2); // residual: skip + norm path
 
             // ---- attention block ----
             let (dy, dwo, dl_wo) = lin_bwd(
+                pool,
                 &lc.y,
                 wo,
                 lc.xa_wo.as_ref(),
@@ -713,68 +610,10 @@ impl CpuBackend {
                 want_base,
                 want_lora,
             );
-            // backprop through softmax(QK^T/sqrt(hd)) V
-            let mut dqkv = vec![0.0f32; t * 3 * d];
-            for bi in 0..b {
-                for hi in 0..h {
-                    let hoff = hi * hd;
-                    let aoff = (bi * h + hi) * s * s;
-                    for s1 in 0..s {
-                        let t1 = bi * s + s1;
-                        let dy1 = &dy[t1 * d + hoff..t1 * d + hoff + hd];
-                        // datt over valid s2, plus dv accumulation
-                        let mut datt = vec![0.0f32; s1 + 1];
-                        for (s2, da) in datt.iter_mut().enumerate() {
-                            let t2 = bi * s + s2;
-                            let prob = cache.layers[l].att[aoff + s1 * s + s2];
-                            let v2 =
-                                &lc.qkv[t2 * 3 * d + 2 * d + hoff..t2 * 3 * d + 2 * d + hoff + hd];
-                            let mut acc = 0.0f32;
-                            for e in 0..hd {
-                                acc += dy1[e] * v2[e];
-                            }
-                            *da = acc;
-                            // dv += p * dy
-                            let dv2 = &mut dqkv
-                                [t2 * 3 * d + 2 * d + hoff..t2 * 3 * d + 2 * d + hoff + hd];
-                            for e in 0..hd {
-                                dv2[e] += prob * dy1[e];
-                            }
-                        }
-                        // softmax backward
-                        let mut dot = 0.0f32;
-                        for (s2, &da) in datt.iter().enumerate() {
-                            dot += da * lc.att[aoff + s1 * s + s2];
-                        }
-                        let q1: Vec<f32> =
-                            lc.qkv[t1 * 3 * d + hoff..t1 * 3 * d + hoff + hd].to_vec();
-                        let mut dq1 = vec![0.0f32; hd];
-                        for (s2, &da) in datt.iter().enumerate() {
-                            let prob = lc.att[aoff + s1 * s + s2];
-                            let dscore = prob * (da - dot) * inv_sqrt_hd;
-                            if dscore == 0.0 {
-                                continue;
-                            }
-                            let t2 = bi * s + s2;
-                            let k2 =
-                                &lc.qkv[t2 * 3 * d + d + hoff..t2 * 3 * d + d + hoff + hd];
-                            for e in 0..hd {
-                                dq1[e] += dscore * k2[e];
-                            }
-                            let dk2 = &mut dqkv
-                                [t2 * 3 * d + d + hoff..t2 * 3 * d + d + hoff + hd];
-                            for e in 0..hd {
-                                dk2[e] += dscore * q1[e];
-                            }
-                        }
-                        let dq = &mut dqkv[t1 * 3 * d + hoff..t1 * 3 * d + hoff + hd];
-                        for e in 0..hd {
-                            dq[e] += dq1[e];
-                        }
-                    }
-                }
-            }
+            // backprop through softmax(QK^T/sqrt(hd)) V, per (row x head)
+            let dqkv = attention::mha_backward(pool, &lc.qkv, &lc.att, &dy, b, h, s, d);
             let (da1, dwqkv, dl_qkv) = lin_bwd(
+                pool,
                 &lc.a1,
                 wqkv,
                 lc.xa_qkv.as_ref(),
@@ -786,7 +625,7 @@ impl CpuBackend {
                 want_base,
                 want_lora,
             );
-            let (dx_ln1, dg1) = rmsnorm_bwd(&lc.x_in, g1, &lc.rms1, &da1, d);
+            let (dx_ln1, dg1) = tiling::rmsnorm_bwd(pool, &lc.x_in, g1, &lc.rms1, &da1, d);
             add_in_place(&mut dx, &dx_ln1);
 
             if want_base {
@@ -852,29 +691,42 @@ impl CpuBackend {
         } else {
             None
         };
-        for bi in 0..b {
-            let mut acc = 0.0f64;
-            for si in 0..s - 1 {
-                let ti = bi * s + si;
-                let row = &logits[ti * v..(ti + 1) * v];
-                let tgt = (tokens[bi * s + si + 1].max(0) as usize).min(v - 1);
-                let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-                let mut denom = 0.0f32;
-                for &x in row {
-                    denom += (x - maxv).exp();
-                }
-                let lse = maxv + denom.ln();
-                acc += (lse - row[tgt]) as f64;
-                if let Some(dl) = dlogits.as_mut() {
-                    let drow = &mut dl[ti * v..(ti + 1) * v];
-                    let inv = 1.0 / denom;
-                    for (j, dv) in drow.iter_mut().enumerate() {
-                        let p = (row[j] - maxv).exp() * inv;
-                        *dv = (p - if j == tgt { 1.0 } else { 0.0 }) * gs;
+        // row-parallel softmax/NLL: sequence bi owns rows bi*s..(bi+1)*s
+        // of dlogits and entry bi of per_seq; the per-sequence f64
+        // accumulator keeps the serial summation order.
+        {
+            let ps = SyncSlice::new(&mut per_seq);
+            let dls = dlogits.as_mut().map(|dl| SyncSlice::new(dl.as_mut_slice()));
+            self.pool.run(b, |bi| {
+                let mut acc = 0.0f64;
+                // SAFETY: dlogits rows of sequence bi are written only by
+                // task bi.
+                let mut drows = dls
+                    .as_ref()
+                    .map(|dl| unsafe { dl.slice_mut(bi * s * v, s * v) });
+                for si in 0..s - 1 {
+                    let ti = bi * s + si;
+                    let row = &logits[ti * v..(ti + 1) * v];
+                    let tgt = (tokens[bi * s + si + 1].max(0) as usize).min(v - 1);
+                    let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    let mut denom = 0.0f32;
+                    for &x in row {
+                        denom += (x - maxv).exp();
+                    }
+                    let lse = maxv + denom.ln();
+                    acc += (lse - row[tgt]) as f64;
+                    if let Some(dl) = drows.as_mut() {
+                        let drow = &mut dl[si * v..(si + 1) * v];
+                        let inv = 1.0 / denom;
+                        for (j, dv) in drow.iter_mut().enumerate() {
+                            let p = (row[j] - maxv).exp() * inv;
+                            *dv = (p - if j == tgt { 1.0 } else { 0.0 }) * gs;
+                        }
                     }
                 }
-            }
-            per_seq[bi] = acc as f32;
+                // SAFETY: entry bi is written only by task bi.
+                unsafe { ps.slice_mut(bi, 1) }[0] = acc as f32;
+            });
         }
         let mean = per_seq.iter().map(|&x| x as f64).sum::<f64>() as f32 / supervised;
         (per_seq, mean, dlogits)
@@ -903,8 +755,16 @@ impl CpuBackend {
     // -----------------------------------------------------------------
 
     /// One AdamW step over flat parameter lists (mirrors `_adamw_update`).
+    /// The global-norm reduction stays serial (fixed order, f64); the
+    /// element-wise update fans out over fixed-size element chunks *within*
+    /// each tensor — tensor sizes span orders of magnitude (embed/head vs
+    /// the norm gains), so per-tensor tasks would leave most lanes idle
+    /// behind the two big matrices. Each chunk has exactly one owner and
+    /// every element's arithmetic is independent, so results are
+    /// bit-identical at any thread count.
     #[allow(clippy::type_complexity)]
     fn adamw(
+        &self,
         params: &[&[f32]],
         grads: &[Vec<f32>],
         m_in: &[&[f32]],
@@ -925,31 +785,47 @@ impl CpuBackend {
         let bc1 = 1.0 - BETA1.powf(t);
         let bc2 = 1.0 - BETA2.powf(t);
 
-        let mut new_p = Vec::with_capacity(params.len());
-        let mut new_m = Vec::with_capacity(params.len());
-        let mut new_v = Vec::with_capacity(params.len());
-        for i in 0..params.len() {
-            let (p, g, m0, v0) = (params[i], &grads[i], m_in[i], v_in[i]);
-            let mut pn = vec![0.0f32; p.len()];
-            let mut mn = vec![0.0f32; p.len()];
-            let mut vn = vec![0.0f32; p.len()];
-            for j in 0..p.len() {
-                let gj = g[j] * clip_scale;
-                let mj = BETA1 * m0[j] + (1.0 - BETA1) * gj;
-                let vj = BETA2 * v0[j] + (1.0 - BETA2) * gj * gj;
-                let mhat = mj / bc1;
-                let vhat = vj / bc2;
-                let mut upd = mhat / (vhat.sqrt() + ADAM_EPS);
-                if decay[i] {
-                    upd += WEIGHT_DECAY * p[j];
+        let mut new_p: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0f32; p.len()]).collect();
+        let mut new_m: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0f32; p.len()]).collect();
+        let mut new_v: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0f32; p.len()]).collect();
+        {
+            // (tensor, element lo, element hi) work items of bounded size
+            const ELEM_CHUNK: usize = 8192;
+            let mut work: Vec<(usize, usize, usize)> = Vec::new();
+            for (i, p) in params.iter().enumerate() {
+                let mut lo = 0;
+                while lo < p.len() {
+                    let hi = (lo + ELEM_CHUNK).min(p.len());
+                    work.push((i, lo, hi));
+                    lo = hi;
                 }
-                pn[j] = p[j] - LR * upd;
-                mn[j] = mj;
-                vn[j] = vj;
             }
-            new_p.push(pn);
-            new_m.push(mn);
-            new_v.push(vn);
+            let ps: Vec<SyncSlice<f32>> = new_p.iter_mut().map(|v| SyncSlice::new(v)).collect();
+            let ms: Vec<SyncSlice<f32>> = new_m.iter_mut().map(|v| SyncSlice::new(v)).collect();
+            let vs: Vec<SyncSlice<f32>> = new_v.iter_mut().map(|v| SyncSlice::new(v)).collect();
+            self.pool.run(work.len(), |wi| {
+                let (i, lo, hi) = work[wi];
+                let (p, g, m0, v0) = (params[i], &grads[i], m_in[i], v_in[i]);
+                // SAFETY: element range [lo, hi) of tensor i is written
+                // only by work item wi.
+                let pn = unsafe { ps[i].slice_mut(lo, hi - lo) };
+                let mn = unsafe { ms[i].slice_mut(lo, hi - lo) };
+                let vn = unsafe { vs[i].slice_mut(lo, hi - lo) };
+                for j in lo..hi {
+                    let gj = g[j] * clip_scale;
+                    let mj = BETA1 * m0[j] + (1.0 - BETA1) * gj;
+                    let vj = BETA2 * v0[j] + (1.0 - BETA2) * gj * gj;
+                    let mhat = mj / bc1;
+                    let vhat = vj / bc2;
+                    let mut upd = mhat / (vhat.sqrt() + ADAM_EPS);
+                    if decay[i] {
+                        upd += WEIGHT_DECAY * p[j];
+                    }
+                    pn[j - lo] = p[j] - LR * upd;
+                    mn[j - lo] = mj;
+                    vn[j - lo] = vj;
+                }
+            });
         }
         (new_p, new_m, new_v, new_step)
     }
@@ -1108,7 +984,8 @@ impl CpuBackend {
         let mut deq = Vec::with_capacity(n_mm);
         for (i, name) in mm.iter().enumerate() {
             let shp = &shapes[name];
-            deq.push(dequant_q4_weight(
+            deq.push(q4::dequant_q4_weight(
+                &self.pool,
                 args[n_f32 + i].as_u8()?,
                 args[n_f32 + n_mm + i].as_u8()?,
                 args[n_f32 + 2 * n_mm + i].as_f32()?,
@@ -1253,14 +1130,11 @@ impl CpuBackend {
         ))
     }
 
-    /// `lm_decode_step` / `lm_decode_step_q4`: one token per active row.
-    /// Appends one K/V column at `pos[b]` and attends over `pos[b]+1`
-    /// cached positions; every per-row kernel runs in the same order as
-    /// the full forward, so logits are bit-identical to full-context
-    /// re-execution over the same context. Rows with `pos < 0` are
-    /// inactive: zero logits, caches untouched.
+    /// `lm_decode_step` / `lm_decode_step_q4` (clone-based cache path):
+    /// parses the cache tensors out of `args`, runs the shared core, and
+    /// returns the updated caches next to the logits.
     fn decode_step(&self, args: &[HostTensor], q4: bool) -> Result<Vec<HostTensor>> {
-        let (b, s, d, h, hd, ff, v) = self.dims();
+        let (b, s, d, _, _, _, v) = self.dims();
         let nl = self.m.n_layers;
         let (mw, tail) = if q4 {
             self.model_w_q4(args)?
@@ -1272,12 +1146,43 @@ impl CpuBackend {
             .collect::<Result<_>>()?;
         let token = args[tail + 2 * nl].as_i32()?;
         let pos = args[tail + 2 * nl + 1].as_i32()?;
-        let inv_sqrt_hd = 1.0 / (hd as f32).sqrt();
+        let logits_out = self.decode_step_core(&mw, &mut caches, token, pos);
+        let mut out = vec![HostTensor::f32(logits_out, vec![b, v])];
+        for c in caches {
+            out.push(HostTensor::f32(c, vec![b, s, d]));
+        }
+        Ok(out)
+    }
+
+    /// One decode step over the per-row weight views: one token per
+    /// active row, appending one K/V column at `pos[bi]` and attending
+    /// over `pos[bi]+1` cached positions. Rows with `pos < 0` (or past
+    /// the cache) are inactive: zero logits, caches untouched.
+    ///
+    /// The row loop fans out across the kernel pool — each batch row owns
+    /// its own cache rows and logits row, and runs the full forward's
+    /// exact per-row loop order, so logits are bit-identical to
+    /// full-context re-execution at every thread count. Shared by the
+    /// clone-based [`CpuBackend::decode_step`] and the in-place
+    /// [`Backend::execute_decode_inplace`] protocol (same core, so the
+    /// two paths are bit-identical by construction).
+    fn decode_step_core(
+        &self,
+        mw: &ModelW<'_>,
+        caches: &mut [Vec<f32>],
+        token: &[i32],
+        pos: &[i32],
+    ) -> Vec<f32> {
+        let (b, s, d, h, _hd, ff, v) = self.dims();
+        let pool = &*self.pool;
+        let slot = s * d;
 
         let mut logits_out = vec![0.0f32; b * v];
-        for bi in 0..b {
+        let ls = SyncSlice::new(&mut logits_out);
+        let cs: Vec<SyncSlice<f32>> = caches.iter_mut().map(|c| SyncSlice::new(c)).collect();
+        pool.run(b, |bi| {
             if pos[bi] < 0 || pos[bi] as usize >= s {
-                continue;
+                return;
             }
             let p = pos[bi] as usize;
             let tok = (token[bi].max(0) as usize).min(v - 1);
@@ -1286,68 +1191,32 @@ impl CpuBackend {
                 x[j] = mw.embed[tok * d + j] + mw.pos[p * d + j];
             }
             for (li, lw) in mw.layers.iter().enumerate() {
-                let (a1, _) = rmsnorm(&x, lw.g1, d);
-                let qkv = row_matmul(&a1, &lw.wqkv, d, 3 * d);
-                caches[2 * li][(bi * s + p) * d..(bi * s + p + 1) * d]
-                    .copy_from_slice(&qkv[d..2 * d]);
-                caches[2 * li + 1][(bi * s + p) * d..(bi * s + p + 1) * d]
-                    .copy_from_slice(&qkv[2 * d..3 * d]);
-                let kc = &caches[2 * li];
-                let vc = &caches[2 * li + 1];
-                let mut y = vec![0.0f32; d];
-                for hi in 0..h {
-                    let hoff = hi * hd;
-                    let q1 = &qkv[hoff..hoff + hd];
-                    let mut row = vec![0.0f32; p + 1];
-                    let mut maxv = f32::NEG_INFINITY;
-                    for (s2, rv) in row.iter_mut().enumerate() {
-                        let k2 = &kc[(bi * s + s2) * d + hoff..(bi * s + s2) * d + hoff + hd];
-                        let mut dot = 0.0f32;
-                        for e in 0..hd {
-                            dot += q1[e] * k2[e];
-                        }
-                        let sc = dot * inv_sqrt_hd;
-                        *rv = sc;
-                        if sc > maxv {
-                            maxv = sc;
-                        }
-                    }
-                    let mut denom = 0.0f32;
-                    for rv in row.iter_mut() {
-                        *rv = (*rv - maxv).exp();
-                        denom += *rv;
-                    }
-                    let inv = 1.0 / denom;
-                    let yr = &mut y[hoff..hoff + hd];
-                    for (s2, rv) in row.iter().enumerate() {
-                        let prob = rv * inv;
-                        let v2 = &vc[(bi * s + s2) * d + hoff..(bi * s + s2) * d + hoff + hd];
-                        for e in 0..hd {
-                            yr[e] += prob * v2[e];
-                        }
-                    }
-                }
-                let attn_out = row_matmul(&y, &lw.wo, d, d);
+                let (a1, _) = tiling::rmsnorm(pool, &x, lw.g1, d);
+                let qkv = q4::row_matmul(pool, &a1, &lw.wqkv, d, 3 * d);
+                // SAFETY: batch row bi's cache slots are read and written
+                // only by task bi.
+                let kc = unsafe { cs[2 * li].slice_mut(bi * slot, slot) };
+                let vc = unsafe { cs[2 * li + 1].slice_mut(bi * slot, slot) };
+                kc[p * d..(p + 1) * d].copy_from_slice(&qkv[d..2 * d]);
+                vc[p * d..(p + 1) * d].copy_from_slice(&qkv[2 * d..3 * d]);
+                let y = attention::decode_attention(pool, &qkv, kc, vc, d, h, p);
+                let attn_out = q4::row_matmul(pool, &y, &lw.wo, d, d);
                 add_in_place(&mut x, &attn_out);
-                let (a2, _) = rmsnorm(&x, lw.g2, d);
-                let h_pre = row_matmul(&a2, &lw.win, d, ff);
+                let (a2, _) = tiling::rmsnorm(pool, &x, lw.g2, d);
+                let h_pre = q4::row_matmul(pool, &a2, &lw.win, d, ff);
                 let mut hact = vec![0.0f32; ff];
                 for (o, &i) in hact.iter_mut().zip(&h_pre) {
                     *o = gelu(i);
                 }
-                let mlp_out = row_matmul(&hact, &lw.wout, ff, d);
+                let mlp_out = q4::row_matmul(pool, &hact, &lw.wout, ff, d);
                 add_in_place(&mut x, &mlp_out);
             }
-            let (xf, _) = rmsnorm(&x, mw.lnf, d);
-            let lrow = matmul(&xf, mw.head, 1, d, v);
-            logits_out[bi * v..(bi + 1) * v].copy_from_slice(&lrow);
-        }
-
-        let mut out = vec![HostTensor::f32(logits_out, vec![b, v])];
-        for c in caches {
-            out.push(HostTensor::f32(c, vec![b, s, d]));
-        }
-        Ok(out)
+            let (xf, _) = tiling::rmsnorm(pool, &x, mw.lnf, d);
+            let lrow = tiling::matmul(pool, &xf, mw.head, 1, d, v);
+            // SAFETY: logits row bi is written only by task bi.
+            unsafe { ls.slice_mut(bi * v, v) }.copy_from_slice(&lrow);
+        });
+        logits_out
     }
 
     fn train_step(&self, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
@@ -1362,7 +1231,7 @@ impl CpuBackend {
         let (loss, grads, _) = self.loss_and_grads(&p, None, tokens, true, false);
         let grads = grads.expect("base grads");
         let decay: Vec<bool> = pspecs.iter().map(|(_, s)| s.len() >= 2).collect();
-        let (new_p, new_m, new_v, new_step) = Self::adamw(&p, &grads, &m_in, &v_in, step, &decay);
+        let (new_p, new_m, new_v, new_step) = self.adamw(&p, &grads, &m_in, &v_in, step, &decay);
 
         let mut out = Vec::with_capacity(3 * np + 2);
         for (vals, (_, shape)) in new_p.into_iter().zip(&pspecs) {
@@ -1394,7 +1263,7 @@ impl CpuBackend {
         let lgrads = lgrads.expect("lora grads");
         let decay = vec![true; nl];
         let (new_l, new_m, new_v, new_step) =
-            Self::adamw(&lora, &lgrads, &m_in, &v_in, step, &decay);
+            self.adamw(&lora, &lgrads, &m_in, &v_in, step, &decay);
 
         let mut out = Vec::with_capacity(3 * nl + 2);
         for (vals, (_, shape)) in new_l.into_iter().zip(&lspecs) {
@@ -1424,26 +1293,7 @@ impl CpuBackend {
         let nb = gm.args[2].shape[1];
         let block = ndim / nb;
 
-        let mut y = vec![0.0f32; mdim * ndim];
-        for i in 0..mdim {
-            let xr = &x[i * kdim..(i + 1) * kdim];
-            let yr = &mut y[i * ndim..(i + 1) * ndim];
-            for (kk, &xv) in xr.iter().enumerate() {
-                if xv == 0.0 {
-                    continue;
-                }
-                let crow = &codes[kk * ndim..(kk + 1) * ndim];
-                let arow = &absmax[kk * nb..(kk + 1) * nb];
-                for (jb, &am) in arow.iter().enumerate() {
-                    let s = xv * am;
-                    let cblk = &crow[jb * block..(jb + 1) * block];
-                    let yblk = &mut yr[jb * block..(jb + 1) * block];
-                    for (yv, &c) in yblk.iter_mut().zip(cblk) {
-                        *yv += s * levels[(c & 0x0f) as usize];
-                    }
-                }
-            }
-        }
+        let y = q4::q4_matmul(&self.pool, x, codes, absmax, levels, mdim, kdim, ndim, block);
         Ok(vec![HostTensor::f32(y, vec![mdim, ndim])])
     }
 
@@ -1460,22 +1310,29 @@ impl CpuBackend {
         let (rows, blk) = (gm.args[0].shape[0], gm.args[0].shape[1]);
         let mut codes = vec![0u8; rows * blk];
         let mut absmax = vec![0.0f32; rows];
-        for r in 0..rows {
-            let row = &w[r * blk..(r + 1) * blk];
-            let m = block_constant(row, norm);
-            absmax[r] = m;
-            let inv = 1.0 / safe_constant(m);
-            let crow = &mut codes[r * blk..(r + 1) * blk];
-            for (c, &wv) in crow.iter_mut().zip(row) {
-                let x = wv * inv;
-                let mut code = 0u8;
-                for &bd in bounds {
-                    if x >= bd {
-                        code += 1;
+        {
+            // one block (row) per task: fully independent, so the encoder
+            // is trivially bit-identical at any thread count
+            let codes_s = SyncSlice::new(&mut codes);
+            let am_s = SyncSlice::new(&mut absmax);
+            self.pool.run(rows, |r| {
+                let row = &w[r * blk..(r + 1) * blk];
+                let m = block_constant(row, norm);
+                // SAFETY: block r's outputs are written only by task r.
+                unsafe { am_s.slice_mut(r, 1) }[0] = m;
+                let inv = 1.0 / safe_constant(m);
+                let crow = unsafe { codes_s.slice_mut(r * blk, blk) };
+                for (c, &wv) in crow.iter_mut().zip(row) {
+                    let x = wv * inv;
+                    let mut code = 0u8;
+                    for &bd in bounds {
+                        if x >= bd {
+                            code += 1;
+                        }
                     }
+                    *c = code;
                 }
-                *c = code;
-            }
+            });
         }
         Ok(vec![
             HostTensor::u8(codes, vec![rows, blk]),
@@ -1615,45 +1472,30 @@ mod tests {
         }
     }
 
+    /// Forward, NLL gradients, prefill/decode, and a training step on the
+    /// tiny model must be bit-identical across kernel-pool widths.
     #[test]
-    fn matmul_helpers_agree() {
-        // y = x@w, then dX and dW against brute force
-        let (t, k, n) = (3usize, 4usize, 5usize);
-        let mut rng = Pcg64::seed_from_u64(8);
-        let mut x = vec![0.0f32; t * k];
-        let mut w = vec![0.0f32; k * n];
-        let mut dy = vec![0.0f32; t * n];
-        rng.fill_gaussian_f32(&mut x, 1.0);
-        rng.fill_gaussian_f32(&mut w, 1.0);
-        rng.fill_gaussian_f32(&mut dy, 1.0);
-        let y = matmul(&x, &w, t, k, n);
-        for i in 0..t {
-            for j in 0..n {
-                let mut s = 0.0f32;
-                for kk in 0..k {
-                    s += x[i * k + kk] * w[kk * n + j];
+    fn tiny_model_bit_identical_across_thread_counts() {
+        let m = tiny().m.clone();
+        let toks = tiny_tokens(&tiny(), 40);
+        let params = tiny_params(&tiny(), 41);
+        let lora = tiny_lora(&tiny(), 42);
+        let mut base: Option<(Vec<f32>, f32, Vec<Vec<f32>>, Vec<Vec<f32>>)> = None;
+        for threads in [1usize, 2, 8] {
+            let be = CpuBackend::with_threads(m.clone(), threads);
+            let pv = views(&params);
+            let lv = views(&lora);
+            let (logits, _) = be.forward(&pv, Some(&lv), &toks);
+            let (loss, bg, lg) = be.loss_and_grads(&pv, Some(&lv), &toks, true, true);
+            let got = (logits, loss, bg.unwrap(), lg.unwrap());
+            match &base {
+                None => base = Some(got),
+                Some(want) => {
+                    assert_eq!(got.0, want.0, "logits diverged at {threads} threads");
+                    assert_eq!(got.1, want.1, "loss diverged at {threads} threads");
+                    assert_eq!(got.2, want.2, "base grads diverged at {threads} threads");
+                    assert_eq!(got.3, want.3, "lora grads diverged at {threads} threads");
                 }
-                assert!((y[i * n + j] - s).abs() < 1e-5);
-            }
-        }
-        let dx = matmul_nt(&dy, &w, t, k, n);
-        for i in 0..t {
-            for kk in 0..k {
-                let mut s = 0.0f32;
-                for j in 0..n {
-                    s += dy[i * n + j] * w[kk * n + j];
-                }
-                assert!((dx[i * k + kk] - s).abs() < 1e-5);
-            }
-        }
-        let dw = matmul_tn(&x, &dy, t, k, n);
-        for kk in 0..k {
-            for j in 0..n {
-                let mut s = 0.0f32;
-                for i in 0..t {
-                    s += x[i * k + kk] * dy[i * n + j];
-                }
-                assert!((dw[kk * n + j] - s).abs() < 1e-5);
             }
         }
     }
@@ -1677,10 +1519,11 @@ mod tests {
         rng.fill_gaussian_f32(&mut x, 1.0);
         rng.fill_gaussian_f32(&mut g, 1.0);
         rng.fill_gaussian_f32(&mut dy, 1.0);
-        let (_, rms) = rmsnorm(&x, &g, d);
-        let (dx, dg) = rmsnorm_bwd(&x, &g, &rms, &dy, d);
+        let pool = ThreadPool::with_threads(2);
+        let (_, rms) = tiling::rmsnorm(&pool, &x, &g, d);
+        let (dx, dg) = tiling::rmsnorm_bwd(&pool, &x, &g, &rms, &dy, d);
         let loss = |x: &[f32], g: &[f32]| -> f32 {
-            let (y, _) = rmsnorm(x, g, d);
+            let (y, _) = tiling::rmsnorm(&pool, x, g, d);
             y.iter().zip(&dy).map(|(a, b)| a * b).sum()
         };
         let eps = 1e-3;
@@ -1802,6 +1645,93 @@ mod tests {
         }
     }
 
+    /// The in-place decode protocol must match the clone-based
+    /// `decode_step` bit-for-bit: same logits each step, same final
+    /// caches.
+    #[test]
+    fn decode_inplace_matches_clone_on_tiny_model() {
+        let be = tiny();
+        let (b, s, d, v) = (be.m.batch, be.m.seq_len, be.m.d_model, be.m.vocab);
+        let nl = be.m.n_layers;
+        let params = tiny_params(&be, 30);
+        let toks = tiny_tokens(&be, 31);
+        let specs = param_specs(&be.m);
+        let ptensors: Vec<HostTensor> = specs
+            .iter()
+            .zip(&params)
+            .map(|((_, shp), data)| HostTensor::f32(data.clone(), shp.clone()))
+            .collect();
+
+        // prefill prompts of length 2 in every row
+        let plen = 2usize;
+        let mut ptoks = vec![0i32; b * s];
+        for bi in 0..b {
+            for j in 0..plen {
+                ptoks[bi * s + j] = toks[bi * s + j];
+            }
+        }
+        let mut pargs = ptensors.clone();
+        pargs.push(HostTensor::i32(ptoks, vec![b, s]));
+        pargs.push(HostTensor::i32(vec![plen as i32; b], vec![b]));
+        let out = be.prefill(&pargs, false).unwrap();
+
+        // the state only keys off the graph name
+        let gm = GraphMeta {
+            name: "lm_decode_step".into(),
+            file: std::path::PathBuf::new(),
+            args: Vec::new(),
+            results: Vec::new(),
+        };
+        let mut state = be.alloc_decode_state(&gm).unwrap().expect("cpu in-place");
+        let row = s * d;
+        for c in 0..2 * nl {
+            let src = out[1 + c].as_f32().unwrap();
+            for slot in 0..b {
+                state
+                    .load_slot(c, slot, &src[slot * row..(slot + 1) * row])
+                    .unwrap();
+            }
+        }
+
+        let mut caches: Vec<HostTensor> = out[1..].to_vec();
+        let mut token: Vec<i32> = (0..b).map(|bi| toks[bi * s + plen]).collect();
+        for step in 0..3usize {
+            let pos = vec![(plen + step) as i32; b];
+            let mut dargs = ptensors.clone();
+            dargs.extend(caches.iter().cloned());
+            dargs.push(HostTensor::i32(token.clone(), vec![b]));
+            dargs.push(HostTensor::i32(pos.clone(), vec![b]));
+            let dout = be.decode_step(&dargs, false).unwrap();
+
+            let mut iargs = ptensors.clone();
+            iargs.push(HostTensor::i32(token.clone(), vec![b]));
+            iargs.push(HostTensor::i32(pos, vec![b]));
+            let iout = be.execute_decode_inplace(&gm, state.as_mut(), &iargs).unwrap();
+            assert_eq!(iout.len(), 1);
+            assert_eq!(dout[0], iout[0], "step {step}: logits diverged");
+
+            caches = dout[1..].to_vec();
+            let lg = dout[0].as_f32().unwrap();
+            token = (0..b)
+                .map(|bi| {
+                    let r = &lg[bi * v..(bi + 1) * v];
+                    let mut best = 0usize;
+                    for j in 1..v {
+                        if r[j] >= r[best] {
+                            best = j;
+                        }
+                    }
+                    best as i32
+                })
+                .collect();
+        }
+        // the resident slabs ended bit-identical to the cloned caches
+        let st = state.as_any_mut().downcast_mut::<CpuDecodeState>().unwrap();
+        for c in 0..2 * nl {
+            assert_eq!(st.cache(c), caches[c].as_f32().unwrap(), "cache {c}");
+        }
+    }
+
     #[test]
     fn adamw_moves_against_gradient() {
         let p = vec![vec![1.0f32, -1.0]];
@@ -1811,7 +1741,7 @@ mod tests {
         let pv: Vec<&[f32]> = p.iter().map(|x| x.as_slice()).collect();
         let mv: Vec<&[f32]> = m.iter().map(|x| x.as_slice()).collect();
         let vv: Vec<&[f32]> = v.iter().map(|x| x.as_slice()).collect();
-        let (np, nm, nv, step) = CpuBackend::adamw(&pv, &g, &mv, &vv, 0, &[false]);
+        let (np, nm, nv, step) = tiny().adamw(&pv, &g, &mv, &vv, 0, &[false]);
         assert_eq!(step, 1);
         assert!(np[0][0] < 1.0); // positive grad -> parameter decreases
         assert!(np[0][1] > -1.0);

@@ -30,6 +30,12 @@ impl HostTensor {
         HostTensor::F32(data, shape)
     }
 
+    /// Zero-filled f32 tensor (cache slabs, argument placeholders).
+    pub fn zeros_f32(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        HostTensor::F32(vec![0.0; n], shape)
+    }
+
     pub fn i32(data: Vec<i32>, shape: Vec<usize>) -> Self {
         assert_eq!(data.len(), shape.iter().product::<usize>());
         HostTensor::I32(data, shape)
@@ -154,6 +160,9 @@ mod tests {
         assert_eq!(t.scalar_i32_value().unwrap(), 5);
         let t = HostTensor::scalar_u32(9);
         assert_eq!(t.scalar_u32_value().unwrap(), 9);
+        let z = HostTensor::zeros_f32(vec![2, 4]);
+        assert_eq!(z.shape(), &[2, 4]);
+        assert!(z.as_f32().unwrap().iter().all(|&x| x == 0.0));
     }
 
     #[test]

@@ -1,0 +1,283 @@
+//! Causal multi-head attention kernels, fanned out over
+//! `(batch row x head)` tasks.
+//!
+//! Each `(bi, hi)` task owns a disjoint region of every output buffer
+//! (its head's column stripe of `y`/`dqkv`, its own `[s, s]` probability
+//! block of `att`), and runs the exact loop body of the serial attention
+//! in `runtime/cpu.rs` — so results are bit-identical to the scalar
+//! interpreter at every thread count. The packed layout is the model's:
+//! `qkv [t, 3d]` with Q at column offset `0`, K at `d`, V at `2d`, and
+//! head `hi` owning columns `hi*hd .. (hi+1)*hd` of each.
+
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
+use super::pool::{SyncSlice, ThreadPool};
+
+/// Forward causal MHA over packed `qkv [b*s, 3d]`; returns
+/// `(att [b*h*s*s] softmax probabilities, y [b*s, d] attention mix)`.
+pub fn mha_forward(
+    pool: &ThreadPool,
+    qkv: &[f32],
+    b: usize,
+    h: usize,
+    s: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let hd = d / h;
+    let inv_sqrt_hd = 1.0 / (hd as f32).sqrt();
+    let mut att = vec![0.0f32; b * h * s * s];
+    let mut y = vec![0.0f32; b * s * d];
+    let att_s = SyncSlice::new(&mut att);
+    let y_s = SyncSlice::new(&mut y);
+    pool.run(b * h, |bh| {
+        let (bi, hi) = (bh / h, bh % h);
+        let hoff = hi * hd;
+        // SAFETY: probability block bh is written only by task bh.
+        let ab = unsafe { att_s.slice_mut(bh * s * s, s * s) };
+        for s1 in 0..s {
+            let t1 = bi * s + s1;
+            let q1 = &qkv[t1 * 3 * d + hoff..t1 * 3 * d + hoff + hd];
+            let mut row = vec![0.0f32; s1 + 1];
+            let mut maxv = f32::NEG_INFINITY;
+            for (s2, rv) in row.iter_mut().enumerate() {
+                let t2 = bi * s + s2;
+                let k2 = &qkv[t2 * 3 * d + d + hoff..t2 * 3 * d + d + hoff + hd];
+                let mut dot = 0.0f32;
+                for e in 0..hd {
+                    dot += q1[e] * k2[e];
+                }
+                let sc = dot * inv_sqrt_hd;
+                *rv = sc;
+                if sc > maxv {
+                    maxv = sc;
+                }
+            }
+            let mut denom = 0.0f32;
+            for rv in row.iter_mut() {
+                *rv = (*rv - maxv).exp();
+                denom += *rv;
+            }
+            let inv = 1.0 / denom;
+            let mut acc = vec![0.0f32; hd];
+            for (s2, rv) in row.iter().enumerate() {
+                let prob = rv * inv;
+                ab[s1 * s + s2] = prob;
+                let t2 = bi * s + s2;
+                let v2 = &qkv[t2 * 3 * d + 2 * d + hoff..t2 * 3 * d + 2 * d + hoff + hd];
+                for e in 0..hd {
+                    acc[e] += prob * v2[e];
+                }
+            }
+            // SAFETY: y columns [hoff, hoff+hd) of row t1 belong to head
+            // hi of batch row bi — written only by task bh.
+            let yr = unsafe { y_s.slice_mut(t1 * d + hoff, hd) };
+            yr.copy_from_slice(&acc);
+        }
+    });
+    (att, y)
+}
+
+/// Backward of [`mha_forward`]: given the cached probabilities and the
+/// gradient `dy [b*s, d]` of the attention mix, returns
+/// `dqkv [b*s, 3d]`.
+pub fn mha_backward(
+    pool: &ThreadPool,
+    qkv: &[f32],
+    att: &[f32],
+    dy: &[f32],
+    b: usize,
+    h: usize,
+    s: usize,
+    d: usize,
+) -> Vec<f32> {
+    let hd = d / h;
+    let inv_sqrt_hd = 1.0 / (hd as f32).sqrt();
+    let mut dqkv = vec![0.0f32; b * s * 3 * d];
+    let dq_s = SyncSlice::new(&mut dqkv);
+    pool.run(b * h, |bh| {
+        let (bi, hi) = (bh / h, bh % h);
+        let hoff = hi * hd;
+        let aoff = bh * s * s;
+        for s1 in 0..s {
+            let t1 = bi * s + s1;
+            let dy1 = &dy[t1 * d + hoff..t1 * d + hoff + hd];
+            let mut datt = vec![0.0f32; s1 + 1];
+            for (s2, da) in datt.iter_mut().enumerate() {
+                let t2 = bi * s + s2;
+                let prob = att[aoff + s1 * s + s2];
+                let v2 = &qkv[t2 * 3 * d + 2 * d + hoff..t2 * 3 * d + 2 * d + hoff + hd];
+                let mut acc = 0.0f32;
+                for e in 0..hd {
+                    acc += dy1[e] * v2[e];
+                }
+                *da = acc;
+                // SAFETY: the V-column stripe of head hi, batch row bi is
+                // written only by task bh (borrow ends this iteration).
+                let dv2 = unsafe { dq_s.slice_mut(t2 * 3 * d + 2 * d + hoff, hd) };
+                for e in 0..hd {
+                    dv2[e] += prob * dy1[e];
+                }
+            }
+            let mut dot = 0.0f32;
+            for (s2, &da) in datt.iter().enumerate() {
+                dot += da * att[aoff + s1 * s + s2];
+            }
+            let q1: Vec<f32> = qkv[t1 * 3 * d + hoff..t1 * 3 * d + hoff + hd].to_vec();
+            let mut dq1 = vec![0.0f32; hd];
+            for (s2, &da) in datt.iter().enumerate() {
+                let prob = att[aoff + s1 * s + s2];
+                let dscore = prob * (da - dot) * inv_sqrt_hd;
+                if dscore == 0.0 {
+                    continue;
+                }
+                let t2 = bi * s + s2;
+                let k2 = &qkv[t2 * 3 * d + d + hoff..t2 * 3 * d + d + hoff + hd];
+                for e in 0..hd {
+                    dq1[e] += dscore * k2[e];
+                }
+                // SAFETY: the K-column stripe of head hi, batch row bi is
+                // written only by task bh (borrow ends this iteration).
+                let dk2 = unsafe { dq_s.slice_mut(t2 * 3 * d + d + hoff, hd) };
+                for e in 0..hd {
+                    dk2[e] += dscore * q1[e];
+                }
+            }
+            // SAFETY: the Q-column stripe of head hi at row t1 is written
+            // only by task bh.
+            let dq = unsafe { dq_s.slice_mut(t1 * 3 * d + hoff, hd) };
+            for e in 0..hd {
+                dq[e] += dq1[e];
+            }
+        }
+    });
+    dqkv
+}
+
+/// One incremental decode-step attention for a single batch row: query
+/// from the fresh `qkv [3d]` row, keys/values from that row's cache
+/// slices `kc`/`vc` (`[s, d]`, positions `0..=p` valid). Fanned out over
+/// heads; returns the attention mix `y [d]`.
+pub fn decode_attention(
+    pool: &ThreadPool,
+    qkv: &[f32],
+    kc: &[f32],
+    vc: &[f32],
+    d: usize,
+    h: usize,
+    p: usize,
+) -> Vec<f32> {
+    let hd = d / h;
+    let inv_sqrt_hd = 1.0 / (hd as f32).sqrt();
+    let mut y = vec![0.0f32; d];
+    let y_s = SyncSlice::new(&mut y);
+    pool.run(h, |hi| {
+        let hoff = hi * hd;
+        let q1 = &qkv[hoff..hoff + hd];
+        let mut row = vec![0.0f32; p + 1];
+        let mut maxv = f32::NEG_INFINITY;
+        for (s2, rv) in row.iter_mut().enumerate() {
+            let k2 = &kc[s2 * d + hoff..s2 * d + hoff + hd];
+            let mut dot = 0.0f32;
+            for e in 0..hd {
+                dot += q1[e] * k2[e];
+            }
+            let sc = dot * inv_sqrt_hd;
+            *rv = sc;
+            if sc > maxv {
+                maxv = sc;
+            }
+        }
+        let mut denom = 0.0f32;
+        for rv in row.iter_mut() {
+            *rv = (*rv - maxv).exp();
+            denom += *rv;
+        }
+        let inv = 1.0 / denom;
+        let mut acc = vec![0.0f32; hd];
+        for (s2, rv) in row.iter().enumerate() {
+            let prob = rv * inv;
+            let v2 = &vc[s2 * d + hoff..s2 * d + hoff + hd];
+            for e in 0..hd {
+                acc[e] += prob * v2[e];
+            }
+        }
+        // SAFETY: y columns [hoff, hoff+hd) are written only by task hi.
+        let yr = unsafe { y_s.slice_mut(hoff, hd) };
+        yr.copy_from_slice(&acc);
+    });
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn rand(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let mut v = vec![0.0f32; n];
+        rng.fill_gaussian_f32(&mut v, 0.5);
+        v
+    }
+
+    #[test]
+    fn mha_forward_thread_invariant_and_causal() {
+        let (b, h, s, d) = (2usize, 2usize, 6usize, 8usize);
+        let qkv = rand(b * s * 3 * d, 1);
+        let p1 = ThreadPool::with_threads(1);
+        let p4 = ThreadPool::with_threads(4);
+        let (a1, y1) = mha_forward(&p1, &qkv, b, h, s, d);
+        let (a4, y4) = mha_forward(&p4, &qkv, b, h, s, d);
+        assert_eq!(a1, a4);
+        assert_eq!(y1, y4);
+        // causal: probabilities above the diagonal stay zero, rows sum to 1
+        for bh in 0..b * h {
+            for s1 in 0..s {
+                let row = &a1[bh * s * s + s1 * s..bh * s * s + (s1 + 1) * s];
+                for (s2, &p) in row.iter().enumerate() {
+                    if s2 > s1 {
+                        assert_eq!(p, 0.0);
+                    }
+                }
+                let sum: f32 = row.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn mha_backward_thread_invariant() {
+        let (b, h, s, d) = (2usize, 2usize, 5usize, 8usize);
+        let qkv = rand(b * s * 3 * d, 2);
+        let dy = rand(b * s * d, 3);
+        let p1 = ThreadPool::with_threads(1);
+        let p4 = ThreadPool::with_threads(4);
+        let (att, _) = mha_forward(&p1, &qkv, b, h, s, d);
+        let g1 = mha_backward(&p1, &qkv, &att, &dy, b, h, s, d);
+        let g4 = mha_backward(&p4, &qkv, &att, &dy, b, h, s, d);
+        assert_eq!(g1, g4);
+    }
+
+    #[test]
+    fn decode_attention_matches_forward_last_row() {
+        // one batch row, context p+1: the decode kernel over a cache must
+        // equal the full forward's last row for that head layout
+        let (h, s, d) = (2usize, 5usize, 8usize);
+        let qkv = rand(s * 3 * d, 4);
+        let p1 = ThreadPool::with_threads(1);
+        let (_, y_full) = mha_forward(&p1, &qkv, 1, h, s, d);
+        // build the cache layout: kc/vc [s, d]
+        let mut kc = vec![0.0f32; s * d];
+        let mut vc = vec![0.0f32; s * d];
+        for t in 0..s {
+            kc[t * d..(t + 1) * d].copy_from_slice(&qkv[t * 3 * d + d..t * 3 * d + 2 * d]);
+            vc[t * d..(t + 1) * d].copy_from_slice(&qkv[t * 3 * d + 2 * d..t * 3 * d + 3 * d]);
+        }
+        let last = &qkv[(s - 1) * 3 * d..(s - 1) * 3 * d + 3 * d];
+        for threads in [1usize, 3] {
+            let pool = ThreadPool::with_threads(threads);
+            let y = decode_attention(&pool, last, &kc, &vc, d, h, s - 1);
+            assert_eq!(&y[..], &y_full[(s - 1) * d..s * d], "threads={threads}");
+        }
+    }
+}

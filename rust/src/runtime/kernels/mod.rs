@@ -1,0 +1,33 @@
+//! `runtime::kernels` — the threaded tiled-kernel subsystem behind the
+//! CPU backend's hot paths.
+//!
+//! Layout:
+//!
+//! - [`pool`]: a crate-local scoped thread pool (std-only; sized by
+//!   `BOF4_THREADS`, else the detected core count) plus [`SyncSlice`],
+//!   the disjoint-tile write primitive every kernel builds on.
+//! - [`tiling`]: cache-blocked dense matmul (`y = x@w`, `dy@w^T`,
+//!   `x^T@dy`), row-parallel RMS-norm forward/backward, and element-wise
+//!   maps.
+//! - [`q4`]: the fused 4-bit dequant-matmul family — one BOF4 block
+//!   dequantized per tile, constants optionally 8-bit double-quantized —
+//!   plus the weight materializer the prefill path uses.
+//! - [`attention`]: causal multi-head attention forward/backward fanned
+//!   out over `(batch row x head)`, and the single-row incremental
+//!   decode-step attention.
+//!
+//! **Determinism contract**: every kernel is bit-identical to its serial
+//! loop at any thread count. Tiles have exactly one owning task
+//! (deterministic ownership), per-element reductions keep the serial
+//! `k`-ascending order, and the only cross-row reduction
+//! ([`tiling::rmsnorm_bwd`]'s gain gradient) is staged per row and summed
+//! serially in row order. `rust/tests/runtime_e2e.rs` pins logits and
+//! AdamW/LoRA training steps across `BOF4_THREADS in {1, 2, 8}`.
+
+pub mod attention;
+pub mod pool;
+pub mod q4;
+pub mod tiling;
+
+pub use pool::{default_pool, threads_from_env, SyncSlice, ThreadPool};
+pub use q4::MatW;

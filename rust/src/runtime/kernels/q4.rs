@@ -1,0 +1,249 @@
+//! Fused 4-bit dequant-matmul kernels: the weight stays 4-bit codes with
+//! (optionally double-quantized) per-block constants; each tile
+//! dequantizes one BOF4 block at a time inside the inner loop — one LUT
+//! multiply per weight, with the block constant hoisted.
+//!
+//! Parallel tiles are aligned to quantization-block boundaries, so every
+//! `y` element keeps the serial kernel's exact `kk`-ascending
+//! accumulation order: results are bit-identical at every thread count
+//! (and to the pre-threading scalar kernels).
+
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
+use super::pool::{SyncSlice, ThreadPool};
+use super::tiling;
+
+/// One matmul weight on the serving decode path: dense f32 rows, or 4-bit
+/// codes whose per-block constants are stored 8-bit (double-quantized)
+/// and dequantized inside the fused inner loop.
+pub enum MatW<'a> {
+    Dense(&'a [f32]),
+    Q4 {
+        /// Unpacked codes, `[k, n]`.
+        codes: &'a [u8],
+        /// 8-bit constant codes, `[k * n / block]` flat.
+        am_codes: &'a [u8],
+        /// Flattened per-chunk `(min, scale)` pairs.
+        am_params: &'a [f32],
+        levels: &'a [f32],
+        block: usize,
+    },
+}
+
+/// Reconstruct one double-quantized block constant (shares the exact
+/// expression of [`crate::quant::DoubleQuant::dequantize`] via
+/// [`crate::quant::double_quant::reconstruct`]).
+#[inline]
+pub fn dq_constant(am_codes: &[u8], am_params: &[f32], idx: usize) -> f32 {
+    let chunk = idx / crate::quant::double_quant::CHUNK;
+    crate::quant::double_quant::reconstruct(
+        am_params[2 * chunk],
+        am_params[2 * chunk + 1],
+        am_codes[idx],
+    )
+}
+
+/// `y = x @ w` for a single activation row (`x [k]`). The dense arm
+/// reuses the tiled [`tiling::matmul`] so decode logits are bit-identical
+/// to the full forward; the q4 arm multiplies in the exact order
+/// `xv * (levels[c] * am)` so it is bit-identical to the dense path over
+/// pre-dequantized weights. Parallel over quantization-block columns.
+pub fn row_matmul(pool: &ThreadPool, x: &[f32], w: &MatW<'_>, k: usize, n: usize) -> Vec<f32> {
+    match w {
+        MatW::Dense(w) => tiling::matmul(pool, x, w, 1, k, n),
+        MatW::Q4 {
+            codes,
+            am_codes,
+            am_params,
+            levels,
+            block,
+        } => {
+            let nb = n / block;
+            let mut y = vec![0.0f32; n];
+            let ys = SyncSlice::new(&mut y);
+            pool.run(nb, |jb| {
+                // SAFETY: column block jb is written only by task jb.
+                let yblk = unsafe { ys.slice_mut(jb * block, *block) };
+                for (kk, &xv) in x.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let am = dq_constant(am_codes, am_params, kk * nb + jb);
+                    let cblk = &codes[kk * n + jb * block..kk * n + (jb + 1) * block];
+                    for (yv, &c) in yblk.iter_mut().zip(cblk) {
+                        *yv += xv * (levels[(c & 0x0f) as usize] * am);
+                    }
+                }
+            });
+            y
+        }
+    }
+}
+
+/// Batched fused dequant-matmul `y = x @ dequant(codes, absmax)` with f32
+/// per-block constants (`x [t, k]`, `codes [k, n]`, `absmax [k, n/block]`)
+/// — the standalone `dequant_matmul` graph kernel, parallel over rows.
+pub fn q4_matmul(
+    pool: &ThreadPool,
+    x: &[f32],
+    codes: &[u8],
+    absmax: &[f32],
+    levels: &[f32],
+    t: usize,
+    k: usize,
+    n: usize,
+    block: usize,
+) -> Vec<f32> {
+    let nb = n / block;
+    let mut y = vec![0.0f32; t * n];
+    let ys = SyncSlice::new(&mut y);
+    pool.run(t, |i| {
+        let xr = &x[i * k..(i + 1) * k];
+        // SAFETY: output row i is written only by task i.
+        let yr = unsafe { ys.slice_mut(i * n, n) };
+        for (kk, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let crow = &codes[kk * n..(kk + 1) * n];
+            let arow = &absmax[kk * nb..(kk + 1) * nb];
+            for (jb, &am) in arow.iter().enumerate() {
+                let s = xv * am;
+                let cblk = &crow[jb * block..(jb + 1) * block];
+                let yblk = &mut yr[jb * block..(jb + 1) * block];
+                for (yv, &c) in yblk.iter_mut().zip(cblk) {
+                    *yv += s * levels[(c & 0x0f) as usize];
+                }
+            }
+        }
+    });
+    y
+}
+
+/// Materialize a q4 weight back to f32 with the same expression the fused
+/// kernel uses (`levels[c] * am`), so prefill (dense forward over these)
+/// and decode (fused) stay bit-identical. Parallel over the `k` rows.
+pub fn dequant_q4_weight(
+    pool: &ThreadPool,
+    codes: &[u8],
+    am_codes: &[u8],
+    am_params: &[f32],
+    levels: &[f32],
+    k: usize,
+    n: usize,
+    block: usize,
+) -> Vec<f32> {
+    let nb = n / block;
+    let mut w = vec![0.0f32; k * n];
+    let ws = SyncSlice::new(&mut w);
+    pool.run(k, |kk| {
+        // SAFETY: weight row kk is written only by task kk.
+        let wr = unsafe { ws.slice_mut(kk * n, n) };
+        for jb in 0..nb {
+            let am = dq_constant(am_codes, am_params, kk * nb + jb);
+            let crow = &codes[kk * n + jb * block..kk * n + (jb + 1) * block];
+            let wrow = &mut wr[jb * block..(jb + 1) * block];
+            for (wv, &c) in wrow.iter_mut().zip(crow) {
+                *wv = levels[(c & 0x0f) as usize] * am;
+            }
+        }
+    });
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn q4_matmul_thread_invariant_and_matches_dense() {
+        let (t, k, n, block) = (4usize, 8usize, 16usize, 4usize);
+        let mut rng = Pcg64::seed_from_u64(11);
+        let mut x = vec![0.0f32; t * k];
+        rng.fill_gaussian_f32(&mut x, 1.0);
+        let codes: Vec<u8> = (0..k * n).map(|i| (i % 16) as u8).collect();
+        let absmax: Vec<f32> = (0..k * n / block).map(|i| 0.1 + (i % 5) as f32 * 0.3).collect();
+        let levels: Vec<f32> = (0..16).map(|i| (i as f32 - 7.5) / 7.5).collect();
+
+        let p1 = ThreadPool::with_threads(1);
+        let p4 = ThreadPool::with_threads(4);
+        let y1 = q4_matmul(&p1, &x, &codes, &absmax, &levels, t, k, n, block);
+        let y4 = q4_matmul(&p4, &x, &codes, &absmax, &levels, t, k, n, block);
+        assert_eq!(y1, y4);
+        // parity vs dense matmul over explicitly dequantized weights
+        let nb = n / block;
+        let mut w = vec![0.0f32; k * n];
+        for kk in 0..k {
+            for j in 0..n {
+                w[kk * n + j] = levels[codes[kk * n + j] as usize] * absmax[kk * nb + j / block];
+            }
+        }
+        let yd = tiling::matmul(&p1, &x, &w, t, k, n);
+        for (a, b) in y1.iter().zip(&yd) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn row_matmul_q4_thread_invariant() {
+        let (k, n, block) = (8usize, 16usize, 4usize);
+        let mut rng = Pcg64::seed_from_u64(12);
+        let mut x = vec![0.0f32; k];
+        rng.fill_gaussian_f32(&mut x, 1.0);
+        let codes: Vec<u8> = (0..k * n).map(|i| ((i * 7) % 16) as u8).collect();
+        let nblocks = k * n / block;
+        // double-quantized constants: one chunk, identity-ish mapping
+        let am_codes: Vec<u8> = (0..nblocks).map(|i| (i % 250) as u8).collect();
+        let am_params = vec![0.05f32, 0.01]; // (min, scale) for chunk 0
+        let levels: Vec<f32> = (0..16).map(|i| (i as f32 - 7.5) / 7.5).collect();
+        let w = MatW::Q4 {
+            codes: &codes,
+            am_codes: &am_codes,
+            am_params: &am_params,
+            levels: &levels,
+            block,
+        };
+        let y1 = row_matmul(&ThreadPool::with_threads(1), &x, &w, k, n);
+        let y4 = row_matmul(&ThreadPool::with_threads(4), &x, &w, k, n);
+        assert_eq!(y1, y4);
+        // the dense arm routes through the tiled matmul
+        let dense: Vec<f32> = (0..k * n).map(|i| i as f32 * 0.01).collect();
+        let wd = MatW::Dense(&dense);
+        let yd1 = row_matmul(&ThreadPool::with_threads(1), &x, &wd, k, n);
+        let yd4 = row_matmul(&ThreadPool::with_threads(4), &x, &wd, k, n);
+        assert_eq!(yd1, yd4);
+    }
+
+    #[test]
+    fn dequant_q4_weight_thread_invariant() {
+        let (k, n, block) = (6usize, 12usize, 4usize);
+        let codes: Vec<u8> = (0..k * n).map(|i| ((i * 3) % 16) as u8).collect();
+        let nblocks = k * n / block;
+        let am_codes: Vec<u8> = (0..nblocks).map(|i| (10 + i % 100) as u8).collect();
+        let am_params = vec![0.02f32, 0.004];
+        let levels: Vec<f32> = (0..16).map(|i| (i as f32 - 7.5) / 7.5).collect();
+        let w1 = dequant_q4_weight(
+            &ThreadPool::with_threads(1),
+            &codes,
+            &am_codes,
+            &am_params,
+            &levels,
+            k,
+            n,
+            block,
+        );
+        let w4 = dequant_q4_weight(
+            &ThreadPool::with_threads(4),
+            &codes,
+            &am_codes,
+            &am_params,
+            &levels,
+            k,
+            n,
+            block,
+        );
+        assert_eq!(w1, w4);
+        assert_eq!(w1.len(), k * n);
+    }
+}

@@ -1,0 +1,344 @@
+//! Cache-blocked dense kernels, parallelized over deterministic tiles.
+//!
+//! Every kernel here is **bit-identical to its serial loop at any thread
+//! count**: output rows/columns are partitioned into tiles with exactly
+//! one owning task, and every per-element reduction runs in the same
+//! order as the original scalar loop in `runtime/cpu.rs` (the `k` index
+//! always ascends for a given output element). Cross-row reductions
+//! (`rmsnorm_bwd`'s gain gradient) are staged per row and summed serially
+//! in row order, so the grouping never depends on the thread count.
+
+// Index-heavy numeric kernels read better as explicit loops.
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
+use super::pool::{SyncSlice, ThreadPool};
+
+/// Column-tile width for the dense matmul inner loops: 256 f32 output
+/// columns (1 KiB of `y` plus 1 KiB of each visited `w` row) keeps a tile
+/// resident in L1 while the `k` loop streams over it.
+pub const COL_TILE: usize = 256;
+
+const NORM_EPS: f32 = 1e-6;
+
+/// `y = x @ w` with `x [t,k]`, `w [k,n]`, parallel over rows (or over
+/// column tiles when `t == 1`, the decode-row case).
+pub fn matmul(pool: &ThreadPool, x: &[f32], w: &[f32], t: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut y = vec![0.0f32; t * n];
+    let ys = SyncSlice::new(&mut y);
+    if t == 1 {
+        let tiles = n.div_ceil(COL_TILE);
+        pool.run(tiles, |jb| {
+            let (jlo, jhi) = (jb * COL_TILE, ((jb + 1) * COL_TILE).min(n));
+            // SAFETY: column tile jb is written only by task jb.
+            let yr = unsafe { ys.slice_mut(jlo, jhi - jlo) };
+            matmul_row_tile(x, w, k, n, jlo, jhi, yr);
+        });
+    } else {
+        pool.run(t, |i| {
+            // SAFETY: output row i is written only by task i.
+            let yr = unsafe { ys.slice_mut(i * n, n) };
+            matmul_row(&x[i * k..(i + 1) * k], w, k, n, yr);
+        });
+    }
+    y
+}
+
+/// One output row, column-tiled; per-element accumulation order is `kk`
+/// ascending — identical to the untiled scalar loop.
+fn matmul_row(xr: &[f32], w: &[f32], k: usize, n: usize, yr: &mut [f32]) {
+    let mut jlo = 0;
+    while jlo < n {
+        let jhi = (jlo + COL_TILE).min(n);
+        matmul_row_tile(xr, w, k, n, jlo, jhi, &mut yr[jlo..jhi]);
+        jlo = jhi;
+    }
+}
+
+fn matmul_row_tile(
+    xr: &[f32],
+    w: &[f32],
+    _k: usize,
+    n: usize,
+    jlo: usize,
+    jhi: usize,
+    yt: &mut [f32],
+) {
+    for (kk, &xv) in xr.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let wr = &w[kk * n + jlo..kk * n + jhi];
+        for (yv, &wv) in yt.iter_mut().zip(wr) {
+            *yv += xv * wv;
+        }
+    }
+}
+
+/// `dx = dy @ w^T` with `dy [t,n]`, `w [k,n]` -> `[t,k]`; parallel over
+/// rows, each element an independent dot product.
+pub fn matmul_nt(
+    pool: &ThreadPool,
+    dy: &[f32],
+    w: &[f32],
+    t: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    let mut dx = vec![0.0f32; t * k];
+    let dxs = SyncSlice::new(&mut dx);
+    pool.run(t, |i| {
+        let dyr = &dy[i * n..(i + 1) * n];
+        // SAFETY: output row i is written only by task i.
+        let dxr = unsafe { dxs.slice_mut(i * k, k) };
+        for (kk, dv) in dxr.iter_mut().enumerate() {
+            let wr = &w[kk * n..(kk + 1) * n];
+            let mut s = 0.0f32;
+            for (a, b) in dyr.iter().zip(wr) {
+                s += a * b;
+            }
+            *dv = s;
+        }
+    });
+    dx
+}
+
+/// `dw = x^T @ dy` with `x [t,k]`, `dy [t,n]` -> `[k,n]`; parallel over
+/// the `k` output rows. For a fixed `dw[kk][j]` the `t` contributions
+/// arrive in ascending `i` order — the serial loop's exact order.
+pub fn matmul_tn(
+    pool: &ThreadPool,
+    x: &[f32],
+    dy: &[f32],
+    t: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    let mut dw = vec![0.0f32; k * n];
+    let dws = SyncSlice::new(&mut dw);
+    pool.run(k, |kk| {
+        // SAFETY: output row kk is written only by task kk.
+        let dwr = unsafe { dws.slice_mut(kk * n, n) };
+        for i in 0..t {
+            let xv = x[i * k + kk];
+            if xv == 0.0 {
+                continue;
+            }
+            let dyr = &dy[i * n..(i + 1) * n];
+            for (dv, &g) in dwr.iter_mut().zip(dyr) {
+                *dv += xv * g;
+            }
+        }
+    });
+    dw
+}
+
+/// Row-wise RMS norm `y = x / rms * g`, parallel over rows; returns
+/// `(y, rms per row)`.
+pub fn rmsnorm(pool: &ThreadPool, x: &[f32], g: &[f32], d: usize) -> (Vec<f32>, Vec<f32>) {
+    let rows = x.len() / d;
+    let mut y = vec![0.0f32; x.len()];
+    let mut rms = vec![0.0f32; rows];
+    let ys = SyncSlice::new(&mut y);
+    let rs = SyncSlice::new(&mut rms);
+    pool.run(rows, |i| {
+        let xr = &x[i * d..(i + 1) * d];
+        let ms = xr.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+        let r = (ms + NORM_EPS).sqrt();
+        // SAFETY: row i of y and entry i of rms are written only by task i.
+        unsafe { rs.slice_mut(i, 1) }[0] = r;
+        let yr = unsafe { ys.slice_mut(i * d, d) };
+        for j in 0..d {
+            yr[j] = xr[j] / r * g[j];
+        }
+    });
+    (y, rms)
+}
+
+/// Backward of [`rmsnorm`]: returns `(dx, dg)`. `dx` rows are computed in
+/// parallel; the cross-row `dg` reduction is staged per row and then
+/// summed serially in ascending row order, so the result is independent
+/// of the thread count (and equal to the serial loop's).
+pub fn rmsnorm_bwd(
+    pool: &ThreadPool,
+    x: &[f32],
+    g: &[f32],
+    rms: &[f32],
+    dy: &[f32],
+    d: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let rows = x.len() / d;
+    let mut dx = vec![0.0f32; x.len()];
+    let mut stage = vec![0.0f32; x.len()]; // per-row dg contributions
+    let dxs = SyncSlice::new(&mut dx);
+    let sts = SyncSlice::new(&mut stage);
+    pool.run(rows, |i| {
+        let xr = &x[i * d..(i + 1) * d];
+        let dyr = &dy[i * d..(i + 1) * d];
+        let r = rms[i];
+        // SAFETY: row i of dx and of the staging buffer are written only
+        // by task i.
+        let sg = unsafe { sts.slice_mut(i * d, d) };
+        let mut s = 0.0f32;
+        for j in 0..d {
+            sg[j] = dyr[j] * xr[j] / r;
+            s += dyr[j] * g[j] * xr[j];
+        }
+        let c = s / (d as f32 * r * r * r);
+        let dxr = unsafe { dxs.slice_mut(i * d, d) };
+        for j in 0..d {
+            dxr[j] = g[j] * dyr[j] / r - xr[j] * c;
+        }
+    });
+    let mut dg = vec![0.0f32; d];
+    for i in 0..rows {
+        let sg = &stage[i * d..(i + 1) * d];
+        for j in 0..d {
+            dg[j] += sg[j];
+        }
+    }
+    (dx, dg)
+}
+
+/// Element-wise map into a fresh buffer, parallel over fixed-size chunks.
+pub fn par_map(pool: &ThreadPool, src: &[f32], f: impl Fn(f32) -> f32 + Sync) -> Vec<f32> {
+    const CHUNK: usize = 4096;
+    let mut out = vec![0.0f32; src.len()];
+    let os = SyncSlice::new(&mut out);
+    pool.run(src.len().div_ceil(CHUNK), |c| {
+        let (lo, hi) = (c * CHUNK, ((c + 1) * CHUNK).min(src.len()));
+        // SAFETY: chunk c is written only by task c.
+        let dst = unsafe { os.slice_mut(lo, hi - lo) };
+        for (o, &v) in dst.iter_mut().zip(&src[lo..hi]) {
+            *o = f(v);
+        }
+    });
+    out
+}
+
+/// Element-wise `dst[i] = f(dst[i], src[i])`, parallel over chunks.
+pub fn par_zip_apply(
+    pool: &ThreadPool,
+    dst: &mut [f32],
+    src: &[f32],
+    f: impl Fn(f32, f32) -> f32 + Sync,
+) {
+    const CHUNK: usize = 4096;
+    let len = dst.len();
+    let ds = SyncSlice::new(dst);
+    pool.run(len.div_ceil(CHUNK), |c| {
+        let (lo, hi) = (c * CHUNK, ((c + 1) * CHUNK).min(len));
+        // SAFETY: chunk c is written only by task c.
+        let d = unsafe { ds.slice_mut(lo, hi - lo) };
+        for (o, &v) in d.iter_mut().zip(&src[lo..hi]) {
+            *o = f(*o, v);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn serial_matmul(x: &[f32], w: &[f32], t: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut y = vec![0.0f32; t * n];
+        for i in 0..t {
+            for (kk, &xv) in x[i * k..(i + 1) * k].iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    y[i * n + j] += xv * w[kk * n + j];
+                }
+            }
+        }
+        y
+    }
+
+    fn rand(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let mut v = vec![0.0f32; n];
+        rng.fill_gaussian_f32(&mut v, 1.0);
+        v
+    }
+
+    #[test]
+    fn matmul_matches_serial_bitwise_across_thread_counts() {
+        let (t, k, n) = (13usize, 17usize, 300usize); // spans >1 col tile
+        let x = rand(t * k, 1);
+        let w = rand(k * n, 2);
+        let want = serial_matmul(&x, &w, t, k, n);
+        for threads in [1usize, 2, 5] {
+            let pool = ThreadPool::with_threads(threads);
+            assert_eq!(matmul(&pool, &x, &w, t, k, n), want, "threads={threads}");
+            // the t == 1 column-tiled path too
+            let w1 = serial_matmul(&x[..k], &w, 1, k, n);
+            assert_eq!(matmul(&pool, &x[..k], &w, 1, k, n), w1, "row, threads={threads}");
+        }
+    }
+
+    #[test]
+    fn matmul_nt_tn_match_brute_force() {
+        let (t, k, n) = (5usize, 7usize, 9usize);
+        let x = rand(t * k, 3);
+        let w = rand(k * n, 4);
+        let dy = rand(t * n, 5);
+        let pool = ThreadPool::with_threads(3);
+        let dx = matmul_nt(&pool, &dy, &w, t, k, n);
+        for i in 0..t {
+            for kk in 0..k {
+                let mut s = 0.0f32;
+                for j in 0..n {
+                    s += dy[i * n + j] * w[kk * n + j];
+                }
+                assert!((dx[i * k + kk] - s).abs() < 1e-5);
+            }
+        }
+        let dw = matmul_tn(&pool, &x, &dy, t, k, n);
+        let dw1 = matmul_tn(&ThreadPool::with_threads(1), &x, &dy, t, k, n);
+        assert_eq!(dw, dw1, "dw must not depend on thread count");
+        for kk in 0..k {
+            for j in 0..n {
+                let mut s = 0.0f32;
+                for i in 0..t {
+                    s += x[i * k + kk] * dy[i * n + j];
+                }
+                assert!((dw[kk * n + j] - s).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn rmsnorm_fwd_bwd_thread_invariant() {
+        let d = 24usize;
+        let rows = 11usize;
+        let x = rand(rows * d, 6);
+        let g = rand(d, 7);
+        let dy = rand(rows * d, 8);
+        let p1 = ThreadPool::with_threads(1);
+        let p4 = ThreadPool::with_threads(4);
+        let (y1, r1) = rmsnorm(&p1, &x, &g, d);
+        let (y4, r4) = rmsnorm(&p4, &x, &g, d);
+        assert_eq!(y1, y4);
+        assert_eq!(r1, r4);
+        let (dx1, dg1) = rmsnorm_bwd(&p1, &x, &g, &r1, &dy, d);
+        let (dx4, dg4) = rmsnorm_bwd(&p4, &x, &g, &r4, &dy, d);
+        assert_eq!(dx1, dx4);
+        assert_eq!(dg1, dg4);
+    }
+
+    #[test]
+    fn par_map_and_zip_apply() {
+        let src = rand(10_000, 9);
+        let pool = ThreadPool::with_threads(4);
+        let doubled = par_map(&pool, &src, |v| v * 2.0);
+        for (a, b) in doubled.iter().zip(&src) {
+            assert_eq!(*a, b * 2.0);
+        }
+        let mut dst = src.clone();
+        par_zip_apply(&pool, &mut dst, &doubled, |a, b| a + b);
+        for (d, s) in dst.iter().zip(&src) {
+            assert_eq!(*d, s + s * 2.0);
+        }
+    }
+}

@@ -31,6 +31,19 @@ impl ArgMeta {
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
     }
+
+    /// Whether this argument is a KV-cache tensor of the decode-step
+    /// graphs (the tensors an in-place backend keeps resident; see
+    /// [`super::Backend::alloc_decode_state`]).
+    pub fn is_cache(&self) -> bool {
+        is_cache_name(&self.name)
+    }
+}
+
+/// Cache-tensor naming convention of the KV serving graphs
+/// (`l{layer}.k_cache` / `l{layer}.v_cache`).
+pub fn is_cache_name(name: &str) -> bool {
+    name.ends_with(".k_cache") || name.ends_with(".v_cache")
 }
 
 /// One lowered graph.
@@ -49,6 +62,12 @@ impl GraphMeta {
 
     pub fn result_index(&self, name: &str) -> Option<usize> {
         self.results.iter().position(|r| r == name)
+    }
+
+    /// The argument list with the KV-cache tensors removed — the ABI of
+    /// an in-place decode call ([`super::Runtime::run_decode_step_inplace`]).
+    pub fn non_cache_args(&self) -> Vec<&ArgMeta> {
+        self.args.iter().filter(|a| !a.is_cache()).collect()
     }
 }
 
@@ -609,6 +628,23 @@ mod tests {
         let dq = meta.graph("lm_decode_step_q4").unwrap();
         assert_eq!(dq.args.len(), 8 + 3 * 8 + 1 + 4 + 2);
         assert_eq!(dq.results.len(), 5);
+    }
+
+    #[test]
+    fn non_cache_args_strip_kv_tensors() {
+        let meta = Meta::builtin();
+        let ds = meta.graph("lm_decode_step").unwrap();
+        let nc = ds.non_cache_args();
+        // 16 params + token + pos (the 4 cache args removed)
+        assert_eq!(nc.len(), ds.args.len() - 2 * meta.model.n_layers);
+        assert!(nc.iter().all(|a| !a.is_cache()));
+        assert_eq!(nc[nc.len() - 2].name, "token");
+        assert_eq!(nc[nc.len() - 1].name, "pos");
+        assert!(is_cache_name("l0.k_cache") && is_cache_name("l1.v_cache"));
+        assert!(!is_cache_name("tokens"));
+        // a graph without caches is untouched
+        let nll = meta.graph("lm_nll").unwrap();
+        assert_eq!(nll.non_cache_args().len(), nll.args.len());
     }
 
     #[test]

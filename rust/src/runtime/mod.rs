@@ -9,6 +9,12 @@
 //!   graph semantics — embedding gather, matmul with fused 4-bit dequant,
 //!   RMS-norm, GELU, causal attention softmax, NLL, AdamW and LoRA
 //!   updates. Fully hermetic: zero Python, zero artifacts, zero network.
+//!   Hot paths execute through the [`kernels`] subsystem: a crate-local
+//!   scoped thread pool (`BOF4_THREADS`, std-only) driving tiled
+//!   matmul/attention/norm kernels that are bit-identical to the serial
+//!   loops at every thread count, plus the in-place KV-cache protocol
+//!   ([`Backend::alloc_decode_state`] / [`DecodeState`]) that keeps the
+//!   serving engine's cache slabs resident across decode steps.
 //! - `client::XlaBackend` (behind the off-by-default `xla` cargo
 //!   feature): compiles the AOT'd HLO-text artifacts produced by
 //!   `make artifacts` through PJRT and executes them (start pattern:
@@ -24,6 +30,7 @@
 pub mod client;
 pub mod cpu;
 pub mod host;
+pub mod kernels;
 pub mod meta;
 
 pub use cpu::CpuBackend;
@@ -31,6 +38,22 @@ pub use host::HostTensor;
 pub use meta::{ArgMeta, GraphMeta, Meta, ModelMeta};
 
 use crate::error::Result;
+
+/// Opaque backend-resident decode state: the per-layer KV-cache slabs a
+/// decode-step graph mutates in place instead of round-tripping them
+/// through [`HostTensor`] args/results (~2 MB of memcpy per step on the
+/// canonical model). Allocated by [`Backend::alloc_decode_state`];
+/// backends without in-place support simply never hand one out and the
+/// engine keeps using the clone-based [`Backend::execute`] path.
+pub trait DecodeState: Send {
+    /// Copy one session's prefilled rows (`[seq_len * d_model]` f32) into
+    /// cache `c` (the graph's cache-argument index: `2*layer` for K,
+    /// `2*layer + 1` for V), batch slot `slot`.
+    fn load_slot(&mut self, c: usize, slot: usize, rows: &[f32]) -> Result<()>;
+
+    /// Downcast hook for the owning backend.
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any;
+}
 
 /// A graph executor: prepare (compile/warm) and execute graphs over the
 /// flat `meta.json` ABI. Implementations must be shareable across the
@@ -46,6 +69,46 @@ pub trait Backend: Send + Sync {
     /// Execute one graph invocation. `args` are already validated against
     /// `gm.args`; the returned tensors must align with `gm.results`.
     fn execute(&self, gm: &GraphMeta, args: &[HostTensor]) -> Result<Vec<HostTensor>>;
+
+    /// Allocate resident KV-cache state for a decode-step graph, or
+    /// `None` when this backend has no in-place decode support (the
+    /// engine then falls back to passing caches through
+    /// [`Backend::execute`]). Default: unsupported.
+    fn alloc_decode_state(&self, _gm: &GraphMeta) -> Result<Option<Box<dyn DecodeState>>> {
+        Ok(None)
+    }
+
+    /// Execute one decode step against resident state. `args` are the
+    /// graph's arguments *minus* the cache tensors (which live in
+    /// `state` and are mutated in place); the return is the graph's
+    /// results minus the cache tensors. Must be bit-identical to
+    /// [`Backend::execute`] over the same caches.
+    fn execute_decode_inplace(
+        &self,
+        gm: &GraphMeta,
+        _state: &mut dyn DecodeState,
+        _args: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        Err(crate::err!(
+            "backend {} has no in-place decode for {}",
+            self.platform(),
+            gm.name
+        ))
+    }
+
+    /// Mean kernel-pool occupancy (0..=1) over launches since the last
+    /// sample (read-and-reset), when this backend runs on a thread pool —
+    /// the `pool_busy` gauge the serving engine samples after each step.
+    /// `None` for backends without a pool.
+    fn pool_occupancy(&self) -> Option<f64> {
+        None
+    }
+
+    /// Width of this backend's kernel pool, when it has one — what the
+    /// decode-throughput bench records as its `threads` field.
+    fn pool_threads(&self) -> Option<usize> {
+        None
+    }
 }
 
 /// ABI-validating facade over a [`Backend`].
@@ -144,6 +207,70 @@ impl Runtime {
 
     pub fn platform(&self) -> String {
         self.backend.platform()
+    }
+
+    /// Allocate backend-resident KV state for a decode-step graph (`None`
+    /// when the backend only supports the clone-based cache path).
+    pub fn alloc_decode_state(&self, graph: &str) -> Result<Option<Box<dyn DecodeState>>> {
+        let gm = self.meta.graph(graph)?;
+        self.backend.alloc_decode_state(gm)
+    }
+
+    /// Execute one decode step against resident state: `args` must match
+    /// the graph ABI with the cache tensors removed (they live in
+    /// `state`); returns the non-cache results (the logits).
+    pub fn run_decode_step_inplace(
+        &self,
+        graph: &str,
+        state: &mut dyn DecodeState,
+        args: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let gm = self.meta.graph(graph)?;
+        let expect = gm.non_cache_args();
+        if args.len() != expect.len() {
+            return Err(crate::err!(
+                "{graph} (in-place): expected {} non-cache args, got {}",
+                expect.len(),
+                args.len()
+            ));
+        }
+        for (i, (a, m)) in args.iter().zip(&expect).enumerate() {
+            if a.shape() != m.shape.as_slice() || a.dtype_str() != m.dtype {
+                return Err(crate::err!(
+                    "{graph} (in-place) arg {i} ({}): got {}{:?}, expected {}{:?}",
+                    m.name,
+                    a.dtype_str(),
+                    a.shape(),
+                    m.dtype,
+                    m.shape
+                ));
+            }
+        }
+        let out = self.backend.execute_decode_inplace(gm, state, args)?;
+        let n_res = gm
+            .results
+            .iter()
+            .filter(|r| !meta::is_cache_name(r.as_str()))
+            .count();
+        if out.len() != n_res {
+            return Err(crate::err!(
+                "{graph} (in-place): backend returned {} results, ABI expects {}",
+                out.len(),
+                n_res
+            ));
+        }
+        Ok(out)
+    }
+
+    /// Mean kernel-pool occupancy since the last sample, when the backend
+    /// runs on a thread pool (the serving engine's `pool_busy` gauge).
+    pub fn pool_occupancy(&self) -> Option<f64> {
+        self.backend.pool_occupancy()
+    }
+
+    /// Width of the backend's kernel pool, when it has one.
+    pub fn pool_threads(&self) -> Option<usize> {
+        self.backend.pool_threads()
     }
 
     fn validate_args(&self, gm: &GraphMeta, args: &[HostTensor]) -> Result<()> {

@@ -268,6 +268,14 @@ fn session_streams_exact_token_count() {
     assert_eq!(engine.metrics.core.get("sessions"), 1);
     assert_eq!(engine.metrics.core.get("decode_tokens"), 6);
     assert_eq!(engine.metrics.core.get("prefill_tokens"), 3);
+    // the CPU backend runs on the kernel pool, so the replica records the
+    // pool_busy saturation gauge next to slot_occupancy
+    let busy = engine
+        .metrics
+        .core
+        .latency_stats("pool_busy")
+        .expect("pool_busy gauge recorded");
+    assert!(busy.count >= 1 && busy.max_ms <= 1.0, "{busy:?}");
 }
 
 /// Session streams are capped by the KV-cache capacity: a prompt of

@@ -10,12 +10,19 @@ use bof4::eval::quantize_for_serving;
 use bof4::models::corpus::TOK_SPACE;
 use bof4::models::ParamSet;
 use bof4::quant::{self, Method, Norm, QuantConfig, Quantizer};
-use bof4::runtime::{HostTensor, Meta, Runtime};
+use bof4::runtime::{CpuBackend, HostTensor, Meta, Runtime};
 use bof4::util::json::Json;
 use bof4::util::rng::Pcg64;
 
 fn runtime() -> Runtime {
     Runtime::new().expect("runtime")
+}
+
+/// CPU runtime over a private kernel pool of an explicit width.
+fn runtime_with_threads(threads: usize) -> Runtime {
+    let meta = Meta::builtin();
+    let be = CpuBackend::with_threads(meta.model.clone(), threads);
+    Runtime::with_backend(meta, Box::new(be))
 }
 
 fn init_params(rt: &Runtime, seed: u32) -> Vec<HostTensor> {
@@ -324,6 +331,205 @@ fn quantize_blocks_graph_matches_rust_encoder() {
     for (a, b) in absmax_xla.iter().zip(&qt.absmax) {
         assert_eq!(a, b);
     }
+}
+
+// ---------------------------------------------------------------------
+// kernel-pool determinism: results must not depend on BOF4_THREADS
+// ---------------------------------------------------------------------
+
+/// Logits, a full AdamW training step (parameters, moments, loss) and a
+/// LoRA step must be bit-identical across kernel-pool widths — the
+/// contract that lets `BOF4_THREADS` be a pure performance knob.
+#[test]
+fn canonical_graphs_bit_identical_across_thread_counts() {
+    let mut want_logits: Option<Vec<HostTensor>> = None;
+    let mut want_train: Option<Vec<HostTensor>> = None;
+    let mut want_lora: Option<Vec<HostTensor>> = None;
+    for threads in [1usize, 2, 8] {
+        let rt = runtime_with_threads(threads);
+        let params = init_params(&rt, 0);
+        let n = params.len();
+        let tokens = random_tokens(&rt, 2);
+
+        let mut args = params.clone();
+        args.push(tokens.clone());
+        let logits = rt.run("lm_logits_all", &args).expect("lm_logits_all");
+        match &want_logits {
+            None => want_logits = Some(logits),
+            Some(w) => assert_eq!(&logits, w, "logits diverged at {threads} threads"),
+        }
+        if threads == 2 {
+            continue; // cover the training graphs at the 1/8 extremes
+        }
+
+        let zeros: Vec<HostTensor> = params
+            .iter()
+            .map(|p| HostTensor::zeros_f32(p.shape().to_vec()))
+            .collect();
+        let mut state: Vec<HostTensor> = params
+            .iter()
+            .chain(zeros.iter())
+            .chain(zeros.iter())
+            .cloned()
+            .collect();
+        state.push(HostTensor::scalar_i32(0));
+        state.push(tokens.clone());
+        let tout = rt.run("train_step", &state).expect("train_step");
+        assert_eq!(tout.len(), 3 * n + 2);
+        match &want_train {
+            None => want_train = Some(tout),
+            Some(w) => assert_eq!(&tout, w, "train_step diverged at {threads} threads"),
+        }
+
+        let lora = rt
+            .run("init_lora", &[HostTensor::scalar_u32(5)])
+            .expect("init_lora");
+        let lzeros: Vec<HostTensor> = lora
+            .iter()
+            .map(|p| HostTensor::zeros_f32(p.shape().to_vec()))
+            .collect();
+        let mut largs: Vec<HostTensor> = params.clone();
+        largs.extend(lora.iter().cloned());
+        largs.extend(lzeros.iter().cloned());
+        largs.extend(lzeros.iter().cloned());
+        largs.push(HostTensor::scalar_i32(0));
+        largs.push(tokens.clone());
+        let lout = rt.run("lora_step", &largs).expect("lora_step");
+        match &want_lora {
+            None => want_lora = Some(lout),
+            Some(w) => assert_eq!(&lout, w, "lora_step diverged at {threads} threads"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// in-place decode: resident-cache protocol vs the clone-based path
+// ---------------------------------------------------------------------
+
+/// Drive `decode_graph` twice from one prefill — (a) caches round-tripped
+/// through args/results, (b) caches resident in a backend
+/// [`bof4::runtime::DecodeState`] — and assert bit-identical logits at
+/// every step, for every prompt length in `lens` (waves of up to `batch`
+/// rows with staggered lengths; rows whose cache fills go inactive).
+fn check_inplace_equivalence(
+    rt: &Runtime,
+    prefix: &[HostTensor],
+    prefill_graph: &str,
+    decode_graph: &str,
+    lens: &[usize],
+    seed: u64,
+) {
+    let m = rt.meta.model.clone();
+    let (b, s, d, v) = (m.batch, m.seq_len, m.d_model, m.vocab);
+    let row = s * d;
+    let mut rng = Pcg64::seed_from_u64(seed);
+    for wave in lens.chunks(b) {
+        let mut toks = vec![TOK_SPACE as i32; b * s];
+        let mut lens_v = vec![1i32; b];
+        for (i, &l) in wave.iter().enumerate() {
+            for j in 0..l.min(s) {
+                toks[i * s + j] = rng.next_below(v as u64) as i32;
+            }
+            lens_v[i] = l.clamp(1, s) as i32;
+        }
+        let mut pargs = prefix.to_vec();
+        pargs.push(HostTensor::i32(toks, vec![b, s]));
+        pargs.push(HostTensor::i32(lens_v.clone(), vec![b]));
+        let out = rt.run(prefill_graph, &pargs).expect("prefill");
+
+        let mut state = rt
+            .alloc_decode_state(decode_graph)
+            .expect("alloc")
+            .expect("cpu backend supports in-place decode");
+        for c in 0..2 * m.n_layers {
+            let src = out[1 + c].as_f32().unwrap();
+            for slot in 0..b {
+                state
+                    .load_slot(c, slot, &src[slot * row..(slot + 1) * row])
+                    .unwrap();
+            }
+        }
+
+        let mut caches: Vec<HostTensor> = out[1..].to_vec();
+        let logits0 = out[0].as_f32().unwrap();
+        let mut token: Vec<i32> = (0..b)
+            .map(|i| greedy_argmax(&logits0[i * v..(i + 1) * v]).0 as i32)
+            .collect();
+        let mut pos = lens_v;
+        for step in 0..2usize {
+            let pos_t: Vec<i32> = pos
+                .iter()
+                .map(|&p| if (p as usize) < s { p } else { -1 })
+                .collect();
+            let mut dargs = prefix.to_vec();
+            dargs.extend(caches.iter().cloned());
+            dargs.push(HostTensor::i32(token.clone(), vec![b]));
+            dargs.push(HostTensor::i32(pos_t.clone(), vec![b]));
+            let dout = rt.run(decode_graph, &dargs).expect("decode_step");
+
+            let mut iargs = prefix.to_vec();
+            iargs.push(HostTensor::i32(token.clone(), vec![b]));
+            iargs.push(HostTensor::i32(pos_t, vec![b]));
+            let iout = rt
+                .run_decode_step_inplace(decode_graph, state.as_mut(), &iargs)
+                .expect("decode_step_inplace");
+            assert_eq!(iout.len(), 1, "in-place returns logits only");
+            assert_eq!(
+                dout[0], iout[0],
+                "wave {wave:?} step {step}: in-place logits diverged from clone path"
+            );
+
+            let lg = dout[0].as_f32().unwrap();
+            token = (0..b)
+                .map(|i| greedy_argmax(&lg[i * v..(i + 1) * v]).0 as i32)
+                .collect();
+            for p in pos.iter_mut() {
+                *p += 1;
+            }
+            caches = dout[1..].to_vec();
+        }
+    }
+}
+
+/// Dense serving: in-place decode must stream bit-identical to the
+/// clone-based `lm_decode_step` for every prompt length 1..=seq_len.
+#[test]
+fn decode_step_inplace_matches_clone_dense_all_lens() {
+    let rt = runtime();
+    let params = init_params(&rt, 31);
+    let lens: Vec<usize> = (1..=rt.meta.model.seq_len).collect();
+    check_inplace_equivalence(&rt, &params, "lm_prefill", "lm_decode_step", &lens, 500);
+}
+
+/// Quantized serving (q4 + 8-bit double-quantized constants): same
+/// in-place vs clone equivalence over the `_q4` graph pair.
+#[test]
+fn decode_step_inplace_matches_clone_q4_dq() {
+    let rt = runtime();
+    let params = init_params(&rt, 32);
+    let gm = rt.meta.graph("lm_nll").unwrap().clone();
+    let pset = ParamSet::from_tensors(&gm, &params).unwrap();
+    let qsp = quantize_for_serving(
+        &rt.meta,
+        &pset,
+        &QuantConfig {
+            method: Method::Bof4 { mse: true },
+            norm: Norm::SignedAbsmax,
+            block: rt.meta.model.block,
+            opq: None,
+            double_quant: true,
+        },
+    )
+    .expect("quantize_for_serving");
+    let lens = [1usize, 2, 5, 16, 33, 63, 64];
+    check_inplace_equivalence(
+        &rt,
+        &qsp.prefix,
+        "lm_prefill_q4",
+        "lm_decode_step_q4",
+        &lens,
+        600,
+    );
 }
 
 // ---------------------------------------------------------------------

@@ -1,11 +1,13 @@
 //! Decode-throughput smoke benchmark and hermetic baseline recorder:
 //! greedy-decode N tokens through (a) the old full-recompute path (one
 //! whole-context `lm_logits_last` per token), (b) the session engine at
-//! `BOF4_THREADS=1` (the PR-2-shaped single-thread baseline), and (c)
-//! the engine at the default thread count (threaded kernels + in-place
-//! KV caches); assert the engine beats full recompute and that threading
-//! does not lose to the 1-thread baseline, then record all three (with a
-//! `threads` field) as JSON under `results/`.
+//! `BOF4_THREADS=1` (the PR-2-shaped single-thread baseline), (c) the
+//! engine with `BOF4_SIMD` forced scalar, and (d) the engine at the
+//! default configuration (threaded + SIMD kernels + in-place KV caches);
+//! assert the engine beats full recompute, that threading does not lose
+//! to the 1-thread baseline, and that the SIMD path never loses to
+//! forced-scalar, then record everything (with `threads` and `simd`
+//! fields) as JSON under `results/`.
 //!
 //! ```bash
 //! cargo bench --bench decode_throughput          # full run
@@ -48,8 +50,19 @@ fn main() {
         r.engine,
         r.engine_single
     );
+    // the SIMD contract: the vectorized inner loops must never lose to
+    // the forced-scalar path at the same thread count (10% noise
+    // allowance; on hosts where the active path is already `none` the
+    // two runs are the same measurement)
+    assert!(
+        r.engine.as_secs_f64() <= r.engine_scalar.as_secs_f64() * 1.10,
+        "SIMD engine (path {}, {:?}) lost to the forced-scalar baseline ({:?})",
+        r.simd,
+        r.engine,
+        r.engine_scalar
+    );
     println!(
-        "decode {} tokens on {}: full-recompute {:.3}s ({:.1} tok/s) | engine@1t {:.3}s ({:.1} tok/s) | engine@{}t {:.3}s ({:.1} tok/s) | speedup {:.1}x vs full, {:.1}x vs 1t",
+        "decode {} tokens on {}: full-recompute {:.3}s ({:.1} tok/s) | engine@1t {:.3}s ({:.1} tok/s) | engine@{}t/scalar {:.3}s ({:.1} tok/s) | engine@{}t/{} {:.3}s ({:.1} tok/s) | speedup {:.1}x vs full, {:.1}x vs 1t, {:.1}x vs scalar",
         r.tokens,
         rt.platform(),
         r.full_recompute.as_secs_f64(),
@@ -57,16 +70,22 @@ fn main() {
         r.engine_single.as_secs_f64(),
         r.engine_single_tps(),
         r.threads,
+        r.engine_scalar.as_secs_f64(),
+        r.engine_scalar_tps(),
+        r.threads,
+        r.simd,
         r.engine.as_secs_f64(),
         r.engine_tps(),
         r.speedup(),
-        r.thread_speedup()
+        r.thread_speedup(),
+        r.simd_speedup()
     );
 
     let json = bof4::util::json::obj(vec![
         ("bench", Json::Str("decode_throughput".into())),
         ("backend", Json::Str(rt.platform())),
         ("threads", Json::Num(r.threads as f64)),
+        ("simd", Json::Str(r.simd.into())),
         ("tokens", Json::Num(r.tokens as f64)),
         ("full_recompute_s", Json::Num(r.full_recompute.as_secs_f64())),
         ("full_recompute_tokens_per_s", Json::Num(r.full_tps())),
@@ -75,10 +94,16 @@ fn main() {
             "engine_single_thread_tokens_per_s",
             Json::Num(r.engine_single_tps()),
         ),
+        ("engine_scalar_s", Json::Num(r.engine_scalar.as_secs_f64())),
+        (
+            "engine_scalar_tokens_per_s",
+            Json::Num(r.engine_scalar_tps()),
+        ),
         ("engine_s", Json::Num(r.engine.as_secs_f64())),
         ("engine_tokens_per_s", Json::Num(r.engine_tps())),
         ("speedup", Json::Num(r.speedup())),
         ("thread_speedup", Json::Num(r.thread_speedup())),
+        ("simd_speedup", Json::Num(r.simd_speedup())),
     ])
     .to_string();
     let dir = bof4::eval::report::results_dir();

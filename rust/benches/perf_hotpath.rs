@@ -7,7 +7,7 @@ use std::sync::Arc;
 use bof4::bench::{bench, Measurement};
 use bof4::eval::report::Table;
 use bof4::quant::{Method, Norm, QuantConfig, Quantizer};
-use bof4::runtime::kernels::{self, ThreadPool};
+use bof4::runtime::kernels::{self, simd, SimdPath, ThreadPool};
 use bof4::runtime::{HostTensor, Meta, Runtime};
 use bof4::util::rng::Pcg64;
 
@@ -21,6 +21,13 @@ fn main() {
         "§Perf — hot-path microbenchmarks",
         &["path", "mean", "throughput"],
     );
+    // record the active SIMD inner-loop path in the emitted table/JSON
+    let active_simd = simd::path_from_env();
+    table.row(vec![
+        "simd path (active)".to_string(),
+        active_simd.name().to_string(),
+        format!("threads={}", kernels::default_pool().threads()),
+    ]);
     let mut push = |m: &Measurement, items: f64, unit: &str| {
         table.row(vec![
             m.name.clone(),
@@ -86,14 +93,44 @@ fn main() {
     });
     push(&m, (1 << 20) as f64, "Gsamples/s");
 
-    // --- runtime::kernels per-kernel rows (1 thread vs default pool) -----
-    // makes the decode/forward speedups attributable kernel by kernel
+    // --- runtime::kernels per-kernel rows --------------------------------
+    // three configurations per kernel — (1 thread, active SIMD path),
+    // (default threads, forced scalar), (default threads, active SIMD
+    // path) — so both the threading and the SIMD speedup are
+    // attributable kernel by kernel. The dense-gemm and q4-gemm rows
+    // additionally assert that the SIMD path never loses to
+    // forced-scalar (best-of-run, 10% noise allowance).
     {
-        let pool1 = ThreadPool::with_threads(1);
+        let pool1 = ThreadPool::with_config(1, active_simd);
         let pool_n = kernels::default_pool();
         let nt = pool_n.threads();
-        let nt_tag = format!("{nt}t");
-        let pools: [(&str, &ThreadPool); 2] = [("1t", &pool1), (&nt_tag, pool_n.as_ref())];
+        let pool_scalar = ThreadPool::with_config(nt, SimdPath::None);
+        let tag1 = format!("1t/{}", active_simd.name());
+        let tag_scalar = format!("{nt}t/none");
+        let tag_simd = format!("{nt}t/{}", active_simd.name());
+        // when the active path is already scalar, the forced-scalar
+        // config would duplicate the default pool — skip it (same guard
+        // bench::decode_throughput applies)
+        let mut pools: Vec<(&str, &ThreadPool)> = vec![(&tag1, &pool1)];
+        if active_simd != SimdPath::None {
+            pools.push((&tag_scalar, &pool_scalar));
+        }
+        pools.push((&tag_simd, pool_n.as_ref()));
+        // when present, index 1 is the forced-scalar config and index 2
+        // the SIMD config
+        let assert_simd_wins = |kernel: &str, ms: &[Measurement]| {
+            if active_simd == SimdPath::None {
+                return; // forced scalar process-wide: nothing to compare
+            }
+            let (scalar, simd_m) = (&ms[1], &ms[2]);
+            assert!(
+                simd_m.min.as_secs_f64() <= scalar.min.as_secs_f64() * 1.10,
+                "{kernel}: SIMD path '{}' lost to forced-scalar (best {:?} vs {:?})",
+                active_simd.name(),
+                simd_m.min,
+                scalar.min
+            );
+        };
         let mm = Meta::builtin().model;
         let (b, s, d, h, ff) = (mm.batch, mm.seq_len, mm.d_model, mm.n_heads, mm.d_ff);
         let t = b * s;
@@ -103,12 +140,15 @@ fn main() {
         rng.fill_gaussian_f32(&mut x, 0.5);
         rng.fill_gaussian_f32(&mut w, 0.05);
         let gemm_flops = 2.0 * t as f64 * d as f64 * ff as f64;
-        for (tag, pool) in pools {
+        let mut dense_ms = Vec::new();
+        for &(tag, pool) in &pools {
             let m = bench(&format!("dense gemm {t}x{d}x{ff} ({tag})"), 2, 10, || {
                 std::hint::black_box(kernels::tiling::matmul(pool, &x, &w, t, d, ff));
             });
             push(&m, gemm_flops, "GFLOP/s");
+            dense_ms.push(m);
         }
+        assert_simd_wins("dense gemm", &dense_ms);
 
         // fused q4 gemm at the dequant_matmul graph shape
         let (qm, qk, qn, blk) = (128usize, 256usize, 256usize, mm.block);
@@ -118,21 +158,24 @@ fn main() {
         let absmax: Vec<f32> = (0..qk * qn / blk).map(|i| 0.05 + (i % 7) as f32 * 0.01).collect();
         let levels: Vec<f32> = (0..16).map(|i| (i as f32 - 7.5) / 7.5).collect();
         let q4_flops = 2.0 * qm as f64 * qk as f64 * qn as f64;
-        for (tag, pool) in pools {
+        let mut q4_ms = Vec::new();
+        for &(tag, pool) in &pools {
             let m = bench(&format!("q4 gemm {qm}x{qk}x{qn} ({tag})"), 2, 10, || {
                 std::hint::black_box(kernels::q4::q4_matmul(
                     pool, &qx, &codes, &absmax, &levels, qm, qk, qn, blk,
                 ));
             });
             push(&m, q4_flops, "GFLOP/s");
+            q4_ms.push(m);
         }
+        assert_simd_wins("q4 gemm", &q4_ms);
 
         // attention: full forward and one incremental decode-step row
         let mut qkv = vec![0.0f32; t * 3 * d];
         rng.fill_gaussian_f32(&mut qkv, 0.5);
         // ~2 gemms of s*s*hd per (b,h) plus softmax; count the gemm flops
         let att_flops = 2.0 * (b * h) as f64 * (s * s) as f64 * (d / h) as f64 * 2.0;
-        for (tag, pool) in pools {
+        for &(tag, pool) in &pools {
             let m = bench(&format!("attention fwd b{b} h{h} s{s} ({tag})"), 2, 10, || {
                 std::hint::black_box(kernels::attention::mha_forward(pool, &qkv, b, h, s, d));
             });
@@ -143,7 +186,7 @@ fn main() {
         rng.fill_gaussian_f32(&mut kc, 0.5);
         rng.fill_gaussian_f32(&mut vc, 0.5);
         let step_flops = 2.0 * s as f64 * d as f64 * 2.0;
-        for (tag, pool) in pools {
+        for &(tag, pool) in &pools {
             let m = bench(&format!("attention step p={} ({tag})", s - 1), 2, 200, || {
                 std::hint::black_box(kernels::attention::decode_attention(
                     pool,
@@ -179,13 +222,19 @@ fn main() {
             format!("{:.1} tok/s", r.engine_single_tps()),
         ]);
         table.row(vec![
-            format!("decode {n_tok} tok (engine, {} threads)", r.threads),
+            format!("decode {n_tok} tok (engine, {} threads, simd=none)", r.threads),
+            bof4::util::timer::fmt_duration(r.engine_scalar / n_tok as u32),
+            format!("{:.1} tok/s", r.engine_scalar_tps()),
+        ]);
+        table.row(vec![
+            format!("decode {n_tok} tok (engine, {} threads, simd={})", r.threads, r.simd),
             bof4::util::timer::fmt_duration(r.engine / n_tok as u32),
             format!(
-                "{:.1} tok/s ({:.1}x vs full, {:.1}x vs 1t)",
+                "{:.1} tok/s ({:.1}x vs full, {:.1}x vs 1t, {:.1}x vs scalar)",
                 r.engine_tps(),
                 r.speedup(),
-                r.thread_speedup()
+                r.thread_speedup(),
+                r.simd_speedup()
             ),
         ]);
     }

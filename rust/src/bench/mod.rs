@@ -68,8 +68,9 @@ pub fn bench_auto<F: FnMut()>(name: &str, target: Duration, mut f: F) -> Measure
 }
 
 /// Decode-throughput comparison between the pre-engine full-recompute
-/// path, the engine at one kernel thread, and the engine at the default
-/// thread count (threaded kernels + in-place KV caches).
+/// path, the engine at one kernel thread, the engine with SIMD forced
+/// off, and the engine at the default configuration (threaded +
+/// vectorized kernels + in-place KV caches).
 #[derive(Clone, Copy, Debug)]
 pub struct DecodeThroughput {
     pub tokens: usize,
@@ -80,8 +81,14 @@ pub struct DecodeThroughput {
     /// single-thread baseline; equals `engine` on non-CPU backends or
     /// when the pool already has one thread).
     pub engine_single: Duration,
+    /// Engine wall time at the default thread count with the SIMD layer
+    /// forced to the scalar path (equals `engine` on non-CPU backends or
+    /// when the active path is already `none`).
+    pub engine_scalar: Duration,
     /// Kernel-pool width the `engine` measurement ran at.
     pub threads: usize,
+    /// Active SIMD path of the measured engine (`none|array|avx2`).
+    pub simd: &'static str,
 }
 
 impl DecodeThroughput {
@@ -106,16 +113,29 @@ impl DecodeThroughput {
     pub fn thread_speedup(&self) -> f64 {
         self.engine_single.as_secs_f64() / self.engine.as_secs_f64().max(1e-12)
     }
+
+    pub fn engine_scalar_tps(&self) -> f64 {
+        self.tokens as f64 / self.engine_scalar.as_secs_f64().max(1e-12)
+    }
+
+    /// SIMD engine vs the forced-scalar engine at the same thread count
+    /// (1.0 when no comparison ran).
+    pub fn simd_speedup(&self) -> f64 {
+        self.engine_scalar.as_secs_f64() / self.engine.as_secs_f64().max(1e-12)
+    }
 }
 
-/// Greedy-decode `n_tokens` over the same parameters three ways: (a) the
+/// Greedy-decode `n_tokens` over the same parameters four ways: (a) the
 /// old full-recompute loop — one whole-context `lm_logits_last`
 /// execution per emitted token, cost quadratic in sequence length; (b)
 /// one [`crate::coordinator::Engine`] session over a 1-thread CPU
 /// backend (the PR-2-shaped single-thread baseline; skipped off-CPU);
-/// (c) one engine session at the default kernel thread count (threaded
-/// kernels + in-place KV caches). All three streams must agree — the
-/// bench doubles as a determinism smoke test.
+/// (c) one engine session at the default thread count with the SIMD
+/// layer forced scalar (skipped off-CPU or when the active path is
+/// already `none`); (d) one engine session at the default configuration
+/// (threaded + vectorized kernels + in-place KV caches). All streams
+/// must agree — the bench doubles as a determinism smoke test for both
+/// the thread and the SIMD contract.
 pub fn decode_throughput(
     rt: &std::sync::Arc<crate::runtime::Runtime>,
     params: Vec<crate::runtime::HostTensor>,
@@ -124,6 +144,7 @@ pub fn decode_throughput(
 ) -> crate::error::Result<DecodeThroughput> {
     use crate::coordinator::{greedy_argmax, Engine, EngineConfig};
     use crate::models::corpus::TOK_SPACE;
+    use crate::runtime::kernels::SimdPath;
     use crate::runtime::{CpuBackend, HostTensor, Meta, Runtime};
     use std::sync::Arc;
     let m = rt.meta.model.clone();
@@ -149,10 +170,11 @@ pub fn decode_throughput(
     }
     let full_recompute = t0.elapsed();
 
-    // the measured engine's actual pool width (not the env derivation —
-    // a runtime built via CpuBackend::with_threads must be reported as
-    // built)
+    // the measured engine's actual pool width and SIMD path (not the env
+    // derivation — a runtime built via CpuBackend::with_threads /
+    // with_config must be reported as built)
     let threads = rt.pool_threads().unwrap_or(1);
+    let simd = rt.simd_path().unwrap_or("none");
 
     // (b) the engine over a 1-thread kernel pool (CPU backend only)
     let mut engine_single = None;
@@ -168,7 +190,22 @@ pub fn decode_throughput(
         single_toks = Some(toks1);
     }
 
-    // (c) the session engine: prefill + incremental in-place decode
+    // (c) the engine at the same thread count with SIMD forced scalar
+    // (CPU backend only, and only when the measured path is vectorized)
+    let mut engine_scalar = None;
+    let mut scalar_toks = None;
+    if rt.platform() == "cpu-interpreter" && simd != "none" {
+        let meta = Meta::builtin();
+        let be = CpuBackend::with_config(meta.model.clone(), threads, SimdPath::None);
+        let rts = Arc::new(Runtime::with_backend(meta, Box::new(be)));
+        let engine_s = Engine::start(rts, params.clone(), EngineConfig::default())?;
+        let t0 = Instant::now();
+        let toks_s = engine_s.generate(prompt, n_tokens)?;
+        engine_scalar = Some(t0.elapsed());
+        scalar_toks = Some(toks_s);
+    }
+
+    // (d) the session engine: prefill + incremental in-place decode
     let engine = Engine::start(rt.clone(), params, EngineConfig::default())?;
     let t0 = Instant::now();
     let toks = engine.generate(prompt, n_tokens)?;
@@ -186,12 +223,22 @@ pub fn decode_throughput(
             ));
         }
     }
+    if let Some(ts) = &scalar_toks {
+        if ts != &toks {
+            return Err(crate::err!(
+                "SIMD engine stream diverged from the forced-scalar stream \
+                 (bit-exactness contract broken)"
+            ));
+        }
+    }
     Ok(DecodeThroughput {
         tokens: n_tokens,
         full_recompute,
         engine: engine_elapsed,
         engine_single: engine_single.unwrap_or(engine_elapsed),
+        engine_scalar: engine_scalar.unwrap_or(engine_elapsed),
         threads,
+        simd,
     })
 }
 

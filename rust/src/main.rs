@@ -272,6 +272,11 @@ fn info_cmd(_rest: Vec<String>) -> Result<()> {
          bit-identical at any width)",
         bof4::runtime::kernels::threads_from_env()
     );
+    println!(
+        "kernel simd: {} (set BOF4_SIMD=0|1|array|avx2 to override; \
+         results are bit-identical on every path)",
+        rt.simd_path().unwrap_or("n/a")
+    );
     println!("model: {:?}", rt.meta.model);
     println!("graphs:");
     for (name, g) in &rt.meta.graphs {

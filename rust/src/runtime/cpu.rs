@@ -32,9 +32,10 @@
 //! layouts match the ABI exactly, so tensors cross [`HostTensor`]
 //! unchanged. The hot paths (matmuls, attention, RMS-norm, the fused q4
 //! kernels, AdamW) execute through [`super::kernels`] — a tiled,
-//! thread-pooled kernel library whose results are **bit-identical to the
-//! serial loops at every `BOF4_THREADS` setting** (deterministic tile
-//! ownership, fixed per-element reduction order). The KV decode step
+//! thread-pooled, SIMD-vectorized kernel library whose results are
+//! **bit-identical at every `(BOF4_THREADS, BOF4_SIMD)` setting**
+//! (deterministic tile ownership, canonical 8-lane-strided reduction
+//! order shared by the scalar/array/AVX2 paths). The KV decode step
 //! additionally supports the in-place cache protocol
 //! ([`Backend::alloc_decode_state`] / [`Backend::execute_decode_inplace`]):
 //! the serving engine keeps the per-layer cache slabs resident in a
@@ -46,7 +47,7 @@
 
 use std::sync::Arc;
 
-use super::kernels::{attention, q4, tiling, MatW, SyncSlice, ThreadPool};
+use super::kernels::{attention, q4, simd, tiling, MatW, SimdPath, SyncSlice, ThreadPool};
 use super::meta::{lora_specs, matmul_param_names, param_specs, GraphMeta, ModelMeta};
 use super::{Backend, DecodeState, HostTensor};
 use crate::error::Result;
@@ -82,11 +83,22 @@ impl CpuBackend {
 
     /// Backend over a private pool of an explicit width — what the
     /// determinism tests and the thread-scaling benches use to compare
-    /// thread counts within one process.
+    /// thread counts within one process. The SIMD path still comes from
+    /// `BOF4_SIMD` / runtime detection.
     pub fn with_threads(m: ModelMeta, threads: usize) -> CpuBackend {
         CpuBackend {
             m,
             pool: Arc::new(ThreadPool::with_threads(threads)),
+        }
+    }
+
+    /// Backend with both kernel knobs explicit (pool width and SIMD
+    /// path) — what the path-equality tests and the scalar-vs-SIMD
+    /// benches use to compare configurations within one process.
+    pub fn with_config(m: ModelMeta, threads: usize, simd_path: SimdPath) -> CpuBackend {
+        CpuBackend {
+            m,
+            pool: Arc::new(ThreadPool::with_config(threads, simd_path)),
         }
     }
 
@@ -197,6 +209,10 @@ impl Backend for CpuBackend {
 
     fn pool_threads(&self) -> Option<usize> {
         Some(self.pool.threads())
+    }
+
+    fn simd_path(&self) -> Option<&'static str> {
+        Some(self.pool.simd().name())
     }
 
     fn execute(&self, gm: &GraphMeta, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
@@ -934,15 +950,14 @@ impl CpuBackend {
             let shp = &shapes[name];
             let (k, n) = (shp[0], shp[1]);
             let nb = n / block;
+            let path = self.pool.simd();
             let mut w = vec![0.0f32; k * n];
             for kk in 0..k {
                 for jb in 0..nb {
                     let m = absmax[kk * nb + jb];
                     let crow = &codes[kk * n + jb * block..kk * n + (jb + 1) * block];
                     let wrow = &mut w[kk * n + jb * block..kk * n + (jb + 1) * block];
-                    for (wv, &c) in wrow.iter_mut().zip(crow) {
-                        *wv = levels[(c & 0x0f) as usize] * m;
-                    }
+                    simd::q4_fill_dequant(path, wrow, m, crow, levels);
                 }
             }
             deq.push(w);
@@ -1473,16 +1488,23 @@ mod tests {
     }
 
     /// Forward, NLL gradients, prefill/decode, and a training step on the
-    /// tiny model must be bit-identical across kernel-pool widths.
+    /// tiny model must be bit-identical across kernel-pool widths and
+    /// SIMD paths.
     #[test]
-    fn tiny_model_bit_identical_across_thread_counts() {
+    fn tiny_model_bit_identical_across_thread_counts_and_simd() {
         let m = tiny().m.clone();
         let toks = tiny_tokens(&tiny(), 40);
         let params = tiny_params(&tiny(), 41);
         let lora = tiny_lora(&tiny(), 42);
+        let mut configs = vec![];
+        for path in simd::all_paths() {
+            for threads in [1usize, 2, 8] {
+                configs.push((threads, path));
+            }
+        }
         let mut base: Option<(Vec<f32>, f32, Vec<Vec<f32>>, Vec<Vec<f32>>)> = None;
-        for threads in [1usize, 2, 8] {
-            let be = CpuBackend::with_threads(m.clone(), threads);
+        for (threads, path) in configs {
+            let be = CpuBackend::with_config(m.clone(), threads, path);
             let pv = views(&params);
             let lv = views(&lora);
             let (logits, _) = be.forward(&pv, Some(&lv), &toks);
@@ -1491,10 +1513,11 @@ mod tests {
             match &base {
                 None => base = Some(got),
                 Some(want) => {
-                    assert_eq!(got.0, want.0, "logits diverged at {threads} threads");
-                    assert_eq!(got.1, want.1, "loss diverged at {threads} threads");
-                    assert_eq!(got.2, want.2, "base grads diverged at {threads} threads");
-                    assert_eq!(got.3, want.3, "lora grads diverged at {threads} threads");
+                    let tag = format!("{threads} threads, simd={}", path.name());
+                    assert_eq!(got.0, want.0, "logits diverged at {tag}");
+                    assert_eq!(got.1, want.1, "loss diverged at {tag}");
+                    assert_eq!(got.2, want.2, "base grads diverged at {tag}");
+                    assert_eq!(got.3, want.3, "lora grads diverged at {tag}");
                 }
             }
         }

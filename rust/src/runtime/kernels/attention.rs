@@ -3,15 +3,20 @@
 //!
 //! Each `(bi, hi)` task owns a disjoint region of every output buffer
 //! (its head's column stripe of `y`/`dqkv`, its own `[s, s]` probability
-//! block of `att`), and runs the exact loop body of the serial attention
-//! in `runtime/cpu.rs` — so results are bit-identical to the scalar
-//! interpreter at every thread count. The packed layout is the model's:
+//! block of `att`), and runs the serial loop body with the inner `hd`
+//! loops vectorized through [`super::simd`]: every q·k / dy·v score dot
+//! runs in the canonical 8-lane-strided reduction order, and the
+//! weighted-V / gradient accumulations are element-wise axpys (exact
+//! serial per-element order) — so results are bit-identical at every
+//! thread count and on every SIMD path. The softmax row pass (max, exp,
+//! denominator) stays serial per row. The packed layout is the model's:
 //! `qkv [t, 3d]` with Q at column offset `0`, K at `d`, V at `2d`, and
 //! head `hi` owning columns `hi*hd .. (hi+1)*hd` of each.
 
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 use super::pool::{SyncSlice, ThreadPool};
+use super::simd;
 
 /// Forward causal MHA over packed `qkv [b*s, 3d]`; returns
 /// `(att [b*h*s*s] softmax probabilities, y [b*s, d] attention mix)`.
@@ -23,6 +28,7 @@ pub fn mha_forward(
     s: usize,
     d: usize,
 ) -> (Vec<f32>, Vec<f32>) {
+    let path = pool.simd();
     let hd = d / h;
     let inv_sqrt_hd = 1.0 / (hd as f32).sqrt();
     let mut att = vec![0.0f32; b * h * s * s];
@@ -42,11 +48,7 @@ pub fn mha_forward(
             for (s2, rv) in row.iter_mut().enumerate() {
                 let t2 = bi * s + s2;
                 let k2 = &qkv[t2 * 3 * d + d + hoff..t2 * 3 * d + d + hoff + hd];
-                let mut dot = 0.0f32;
-                for e in 0..hd {
-                    dot += q1[e] * k2[e];
-                }
-                let sc = dot * inv_sqrt_hd;
+                let sc = simd::dot(path, q1, k2) * inv_sqrt_hd;
                 *rv = sc;
                 if sc > maxv {
                     maxv = sc;
@@ -64,9 +66,7 @@ pub fn mha_forward(
                 ab[s1 * s + s2] = prob;
                 let t2 = bi * s + s2;
                 let v2 = &qkv[t2 * 3 * d + 2 * d + hoff..t2 * 3 * d + 2 * d + hoff + hd];
-                for e in 0..hd {
-                    acc[e] += prob * v2[e];
-                }
+                simd::axpy(path, &mut acc, prob, v2);
             }
             // SAFETY: y columns [hoff, hoff+hd) of row t1 belong to head
             // hi of batch row bi — written only by task bh.
@@ -90,6 +90,7 @@ pub fn mha_backward(
     s: usize,
     d: usize,
 ) -> Vec<f32> {
+    let path = pool.simd();
     let hd = d / h;
     let inv_sqrt_hd = 1.0 / (hd as f32).sqrt();
     let mut dqkv = vec![0.0f32; b * s * 3 * d];
@@ -106,22 +107,15 @@ pub fn mha_backward(
                 let t2 = bi * s + s2;
                 let prob = att[aoff + s1 * s + s2];
                 let v2 = &qkv[t2 * 3 * d + 2 * d + hoff..t2 * 3 * d + 2 * d + hoff + hd];
-                let mut acc = 0.0f32;
-                for e in 0..hd {
-                    acc += dy1[e] * v2[e];
-                }
-                *da = acc;
+                *da = simd::dot(path, dy1, v2);
                 // SAFETY: the V-column stripe of head hi, batch row bi is
                 // written only by task bh (borrow ends this iteration).
                 let dv2 = unsafe { dq_s.slice_mut(t2 * 3 * d + 2 * d + hoff, hd) };
-                for e in 0..hd {
-                    dv2[e] += prob * dy1[e];
-                }
+                simd::axpy(path, dv2, prob, dy1);
             }
-            let mut dot = 0.0f32;
-            for (s2, &da) in datt.iter().enumerate() {
-                dot += da * att[aoff + s1 * s + s2];
-            }
+            // canonical strided reduction over the (contiguous) causal
+            // probability row
+            let dot = simd::dot(path, &datt, &att[aoff + s1 * s..aoff + s1 * s + s1 + 1]);
             let q1: Vec<f32> = qkv[t1 * 3 * d + hoff..t1 * 3 * d + hoff + hd].to_vec();
             let mut dq1 = vec![0.0f32; hd];
             for (s2, &da) in datt.iter().enumerate() {
@@ -132,15 +126,11 @@ pub fn mha_backward(
                 }
                 let t2 = bi * s + s2;
                 let k2 = &qkv[t2 * 3 * d + d + hoff..t2 * 3 * d + d + hoff + hd];
-                for e in 0..hd {
-                    dq1[e] += dscore * k2[e];
-                }
+                simd::axpy(path, &mut dq1, dscore, k2);
                 // SAFETY: the K-column stripe of head hi, batch row bi is
                 // written only by task bh (borrow ends this iteration).
                 let dk2 = unsafe { dq_s.slice_mut(t2 * 3 * d + d + hoff, hd) };
-                for e in 0..hd {
-                    dk2[e] += dscore * q1[e];
-                }
+                simd::axpy(path, dk2, dscore, &q1);
             }
             // SAFETY: the Q-column stripe of head hi at row t1 is written
             // only by task bh.
@@ -166,6 +156,7 @@ pub fn decode_attention(
     h: usize,
     p: usize,
 ) -> Vec<f32> {
+    let path = pool.simd();
     let hd = d / h;
     let inv_sqrt_hd = 1.0 / (hd as f32).sqrt();
     let mut y = vec![0.0f32; d];
@@ -177,11 +168,7 @@ pub fn decode_attention(
         let mut maxv = f32::NEG_INFINITY;
         for (s2, rv) in row.iter_mut().enumerate() {
             let k2 = &kc[s2 * d + hoff..s2 * d + hoff + hd];
-            let mut dot = 0.0f32;
-            for e in 0..hd {
-                dot += q1[e] * k2[e];
-            }
-            let sc = dot * inv_sqrt_hd;
+            let sc = simd::dot(path, q1, k2) * inv_sqrt_hd;
             *rv = sc;
             if sc > maxv {
                 maxv = sc;
@@ -197,9 +184,7 @@ pub fn decode_attention(
         for (s2, rv) in row.iter().enumerate() {
             let prob = rv * inv;
             let v2 = &vc[s2 * d + hoff..s2 * d + hoff + hd];
-            for e in 0..hd {
-                acc[e] += prob * v2[e];
-            }
+            simd::axpy(path, &mut acc, prob, v2);
         }
         // SAFETY: y columns [hoff, hoff+hd) are written only by task hi.
         let yr = unsafe { y_s.slice_mut(hoff, hd) };
@@ -256,6 +241,57 @@ mod tests {
         let g1 = mha_backward(&p1, &qkv, &att, &dy, b, h, s, d);
         let g4 = mha_backward(&p4, &qkv, &att, &dy, b, h, s, d);
         assert_eq!(g1, g4);
+    }
+
+    /// Forward, backward, and the decode step must be bit-identical
+    /// across `SIMD path × thread count`, with head dims covering
+    /// sub-lane, exact-lane and remainder-lane shapes.
+    #[test]
+    fn attention_bitwise_equal_across_simd_paths_and_threads() {
+        use super::super::simd::{self, SimdPath};
+        use super::super::ThreadPool;
+        let reference = ThreadPool::with_config(1, SimdPath::None);
+        let mut pools = Vec::new();
+        for path in simd::all_paths() {
+            for threads in [1usize, 8] {
+                pools.push(ThreadPool::with_config(threads, path));
+            }
+        }
+        let (b, s) = (2usize, 5usize);
+        // (h, d) -> head dim hd = d/h in {1, 7, 8, 9, 31}
+        for &(h, d) in &[(2usize, 2usize), (1, 7), (2, 16), (3, 27), (1, 31)] {
+            let seed = (h * 100 + d) as u64;
+            let qkv = rand(b * s * 3 * d, seed);
+            let dy = rand(b * s * d, seed + 1);
+            let kc = rand(s * d, seed + 2);
+            let vc = rand(s * d, seed + 3);
+            let (want_att, want_y) = mha_forward(&reference, &qkv, b, h, s, d);
+            let want_g = mha_backward(&reference, &qkv, &want_att, &dy, b, h, s, d);
+            let want_d0 = decode_attention(&reference, &qkv[..3 * d], &kc, &vc, d, h, 0);
+            let want_dp = decode_attention(&reference, &qkv[..3 * d], &kc, &vc, d, h, s - 1);
+            for pool in &pools {
+                let tag = format!("h={h} d={d} {pool:?}");
+                let (att, y) = mha_forward(pool, &qkv, b, h, s, d);
+                assert_eq!(att, want_att, "mha_forward att {tag}");
+                assert_eq!(y, want_y, "mha_forward y {tag}");
+                assert_eq!(
+                    mha_backward(pool, &qkv, &att, &dy, b, h, s, d),
+                    want_g,
+                    "mha_backward {tag}"
+                );
+                assert_eq!(
+                    decode_attention(pool, &qkv[..3 * d], &kc, &vc, d, h, 0),
+                    want_d0,
+                    "decode p=0 {tag}"
+                );
+                assert_eq!(
+                    decode_attention(pool, &qkv[..3 * d], &kc, &vc, d, h, s - 1),
+                    want_dp,
+                    "decode p={} {tag}",
+                    s - 1
+                );
+            }
+        }
     }
 
     #[test]

@@ -5,7 +5,13 @@
 //!
 //! - [`pool`]: a crate-local scoped thread pool (std-only; sized by
 //!   `BOF4_THREADS`, else the detected core count) plus [`SyncSlice`],
-//!   the disjoint-tile write primitive every kernel builds on.
+//!   the disjoint-tile write primitive every kernel builds on. The pool
+//!   also carries the active [`simd::SimdPath`] for its kernels.
+//! - [`simd`]: the portable 8-lane vector layer — [`simd::F32x8`] array
+//!   ops LLVM autovectorizes anywhere, plus runtime-detected x86_64
+//!   AVX2 intrinsics (`BOF4_SIMD=0|1|array|avx2` forces a path). Every
+//!   inner-loop primitive (dots, axpy, the fused q4 dequant forms, the
+//!   norm maps) is implemented bit-identically in all paths.
 //! - [`tiling`]: cache-blocked dense matmul (`y = x@w`, `dy@w^T`,
 //!   `x^T@dy`), row-parallel RMS-norm forward/backward, and element-wise
 //!   maps.
@@ -16,18 +22,25 @@
 //!   out over `(batch row x head)`, and the single-row incremental
 //!   decode-step attention.
 //!
-//! **Determinism contract**: every kernel is bit-identical to its serial
-//! loop at any thread count. Tiles have exactly one owning task
-//! (deterministic ownership), per-element reductions keep the serial
-//! `k`-ascending order, and the only cross-row reduction
-//! ([`tiling::rmsnorm_bwd`]'s gain gradient) is staged per row and summed
-//! serially in row order. `rust/tests/runtime_e2e.rs` pins logits and
-//! AdamW/LoRA training steps across `BOF4_THREADS in {1, 2, 8}`.
+//! **Determinism contract**: every kernel is bit-identical across every
+//! `(BOF4_THREADS, BOF4_SIMD)` combination. Tiles have exactly one
+//! owning task (deterministic ownership); element-wise accumulations
+//! keep the serial `k`-ascending per-element order; every inner-`k`
+//! reduction (dot products, sums of squares) runs in the canonical
+//! **8-lane-strided** order of [`simd`] — 8 independent lane
+//! accumulators combined in a fixed tree — implemented identically by
+//! the scalar, array-SIMD and AVX2 paths; and the only cross-row
+//! reduction ([`tiling::rmsnorm_bwd`]'s gain gradient) is staged per
+//! row and summed serially in row order. `rust/tests/runtime_e2e.rs`
+//! pins logits and AdamW/LoRA training steps across
+//! `BOF4_THREADS in {1, 2, 8}` × the SIMD paths executable on the host.
 
 pub mod attention;
 pub mod pool;
 pub mod q4;
+pub mod simd;
 pub mod tiling;
 
 pub use pool::{default_pool, threads_from_env, SyncSlice, ThreadPool};
 pub use q4::MatW;
+pub use simd::SimdPath;

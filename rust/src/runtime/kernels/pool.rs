@@ -9,8 +9,14 @@
 //! integer), else the detected core count. A pool of 1 thread never
 //! spawns workers and executes everything inline on the caller — the
 //! kernels are written so results are **bit-identical at every thread
-//! count** (each output tile has exactly one owner, and every per-element
-//! reduction runs in the same order as the serial loop).
+//! count** (each output tile has exactly one owner, and every reduction
+//! runs in the canonical 8-lane-strided order of [`super::simd`]).
+//!
+//! The pool also carries the kernel-execution policy for the inner
+//! loops: the active [`SimdPath`] (`BOF4_SIMD`, else the best detected
+//! path). Kernels read it via [`ThreadPool::simd`], so a pool pins both
+//! knobs of the bit-exactness contract — results are identical at every
+//! `(threads, simd)` combination.
 //!
 //! Nested calls: a task that calls [`ThreadPool::run`] again (e.g. a
 //! tiled matmul inside a per-row decode task) runs the inner range inline
@@ -19,8 +25,10 @@
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, PoisonError};
 use std::thread::JoinHandle;
+
+use super::simd::{self, SimdPath};
 
 /// Upper bound on pool width (defensive cap for `BOF4_THREADS`).
 pub const MAX_THREADS: usize = 64;
@@ -58,6 +66,8 @@ pub struct ThreadPool {
     shared: Arc<Shared>,
     handles: Vec<JoinHandle<()>>,
     threads: usize,
+    /// Active SIMD path for the kernels running on this pool.
+    simd: SimdPath,
     /// Fan-out statistics for the `pool_busy` gauge: lanes used and call
     /// count over all top-level [`ThreadPool::run`] invocations.
     lanes_used: AtomicU64,
@@ -65,14 +75,25 @@ pub struct ThreadPool {
 }
 
 impl ThreadPool {
-    /// Pool sized by `BOF4_THREADS` / detected core count.
+    /// Pool sized by `BOF4_THREADS` / detected core count, SIMD path from
+    /// `BOF4_SIMD` / runtime detection.
     pub fn new() -> ThreadPool {
-        Self::with_threads(threads_from_env())
+        Self::with_config(threads_from_env(), simd::path_from_env())
     }
 
-    /// Pool of an explicit width (tests and thread-count comparisons).
+    /// Pool of an explicit width, SIMD path still from the environment
+    /// (tests and thread-count comparisons).
     pub fn with_threads(threads: usize) -> ThreadPool {
+        Self::with_config(threads, simd::path_from_env())
+    }
+
+    /// Pool with both knobs explicit — what the path-equality tests and
+    /// the scalar-vs-SIMD benches use. The path is sanitized, so forcing
+    /// `avx2` on a host without it degrades to the array path instead of
+    /// faulting.
+    pub fn with_config(threads: usize, simd: SimdPath) -> ThreadPool {
         let threads = threads.clamp(1, MAX_THREADS);
+        let simd = simd.sanitize();
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             available: Condvar::new(),
@@ -87,7 +108,13 @@ impl ThreadPool {
                     IS_POOL_WORKER.with(|f| f.set(true));
                     loop {
                         let job = {
-                            let mut q = sh.queue.lock().unwrap();
+                            // recover from a poisoned queue mutex: jobs are
+                            // plain FnOnce boxes, so the queue is never left
+                            // half-mutated by a panicking holder, and
+                            // propagating the poison here would double-panic
+                            // the pool on top of the task panic the caller
+                            // is already surfacing
+                            let mut q = sh.queue.lock().unwrap_or_else(PoisonError::into_inner);
                             loop {
                                 if let Some(j) = q.pop_front() {
                                     break Some(j);
@@ -95,7 +122,7 @@ impl ThreadPool {
                                 if sh.shutdown.load(Ordering::Acquire) {
                                     break None;
                                 }
-                                q = sh.available.wait(q).unwrap();
+                                q = sh.available.wait(q).unwrap_or_else(PoisonError::into_inner);
                             }
                         };
                         match job {
@@ -111,6 +138,7 @@ impl ThreadPool {
             shared,
             handles,
             threads,
+            simd,
             lanes_used: AtomicU64::new(0),
             calls: AtomicU64::new(0),
         }
@@ -119,6 +147,11 @@ impl ThreadPool {
     /// Pool width (the caller lane plus the spawned workers).
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Active SIMD path the kernels on this pool dispatch through.
+    pub fn simd(&self) -> SimdPath {
+        self.simd
     }
 
     /// Mean fraction of pool lanes used per top-level kernel launch
@@ -173,7 +206,10 @@ impl ThreadPool {
         let f_static: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
         let (done_tx, done_rx) = mpsc::channel::<Result<(), String>>();
         {
-            let mut q = self.shared.queue.lock().unwrap();
+            // as in the worker loop: recover the guard from a poisoned
+            // mutex instead of double-panicking while a task panic is
+            // already in flight
+            let mut q = self.shared.queue.lock().unwrap_or_else(PoisonError::into_inner);
             for c in 1..chunks {
                 let (lo, hi) = (c * tasks / chunks, (c + 1) * tasks / chunks);
                 let tx = done_tx.clone();
@@ -244,7 +280,12 @@ impl Drop for ThreadPool {
 
 impl std::fmt::Debug for ThreadPool {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "ThreadPool(threads={})", self.threads)
+        write!(
+            f,
+            "ThreadPool(threads={}, simd={})",
+            self.threads,
+            self.simd.name()
+        )
     }
 }
 
@@ -395,6 +436,51 @@ mod tests {
         for (i, v) in out.iter().enumerate() {
             assert_eq!(*v, i as u32 * 3);
         }
+    }
+
+    /// Poison the queue mutex directly (a panic while the guard is
+    /// held), then verify workers and `run` recover the guard via
+    /// `PoisonError::into_inner` instead of double-panicking — the only
+    /// panic a caller ever sees stays the propagated task panic.
+    #[test]
+    fn pool_recovers_from_poisoned_queue_mutex() {
+        let pool = ThreadPool::with_threads(4);
+        let sh = pool.shared.clone();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = sh.queue.lock().unwrap_or_else(PoisonError::into_inner);
+            panic!("poison the queue mutex");
+        }));
+        assert!(r.is_err());
+        assert!(sh.queue.is_poisoned(), "mutex should be poisoned");
+        // dispatch through the poisoned mutex still works end to end
+        let counter = AtomicUsize::new(0);
+        pool.run(16, |_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 16);
+        // and a task panic still surfaces exactly once
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(8, |i| {
+                if i == 3 {
+                    panic!("task panic");
+                }
+            });
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn with_config_pins_simd_path() {
+        for path in simd::all_paths() {
+            let pool = ThreadPool::with_config(2, path);
+            assert_eq!(pool.simd(), path);
+            assert_eq!(pool.threads(), 2);
+        }
+        // forcing avx2 off-host degrades to an executable path
+        let pool = ThreadPool::with_config(1, SimdPath::Avx2);
+        assert!(simd::all_paths().contains(&pool.simd()));
+        let dbg = format!("{pool:?}");
+        assert!(dbg.contains("simd="), "{dbg}");
     }
 
     #[test]

@@ -1,16 +1,21 @@
 //! Fused 4-bit dequant-matmul kernels: the weight stays 4-bit codes with
 //! (optionally double-quantized) per-block constants; each tile
 //! dequantizes one BOF4 block at a time inside the inner loop — one LUT
-//! multiply per weight, with the block constant hoisted.
+//! multiply per weight, with the block constant hoisted. The 16-entry
+//! LUT gather and the dequant-constant scale are vectorized 8 columns
+//! at a time through [`super::simd`] (with a same-expression scalar
+//! tail for block widths that are not multiples of 8).
 //!
-//! Parallel tiles are aligned to quantization-block boundaries, so every
-//! `y` element keeps the serial kernel's exact `kk`-ascending
-//! accumulation order: results are bit-identical at every thread count
-//! (and to the pre-threading scalar kernels).
+//! Parallel tiles are aligned to quantization-block boundaries and the
+//! accumulation is element-wise (vector lanes never regroup a
+//! reduction), so every `y` element keeps the serial kernel's exact
+//! `kk`-ascending accumulation order: results are bit-identical at
+//! every thread count and on every SIMD path.
 
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 use super::pool::{SyncSlice, ThreadPool};
+use super::simd;
 use super::tiling;
 
 /// One matmul weight on the serving decode path: dense f32 rows, or 4-bit
@@ -58,6 +63,7 @@ pub fn row_matmul(pool: &ThreadPool, x: &[f32], w: &MatW<'_>, k: usize, n: usize
             levels,
             block,
         } => {
+            let path = pool.simd();
             let nb = n / block;
             let mut y = vec![0.0f32; n];
             let ys = SyncSlice::new(&mut y);
@@ -70,9 +76,7 @@ pub fn row_matmul(pool: &ThreadPool, x: &[f32], w: &MatW<'_>, k: usize, n: usize
                     }
                     let am = dq_constant(am_codes, am_params, kk * nb + jb);
                     let cblk = &codes[kk * n + jb * block..kk * n + (jb + 1) * block];
-                    for (yv, &c) in yblk.iter_mut().zip(cblk) {
-                        *yv += xv * (levels[(c & 0x0f) as usize] * am);
-                    }
+                    simd::q4_axpy_dequant(path, yblk, xv, am, cblk, levels);
                 }
             });
             y
@@ -94,6 +98,7 @@ pub fn q4_matmul(
     n: usize,
     block: usize,
 ) -> Vec<f32> {
+    let path = pool.simd();
     let nb = n / block;
     let mut y = vec![0.0f32; t * n];
     let ys = SyncSlice::new(&mut y);
@@ -111,9 +116,7 @@ pub fn q4_matmul(
                 let s = xv * am;
                 let cblk = &crow[jb * block..(jb + 1) * block];
                 let yblk = &mut yr[jb * block..(jb + 1) * block];
-                for (yv, &c) in yblk.iter_mut().zip(cblk) {
-                    *yv += s * levels[(c & 0x0f) as usize];
-                }
+                simd::q4_axpy_scaled(path, yblk, s, cblk, levels);
             }
         }
     });
@@ -133,6 +136,7 @@ pub fn dequant_q4_weight(
     n: usize,
     block: usize,
 ) -> Vec<f32> {
+    let path = pool.simd();
     let nb = n / block;
     let mut w = vec![0.0f32; k * n];
     let ws = SyncSlice::new(&mut w);
@@ -143,9 +147,7 @@ pub fn dequant_q4_weight(
             let am = dq_constant(am_codes, am_params, kk * nb + jb);
             let crow = &codes[kk * n + jb * block..kk * n + (jb + 1) * block];
             let wrow = &mut wr[jb * block..(jb + 1) * block];
-            for (wv, &c) in wrow.iter_mut().zip(crow) {
-                *wv = levels[(c & 0x0f) as usize] * am;
-            }
+            simd::q4_fill_dequant(path, wrow, am, crow, levels);
         }
     });
     w
@@ -213,6 +215,76 @@ mod tests {
         let yd1 = row_matmul(&ThreadPool::with_threads(1), &x, &wd, k, n);
         let yd4 = row_matmul(&ThreadPool::with_threads(4), &x, &wd, k, n);
         assert_eq!(yd1, yd4);
+    }
+
+    /// All three fused q4 kernels must be bit-identical across
+    /// `SIMD path × thread count`, including block widths with remainder
+    /// lanes (block % 8 != 0) and k values off the lane grid.
+    #[test]
+    fn q4_kernels_bitwise_equal_across_simd_paths_and_threads() {
+        use super::super::simd::{self, SimdPath};
+        let levels: Vec<f32> = (0..16).map(|i| (i as f32 - 7.5) / 7.5).collect();
+        let reference = ThreadPool::with_config(1, SimdPath::None);
+        let mut pools = Vec::new();
+        for path in simd::all_paths() {
+            for threads in [1usize, 8] {
+                pools.push(ThreadPool::with_config(threads, path));
+            }
+        }
+        let t = 2usize;
+        for &k in &[1usize, 7, 8, 9, 31, 64] {
+            for &(n, block) in &[(4usize, 4usize), (12, 4), (8, 8), (16, 8), (7, 7), (64, 16)] {
+                let seed = (k * 1000 + n * 10 + block) as u64;
+                let mut rng = Pcg64::seed_from_u64(seed);
+                let mut x = vec![0.0f32; t * k];
+                rng.fill_gaussian_f32(&mut x, 1.0);
+                let codes: Vec<u8> = (0..k * n).map(|i| ((i * 7 + k) % 16) as u8).collect();
+                let nblocks = k * n / block;
+                let absmax: Vec<f32> =
+                    (0..nblocks).map(|i| 0.05 + (i % 7) as f32 * 0.03).collect();
+                let am_codes: Vec<u8> = (0..nblocks).map(|i| ((i * 11) % 250) as u8).collect();
+                let am_params = vec![0.02f32, 0.004]; // one DQ chunk
+                let mw = MatW::Q4 {
+                    codes: &codes,
+                    am_codes: &am_codes,
+                    am_params: &am_params,
+                    levels: &levels,
+                    block,
+                };
+
+                let want_batch =
+                    q4_matmul(&reference, &x, &codes, &absmax, &levels, t, k, n, block);
+                let want_row = row_matmul(&reference, &x[..k], &mw, k, n);
+                let want_w = dequant_q4_weight(
+                    &reference,
+                    &codes,
+                    &am_codes,
+                    &am_params,
+                    &levels,
+                    k,
+                    n,
+                    block,
+                );
+                for pool in &pools {
+                    let tag = format!("k={k} n={n} block={block} {pool:?}");
+                    let got = q4_matmul(pool, &x, &codes, &absmax, &levels, t, k, n, block);
+                    assert_eq!(got, want_batch, "q4_matmul {tag}");
+                    let got = row_matmul(pool, &x[..k], &mw, k, n);
+                    assert_eq!(got, want_row, "row_matmul {tag}");
+                    let got = dequant_q4_weight(
+                        pool,
+                        &codes,
+                        &am_codes,
+                        &am_params,
+                        &levels,
+                        k,
+                        n,
+                        block,
+                    );
+                    assert_eq!(got, want_w, "dequant_q4_weight {tag}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,1220 @@
+//! Portable 8-lane SIMD layer for the tiled kernels, std-only.
+//!
+//! Three interchangeable execution paths implement every primitive:
+//!
+//! - **scalar** ([`SimdPath::None`]): plain loops — the reference
+//!   implementation and the `BOF4_SIMD=0` escape hatch;
+//! - **array** ([`SimdPath::Array`]): the same loops expressed over
+//!   [`F32x8`], a `[f32; 8]` newtype whose lane-wise ops LLVM
+//!   autovectorizes on any architecture — the universal fallback;
+//! - **avx2** ([`SimdPath::Avx2`]): explicit `std::arch` x86_64
+//!   intrinsics, selected at runtime via `is_x86_feature_detected!`.
+//!
+//! **Bit-exactness contract.** All three paths produce bit-identical
+//! results for every primitive. Element-wise ops (axpy, the q4
+//! dequant forms, the norm maps) evaluate the exact same scalar
+//! expression per element, and IEEE-754 single ops (`mul`/`add`/`sub`/
+//! `div`) round identically whether issued as scalars or as vector
+//! lanes — no FMA is ever emitted (the fused rounding would diverge
+//! from the scalar path), and `mul_add` below is a *separate* multiply
+//! then add by construction.
+//!
+//! Reductions are pinned to one **canonical 8-lane-strided order**,
+//! shared verbatim by all paths (see [`combine8`]): 8 independent lane
+//! accumulators where lane `l` owns elements `i ≡ l (mod 8)` of the
+//! first `len - len % 8` elements (one vector step per 8 elements);
+//! the `len % 8` tail elements are added scalar-wise into lanes
+//! `0..len % 8` of the spilled accumulators; finally the 8 lanes
+//! combine in the fixed tree `((l0+l4) + (l2+l6)) + ((l1+l5) + (l3+l7))`.
+//! The scalar path executes this same schedule with plain loops, so
+//! `BOF4_SIMD` — like `BOF4_THREADS` — is a pure performance knob.
+//!
+//! Path selection: [`path_from_env`] honours `BOF4_SIMD`
+//! (`0`/`off`/`none`/`scalar` force the scalar loops; `1`/`on` or unset
+//! pick the best detected path; `array`/`avx2` force a specific
+//! vectorized path, with `avx2` degrading to `array` on hosts without
+//! it). Kernels read the path from their [`super::pool::ThreadPool`],
+//! so tests and benches can pin a path per pool without touching the
+//! process environment.
+
+// Fixed-width lane loops over [f32; 8] read better (and autovectorize
+// reliably) as explicit index loops.
+#![allow(clippy::needless_range_loop)]
+
+use std::sync::OnceLock;
+
+/// Vector width of the portable layer (f32 lanes).
+pub const LANES: usize = 8;
+
+/// Which implementation of the shared inner-kernel schedule runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdPath {
+    /// Scalar loops (the canonical schedule, plain Rust).
+    None,
+    /// [`F32x8`] array ops — LLVM-autovectorized, any architecture.
+    Array,
+    /// x86_64 AVX2 intrinsics (runtime-detected).
+    Avx2,
+}
+
+impl SimdPath {
+    /// Stable lowercase tag (`none` | `array` | `avx2`) — what benches
+    /// record and `Backend::simd_path` reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdPath::None => "none",
+            SimdPath::Array => "array",
+            SimdPath::Avx2 => "avx2",
+        }
+    }
+
+    /// Clamp to what this host can execute: [`SimdPath::Avx2`] degrades
+    /// to [`SimdPath::Array`] when the CPU (or architecture) lacks AVX2.
+    /// Constructing a pool sanitizes its path, so a forced `avx2` is
+    /// never dispatched onto a host that would fault on it.
+    pub fn sanitize(self) -> SimdPath {
+        if self == SimdPath::Avx2 && detect_best() != SimdPath::Avx2 {
+            SimdPath::Array
+        } else {
+            self
+        }
+    }
+}
+
+/// Best vectorized path this host supports: AVX2 when detected at
+/// runtime, else the portable array path.
+pub fn detect_best() -> SimdPath {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return SimdPath::Avx2;
+        }
+    }
+    SimdPath::Array
+}
+
+/// Process-wide default path from `BOF4_SIMD` (cached at first use):
+/// `0`/`off`/`none`/`scalar` force scalar, `array`/`avx2` force a
+/// vectorized path (sanitized), anything else — including unset and
+/// `1`/`on` — selects [`detect_best`].
+pub fn path_from_env() -> SimdPath {
+    static PATH: OnceLock<SimdPath> = OnceLock::new();
+    *PATH.get_or_init(|| {
+        match std::env::var("BOF4_SIMD")
+            .ok()
+            .as_deref()
+            .map(|s| s.trim().to_ascii_lowercase())
+            .as_deref()
+        {
+            Some("0") | Some("off") | Some("none") | Some("scalar") => SimdPath::None,
+            Some("array") => SimdPath::Array,
+            Some("avx2") => SimdPath::Avx2.sanitize(),
+            _ => detect_best(),
+        }
+    })
+}
+
+/// Every path executable on this host (scalar and array always, AVX2
+/// when detected) — what the bitwise-equality tests and benches sweep.
+pub fn all_paths() -> Vec<SimdPath> {
+    let mut v = vec![SimdPath::None, SimdPath::Array];
+    if detect_best() == SimdPath::Avx2 {
+        v.push(SimdPath::Avx2);
+    }
+    v
+}
+
+// ---------------------------------------------------------------------
+// F32x8: the portable vector newtype (array path)
+// ---------------------------------------------------------------------
+
+/// Eight f32 lanes. All ops are lane-wise single IEEE-754 operations —
+/// written as fixed-width loops LLVM turns into vector instructions —
+/// and therefore round bit-identically to the scalar path. There is
+/// deliberately no fused multiply-add.
+#[derive(Clone, Copy, Debug, PartialEq)]
+#[repr(transparent)]
+pub struct F32x8(pub [f32; LANES]);
+
+impl F32x8 {
+    pub const ZERO: F32x8 = F32x8([0.0; LANES]);
+
+    #[inline(always)]
+    pub fn splat(v: f32) -> F32x8 {
+        F32x8([v; LANES])
+    }
+
+    /// Load the first 8 elements of `s` (panics if `s.len() < 8`).
+    #[inline(always)]
+    pub fn load(s: &[f32]) -> F32x8 {
+        let mut a = [0.0f32; LANES];
+        a.copy_from_slice(&s[..LANES]);
+        F32x8(a)
+    }
+
+    /// Store into the first 8 elements of `d`.
+    #[inline(always)]
+    pub fn store(self, d: &mut [f32]) {
+        d[..LANES].copy_from_slice(&self.0);
+    }
+
+    /// `self * a + b` as a separately-rounded multiply then add (never
+    /// a fused FMA — fusion would break the bit-exactness contract).
+    #[inline(always)]
+    pub fn mul_add(self, a: F32x8, b: F32x8) -> F32x8 {
+        self * a + b
+    }
+}
+
+impl std::ops::Add for F32x8 {
+    type Output = F32x8;
+    #[inline(always)]
+    fn add(self, o: F32x8) -> F32x8 {
+        let mut r = self.0;
+        for l in 0..LANES {
+            r[l] += o.0[l];
+        }
+        F32x8(r)
+    }
+}
+
+impl std::ops::AddAssign for F32x8 {
+    #[inline(always)]
+    fn add_assign(&mut self, o: F32x8) {
+        for l in 0..LANES {
+            self.0[l] += o.0[l];
+        }
+    }
+}
+
+impl std::ops::Sub for F32x8 {
+    type Output = F32x8;
+    #[inline(always)]
+    fn sub(self, o: F32x8) -> F32x8 {
+        let mut r = self.0;
+        for l in 0..LANES {
+            r[l] -= o.0[l];
+        }
+        F32x8(r)
+    }
+}
+
+impl std::ops::Mul for F32x8 {
+    type Output = F32x8;
+    #[inline(always)]
+    fn mul(self, o: F32x8) -> F32x8 {
+        let mut r = self.0;
+        for l in 0..LANES {
+            r[l] *= o.0[l];
+        }
+        F32x8(r)
+    }
+}
+
+impl std::ops::Div for F32x8 {
+    type Output = F32x8;
+    #[inline(always)]
+    fn div(self, o: F32x8) -> F32x8 {
+        let mut r = self.0;
+        for l in 0..LANES {
+            r[l] /= o.0[l];
+        }
+        F32x8(r)
+    }
+}
+
+/// Combine 8 lane accumulators in the canonical fixed tree order:
+/// `((l0+l4) + (l2+l6)) + ((l1+l5) + (l3+l7))`. Every reduction in
+/// every path funnels through this one function, so the combine step
+/// can never diverge between paths.
+#[inline(always)]
+pub fn combine8(a: [f32; LANES]) -> f32 {
+    let b0 = a[0] + a[4];
+    let b1 = a[1] + a[5];
+    let b2 = a[2] + a[6];
+    let b3 = a[3] + a[7];
+    (b0 + b2) + (b1 + b3)
+}
+
+/// Gather 8 dequant levels for 8 codes (low nibble indexes `levels`).
+/// `codes.len() >= 8`, `levels.len() >= 16`.
+#[inline(always)]
+fn gather8(codes: &[u8], levels: &[f32]) -> [f32; LANES] {
+    let mut g = [0.0f32; LANES];
+    for l in 0..LANES {
+        g[l] = levels[(codes[l] & 0x0f) as usize];
+    }
+    g
+}
+
+// ---------------------------------------------------------------------
+// reductions (canonical 8-lane-strided order in every path)
+// ---------------------------------------------------------------------
+
+/// Scalar tail + canonical combine shared by all dot-style reductions:
+/// `acc` holds the lane accumulators after the full 8-wide chunks
+/// (elements `0..c`); the remaining elements land in lanes `0..n-c`.
+#[inline(always)]
+fn tail_combine(mut acc: [f32; LANES], c: usize, prod: impl Fn(usize) -> f32, n: usize) -> f32 {
+    for j in c..n {
+        acc[j - c] += prod(j);
+    }
+    combine8(acc)
+}
+
+/// Canonical strided dot product `sum_i a[i] * b[i]`
+/// (`a.len() == b.len()`).
+#[inline]
+pub fn dot(path: SimdPath, a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match path {
+        SimdPath::None => dot_scalar(a, b),
+        SimdPath::Array => dot_array(a, b),
+        SimdPath::Avx2 => dot_avx2(a, b),
+    }
+}
+
+fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let c = n - n % LANES;
+    let mut acc = [0.0f32; LANES];
+    let mut i = 0;
+    while i < c {
+        for l in 0..LANES {
+            acc[l] += a[i + l] * b[i + l];
+        }
+        i += LANES;
+    }
+    tail_combine(acc, c, |j| a[j] * b[j], n)
+}
+
+fn dot_array(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let c = n - n % LANES;
+    let mut acc = F32x8::ZERO;
+    let mut i = 0;
+    while i < c {
+        acc += F32x8::load(&a[i..]) * F32x8::load(&b[i..]);
+        i += LANES;
+    }
+    tail_combine(acc.0, c, |j| a[j] * b[j], n)
+}
+
+/// Canonical strided triple-product reduction
+/// `sum_i (a[i] * b[i]) * c[i]` — the `rmsnorm_bwd` inner sum.
+#[inline]
+pub fn dot3(path: SimdPath, a: &[f32], b: &[f32], c: &[f32]) -> f32 {
+    debug_assert!(a.len() == b.len() && b.len() == c.len());
+    match path {
+        SimdPath::None => dot3_scalar(a, b, c),
+        SimdPath::Array => dot3_array(a, b, c),
+        SimdPath::Avx2 => dot3_avx2(a, b, c),
+    }
+}
+
+fn dot3_scalar(a: &[f32], b: &[f32], c: &[f32]) -> f32 {
+    let n = a.len();
+    let cc = n - n % LANES;
+    let mut acc = [0.0f32; LANES];
+    let mut i = 0;
+    while i < cc {
+        for l in 0..LANES {
+            acc[l] += (a[i + l] * b[i + l]) * c[i + l];
+        }
+        i += LANES;
+    }
+    tail_combine(acc, cc, |j| (a[j] * b[j]) * c[j], n)
+}
+
+fn dot3_array(a: &[f32], b: &[f32], c: &[f32]) -> f32 {
+    let n = a.len();
+    let cc = n - n % LANES;
+    let mut acc = F32x8::ZERO;
+    let mut i = 0;
+    while i < cc {
+        let p = F32x8::load(&a[i..]) * F32x8::load(&b[i..]);
+        acc += p * F32x8::load(&c[i..]);
+        i += LANES;
+    }
+    tail_combine(acc.0, cc, |j| (a[j] * b[j]) * c[j], n)
+}
+
+/// Canonical strided sum of squares `sum_i a[i]^2` — the `rmsnorm`
+/// mean-square numerator.
+#[inline]
+pub fn sum_squares(path: SimdPath, a: &[f32]) -> f32 {
+    match path {
+        SimdPath::None => sumsq_scalar(a),
+        SimdPath::Array => sumsq_array(a),
+        SimdPath::Avx2 => sumsq_avx2(a),
+    }
+}
+
+fn sumsq_scalar(a: &[f32]) -> f32 {
+    let n = a.len();
+    let c = n - n % LANES;
+    let mut acc = [0.0f32; LANES];
+    let mut i = 0;
+    while i < c {
+        for l in 0..LANES {
+            acc[l] += a[i + l] * a[i + l];
+        }
+        i += LANES;
+    }
+    tail_combine(acc, c, |j| a[j] * a[j], n)
+}
+
+fn sumsq_array(a: &[f32]) -> f32 {
+    let n = a.len();
+    let c = n - n % LANES;
+    let mut acc = F32x8::ZERO;
+    let mut i = 0;
+    while i < c {
+        let v = F32x8::load(&a[i..]);
+        acc += v * v;
+        i += LANES;
+    }
+    tail_combine(acc.0, c, |j| a[j] * a[j], n)
+}
+
+// ---------------------------------------------------------------------
+// element-wise kernels (identical per-element expression in every path)
+// ---------------------------------------------------------------------
+
+/// `y[i] += s * x[i]` — the accumulate step of the dense matmuls, the
+/// attention weighted-V mix, and the attention gradient scatters.
+#[inline]
+pub fn axpy(path: SimdPath, y: &mut [f32], s: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    match path {
+        SimdPath::None => {
+            for (yv, &xv) in y.iter_mut().zip(x) {
+                *yv += s * xv;
+            }
+        }
+        SimdPath::Array => {
+            let n = y.len();
+            let c = n - n % LANES;
+            let vs = F32x8::splat(s);
+            let mut i = 0;
+            while i < c {
+                (F32x8::load(&y[i..]) + vs * F32x8::load(&x[i..])).store(&mut y[i..]);
+                i += LANES;
+            }
+            for j in c..n {
+                y[j] += s * x[j];
+            }
+        }
+        SimdPath::Avx2 => axpy_avx2(y, s, x),
+    }
+}
+
+/// RMS-norm forward map `y[i] = x[i] / r * g[i]`.
+#[inline]
+pub fn norm_apply(path: SimdPath, y: &mut [f32], x: &[f32], r: f32, g: &[f32]) {
+    match path {
+        SimdPath::None => {
+            for i in 0..y.len() {
+                y[i] = x[i] / r * g[i];
+            }
+        }
+        SimdPath::Array => {
+            let n = y.len();
+            let c = n - n % LANES;
+            let vr = F32x8::splat(r);
+            let mut i = 0;
+            while i < c {
+                (F32x8::load(&x[i..]) / vr * F32x8::load(&g[i..])).store(&mut y[i..]);
+                i += LANES;
+            }
+            for j in c..n {
+                y[j] = x[j] / r * g[j];
+            }
+        }
+        SimdPath::Avx2 => norm_apply_avx2(y, x, r, g),
+    }
+}
+
+/// RMS-norm backward staging map `sg[i] = dy[i] * x[i] / r` (the
+/// per-row gain-gradient contribution).
+#[inline]
+pub fn stage_apply(path: SimdPath, sg: &mut [f32], dy: &[f32], x: &[f32], r: f32) {
+    match path {
+        SimdPath::None => {
+            for i in 0..sg.len() {
+                sg[i] = dy[i] * x[i] / r;
+            }
+        }
+        SimdPath::Array => {
+            let n = sg.len();
+            let c = n - n % LANES;
+            let vr = F32x8::splat(r);
+            let mut i = 0;
+            while i < c {
+                (F32x8::load(&dy[i..]) * F32x8::load(&x[i..]) / vr).store(&mut sg[i..]);
+                i += LANES;
+            }
+            for j in c..n {
+                sg[j] = dy[j] * x[j] / r;
+            }
+        }
+        SimdPath::Avx2 => stage_apply_avx2(sg, dy, x, r),
+    }
+}
+
+/// RMS-norm backward input-gradient map
+/// `dx[i] = g[i] * dy[i] / r - x[i] * c`.
+#[inline]
+pub fn norm_bwd_apply(
+    path: SimdPath,
+    dx: &mut [f32],
+    g: &[f32],
+    dy: &[f32],
+    r: f32,
+    x: &[f32],
+    c: f32,
+) {
+    match path {
+        SimdPath::None => {
+            for i in 0..dx.len() {
+                dx[i] = g[i] * dy[i] / r - x[i] * c;
+            }
+        }
+        SimdPath::Array => {
+            let n = dx.len();
+            let cc = n - n % LANES;
+            let vr = F32x8::splat(r);
+            let vc = F32x8::splat(c);
+            let mut i = 0;
+            while i < cc {
+                let lhs = F32x8::load(&g[i..]) * F32x8::load(&dy[i..]) / vr;
+                (lhs - F32x8::load(&x[i..]) * vc).store(&mut dx[i..]);
+                i += LANES;
+            }
+            for j in cc..n {
+                dx[j] = g[j] * dy[j] / r - x[j] * c;
+            }
+        }
+        SimdPath::Avx2 => norm_bwd_apply_avx2(dx, g, dy, r, x, c),
+    }
+}
+
+// ---------------------------------------------------------------------
+// fused q4 dequant forms (16-entry LUT gather, 8 columns at a time)
+// ---------------------------------------------------------------------
+
+/// `y[i] += xv * (levels[codes[i] & 0xf] * am)` — the decode-row fused
+/// dequant-matmul form (matches the dense path over a weight
+/// materialized as `levels * am`, element for element).
+#[inline]
+pub fn q4_axpy_dequant(
+    path: SimdPath,
+    y: &mut [f32],
+    xv: f32,
+    am: f32,
+    codes: &[u8],
+    levels: &[f32],
+) {
+    debug_assert_eq!(y.len(), codes.len());
+    match path {
+        SimdPath::None => {
+            for (yv, &c) in y.iter_mut().zip(codes) {
+                *yv += xv * (levels[(c & 0x0f) as usize] * am);
+            }
+        }
+        SimdPath::Array => {
+            let n = y.len();
+            let c = n - n % LANES;
+            let vx = F32x8::splat(xv);
+            let va = F32x8::splat(am);
+            let mut i = 0;
+            while i < c {
+                let w = F32x8(gather8(&codes[i..], levels)) * va;
+                (F32x8::load(&y[i..]) + vx * w).store(&mut y[i..]);
+                i += LANES;
+            }
+            for j in c..n {
+                y[j] += xv * (levels[(codes[j] & 0x0f) as usize] * am);
+            }
+        }
+        SimdPath::Avx2 => q4_axpy_dequant_avx2(y, xv, am, codes, levels),
+    }
+}
+
+/// `y[i] += s * levels[codes[i] & 0xf]` — the batched fused
+/// dequant-matmul form (`s = xv * am` hoisted by the caller).
+#[inline]
+pub fn q4_axpy_scaled(path: SimdPath, y: &mut [f32], s: f32, codes: &[u8], levels: &[f32]) {
+    debug_assert_eq!(y.len(), codes.len());
+    match path {
+        SimdPath::None => {
+            for (yv, &c) in y.iter_mut().zip(codes) {
+                *yv += s * levels[(c & 0x0f) as usize];
+            }
+        }
+        SimdPath::Array => {
+            let n = y.len();
+            let c = n - n % LANES;
+            let vs = F32x8::splat(s);
+            let mut i = 0;
+            while i < c {
+                let w = F32x8(gather8(&codes[i..], levels));
+                (F32x8::load(&y[i..]) + vs * w).store(&mut y[i..]);
+                i += LANES;
+            }
+            for j in c..n {
+                y[j] += s * levels[(codes[j] & 0x0f) as usize];
+            }
+        }
+        SimdPath::Avx2 => q4_axpy_scaled_avx2(y, s, codes, levels),
+    }
+}
+
+/// `w[i] = levels[codes[i] & 0xf] * am` — the weight materializer (same
+/// expression the fused kernels multiply by, so prefill over the
+/// materialized weight stays bit-identical to fused decode).
+#[inline]
+pub fn q4_fill_dequant(path: SimdPath, w: &mut [f32], am: f32, codes: &[u8], levels: &[f32]) {
+    debug_assert_eq!(w.len(), codes.len());
+    match path {
+        SimdPath::None => {
+            for (wv, &c) in w.iter_mut().zip(codes) {
+                *wv = levels[(c & 0x0f) as usize] * am;
+            }
+        }
+        SimdPath::Array => {
+            let n = w.len();
+            let c = n - n % LANES;
+            let va = F32x8::splat(am);
+            let mut i = 0;
+            while i < c {
+                (F32x8(gather8(&codes[i..], levels)) * va).store(&mut w[i..]);
+                i += LANES;
+            }
+            for j in c..n {
+                w[j] = levels[(codes[j] & 0x0f) as usize] * am;
+            }
+        }
+        SimdPath::Avx2 => q4_fill_dequant_avx2(w, am, codes, levels),
+    }
+}
+
+// ---------------------------------------------------------------------
+// generic element-wise maps (par_map / par_zip_apply)
+// ---------------------------------------------------------------------
+
+/// `dst[i] = f(src[i])`. The vector paths walk 8-lane blocks (giving
+/// LLVM a fixed-width unit to vectorize simple `f` over); results are
+/// bit-identical across paths because `f` runs once per element either
+/// way.
+#[inline]
+pub fn apply_unary(path: SimdPath, dst: &mut [f32], src: &[f32], f: impl Fn(f32) -> f32) {
+    debug_assert_eq!(dst.len(), src.len());
+    if path == SimdPath::None {
+        for (o, &v) in dst.iter_mut().zip(src) {
+            *o = f(v);
+        }
+        return;
+    }
+    let n = dst.len();
+    let c = n - n % LANES;
+    let mut i = 0;
+    while i < c {
+        let mut v = F32x8::load(&src[i..]);
+        for l in 0..LANES {
+            v.0[l] = f(v.0[l]);
+        }
+        v.store(&mut dst[i..]);
+        i += LANES;
+    }
+    for j in c..n {
+        dst[j] = f(src[j]);
+    }
+}
+
+/// `dst[i] = f(dst[i], src[i])`, same blocking as [`apply_unary`].
+#[inline]
+pub fn apply_zip(path: SimdPath, dst: &mut [f32], src: &[f32], f: impl Fn(f32, f32) -> f32) {
+    debug_assert_eq!(dst.len(), src.len());
+    if path == SimdPath::None {
+        for (o, &v) in dst.iter_mut().zip(src) {
+            *o = f(*o, v);
+        }
+        return;
+    }
+    let n = dst.len();
+    let c = n - n % LANES;
+    let mut i = 0;
+    while i < c {
+        let mut d = F32x8::load(&dst[i..]);
+        let s = F32x8::load(&src[i..]);
+        for l in 0..LANES {
+            d.0[l] = f(d.0[l], s.0[l]);
+        }
+        d.store(&mut dst[i..]);
+        i += LANES;
+    }
+    for j in c..n {
+        dst[j] = f(dst[j], src[j]);
+    }
+}
+
+// ---------------------------------------------------------------------
+// AVX2 arms (x86_64; fall back to the array arm elsewhere). The
+// wrappers isolate the `unsafe` + cfg plumbing: SimdPath::Avx2 is only
+// constructible after runtime detection (`sanitize` enforces this for
+// pool construction), which is what makes the calls sound.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    // SAFETY: Avx2 paths are sanitized against runtime detection.
+    unsafe { avx2::dot(a, b) }
+}
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    dot_array(a, b)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn dot3_avx2(a: &[f32], b: &[f32], c: &[f32]) -> f32 {
+    // SAFETY: Avx2 paths are sanitized against runtime detection.
+    unsafe { avx2::dot3(a, b, c) }
+}
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn dot3_avx2(a: &[f32], b: &[f32], c: &[f32]) -> f32 {
+    dot3_array(a, b, c)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn sumsq_avx2(a: &[f32]) -> f32 {
+    // SAFETY: Avx2 paths are sanitized against runtime detection.
+    unsafe { avx2::sumsq(a) }
+}
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn sumsq_avx2(a: &[f32]) -> f32 {
+    sumsq_array(a)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn axpy_avx2(y: &mut [f32], s: f32, x: &[f32]) {
+    // SAFETY: Avx2 paths are sanitized against runtime detection.
+    unsafe { avx2::axpy(y, s, x) }
+}
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn axpy_avx2(y: &mut [f32], s: f32, x: &[f32]) {
+    axpy(SimdPath::Array, y, s, x)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn norm_apply_avx2(y: &mut [f32], x: &[f32], r: f32, g: &[f32]) {
+    // SAFETY: Avx2 paths are sanitized against runtime detection.
+    unsafe { avx2::norm_apply(y, x, r, g) }
+}
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn norm_apply_avx2(y: &mut [f32], x: &[f32], r: f32, g: &[f32]) {
+    norm_apply(SimdPath::Array, y, x, r, g)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn stage_apply_avx2(sg: &mut [f32], dy: &[f32], x: &[f32], r: f32) {
+    // SAFETY: Avx2 paths are sanitized against runtime detection.
+    unsafe { avx2::stage_apply(sg, dy, x, r) }
+}
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn stage_apply_avx2(sg: &mut [f32], dy: &[f32], x: &[f32], r: f32) {
+    stage_apply(SimdPath::Array, sg, dy, x, r)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn norm_bwd_apply_avx2(dx: &mut [f32], g: &[f32], dy: &[f32], r: f32, x: &[f32], c: f32) {
+    // SAFETY: Avx2 paths are sanitized against runtime detection.
+    unsafe { avx2::norm_bwd_apply(dx, g, dy, r, x, c) }
+}
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn norm_bwd_apply_avx2(dx: &mut [f32], g: &[f32], dy: &[f32], r: f32, x: &[f32], c: f32) {
+    norm_bwd_apply(SimdPath::Array, dx, g, dy, r, x, c)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn q4_axpy_dequant_avx2(y: &mut [f32], xv: f32, am: f32, codes: &[u8], levels: &[f32]) {
+    // SAFETY: Avx2 paths are sanitized against runtime detection.
+    unsafe { avx2::q4_axpy_dequant(y, xv, am, codes, levels) }
+}
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn q4_axpy_dequant_avx2(y: &mut [f32], xv: f32, am: f32, codes: &[u8], levels: &[f32]) {
+    q4_axpy_dequant(SimdPath::Array, y, xv, am, codes, levels)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn q4_axpy_scaled_avx2(y: &mut [f32], s: f32, codes: &[u8], levels: &[f32]) {
+    // SAFETY: Avx2 paths are sanitized against runtime detection.
+    unsafe { avx2::q4_axpy_scaled(y, s, codes, levels) }
+}
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn q4_axpy_scaled_avx2(y: &mut [f32], s: f32, codes: &[u8], levels: &[f32]) {
+    q4_axpy_scaled(SimdPath::Array, y, s, codes, levels)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn q4_fill_dequant_avx2(w: &mut [f32], am: f32, codes: &[u8], levels: &[f32]) {
+    // SAFETY: Avx2 paths are sanitized against runtime detection.
+    unsafe { avx2::q4_fill_dequant(w, am, codes, levels) }
+}
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn q4_fill_dequant_avx2(w: &mut [f32], am: f32, codes: &[u8], levels: &[f32]) {
+    q4_fill_dequant(SimdPath::Array, w, am, codes, levels)
+}
+
+/// The intrinsic implementations. Every function here uses only
+/// separately-rounded `mul`/`add`/`sub`/`div` vector ops (no FMA),
+/// the exact canonical chunk/tail/combine schedule of the scalar
+/// arms, and unaligned loads/stores — so results are bit-identical to
+/// the other two paths.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{gather8, tail_combine, LANES};
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Requires AVX2 (callers dispatch behind `is_x86_feature_detected!`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let c = n - n % LANES;
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        // unrolled by two chunks; each step still accumulates chunks in
+        // ascending order into the same lane accumulators
+        while i + 2 * LANES <= c {
+            let p0 = _mm256_mul_ps(
+                _mm256_loadu_ps(a.as_ptr().add(i)),
+                _mm256_loadu_ps(b.as_ptr().add(i)),
+            );
+            acc = _mm256_add_ps(acc, p0);
+            let p1 = _mm256_mul_ps(
+                _mm256_loadu_ps(a.as_ptr().add(i + LANES)),
+                _mm256_loadu_ps(b.as_ptr().add(i + LANES)),
+            );
+            acc = _mm256_add_ps(acc, p1);
+            i += 2 * LANES;
+        }
+        while i < c {
+            let p = _mm256_mul_ps(
+                _mm256_loadu_ps(a.as_ptr().add(i)),
+                _mm256_loadu_ps(b.as_ptr().add(i)),
+            );
+            acc = _mm256_add_ps(acc, p);
+            i += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        tail_combine(lanes, c, |j| a[j] * b[j], n)
+    }
+
+    /// # Safety
+    /// Requires AVX2 (callers dispatch behind `is_x86_feature_detected!`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot3(a: &[f32], b: &[f32], c: &[f32]) -> f32 {
+        let n = a.len();
+        let cc = n - n % LANES;
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < cc {
+            let p = _mm256_mul_ps(
+                _mm256_loadu_ps(a.as_ptr().add(i)),
+                _mm256_loadu_ps(b.as_ptr().add(i)),
+            );
+            let p = _mm256_mul_ps(p, _mm256_loadu_ps(c.as_ptr().add(i)));
+            acc = _mm256_add_ps(acc, p);
+            i += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        tail_combine(lanes, cc, |j| (a[j] * b[j]) * c[j], n)
+    }
+
+    /// # Safety
+    /// Requires AVX2 (callers dispatch behind `is_x86_feature_detected!`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sumsq(a: &[f32]) -> f32 {
+        let n = a.len();
+        let c = n - n % LANES;
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < c {
+            let v = _mm256_loadu_ps(a.as_ptr().add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(v, v));
+            i += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        tail_combine(lanes, c, |j| a[j] * a[j], n)
+    }
+
+    /// # Safety
+    /// Requires AVX2 (callers dispatch behind `is_x86_feature_detected!`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(y: &mut [f32], s: f32, x: &[f32]) {
+        let n = y.len();
+        let c = n - n % LANES;
+        let vs = _mm256_set1_ps(s);
+        let mut i = 0;
+        // element-wise: unrolling freely is fine (no cross-lane order)
+        while i + 2 * LANES <= c {
+            let y0 = _mm256_add_ps(
+                _mm256_loadu_ps(y.as_ptr().add(i)),
+                _mm256_mul_ps(vs, _mm256_loadu_ps(x.as_ptr().add(i))),
+            );
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), y0);
+            let y1 = _mm256_add_ps(
+                _mm256_loadu_ps(y.as_ptr().add(i + LANES)),
+                _mm256_mul_ps(vs, _mm256_loadu_ps(x.as_ptr().add(i + LANES))),
+            );
+            _mm256_storeu_ps(y.as_mut_ptr().add(i + LANES), y1);
+            i += 2 * LANES;
+        }
+        while i < c {
+            let yv = _mm256_add_ps(
+                _mm256_loadu_ps(y.as_ptr().add(i)),
+                _mm256_mul_ps(vs, _mm256_loadu_ps(x.as_ptr().add(i))),
+            );
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), yv);
+            i += LANES;
+        }
+        for j in c..n {
+            y[j] += s * x[j];
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2 (callers dispatch behind `is_x86_feature_detected!`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn norm_apply(y: &mut [f32], x: &[f32], r: f32, g: &[f32]) {
+        let n = y.len();
+        let c = n - n % LANES;
+        let vr = _mm256_set1_ps(r);
+        let mut i = 0;
+        while i < c {
+            let v = _mm256_div_ps(_mm256_loadu_ps(x.as_ptr().add(i)), vr);
+            let v = _mm256_mul_ps(v, _mm256_loadu_ps(g.as_ptr().add(i)));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), v);
+            i += LANES;
+        }
+        for j in c..n {
+            y[j] = x[j] / r * g[j];
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2 (callers dispatch behind `is_x86_feature_detected!`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn stage_apply(sg: &mut [f32], dy: &[f32], x: &[f32], r: f32) {
+        let n = sg.len();
+        let c = n - n % LANES;
+        let vr = _mm256_set1_ps(r);
+        let mut i = 0;
+        while i < c {
+            let v = _mm256_mul_ps(
+                _mm256_loadu_ps(dy.as_ptr().add(i)),
+                _mm256_loadu_ps(x.as_ptr().add(i)),
+            );
+            _mm256_storeu_ps(sg.as_mut_ptr().add(i), _mm256_div_ps(v, vr));
+            i += LANES;
+        }
+        for j in c..n {
+            sg[j] = dy[j] * x[j] / r;
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2 (callers dispatch behind `is_x86_feature_detected!`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn norm_bwd_apply(dx: &mut [f32], g: &[f32], dy: &[f32], r: f32, x: &[f32], c: f32) {
+        let n = dx.len();
+        let cc = n - n % LANES;
+        let vr = _mm256_set1_ps(r);
+        let vc = _mm256_set1_ps(c);
+        let mut i = 0;
+        while i < cc {
+            let num = _mm256_mul_ps(
+                _mm256_loadu_ps(g.as_ptr().add(i)),
+                _mm256_loadu_ps(dy.as_ptr().add(i)),
+            );
+            let lhs = _mm256_div_ps(num, vr);
+            let rhs = _mm256_mul_ps(_mm256_loadu_ps(x.as_ptr().add(i)), vc);
+            _mm256_storeu_ps(dx.as_mut_ptr().add(i), _mm256_sub_ps(lhs, rhs));
+            i += LANES;
+        }
+        for j in cc..n {
+            dx[j] = g[j] * dy[j] / r - x[j] * c;
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2 (callers dispatch behind `is_x86_feature_detected!`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn q4_axpy_dequant(y: &mut [f32], xv: f32, am: f32, codes: &[u8], levels: &[f32]) {
+        let n = y.len();
+        let c = n - n % LANES;
+        let vx = _mm256_set1_ps(xv);
+        let va = _mm256_set1_ps(am);
+        let mut i = 0;
+        while i < c {
+            let g = gather8(&codes[i..], levels);
+            let w = _mm256_mul_ps(_mm256_loadu_ps(g.as_ptr()), va);
+            let xw = _mm256_mul_ps(vx, w);
+            let yv = _mm256_add_ps(_mm256_loadu_ps(y.as_ptr().add(i)), xw);
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), yv);
+            i += LANES;
+        }
+        for j in c..n {
+            y[j] += xv * (levels[(codes[j] & 0x0f) as usize] * am);
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2 (callers dispatch behind `is_x86_feature_detected!`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn q4_axpy_scaled(y: &mut [f32], s: f32, codes: &[u8], levels: &[f32]) {
+        let n = y.len();
+        let c = n - n % LANES;
+        let vs = _mm256_set1_ps(s);
+        let mut i = 0;
+        while i < c {
+            let g = gather8(&codes[i..], levels);
+            let sw = _mm256_mul_ps(vs, _mm256_loadu_ps(g.as_ptr()));
+            let yv = _mm256_add_ps(_mm256_loadu_ps(y.as_ptr().add(i)), sw);
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), yv);
+            i += LANES;
+        }
+        for j in c..n {
+            y[j] += s * levels[(codes[j] & 0x0f) as usize];
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2 (callers dispatch behind `is_x86_feature_detected!`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn q4_fill_dequant(w: &mut [f32], am: f32, codes: &[u8], levels: &[f32]) {
+        let n = w.len();
+        let c = n - n % LANES;
+        let va = _mm256_set1_ps(am);
+        let mut i = 0;
+        while i < c {
+            let g = gather8(&codes[i..], levels);
+            let w8 = _mm256_mul_ps(_mm256_loadu_ps(g.as_ptr()), va);
+            _mm256_storeu_ps(w.as_mut_ptr().add(i), w8);
+            i += LANES;
+        }
+        for j in c..n {
+            w[j] = levels[(codes[j] & 0x0f) as usize] * am;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn rand(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let mut v = vec![0.0f32; n];
+        rng.fill_gaussian_f32(&mut v, 1.0);
+        v
+    }
+
+    /// Lengths spanning empty, sub-lane, exact-lane, and remainder-lane
+    /// shapes (the k/n sweep the kernel-level tests mirror).
+    const LENS: [usize; 9] = [0, 1, 7, 8, 9, 16, 31, 64, 67];
+
+    #[test]
+    fn path_names_and_sanitize() {
+        assert_eq!(SimdPath::None.name(), "none");
+        assert_eq!(SimdPath::Array.name(), "array");
+        assert_eq!(SimdPath::Avx2.name(), "avx2");
+        // sanitize never yields an unexecutable path
+        for p in [SimdPath::None, SimdPath::Array, SimdPath::Avx2] {
+            let s = p.sanitize();
+            assert!(all_paths().contains(&s), "{s:?} not executable");
+        }
+        assert_eq!(SimdPath::None.sanitize(), SimdPath::None);
+        assert_eq!(SimdPath::Array.sanitize(), SimdPath::Array);
+        // env-derived path is stable and executable
+        assert_eq!(path_from_env(), path_from_env());
+        assert!(all_paths().contains(&path_from_env().sanitize()));
+    }
+
+    #[test]
+    fn reductions_bitwise_equal_across_paths() {
+        for &n in &LENS {
+            let a = rand(n, 1000 + n as u64);
+            let b = rand(n, 2000 + n as u64);
+            let c = rand(n, 3000 + n as u64);
+            let want_dot = dot(SimdPath::None, &a, &b);
+            let want_dot3 = dot3(SimdPath::None, &a, &b, &c);
+            let want_sq = sum_squares(SimdPath::None, &a);
+            for path in all_paths() {
+                assert_eq!(dot(path, &a, &b).to_bits(), want_dot.to_bits(), "dot n={n} {path:?}");
+                assert_eq!(
+                    dot3(path, &a, &b, &c).to_bits(),
+                    want_dot3.to_bits(),
+                    "dot3 n={n} {path:?}"
+                );
+                assert_eq!(
+                    sum_squares(path, &a).to_bits(),
+                    want_sq.to_bits(),
+                    "sumsq n={n} {path:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn canonical_dot_order_is_8_lane_strided() {
+        // reproduce the documented schedule by hand for a remainder shape
+        let n = 19usize;
+        let a = rand(n, 42);
+        let b = rand(n, 43);
+        let c = n - n % LANES;
+        let mut acc = [0.0f32; LANES];
+        let mut i = 0;
+        while i < c {
+            for l in 0..LANES {
+                acc[l] += a[i + l] * b[i + l];
+            }
+            i += LANES;
+        }
+        for j in c..n {
+            acc[j - c] += a[j] * b[j];
+        }
+        let want = combine8(acc);
+        for path in all_paths() {
+            assert_eq!(dot(path, &a, &b).to_bits(), want.to_bits(), "{path:?}");
+        }
+        assert_eq!(dot(SimdPath::None, &a, &b).to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn elementwise_ops_bitwise_equal_across_paths() {
+        for &n in &LENS {
+            let x = rand(n, 4000 + n as u64);
+            let g = rand(n, 5000 + n as u64);
+            let dy = rand(n, 6000 + n as u64);
+            let (s, r, c) = (0.37f32, 1.73f32, -0.11f32);
+
+            let mut want_axpy = rand(n, 7000 + n as u64);
+            let base = want_axpy.clone();
+            axpy(SimdPath::None, &mut want_axpy, s, &x);
+            let mut want_norm = vec![0.0f32; n];
+            norm_apply(SimdPath::None, &mut want_norm, &x, r, &g);
+            let mut want_stage = vec![0.0f32; n];
+            stage_apply(SimdPath::None, &mut want_stage, &dy, &x, r);
+            let mut want_bwd = vec![0.0f32; n];
+            norm_bwd_apply(SimdPath::None, &mut want_bwd, &g, &dy, r, &x, c);
+
+            for path in all_paths() {
+                let mut y = base.clone();
+                axpy(path, &mut y, s, &x);
+                assert_eq!(y, want_axpy, "axpy n={n} {path:?}");
+                let mut y = vec![0.0f32; n];
+                norm_apply(path, &mut y, &x, r, &g);
+                assert_eq!(y, want_norm, "norm_apply n={n} {path:?}");
+                let mut y = vec![0.0f32; n];
+                stage_apply(path, &mut y, &dy, &x, r);
+                assert_eq!(y, want_stage, "stage_apply n={n} {path:?}");
+                let mut y = vec![0.0f32; n];
+                norm_bwd_apply(path, &mut y, &g, &dy, r, &x, c);
+                assert_eq!(y, want_bwd, "norm_bwd_apply n={n} {path:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn q4_forms_bitwise_equal_across_paths() {
+        let levels: Vec<f32> = (0..16).map(|i| (i as f32 - 7.5) / 7.5).collect();
+        for &n in &LENS {
+            let codes: Vec<u8> = (0..n).map(|i| ((i * 5 + 3) % 16) as u8).collect();
+            let base = rand(n, 8000 + n as u64);
+            let (xv, am, s) = (0.83f32, 0.021f32, 0.0174f32);
+
+            let mut want_dq = base.clone();
+            q4_axpy_dequant(SimdPath::None, &mut want_dq, xv, am, &codes, &levels);
+            let mut want_sc = base.clone();
+            q4_axpy_scaled(SimdPath::None, &mut want_sc, s, &codes, &levels);
+            let mut want_fill = vec![0.0f32; n];
+            q4_fill_dequant(SimdPath::None, &mut want_fill, am, &codes, &levels);
+
+            for path in all_paths() {
+                let mut y = base.clone();
+                q4_axpy_dequant(path, &mut y, xv, am, &codes, &levels);
+                assert_eq!(y, want_dq, "q4_axpy_dequant n={n} {path:?}");
+                let mut y = base.clone();
+                q4_axpy_scaled(path, &mut y, s, &codes, &levels);
+                assert_eq!(y, want_sc, "q4_axpy_scaled n={n} {path:?}");
+                let mut y = vec![0.0f32; n];
+                q4_fill_dequant(path, &mut y, am, &codes, &levels);
+                assert_eq!(y, want_fill, "q4_fill_dequant n={n} {path:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn generic_maps_bitwise_equal_across_paths() {
+        for &n in &LENS {
+            let src = rand(n, 9000 + n as u64);
+            let base = rand(n, 9500 + n as u64);
+            let f = |v: f32| v * 1.5 + 0.25;
+            let z = |a: f32, b: f32| a * 0.9 + b;
+            let mut want_u = vec![0.0f32; n];
+            apply_unary(SimdPath::None, &mut want_u, &src, f);
+            let mut want_z = base.clone();
+            apply_zip(SimdPath::None, &mut want_z, &src, z);
+            for path in all_paths() {
+                let mut d = vec![0.0f32; n];
+                apply_unary(path, &mut d, &src, f);
+                assert_eq!(d, want_u, "apply_unary n={n} {path:?}");
+                let mut d = base.clone();
+                apply_zip(path, &mut d, &src, z);
+                assert_eq!(d, want_z, "apply_zip n={n} {path:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32x8_ops_are_lane_wise() {
+        let a = F32x8([1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        let b = F32x8::splat(2.0);
+        assert_eq!((a + b).0[3], 6.0);
+        assert_eq!((a - b).0[0], -1.0);
+        assert_eq!((a * b).0[7], 16.0);
+        assert_eq!((a / b).0[1], 1.0);
+        assert_eq!(a.mul_add(b, F32x8::splat(1.0)).0[2], 7.0);
+        let mut out = [0.0f32; 8];
+        F32x8::load(&a.0).store(&mut out);
+        assert_eq!(out, a.0);
+        assert_eq!(F32x8::ZERO.0, [0.0; 8]);
+        assert_eq!(combine8([1.0; 8]), 8.0);
+    }
+}

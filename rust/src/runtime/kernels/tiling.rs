@@ -1,17 +1,22 @@
-//! Cache-blocked dense kernels, parallelized over deterministic tiles.
+//! Cache-blocked dense kernels, parallelized over deterministic tiles,
+//! with the inner loops vectorized through [`super::simd`].
 //!
-//! Every kernel here is **bit-identical to its serial loop at any thread
-//! count**: output rows/columns are partitioned into tiles with exactly
-//! one owning task, and every per-element reduction runs in the same
-//! order as the original scalar loop in `runtime/cpu.rs` (the `k` index
-//! always ascends for a given output element). Cross-row reductions
-//! (`rmsnorm_bwd`'s gain gradient) are staged per row and summed serially
-//! in row order, so the grouping never depends on the thread count.
+//! Every kernel here is **bit-identical across every thread count and
+//! SIMD path**: output rows/columns are partitioned into tiles with
+//! exactly one owning task, element-wise accumulations keep the serial
+//! `k`-ascending per-element order, and every inner-`k` reduction
+//! (the `matmul_nt` dot products, the RMS-norm sums) runs in the
+//! canonical 8-lane-strided order of [`super::simd`] — the same
+//! schedule in the scalar, array and AVX2 arms. Cross-row reductions
+//! (`rmsnorm_bwd`'s gain gradient) are staged per row and summed
+//! serially in row order, so the grouping never depends on the thread
+//! count.
 
 // Index-heavy numeric kernels read better as explicit loops.
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 use super::pool::{SyncSlice, ThreadPool};
+use super::simd::{self, SimdPath};
 
 /// Column-tile width for the dense matmul inner loops: 256 f32 output
 /// columns (1 KiB of `y` plus 1 KiB of each visited `w` row) keeps a tile
@@ -23,6 +28,7 @@ const NORM_EPS: f32 = 1e-6;
 /// `y = x @ w` with `x [t,k]`, `w [k,n]`, parallel over rows (or over
 /// column tiles when `t == 1`, the decode-row case).
 pub fn matmul(pool: &ThreadPool, x: &[f32], w: &[f32], t: usize, k: usize, n: usize) -> Vec<f32> {
+    let path = pool.simd();
     let mut y = vec![0.0f32; t * n];
     let ys = SyncSlice::new(&mut y);
     if t == 1 {
@@ -31,13 +37,13 @@ pub fn matmul(pool: &ThreadPool, x: &[f32], w: &[f32], t: usize, k: usize, n: us
             let (jlo, jhi) = (jb * COL_TILE, ((jb + 1) * COL_TILE).min(n));
             // SAFETY: column tile jb is written only by task jb.
             let yr = unsafe { ys.slice_mut(jlo, jhi - jlo) };
-            matmul_row_tile(x, w, k, n, jlo, jhi, yr);
+            matmul_row_tile(path, x, w, n, jlo, jhi, yr);
         });
     } else {
         pool.run(t, |i| {
             // SAFETY: output row i is written only by task i.
             let yr = unsafe { ys.slice_mut(i * n, n) };
-            matmul_row(&x[i * k..(i + 1) * k], w, k, n, yr);
+            matmul_row(path, &x[i * k..(i + 1) * k], w, n, yr);
         });
     }
     y
@@ -45,19 +51,23 @@ pub fn matmul(pool: &ThreadPool, x: &[f32], w: &[f32], t: usize, k: usize, n: us
 
 /// One output row, column-tiled; per-element accumulation order is `kk`
 /// ascending — identical to the untiled scalar loop.
-fn matmul_row(xr: &[f32], w: &[f32], k: usize, n: usize, yr: &mut [f32]) {
+fn matmul_row(path: SimdPath, xr: &[f32], w: &[f32], n: usize, yr: &mut [f32]) {
     let mut jlo = 0;
     while jlo < n {
         let jhi = (jlo + COL_TILE).min(n);
-        matmul_row_tile(xr, w, k, n, jlo, jhi, &mut yr[jlo..jhi]);
+        matmul_row_tile(path, xr, w, n, jlo, jhi, &mut yr[jlo..jhi]);
         jlo = jhi;
     }
 }
 
+/// Accumulate one `[jlo, jhi)` column tile of one output row: for each
+/// `kk` (ascending) the tile does `y += xv * w_row` — an element-wise
+/// axpy, vectorized across the 8-column lanes with a scalar tail, so
+/// every `y[j]` sees the exact serial accumulation order.
 fn matmul_row_tile(
+    path: SimdPath,
     xr: &[f32],
     w: &[f32],
-    _k: usize,
     n: usize,
     jlo: usize,
     jhi: usize,
@@ -68,14 +78,13 @@ fn matmul_row_tile(
             continue;
         }
         let wr = &w[kk * n + jlo..kk * n + jhi];
-        for (yv, &wv) in yt.iter_mut().zip(wr) {
-            *yv += xv * wv;
-        }
+        simd::axpy(path, yt, xv, wr);
     }
 }
 
 /// `dx = dy @ w^T` with `dy [t,n]`, `w [k,n]` -> `[t,k]`; parallel over
-/// rows, each element an independent dot product.
+/// rows, each element an independent dot product in the canonical
+/// 8-lane-strided reduction order.
 pub fn matmul_nt(
     pool: &ThreadPool,
     dy: &[f32],
@@ -84,6 +93,7 @@ pub fn matmul_nt(
     k: usize,
     n: usize,
 ) -> Vec<f32> {
+    let path = pool.simd();
     let mut dx = vec![0.0f32; t * k];
     let dxs = SyncSlice::new(&mut dx);
     pool.run(t, |i| {
@@ -92,11 +102,7 @@ pub fn matmul_nt(
         let dxr = unsafe { dxs.slice_mut(i * k, k) };
         for (kk, dv) in dxr.iter_mut().enumerate() {
             let wr = &w[kk * n..(kk + 1) * n];
-            let mut s = 0.0f32;
-            for (a, b) in dyr.iter().zip(wr) {
-                s += a * b;
-            }
-            *dv = s;
+            *dv = simd::dot(path, dyr, wr);
         }
     });
     dx
@@ -113,6 +119,7 @@ pub fn matmul_tn(
     k: usize,
     n: usize,
 ) -> Vec<f32> {
+    let path = pool.simd();
     let mut dw = vec![0.0f32; k * n];
     let dws = SyncSlice::new(&mut dw);
     pool.run(k, |kk| {
@@ -124,17 +131,17 @@ pub fn matmul_tn(
                 continue;
             }
             let dyr = &dy[i * n..(i + 1) * n];
-            for (dv, &g) in dwr.iter_mut().zip(dyr) {
-                *dv += xv * g;
-            }
+            simd::axpy(path, dwr, xv, dyr);
         }
     });
     dw
 }
 
 /// Row-wise RMS norm `y = x / rms * g`, parallel over rows; returns
-/// `(y, rms per row)`.
+/// `(y, rms per row)`. The mean-square reduction runs in the canonical
+/// 8-lane-strided order; the normalize map is element-wise.
 pub fn rmsnorm(pool: &ThreadPool, x: &[f32], g: &[f32], d: usize) -> (Vec<f32>, Vec<f32>) {
+    let path = pool.simd();
     let rows = x.len() / d;
     let mut y = vec![0.0f32; x.len()];
     let mut rms = vec![0.0f32; rows];
@@ -142,22 +149,21 @@ pub fn rmsnorm(pool: &ThreadPool, x: &[f32], g: &[f32], d: usize) -> (Vec<f32>, 
     let rs = SyncSlice::new(&mut rms);
     pool.run(rows, |i| {
         let xr = &x[i * d..(i + 1) * d];
-        let ms = xr.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+        let ms = simd::sum_squares(path, xr) / d as f32;
         let r = (ms + NORM_EPS).sqrt();
         // SAFETY: row i of y and entry i of rms are written only by task i.
         unsafe { rs.slice_mut(i, 1) }[0] = r;
         let yr = unsafe { ys.slice_mut(i * d, d) };
-        for j in 0..d {
-            yr[j] = xr[j] / r * g[j];
-        }
+        simd::norm_apply(path, yr, xr, r, g);
     });
     (y, rms)
 }
 
 /// Backward of [`rmsnorm`]: returns `(dx, dg)`. `dx` rows are computed in
-/// parallel; the cross-row `dg` reduction is staged per row and then
-/// summed serially in ascending row order, so the result is independent
-/// of the thread count (and equal to the serial loop's).
+/// parallel (inner sum in the canonical 8-lane-strided order); the
+/// cross-row `dg` reduction is staged per row and then summed serially in
+/// ascending row order, so the result is independent of the thread count
+/// and SIMD path.
 pub fn rmsnorm_bwd(
     pool: &ThreadPool,
     x: &[f32],
@@ -166,6 +172,7 @@ pub fn rmsnorm_bwd(
     dy: &[f32],
     d: usize,
 ) -> (Vec<f32>, Vec<f32>) {
+    let path = pool.simd();
     let rows = x.len() / d;
     let mut dx = vec![0.0f32; x.len()];
     let mut stage = vec![0.0f32; x.len()]; // per-row dg contributions
@@ -178,16 +185,11 @@ pub fn rmsnorm_bwd(
         // SAFETY: row i of dx and of the staging buffer are written only
         // by task i.
         let sg = unsafe { sts.slice_mut(i * d, d) };
-        let mut s = 0.0f32;
-        for j in 0..d {
-            sg[j] = dyr[j] * xr[j] / r;
-            s += dyr[j] * g[j] * xr[j];
-        }
+        simd::stage_apply(path, sg, dyr, xr, r);
+        let s = simd::dot3(path, dyr, g, xr);
         let c = s / (d as f32 * r * r * r);
         let dxr = unsafe { dxs.slice_mut(i * d, d) };
-        for j in 0..d {
-            dxr[j] = g[j] * dyr[j] / r - xr[j] * c;
-        }
+        simd::norm_bwd_apply(path, dxr, g, dyr, r, xr, c);
     });
     let mut dg = vec![0.0f32; d];
     for i in 0..rows {
@@ -199,23 +201,24 @@ pub fn rmsnorm_bwd(
     (dx, dg)
 }
 
-/// Element-wise map into a fresh buffer, parallel over fixed-size chunks.
+/// Element-wise map into a fresh buffer, parallel over fixed-size chunks
+/// (8-lane blocked through [`simd::apply_unary`]).
 pub fn par_map(pool: &ThreadPool, src: &[f32], f: impl Fn(f32) -> f32 + Sync) -> Vec<f32> {
     const CHUNK: usize = 4096;
+    let path = pool.simd();
     let mut out = vec![0.0f32; src.len()];
     let os = SyncSlice::new(&mut out);
     pool.run(src.len().div_ceil(CHUNK), |c| {
         let (lo, hi) = (c * CHUNK, ((c + 1) * CHUNK).min(src.len()));
         // SAFETY: chunk c is written only by task c.
         let dst = unsafe { os.slice_mut(lo, hi - lo) };
-        for (o, &v) in dst.iter_mut().zip(&src[lo..hi]) {
-            *o = f(v);
-        }
+        simd::apply_unary(path, dst, &src[lo..hi], &f);
     });
     out
 }
 
-/// Element-wise `dst[i] = f(dst[i], src[i])`, parallel over chunks.
+/// Element-wise `dst[i] = f(dst[i], src[i])`, parallel over chunks
+/// (8-lane blocked through [`simd::apply_zip`]).
 pub fn par_zip_apply(
     pool: &ThreadPool,
     dst: &mut [f32],
@@ -223,15 +226,14 @@ pub fn par_zip_apply(
     f: impl Fn(f32, f32) -> f32 + Sync,
 ) {
     const CHUNK: usize = 4096;
+    let path = pool.simd();
     let len = dst.len();
     let ds = SyncSlice::new(dst);
     pool.run(len.div_ceil(CHUNK), |c| {
         let (lo, hi) = (c * CHUNK, ((c + 1) * CHUNK).min(len));
         // SAFETY: chunk c is written only by task c.
         let d = unsafe { ds.slice_mut(lo, hi - lo) };
-        for (o, &v) in d.iter_mut().zip(&src[lo..hi]) {
-            *o = f(*o, v);
-        }
+        simd::apply_zip(path, d, &src[lo..hi], &f);
     });
 }
 
@@ -255,11 +257,40 @@ mod tests {
         y
     }
 
+    /// The canonical serial reference for `matmul_nt`: each element is a
+    /// dot product in the 8-lane-strided reduction order (this replaced
+    /// the old sequential-`j` order when the SIMD layer landed).
+    fn serial_matmul_nt(dy: &[f32], w: &[f32], t: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut dx = vec![0.0f32; t * k];
+        for i in 0..t {
+            for kk in 0..k {
+                dx[i * k + kk] = simd::dot(
+                    SimdPath::None,
+                    &dy[i * n..(i + 1) * n],
+                    &w[kk * n..(kk + 1) * n],
+                );
+            }
+        }
+        dx
+    }
+
     fn rand(n: usize, seed: u64) -> Vec<f32> {
         let mut rng = Pcg64::seed_from_u64(seed);
         let mut v = vec![0.0f32; n];
         rng.fill_gaussian_f32(&mut v, 1.0);
         v
+    }
+
+    /// One pool per `(executable path, thread count)` combination — the
+    /// grid every bitwise-equality test below sweeps.
+    fn sweep_pools() -> Vec<ThreadPool> {
+        let mut pools = Vec::new();
+        for path in simd::all_paths() {
+            for threads in [1usize, 8] {
+                pools.push(ThreadPool::with_config(threads, path));
+            }
+        }
+        pools
     }
 
     #[test]
@@ -275,6 +306,11 @@ mod tests {
             let w1 = serial_matmul(&x[..k], &w, 1, k, n);
             assert_eq!(matmul(&pool, &x[..k], &w, 1, k, n), w1, "row, threads={threads}");
         }
+        // the element-wise accumulation order is identical in every SIMD
+        // path, so the plain serial loop stays the exact reference
+        for pool in sweep_pools() {
+            assert_eq!(matmul(&pool, &x, &w, t, k, n), want, "{pool:?}");
+        }
     }
 
     #[test]
@@ -285,6 +321,9 @@ mod tests {
         let dy = rand(t * n, 5);
         let pool = ThreadPool::with_threads(3);
         let dx = matmul_nt(&pool, &dy, &w, t, k, n);
+        // exact vs the canonical strided serial reference...
+        assert_eq!(dx, serial_matmul_nt(&dy, &w, t, k, n));
+        // ...and near the naive sequential sum (different grouping)
         for i in 0..t {
             for kk in 0..k {
                 let mut s = 0.0f32;
@@ -304,6 +343,59 @@ mod tests {
                     s += x[i * k + kk] * dy[i * n + j];
                 }
                 assert!((dw[kk * n + j] - s).abs() < 1e-5);
+            }
+        }
+    }
+
+    /// The tentpole contract: every dense kernel is bit-identical across
+    /// `SIMD path × thread count`, including shapes with remainder lanes
+    /// (`k, n` not multiples of 8).
+    #[test]
+    fn dense_kernels_bitwise_equal_across_simd_paths_and_threads() {
+        let sizes = [1usize, 7, 8, 9, 31, 64];
+        let t = 3usize;
+        let reference = ThreadPool::with_config(1, SimdPath::None);
+        let pools = sweep_pools();
+        for &k in &sizes {
+            for &n in &sizes {
+                let seed = (k * 1000 + n) as u64;
+                let x = rand(t * k, seed);
+                let w = rand(k * n, seed + 1);
+                let dy = rand(t * n, seed + 2);
+                let want_mm = matmul(&reference, &x, &w, t, k, n);
+                let want_row = matmul(&reference, &x[..k], &w, 1, k, n);
+                let want_nt = matmul_nt(&reference, &dy, &w, t, k, n);
+                let want_tn = matmul_tn(&reference, &x, &dy, t, k, n);
+                for pool in &pools {
+                    let tag = format!("k={k} n={n} {pool:?}");
+                    assert_eq!(matmul(pool, &x, &w, t, k, n), want_mm, "matmul {tag}");
+                    assert_eq!(matmul(pool, &x[..k], &w, 1, k, n), want_row, "row matmul {tag}");
+                    assert_eq!(matmul_nt(pool, &dy, &w, t, k, n), want_nt, "matmul_nt {tag}");
+                    assert_eq!(matmul_tn(pool, &x, &dy, t, k, n), want_tn, "matmul_tn {tag}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rmsnorm_bitwise_equal_across_simd_paths_and_threads() {
+        let rows = 5usize;
+        let reference = ThreadPool::with_config(1, SimdPath::None);
+        let pools = sweep_pools();
+        for &d in &[1usize, 7, 8, 9, 31, 64] {
+            let x = rand(rows * d, 70 + d as u64);
+            let g = rand(d, 71 + d as u64);
+            let dy = rand(rows * d, 72 + d as u64);
+            let (want_y, want_r) = rmsnorm(&reference, &x, &g, d);
+            let (want_dx, want_dg) = rmsnorm_bwd(&reference, &x, &g, &want_r, &dy, d);
+            for pool in &pools {
+                let tag = format!("d={d} {pool:?}");
+                let (y, r) = rmsnorm(pool, &x, &g, d);
+                assert_eq!(y, want_y, "rmsnorm y {tag}");
+                assert_eq!(r, want_r, "rmsnorm rms {tag}");
+                let (dx, dg) = rmsnorm_bwd(pool, &x, &g, &r, &dy, d);
+                assert_eq!(dx, want_dx, "rmsnorm_bwd dx {tag}");
+                assert_eq!(dg, want_dg, "rmsnorm_bwd dg {tag}");
             }
         }
     }
@@ -339,6 +431,13 @@ mod tests {
         par_zip_apply(&pool, &mut dst, &doubled, |a, b| a + b);
         for (d, s) in dst.iter().zip(&src) {
             assert_eq!(*d, s + s * 2.0);
+        }
+        // element-wise maps are bit-identical across every path too
+        for p in sweep_pools() {
+            assert_eq!(par_map(&p, &src, |v| v * 2.0), doubled, "{p:?}");
+            let mut d2 = src.clone();
+            par_zip_apply(&p, &mut d2, &doubled, |a, b| a + b);
+            assert_eq!(d2, dst, "{p:?}");
         }
     }
 }

@@ -10,9 +10,10 @@
 //!   RMS-norm, GELU, causal attention softmax, NLL, AdamW and LoRA
 //!   updates. Fully hermetic: zero Python, zero artifacts, zero network.
 //!   Hot paths execute through the [`kernels`] subsystem: a crate-local
-//!   scoped thread pool (`BOF4_THREADS`, std-only) driving tiled
-//!   matmul/attention/norm kernels that are bit-identical to the serial
-//!   loops at every thread count, plus the in-place KV-cache protocol
+//!   scoped thread pool (`BOF4_THREADS`, std-only) driving tiled,
+//!   SIMD-vectorized matmul/attention/norm kernels (`BOF4_SIMD` selects
+//!   scalar / portable-array / AVX2 inner loops) that are bit-identical
+//!   at every thread count and path, plus the in-place KV-cache protocol
 //!   ([`Backend::alloc_decode_state`] / [`DecodeState`]) that keeps the
 //!   serving engine's cache slabs resident across decode steps.
 //! - `client::XlaBackend` (behind the off-by-default `xla` cargo
@@ -107,6 +108,15 @@ pub trait Backend: Send + Sync {
     /// Width of this backend's kernel pool, when it has one — what the
     /// decode-throughput bench records as its `threads` field.
     fn pool_threads(&self) -> Option<usize> {
+        None
+    }
+
+    /// Active SIMD inner-loop path of this backend's kernels
+    /// (`"none" | "array" | "avx2"`), when it runs on the tiled CPU
+    /// kernel subsystem — what the benches record as their `simd` field.
+    /// `None` for backends without the concept (XLA picks its own
+    /// vectorization).
+    fn simd_path(&self) -> Option<&'static str> {
         None
     }
 }
@@ -273,6 +283,12 @@ impl Runtime {
         self.backend.pool_threads()
     }
 
+    /// Active SIMD inner-loop path (`"none" | "array" | "avx2"`), when
+    /// the backend runs on the tiled CPU kernels.
+    pub fn simd_path(&self) -> Option<&'static str> {
+        self.backend.simd_path()
+    }
+
     fn validate_args(&self, gm: &GraphMeta, args: &[HostTensor]) -> Result<()> {
         if args.len() != gm.args.len() {
             return Err(crate::err!(
@@ -325,6 +341,8 @@ mod tests {
     fn cpu_runtime_validates_abi() {
         let rt = Runtime::cpu();
         assert_eq!(rt.platform(), "cpu-interpreter");
+        // the CPU backend always reports its active SIMD path
+        assert!(["none", "array", "avx2"].contains(&rt.simd_path().unwrap()));
         // wrong arg count
         assert!(rt.run("lm_nll", &[]).is_err());
         // wrong dtype for the seed

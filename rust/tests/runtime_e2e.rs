@@ -10,6 +10,7 @@ use bof4::eval::quantize_for_serving;
 use bof4::models::corpus::TOK_SPACE;
 use bof4::models::ParamSet;
 use bof4::quant::{self, Method, Norm, QuantConfig, Quantizer};
+use bof4::runtime::kernels::{simd, SimdPath};
 use bof4::runtime::{CpuBackend, HostTensor, Meta, Runtime};
 use bof4::util::json::Json;
 use bof4::util::rng::Pcg64;
@@ -18,10 +19,11 @@ fn runtime() -> Runtime {
     Runtime::new().expect("runtime")
 }
 
-/// CPU runtime over a private kernel pool of an explicit width.
-fn runtime_with_threads(threads: usize) -> Runtime {
+/// CPU runtime over a private kernel pool of an explicit width and SIMD
+/// path.
+fn runtime_with_config(threads: usize, path: SimdPath) -> Runtime {
     let meta = Meta::builtin();
-    let be = CpuBackend::with_threads(meta.model.clone(), threads);
+    let be = CpuBackend::with_config(meta.model.clone(), threads, path);
     Runtime::with_backend(meta, Box::new(be))
 }
 
@@ -334,19 +336,33 @@ fn quantize_blocks_graph_matches_rust_encoder() {
 }
 
 // ---------------------------------------------------------------------
-// kernel-pool determinism: results must not depend on BOF4_THREADS
+// kernel determinism: results must not depend on BOF4_THREADS or
+// BOF4_SIMD
 // ---------------------------------------------------------------------
 
 /// Logits, a full AdamW training step (parameters, moments, loss) and a
-/// LoRA step must be bit-identical across kernel-pool widths — the
-/// contract that lets `BOF4_THREADS` be a pure performance knob.
+/// LoRA step must be bit-identical across kernel-pool widths AND SIMD
+/// paths — the contract that lets both `BOF4_THREADS` and `BOF4_SIMD`
+/// be pure performance knobs. Logits are checked at every
+/// `(threads, path)` combination; the (much slower) training graphs run
+/// at the scalar/vector extremes.
 #[test]
-fn canonical_graphs_bit_identical_across_thread_counts() {
+fn canonical_graphs_bit_identical_across_threads_and_simd() {
+    let best = simd::detect_best();
+    let mut configs = vec![(1usize, SimdPath::None), (8, SimdPath::None)];
+    for path in simd::all_paths() {
+        if path != SimdPath::None {
+            for threads in [1usize, 2, 8] {
+                configs.push((threads, path));
+            }
+        }
+    }
     let mut want_logits: Option<Vec<HostTensor>> = None;
     let mut want_train: Option<Vec<HostTensor>> = None;
     let mut want_lora: Option<Vec<HostTensor>> = None;
-    for threads in [1usize, 2, 8] {
-        let rt = runtime_with_threads(threads);
+    for (threads, path) in configs {
+        let tag = format!("{threads} threads, simd={}", path.name());
+        let rt = runtime_with_config(threads, path);
         let params = init_params(&rt, 0);
         let n = params.len();
         let tokens = random_tokens(&rt, 2);
@@ -356,10 +372,13 @@ fn canonical_graphs_bit_identical_across_thread_counts() {
         let logits = rt.run("lm_logits_all", &args).expect("lm_logits_all");
         match &want_logits {
             None => want_logits = Some(logits),
-            Some(w) => assert_eq!(&logits, w, "logits diverged at {threads} threads"),
+            Some(w) => assert_eq!(&logits, w, "logits diverged at {tag}"),
         }
-        if threads == 2 {
-            continue; // cover the training graphs at the 1/8 extremes
+        // cover the training graphs only at the extremes: (1, scalar),
+        // (8, scalar), (1, best), (8, best)
+        let extreme = path == SimdPath::None || path == best;
+        if threads == 2 || !extreme {
+            continue;
         }
 
         let zeros: Vec<HostTensor> = params
@@ -378,7 +397,7 @@ fn canonical_graphs_bit_identical_across_thread_counts() {
         assert_eq!(tout.len(), 3 * n + 2);
         match &want_train {
             None => want_train = Some(tout),
-            Some(w) => assert_eq!(&tout, w, "train_step diverged at {threads} threads"),
+            Some(w) => assert_eq!(&tout, w, "train_step diverged at {tag}"),
         }
 
         let lora = rt
@@ -397,7 +416,7 @@ fn canonical_graphs_bit_identical_across_thread_counts() {
         let lout = rt.run("lora_step", &largs).expect("lora_step");
         match &want_lora {
             None => want_lora = Some(lout),
-            Some(w) => assert_eq!(&lout, w, "lora_step diverged at {threads} threads"),
+            Some(w) => assert_eq!(&lout, w, "lora_step diverged at {tag}"),
         }
     }
 }

@@ -6,8 +6,10 @@
 //! default configuration (threaded + SIMD kernels + in-place KV caches);
 //! assert the engine beats full recompute, that threading does not lose
 //! to the 1-thread baseline, and that the SIMD path never loses to
-//! forced-scalar, then record everything (with `threads` and `simd`
-//! fields) as JSON under `results/`.
+//! forced-scalar; additionally serve the same weights 4-bit at rest
+//! with and without an OPQ outlier side-table and assert the fused
+//! side-table lookup costs < 10%, then record everything (with
+//! `threads`, `simd` and `opq_*` fields) as JSON under `results/`.
 //!
 //! ```bash
 //! cargo bench --bench decode_throughput          # full run
@@ -61,6 +63,22 @@ fn main() {
         r.engine,
         r.engine_scalar
     );
+    // the OPQ contract: the sparse side-table lookup fused into the q4
+    // kernels must cost < 10% over the plain q4 serving path (the legs
+    // are None on backends without the q4 serving graphs, e.g. the XLA
+    // artifact ABI — skip the comparison there, like the other legs)
+    if let (Some(q4), Some(q4_opq)) = (r.engine_q4, r.engine_q4_opq) {
+        assert!(r.opq_outliers > 0, "OPQ leg must serve a non-empty side-table");
+        assert!(
+            q4_opq.as_secs_f64() <= q4.as_secs_f64() * 1.10,
+            "OPQ side-table lookup cost too high: q4+OPQ {:?} vs plain q4 {:?} \
+             ({} outliers, {:.3}x)",
+            q4_opq,
+            q4,
+            r.opq_outliers,
+            r.opq_overhead()
+        );
+    }
     println!(
         "decode {} tokens on {}: full-recompute {:.3}s ({:.1} tok/s) | engine@1t {:.3}s ({:.1} tok/s) | engine@{}t/scalar {:.3}s ({:.1} tok/s) | engine@{}t/{} {:.3}s ({:.1} tok/s) | speedup {:.1}x vs full, {:.1}x vs 1t, {:.1}x vs scalar",
         r.tokens,
@@ -80,8 +98,17 @@ fn main() {
         r.thread_speedup(),
         r.simd_speedup()
     );
+    if let (Some(q4), Some(q4_opq)) = (r.engine_q4, r.engine_q4_opq) {
+        println!(
+            "q4 serving: plain {:.3}s | +OPQ ({} outliers) {:.3}s | side-table overhead {:.3}x",
+            q4.as_secs_f64(),
+            r.opq_outliers,
+            q4_opq.as_secs_f64(),
+            r.opq_overhead()
+        );
+    }
 
-    let json = bof4::util::json::obj(vec![
+    let mut fields = vec![
         ("bench", Json::Str("decode_throughput".into())),
         ("backend", Json::Str(rt.platform())),
         ("threads", Json::Num(r.threads as f64)),
@@ -104,8 +131,14 @@ fn main() {
         ("speedup", Json::Num(r.speedup())),
         ("thread_speedup", Json::Num(r.thread_speedup())),
         ("simd_speedup", Json::Num(r.simd_speedup())),
-    ])
-    .to_string();
+    ];
+    if let (Some(q4), Some(q4_opq)) = (r.engine_q4, r.engine_q4_opq) {
+        fields.push(("engine_q4_s", Json::Num(q4.as_secs_f64())));
+        fields.push(("engine_q4_opq_s", Json::Num(q4_opq.as_secs_f64())));
+        fields.push(("opq_outliers", Json::Num(r.opq_outliers as f64)));
+        fields.push(("opq_overhead", Json::Num(r.opq_overhead())));
+    }
+    let json = bof4::util::json::obj(fields).to_string();
     let dir = bof4::eval::report::results_dir();
     std::fs::create_dir_all(&dir).expect("results dir");
     let path = dir.join("decode_throughput.json");

@@ -162,13 +162,71 @@ fn main() {
         for &(tag, pool) in &pools {
             let m = bench(&format!("q4 gemm {qm}x{qk}x{qn} ({tag})"), 2, 10, || {
                 std::hint::black_box(kernels::q4::q4_matmul(
-                    pool, &qx, &codes, &absmax, &levels, qm, qk, qn, blk,
+                    pool, &qx, &codes, &absmax, &levels, &[], &[], qm, qk, qn, blk,
                 ));
             });
             push(&m, q4_flops, "GFLOP/s");
             q4_ms.push(m);
         }
         assert_simd_wins("q4 gemm", &q4_ms);
+
+        // OPQ leg: the fused *decode-row* form (`row_matmul`, the kernel
+        // OPQ serving actually runs per token) with a ~1% outlier
+        // side-table vs an empty one — the sparse per-row binary-search
+        // + split-axpy patch must cost < 10% (best-of-run comparison).
+        {
+            let nblk = qk * qn / blk;
+            let am_codes: Vec<u8> = (0..nblk).map(|i| ((i * 13) % 250) as u8).collect();
+            let mut am_params = Vec::new();
+            for _ in 0..nblk.div_ceil(256) {
+                am_params.push(0.02f32);
+                am_params.push(0.0004);
+            }
+            let out_idx: Vec<u32> = (0..qk * qn).step_by(101).map(|i| i as u32).collect();
+            let out_val: Vec<f32> =
+                out_idx.iter().map(|&i| 1.0 + (i % 7) as f32 * 0.5).collect();
+            let row_flops = 2.0 * qk as f64 * qn as f64;
+            let pool = kernels::default_pool();
+            let mut row_ms = Vec::new();
+            for (label, oi, ov) in [
+                ("q4 decode row", &[][..], &[][..]),
+                ("q4 decode row +OPQ", &out_idx[..], &out_val[..]),
+            ] {
+                let mw = kernels::MatW::Q4 {
+                    codes: &codes,
+                    am_codes: &am_codes,
+                    am_params: &am_params,
+                    levels: &levels,
+                    block: blk,
+                    out_idx: oi,
+                    out_val: ov,
+                };
+                let m = bench(
+                    &format!("{label} {qk}x{qn} ({tag_simd})"),
+                    2,
+                    50,
+                    || {
+                        std::hint::black_box(kernels::q4::row_matmul(
+                            pool.as_ref(),
+                            &qx[..qk],
+                            &mw,
+                            qk,
+                            qn,
+                        ));
+                    },
+                );
+                push(&m, row_flops, "GFLOP/s");
+                row_ms.push(m);
+            }
+            assert!(
+                row_ms[1].min.as_secs_f64() <= row_ms[0].min.as_secs_f64() * 1.10,
+                "OPQ side-table lookup cost too high in the decode row kernel: \
+                 {:?} vs {:?} ({} outliers)",
+                row_ms[1].min,
+                row_ms[0].min,
+                out_idx.len()
+            );
+        }
 
         // attention: full forward and one incremental decode-step row
         let mut qkv = vec![0.0f32; t * 3 * d];

@@ -85,6 +85,16 @@ pub struct DecodeThroughput {
     /// forced to the scalar path (equals `engine` on non-CPU backends or
     /// when the active path is already `none`).
     pub engine_scalar: Duration,
+    /// Engine wall time serving the q4 serving path (4-bit codes + DQ
+    /// constants, empty outlier side-table). `None` when the backend has
+    /// no q4 serving graphs.
+    pub engine_q4: Option<Duration>,
+    /// Engine wall time serving the same (spiked) weights q4 **with an
+    /// OPQ outlier side-table** — isolates the side-table lookup cost in
+    /// the fused kernels. `None` alongside `engine_q4`.
+    pub engine_q4_opq: Option<Duration>,
+    /// OPQ outliers in the side-table the `engine_q4_opq` leg served.
+    pub opq_outliers: usize,
     /// Kernel-pool width the `engine` measurement ran at.
     pub threads: usize,
     /// Active SIMD path of the measured engine (`none|array|avx2`).
@@ -123,6 +133,16 @@ impl DecodeThroughput {
     pub fn simd_speedup(&self) -> f64 {
         self.engine_scalar.as_secs_f64() / self.engine.as_secs_f64().max(1e-12)
     }
+
+    /// Relative cost of the OPQ side-table lookup in the fused q4
+    /// kernels: `engine_q4_opq / engine_q4` (1.0 when the q4 legs did
+    /// not run). The release smoke asserts this stays under 1.10.
+    pub fn opq_overhead(&self) -> f64 {
+        match (self.engine_q4, self.engine_q4_opq) {
+            (Some(q4), Some(opq)) => opq.as_secs_f64() / q4.as_secs_f64().max(1e-12),
+            _ => 1.0,
+        }
+    }
 }
 
 /// Greedy-decode `n_tokens` over the same parameters four ways: (a) the
@@ -133,9 +153,12 @@ impl DecodeThroughput {
 /// (c) one engine session at the default thread count with the SIMD
 /// layer forced scalar (skipped off-CPU or when the active path is
 /// already `none`); (d) one engine session at the default configuration
-/// (threaded + vectorized kernels + in-place KV caches). All streams
-/// must agree — the bench doubles as a determinism smoke test for both
-/// the thread and the SIMD contract.
+/// (threaded + vectorized kernels + in-place KV caches); plus, on
+/// backends with the q4 serving graphs, (e) a q4-at-rest engine leg and
+/// (f) the same weights with an OPQ outlier side-table, pricing the
+/// fused side-table lookup ([`DecodeThroughput::opq_overhead`]). The
+/// dense streams must agree — the bench doubles as a determinism smoke
+/// test for both the thread and the SIMD contract.
 pub fn decode_throughput(
     rt: &std::sync::Arc<crate::runtime::Runtime>,
     params: Vec<crate::runtime::HostTensor>,
@@ -205,6 +228,72 @@ pub fn decode_throughput(
         scalar_toks = Some(toks_s);
     }
 
+    // (e/f) the q4 serving legs: the same weights (spiked so OPQ has a
+    // non-empty side-table) served 4-bit at rest — once with an empty
+    // outlier table and once with OPQ — to price the side-table lookup
+    // inside the fused kernels. CPU backend only (needs the q4 graphs).
+    let mut engine_q4 = None;
+    let mut engine_q4_opq = None;
+    let mut opq_outliers = 0usize;
+    if rt.meta.graphs.contains_key("lm_prefill_q4") {
+        use crate::models::ParamSet;
+        use crate::quant::{Method, Norm, OpqConfig, QuantConfig};
+        let gm = rt.meta.graph("lm_nll")?.clone();
+        let mut pset = ParamSet::from_tensors(&gm, &params)?;
+        for (name, shape, data) in pset.entries.iter_mut() {
+            if shape.len() == 2 && name.contains(".w") {
+                for i in (13..data.len()).step_by(401) {
+                    data[i] *= 30.0;
+                }
+            }
+        }
+        let qcfg = QuantConfig {
+            method: Method::Bof4 { mse: true },
+            norm: Norm::SignedAbsmax,
+            block: rt.meta.model.block,
+            opq: None,
+            double_quant: true,
+        };
+        let qsp_plain = crate::eval::quantize_for_serving(&rt.meta, &pset, &qcfg)?;
+        let qsp_opq = crate::eval::quantize_for_serving(
+            &rt.meta,
+            &pset,
+            &QuantConfig {
+                opq: Some(OpqConfig::default()),
+                ..qcfg
+            },
+        )?;
+        if qsp_opq.outliers == 0 {
+            return Err(crate::err!("OPQ bench leg flagged no outliers"));
+        }
+        opq_outliers = qsp_opq.outliers;
+        for (prefix, slot) in [
+            (qsp_plain.prefix, &mut engine_q4),
+            (qsp_opq.prefix, &mut engine_q4_opq),
+        ] {
+            let eng = Engine::start(
+                rt.clone(),
+                crate::coordinator::EngineParams::QuantizedQ4(prefix),
+                EngineConfig::default(),
+            )?;
+            // warm-up pass, then best-of-3 timed passes — the smoke
+            // asserts a hard 10% margin between the two legs, so a
+            // single sample would be at the mercy of scheduler noise
+            let _ = eng.generate(prompt, n_tokens.min(8))?;
+            let mut best: Option<Duration> = None;
+            for _ in 0..3 {
+                let t0 = Instant::now();
+                let got = eng.generate(prompt, n_tokens)?;
+                let dt = t0.elapsed();
+                if got.len() != n_tokens {
+                    return Err(crate::err!("q4 leg decoded {} of {n_tokens}", got.len()));
+                }
+                best = Some(best.map_or(dt, |b| b.min(dt)));
+            }
+            *slot = best;
+        }
+    }
+
     // (d) the session engine: prefill + incremental in-place decode
     let engine = Engine::start(rt.clone(), params, EngineConfig::default())?;
     let t0 = Instant::now();
@@ -237,6 +326,9 @@ pub fn decode_throughput(
         engine: engine_elapsed,
         engine_single: engine_single.unwrap_or(engine_elapsed),
         engine_scalar: engine_scalar.unwrap_or(engine_elapsed),
+        engine_q4,
+        engine_q4_opq,
+        opq_outliers,
         threads,
         simd,
     })

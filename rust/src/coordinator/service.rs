@@ -27,7 +27,8 @@
 //! Sessions end when their token budget is exhausted or the KV cache is
 //! full (`seq_len` positions). Quantized serving uses the `*_q4` graphs:
 //! 4-bit codes with 8-bit double-quantized block constants end-to-end,
-//! dequantized inside the fused matmul (see
+//! dequantized inside the fused matmul, with OPQ outliers served from a
+//! bf16-precision side-table patched inside the same kernels (see
 //! [`EngineParams::QuantizedQ4`]). On backends without the KV serving
 //! graphs (the XLA artifact ABI stops at the eval forwards), the engine
 //! transparently serves the same sessions full-context through
@@ -115,10 +116,13 @@ pub enum EngineParams {
     Dense(Vec<HostTensor>),
     /// Argument prefix for the `lm_prefill_q4` / `lm_decode_step_q4`
     /// graphs: non-matmul f32 params, unpacked 4-bit codes, 8-bit
-    /// double-quantized block constants and the codebook levels, in ABI
-    /// order. Block constants stay 8-bit end-to-end and are dequantized
-    /// inside the fused CPU matmul. Build with
-    /// [`crate::eval::quantize_for_serving`].
+    /// double-quantized block constants, per-matrix OPQ outlier
+    /// side-tables (sorted u32 indices + bf16-rounded f32 values, empty
+    /// when OPQ is off) and the codebook levels, in ABI order. Block
+    /// constants stay 8-bit end-to-end and are dequantized inside the
+    /// fused CPU matmul; outliers are patched sparsely inside the same
+    /// kernels, so OPQ models serve 4-bit at rest with a 16-bit
+    /// side-channel. Build with [`crate::eval::quantize_for_serving`].
     QuantizedQ4(Vec<HostTensor>),
 }
 

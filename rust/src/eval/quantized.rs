@@ -85,35 +85,43 @@ pub fn quantize_params(params: &ParamSet, config: &QuantConfig) -> Result<Quanti
 }
 
 /// A model quantized **for the serving engine**: 4-bit codes plus 8-bit
-/// double-quantized block constants, laid out as the argument prefix of
+/// double-quantized block constants plus (when OPQ is configured) a
+/// per-matrix outlier side-table, laid out as the argument prefix of
 /// the `lm_prefill_q4` / `lm_decode_step_q4` graphs. Unlike
 /// [`quantize_params`] (which dequantizes back to f32 for the eval
 /// graphs), the weights here stay quantized at rest end-to-end: the CPU
-/// backend dequantizes block constants inside the fused q4 matmul.
+/// backend dequantizes block constants inside the fused q4 matmul and
+/// patches the outlier side-table sparsely inside the same kernels.
 #[derive(Clone, Debug)]
 pub struct QuantizedServingParams {
     /// ABI-ordered prefix: non-matmul f32 params, per-matrix unpacked
     /// codes, per-matrix 8-bit constant codes, per-matrix chunk
-    /// `(min, scale)` pairs, codebook levels. Feed to
+    /// `(min, scale)` pairs, per-matrix sorted u32 outlier indices,
+    /// per-matrix bf16-rounded f32 outlier values (both empty when OPQ
+    /// is off), codebook levels. Feed to
     /// [`crate::coordinator::EngineParams::QuantizedQ4`].
     pub prefix: Vec<HostTensor>,
-    /// Exact dequantization of the same weights (bit-identical to what
-    /// the fused kernel computes) in canonical dense ABI order — the
-    /// equivalence oracle and the fallback for backends without the q4
-    /// serving graphs.
+    /// Exact dequantization of the same weights, outliers restored
+    /// (bit-identical to what the fused kernel computes) in canonical
+    /// dense ABI order — the equivalence oracle and the fallback for
+    /// backends without the q4 serving graphs.
     pub dense: Vec<HostTensor>,
     /// Storage bytes of the quantized matmul weights (codes + DQ'd
-    /// constants).
+    /// constants + OPQ side-table via [`crate::quant::opq::opq_bytes`]).
     pub quant_bytes: usize,
     /// f32 bytes of the same tensors.
     pub orig_bytes: usize,
+    /// OPQ outlier count across all matmul weights (0 when OPQ is off).
+    pub outliers: usize,
 }
 
 /// Quantize a [`ParamSet`] for the serving engine's q4 graphs. The
 /// config's `double_quant` flag is implied (constants are always stored
-/// 8-bit on this path); OPQ is rejected — outlier side-tables are not
-/// representable in the serving ABI. `cfg.block` must match the model's
-/// block size.
+/// 8-bit on this path); `cfg.opq` stores outlier weights in a
+/// bf16-precision side-table per matrix (sorted flat u32 indices + f32
+/// values), patched sparsely inside the fused serving kernels so the
+/// model stays 4-bit at rest. `cfg.block` must match the model's block
+/// size.
 pub fn quantize_for_serving(
     meta: &Meta,
     params: &ParamSet,
@@ -127,11 +135,6 @@ pub fn quantize_for_serving(
             m.block
         ));
     }
-    if cfg.opq.is_some() {
-        return Err(crate::err!(
-            "OPQ outliers are not representable in the q4 serving ABI"
-        ));
-    }
     let q = Quantizer::new(QuantConfig {
         double_quant: true,
         ..cfg.clone()
@@ -141,9 +144,12 @@ pub fn quantize_for_serving(
     let mut codes_t = Vec::new();
     let mut am_codes_t = Vec::new();
     let mut am_params_t = Vec::new();
+    let mut out_idx_t = Vec::new();
+    let mut out_val_t = Vec::new();
     let mut dense = Vec::new();
     let mut quant_bytes = 0usize;
     let mut orig_bytes = 0usize;
+    let mut outliers = 0usize;
     for (name, shape) in param_specs(m) {
         let (pshape, data) = params
             .get(&name)
@@ -165,6 +171,10 @@ pub fn quantize_for_serving(
                 m.block
             ));
         }
+        // OPQ runs inside the quantizer: outliers are extracted (and
+        // zeroed) before the block-max search, so the codes encode the
+        // outlier-free tensor and `qt.outliers` carries the side-table
+        // in ascending flat-index order.
         let qt = q.quantize(data);
         let dq = qt.dq.as_ref().expect("double_quant is on");
         let codes = pack::unpack_u4(&qt.codes, k * n);
@@ -186,12 +196,24 @@ pub fn quantize_for_serving(
                 }
             }
         }
+        // patch the dense oracle exactly as the fused kernels patch
+        // their side-table: bf16-rounded outlier values, verbatim
+        crate::quant::opq::restore_outliers(&mut w, &qt.outliers);
+        let mut oi = Vec::with_capacity(qt.outliers.len());
+        let mut ov = Vec::with_capacity(qt.outliers.len());
+        for o in &qt.outliers {
+            oi.push(o.index as u32);
+            ov.push(o.value.to_f32());
+        }
+        debug_assert!(oi.windows(2).all(|p| p[0] < p[1]), "side-table sorted");
+        outliers += qt.outliers.len();
         let mut chunk_flat = Vec::with_capacity(dq.chunk_params.len() * 2);
         for &(mn, scale) in &dq.chunk_params {
             chunk_flat.push(mn);
             chunk_flat.push(scale);
         }
-        quant_bytes += qt.codes.len() + dq.bytes();
+        quant_bytes +=
+            qt.codes.len() + dq.bytes() + crate::quant::opq::opq_bytes(qt.outliers.len());
         orig_bytes += 4 * k * n;
         codes_t.push(HostTensor::u8(codes, vec![k, n]));
         am_codes_t.push(HostTensor::u8(dq.codes.clone(), vec![k, nb]));
@@ -199,18 +221,24 @@ pub fn quantize_for_serving(
             chunk_flat,
             vec![dq.chunk_params.len(), 2],
         ));
+        let n_out = oi.len();
+        out_idx_t.push(HostTensor::u32(oi, vec![n_out]));
+        out_val_t.push(HostTensor::f32(ov, vec![n_out]));
         dense.push(HostTensor::f32(w, shape));
     }
     let mut prefix = f32s;
     prefix.extend(codes_t);
     prefix.extend(am_codes_t);
     prefix.extend(am_params_t);
+    prefix.extend(out_idx_t);
+    prefix.extend(out_val_t);
     prefix.push(HostTensor::f32(q.codebook.levels.to_vec(), vec![16]));
     Ok(QuantizedServingParams {
         prefix,
         dense,
         quant_bytes,
         orig_bytes,
+        outliers,
     })
 }
 

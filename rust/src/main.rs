@@ -225,14 +225,44 @@ fn serve(rest: Vec<String>) -> Result<()> {
         .opt("requests", Some("64"), "demo session count")
         .opt("tokens", Some("8"), "tokens streamed per session")
         .opt("replicas", Some("1"), "model replicas behind the router")
+        .flag(
+            "dequant",
+            "serve exactly-dequantized f32 weights through the dense graphs \
+             instead of the 4-bit-at-rest q4 serving path",
+        )
         .parse_from(rest);
     let rt = Arc::new(Runtime::new()?);
     let base = eval::ensure_trained(&rt)?;
     let cfg = quant_config(&p);
-    let qm = eval::quantize_params(&base, &cfg)?;
+    // Default: serve quantized-at-rest through the fused q4 graphs (with
+    // `--opq`, outlier weights ride in the bf16 side-table the kernels
+    // patch in). `--dequant` keeps the old dense-f32 demo path.
+    let engine_params = if p.has_flag("dequant") {
+        let qm = eval::quantize_params(&base, &cfg)?;
+        println!(
+            "serving dense dequantized weights ({}): MAE {:.4e} MSE {:.4e}",
+            cfg.label(),
+            qm.mae,
+            qm.mse
+        );
+        bof4::coordinator::EngineParams::Dense(qm.params.to_tensors())
+    } else {
+        let qsp = eval::quantize_for_serving(&rt.meta, &base, &cfg)?;
+        println!(
+            "serving q4 at rest ({}): {} -> {} bytes ({:.2}x), {} outliers \
+             ({} side-table bytes)",
+            cfg.label(),
+            qsp.orig_bytes,
+            qsp.quant_bytes,
+            qsp.orig_bytes as f64 / qsp.quant_bytes.max(1) as f64,
+            qsp.outliers,
+            bof4::quant::opq::opq_bytes(qsp.outliers)
+        );
+        bof4::coordinator::EngineParams::QuantizedQ4(qsp.prefix)
+    };
     let engine = bof4::coordinator::Engine::start(
         rt.clone(),
-        qm.params.to_tensors(),
+        engine_params,
         bof4::coordinator::EngineConfig {
             replicas: p.get_usize("replicas").unwrap_or(1),
             ..Default::default()

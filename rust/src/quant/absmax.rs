@@ -6,16 +6,40 @@ pub use crate::stats::blockmax::Norm;
 /// signed value of the absolutely-largest weight (eq. 4, BOF4-S).
 /// Ties in magnitude resolve to the lowest index (matches the python
 /// oracle's `argmax`).
+///
+/// A NaN anywhere in the block poisons the constant to NaN under *both*
+/// norms (the `f32::max` fold would silently drop it for `Absmax` while
+/// the comparison chain froze on the first element for `SignedAbsmax`,
+/// making the two norms disagree on the same poisoned block); the NaN
+/// then propagates through normalization instead of being half-ignored.
 #[inline]
 pub fn block_constant(block: &[f32], norm: Norm) -> f32 {
     debug_assert!(!block.is_empty());
     match norm {
-        Norm::Absmax => block.iter().fold(0.0f32, |a, &w| a.max(w.abs())),
+        Norm::Absmax => {
+            let mut best = 0.0f32;
+            for &w in block {
+                let a = w.abs();
+                if a.is_nan() {
+                    return f32::NAN;
+                }
+                if a > best {
+                    best = a;
+                }
+            }
+            best
+        }
         Norm::SignedAbsmax => {
             let mut best = block[0];
             let mut best_abs = best.abs();
+            if best_abs.is_nan() {
+                return f32::NAN;
+            }
             for &w in &block[1..] {
                 let a = w.abs();
+                if a.is_nan() {
+                    return f32::NAN;
+                }
                 if a > best_abs {
                     best = w;
                     best_abs = a;
@@ -60,6 +84,31 @@ mod tests {
         assert_eq!(block_constant(&[0.0, 0.0], Norm::Absmax), 0.0);
         assert_eq!(safe_constant(0.0), 1.0);
         assert_eq!(safe_constant(-2.5), -2.5);
+    }
+
+    /// A poisoned block must yield NaN under *both* norms, wherever the
+    /// NaN sits (the old fold dropped it for Absmax; the comparison
+    /// chain froze on element 0 for SignedAbsmax).
+    #[test]
+    fn nan_propagates_identically_for_both_norms() {
+        for pos in 0..3 {
+            let mut b = [1.0f32, -3.0, 2.0];
+            b[pos] = f32::NAN;
+            assert!(block_constant(&b, Norm::Absmax).is_nan(), "abs pos {pos}");
+            assert!(
+                block_constant(&b, Norm::SignedAbsmax).is_nan(),
+                "signed pos {pos}"
+            );
+        }
+        // infinities are ordinary magnitudes, not poison
+        assert_eq!(
+            block_constant(&[1.0, f32::INFINITY], Norm::Absmax),
+            f32::INFINITY
+        );
+        assert_eq!(
+            block_constant(&[1.0, f32::NEG_INFINITY], Norm::SignedAbsmax),
+            f32::NEG_INFINITY
+        );
     }
 
     #[test]

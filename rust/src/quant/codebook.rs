@@ -29,8 +29,15 @@ pub struct Codebook {
 
 impl Codebook {
     pub fn new(name: impl Into<String>, levels: [f32; LEVELS]) -> Self {
+        // total_cmp (not partial_cmp().unwrap()) so non-finite levels —
+        // e.g. an EM design fed NaN/inf training data — fail on the
+        // explicit asserts below instead of panicking inside the sort.
+        assert!(
+            levels.iter().all(|l| l.is_finite()),
+            "codebook levels must be finite, got {levels:?}"
+        );
         let mut sorted = levels;
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f32::total_cmp);
         assert_eq!(sorted, levels, "codebook levels must be sorted");
         let mut bounds = [f32::INFINITY; LEVELS];
         for i in 0..LEVELS - 1 {
@@ -386,7 +393,7 @@ mod tests {
                 .min_by(|a, b| {
                     let da = (a.1 - x).abs();
                     let db = (b.1 - x).abs();
-                    da.partial_cmp(&db).unwrap()
+                    da.total_cmp(&db)
                 })
                 .unwrap()
                 .0 as u8;
@@ -433,6 +440,17 @@ mod tests {
     fn rejects_unsorted() {
         let mut lv = NF4_LEVELS;
         lv.swap(3, 4);
+        Codebook::new("bad", lv);
+    }
+
+    /// Non-finite levels (an EM design fed poisoned training data) must
+    /// fail on the explicit finiteness assert, not a sort-comparator
+    /// unwrap.
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn rejects_non_finite() {
+        let mut lv = NF4_LEVELS;
+        lv[5] = f32::NAN;
         Codebook::new("bad", lv);
     }
 }

@@ -53,13 +53,24 @@ pub fn block_std(block: &[f32]) -> f64 {
 /// preserved outliers. `block` is the quantization block size I.
 pub fn extract_outliers(w: &mut [f32], block: usize, cfg: OpqConfig) -> Vec<Outlier> {
     let bm = BlockMax::new(block);
-    let threshold_sigma = bm.quantile(cfg.q);
+    let full_threshold_sigma = bm.quantile(cfg.q);
     let mut out = Vec::new();
     for (b, chunk) in w.chunks_mut(block).enumerate() {
-        // Padding tail (shorter than I) uses its own length for σ — the
-        // conservative choice; tails exist only for non-multiple tensors.
+        // The padding tail (shorter than I) computes σ from its own
+        // elements, so the absolute-block-max quantile must be taken at
+        // the tail's length too (F_M^{-1} for I = chunk.len()); chunks
+        // too short for a sample std (len < 2) carry no outlier signal
+        // and are skipped. Tails exist only for non-multiple tensors.
+        if chunk.len() < 2 {
+            continue;
+        }
+        let threshold_sigma = if chunk.len() == block {
+            full_threshold_sigma
+        } else {
+            BlockMax::new(chunk.len()).quantile(cfg.q)
+        };
         let sigma = block_std(chunk);
-        if sigma <= 0.0 {
+        if sigma <= 0.0 || !sigma.is_finite() {
             continue;
         }
         let thr = (sigma * threshold_sigma) as f32;
@@ -143,6 +154,59 @@ mod tests {
         let o_90 = extract_outliers(&mut w1, 64, OpqConfig { q: 0.90 });
         let o_99 = extract_outliers(&mut w2, 64, OpqConfig { q: 0.99 });
         assert!(o_90.len() >= o_99.len());
+    }
+
+    /// Regression: the padding tail must be thresholded with the
+    /// quantile of its *own* length, not the full block's. The planted
+    /// value sits between σ·F_M^{-1}(q) at I = 16 (the tail length) and
+    /// at I = 64 (the block size), so only the corrected code flags it.
+    #[test]
+    fn tail_block_uses_own_length_quantile() {
+        let mut tail = vec![0.0f32; 16];
+        tail[0] = 3.05;
+        for i in 1..16 {
+            tail[i] = if i % 2 == 0 { 0.6 } else { -0.6 };
+        }
+        let sigma = block_std(&tail);
+        let thr_tail = sigma * BlockMax::new(16).quantile(0.95);
+        let thr_full = sigma * BlockMax::new(64).quantile(0.95);
+        assert!(
+            thr_tail < 3.05 && 3.05 < thr_full,
+            "construction broken: want {thr_tail} < 3.05 < {thr_full}"
+        );
+        let mut w: Vec<f32> = gaussian(64, 9).iter().map(|x| x * 0.5).collect();
+        w.extend_from_slice(&tail);
+        let outliers = extract_outliers(&mut w, 64, OpqConfig::default());
+        assert!(
+            outliers.iter().any(|o| o.index == 64),
+            "tail outlier must be flagged under the tail-length quantile"
+        );
+        assert_eq!(w[64], 0.0);
+    }
+
+    /// A 1-element tail has no sample std: it must be skipped, not
+    /// flagged (and BlockMax::new(1) must never be constructed).
+    #[test]
+    fn one_element_tail_skipped() {
+        let mut w = vec![0.1f32; 65];
+        w[64] = 100.0;
+        let outliers = extract_outliers(&mut w, 64, OpqConfig::default());
+        assert!(outliers.iter().all(|o| o.index != 64));
+        assert_eq!(w[64], 100.0, "skipped tail must stay untouched");
+    }
+
+    /// Non-finite blocks (NaN/inf poison σ) are skipped without panicking.
+    #[test]
+    fn non_finite_blocks_skipped() {
+        let mut w = gaussian(128, 10);
+        w[3] = f32::NAN;
+        w[70] = f32::INFINITY;
+        let before = w.clone();
+        let outliers = extract_outliers(&mut w, 64, OpqConfig::default());
+        assert!(outliers.is_empty());
+        // nothing zeroed in the poisoned blocks
+        assert_eq!(w[1].to_bits(), before[1].to_bits());
+        assert!(w[3].is_nan());
     }
 
     #[test]

@@ -21,7 +21,10 @@
 //!   the full forward's exact loop order, so incremental logits are
 //!   bit-identical to full-context re-execution; the `_q4` variants keep
 //!   weights 4-bit with 8-bit double-quantized block constants,
-//!   dequantized inside the fused matmul;
+//!   dequantized inside the fused matmul, plus per-matrix OPQ outlier
+//!   side-tables (sorted flat u32 indices + bf16-rounded f32 values,
+//!   empty when OPQ is off) patched sparsely inside the fused kernels so
+//!   outlier weights serve at 16-bit precision;
 //! - `quantize_blocks_{abs,signed}`: the block-wise encoder kernels;
 //! - `train_step` / `lora_step`: full reverse-mode backprop through the
 //!   model plus the AdamW update (global-norm clipping, bias correction,
@@ -394,6 +397,34 @@ struct Cache {
     x_out: Vec<f32>,
     rmsf: Vec<f32>,
     xf: Vec<f32>,
+}
+
+/// Validate one OPQ outlier side-table against its matrix: equal
+/// `idx`/`val` lengths, strictly ascending indices, and every index
+/// within the matrix's `k * n` weights — so a malformed hand-built
+/// serving prefix fails with a runtime error at weight-view assembly
+/// instead of an out-of-bounds panic inside a pooled kernel.
+fn check_side_table(name: &str, out_idx: &[u32], out_val: &[f32], elems: usize) -> Result<()> {
+    if out_idx.len() != out_val.len() {
+        return Err(crate::err!(
+            "{name}: outlier_idx has {} entries but outlier_val has {}",
+            out_idx.len(),
+            out_val.len()
+        ));
+    }
+    if !out_idx.windows(2).all(|p| p[0] < p[1]) {
+        return Err(crate::err!(
+            "{name}: outlier_idx must be strictly ascending"
+        ));
+    }
+    if let Some(&last) = out_idx.last() {
+        if last as usize >= elems {
+            return Err(crate::err!(
+                "{name}: outlier index {last} out of range ({elems} weights)"
+            ));
+        }
+    }
+    Ok(())
 }
 
 /// Base-parameter slice indices in the canonical flat order.
@@ -986,31 +1017,37 @@ impl CpuBackend {
     // -----------------------------------------------------------------
 
     /// Assemble the 16 canonical dense parameter views from a q4 serving
-    /// argument prefix, materializing the matmul weights (prefill pays
-    /// this once per admitted batch; the decode step stays fused).
+    /// argument prefix, materializing the matmul weights with the OPQ
+    /// side-table patched over them (prefill pays this once per admitted
+    /// batch; the decode step stays fused).
     /// Returns (weight storage, index of the first tail argument).
     fn q4_dense_weights(&self, args: &[HostTensor]) -> Result<(Vec<Vec<f32>>, usize)> {
         let pspecs = param_specs(&self.m);
         let mm = matmul_param_names(&self.m);
         let (n_mm, n_f32) = (mm.len(), pspecs.len() - mm.len());
-        let levels = args[n_f32 + 3 * n_mm].as_f32()?;
+        let levels = args[n_f32 + 5 * n_mm].as_f32()?;
         let shapes: std::collections::HashMap<String, Vec<usize>> =
             pspecs.iter().cloned().collect();
         let mut deq = Vec::with_capacity(n_mm);
         for (i, name) in mm.iter().enumerate() {
             let shp = &shapes[name];
+            let out_idx = args[n_f32 + 3 * n_mm + i].as_u32()?;
+            let out_val = args[n_f32 + 4 * n_mm + i].as_f32()?;
+            check_side_table(name, out_idx, out_val, shp[0] * shp[1])?;
             deq.push(q4::dequant_q4_weight(
                 &self.pool,
                 args[n_f32 + i].as_u8()?,
                 args[n_f32 + n_mm + i].as_u8()?,
                 args[n_f32 + 2 * n_mm + i].as_f32()?,
                 levels,
+                out_idx,
+                out_val,
                 shp[0],
                 shp[1],
                 self.m.block,
             ));
         }
-        Ok((deq, n_f32 + 3 * n_mm + 1))
+        Ok((deq, n_f32 + 5 * n_mm + 1))
     }
 
     /// `lm_prefill` / `lm_prefill_q4`: full forward over a right-padded
@@ -1097,15 +1134,22 @@ impl CpuBackend {
         ))
     }
 
-    /// Weight views for the decode step (q4 + double-quantized constants).
+    /// Weight views for the decode step (q4 + double-quantized constants
+    /// + per-matrix OPQ outlier side-tables, empty when OPQ is off).
     fn model_w_q4<'a>(&self, args: &'a [HostTensor]) -> Result<(ModelW<'a>, usize)> {
         let pspecs = param_specs(&self.m);
-        let n_mm = matmul_param_names(&self.m).len();
+        let mm = matmul_param_names(&self.m);
+        let n_mm = mm.len();
         let n_f32 = pspecs.len() - n_mm;
         let nl = self.m.n_layers;
         let f = self.param_views(args, 0, n_f32)?;
-        let levels = args[n_f32 + 3 * n_mm].as_f32()?;
+        let levels = args[n_f32 + 5 * n_mm].as_f32()?;
         let block = self.m.block;
+        // The codes tensor's element count IS the matrix's k*n, so the
+        // side-table bound check needs no shape lookup; the validation
+        // itself is O(#outliers) per matrix — noise next to the step's
+        // matmuls, and it is what turns a malformed prefix into an error
+        // instead of an out-of-bounds panic inside a pooled kernel.
         fn matw<'a>(
             args: &'a [HostTensor],
             n_f32: usize,
@@ -1113,24 +1157,32 @@ impl CpuBackend {
             i: usize,
             levels: &'a [f32],
             block: usize,
+            name: &str,
         ) -> Result<MatW<'a>> {
+            let codes = args[n_f32 + i].as_u8()?;
+            let out_idx = args[n_f32 + 3 * n_mm + i].as_u32()?;
+            let out_val = args[n_f32 + 4 * n_mm + i].as_f32()?;
+            check_side_table(name, out_idx, out_val, codes.len())?;
             Ok(MatW::Q4 {
-                codes: args[n_f32 + i].as_u8()?,
+                codes,
                 am_codes: args[n_f32 + n_mm + i].as_u8()?,
                 am_params: args[n_f32 + 2 * n_mm + i].as_f32()?,
                 levels,
                 block,
+                out_idx,
+                out_val,
             })
         }
         let mut layers = Vec::with_capacity(nl);
         for l in 0..nl {
+            let w = |i: usize| matw(args, n_f32, n_mm, i, levels, block, &mm[i]);
             layers.push(LayerW {
                 g1: f[2 + 2 * l],
-                wqkv: matw(args, n_f32, n_mm, 4 * l, levels, block)?,
-                wo: matw(args, n_f32, n_mm, 4 * l + 1, levels, block)?,
+                wqkv: w(4 * l)?,
+                wo: w(4 * l + 1)?,
                 g2: f[3 + 2 * l],
-                win: matw(args, n_f32, n_mm, 4 * l + 2, levels, block)?,
-                wout: matw(args, n_f32, n_mm, 4 * l + 3, levels, block)?,
+                win: w(4 * l + 2)?,
+                wout: w(4 * l + 3)?,
             });
         }
         Ok((
@@ -1141,7 +1193,7 @@ impl CpuBackend {
                 lnf: f[2 + 2 * nl],
                 head: f[3 + 2 * nl],
             },
-            n_f32 + 3 * n_mm + 1,
+            n_f32 + 5 * n_mm + 1,
         ))
     }
 
@@ -1308,7 +1360,19 @@ impl CpuBackend {
         let nb = gm.args[2].shape[1];
         let block = ndim / nb;
 
-        let y = q4::q4_matmul(&self.pool, x, codes, absmax, levels, mdim, kdim, ndim, block);
+        let y = q4::q4_matmul(
+            &self.pool,
+            x,
+            codes,
+            absmax,
+            levels,
+            &[],
+            &[],
+            mdim,
+            kdim,
+            ndim,
+            block,
+        );
         Ok(vec![HostTensor::f32(y, vec![mdim, ndim])])
     }
 
@@ -1753,6 +1817,21 @@ mod tests {
         for c in 0..2 * nl {
             assert_eq!(st.cache(c), caches[c].as_f32().unwrap(), "cache {c}");
         }
+    }
+
+    /// Malformed OPQ side-tables must fail weight-view assembly with an
+    /// error, not an out-of-bounds panic inside a pooled kernel.
+    #[test]
+    fn side_table_validation_rejects_malformed() {
+        assert!(check_side_table("w", &[1, 2], &[1.0, 2.0], 10).is_ok());
+        assert!(check_side_table("w", &[], &[], 0).is_ok());
+        // idx/val length mismatch
+        assert!(check_side_table("w", &[1], &[], 10).is_err());
+        // unsorted / duplicate indices
+        assert!(check_side_table("w", &[2, 1], &[0.0, 0.0], 10).is_err());
+        assert!(check_side_table("w", &[3, 3], &[0.0, 0.0], 10).is_err());
+        // index out of range
+        assert!(check_side_table("w", &[10], &[0.0], 10).is_err());
     }
 
     #[test]

@@ -11,6 +11,14 @@
 //! reduction), so every `y` element keeps the serial kernel's exact
 //! `kk`-ascending accumulation order: results are bit-identical at
 //! every thread count and on every SIMD path.
+//!
+//! OPQ outliers ride in a per-matrix sorted flat-index side-table
+//! (`out_idx`/`out_val`): each `(kk, block)` step binary-searches its
+//! flat range and splits the element-wise axpy at outlier columns,
+//! substituting `xv * out_val` — exactly the dense path's contribution
+//! over a restore-patched weight, in the same accumulation slot — so
+//! the fused OPQ decode stays bit-identical to the patched dense
+//! oracle. An empty table short-circuits to the unpatched axpy.
 
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
@@ -20,7 +28,8 @@ use super::tiling;
 
 /// One matmul weight on the serving decode path: dense f32 rows, or 4-bit
 /// codes whose per-block constants are stored 8-bit (double-quantized)
-/// and dequantized inside the fused inner loop.
+/// and dequantized inside the fused inner loop, plus an optional OPQ
+/// outlier side-table patched in sparsely (empty when OPQ is off).
 pub enum MatW<'a> {
     Dense(&'a [f32]),
     Q4 {
@@ -32,6 +41,10 @@ pub enum MatW<'a> {
         am_params: &'a [f32],
         levels: &'a [f32],
         block: usize,
+        /// Sorted flat indices (`kk * n + j`) of OPQ-preserved weights.
+        out_idx: &'a [u32],
+        /// bf16-rounded outlier values, aligned with `out_idx`.
+        out_val: &'a [f32],
     },
 }
 
@@ -48,11 +61,105 @@ pub fn dq_constant(am_codes: &[u8], am_params: &[f32], idx: usize) -> f32 {
     )
 }
 
+/// Subrange `[lo, hi)` of a sorted flat-index side-table that falls in
+/// the flat range `[a, b)` — the per-row/per-block binary search the
+/// fused kernels use to locate outliers.
+#[inline]
+fn outlier_span(idx: &[u32], a: usize, b: usize) -> (usize, usize) {
+    let lo = idx.partition_point(|&i| (i as usize) < a);
+    let hi = lo + idx[lo..].partition_point(|&i| (i as usize) < b);
+    (lo, hi)
+}
+
+/// One `(kk, block)` axpy of the fused dequant-matmul with the sparse
+/// outlier patch: at outlier columns the contribution is `xv * out_val`
+/// (exactly what the dense path computes over the restore-patched
+/// weight) instead of `xv * (levels[c] * am)`. The block axpy is split
+/// at outlier columns — every lane op is element-wise, so splitting
+/// changes no per-element expression and the result stays bit-identical
+/// to the unsplit dense accumulation at every SIMD path.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn q4_axpy_dequant_patched(
+    path: simd::SimdPath,
+    yblk: &mut [f32],
+    xv: f32,
+    am: f32,
+    cblk: &[u8],
+    levels: &[f32],
+    base: usize,
+    out_idx: &[u32],
+    out_val: &[f32],
+) {
+    if out_idx.is_empty() {
+        simd::q4_axpy_dequant(path, yblk, xv, am, cblk, levels);
+        return;
+    }
+    let (lo, hi) = outlier_span(out_idx, base, base + cblk.len());
+    if lo == hi {
+        simd::q4_axpy_dequant(path, yblk, xv, am, cblk, levels);
+        return;
+    }
+    let mut j0 = 0usize;
+    for t in lo..hi {
+        let j = out_idx[t] as usize - base;
+        if j > j0 {
+            simd::q4_axpy_dequant(path, &mut yblk[j0..j], xv, am, &cblk[j0..j], levels);
+        }
+        yblk[j] += xv * out_val[t];
+        j0 = j + 1;
+    }
+    if j0 < yblk.len() {
+        simd::q4_axpy_dequant(path, &mut yblk[j0..], xv, am, &cblk[j0..], levels);
+    }
+}
+
+/// The scaled-form counterpart of [`q4_axpy_dequant_patched`] for the
+/// f32-constant batched kernel (`s = xv * am` hoisted by the caller; the
+/// outlier contribution is still `xv * out_val`).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn q4_axpy_scaled_patched(
+    path: simd::SimdPath,
+    yblk: &mut [f32],
+    xv: f32,
+    s: f32,
+    cblk: &[u8],
+    levels: &[f32],
+    base: usize,
+    out_idx: &[u32],
+    out_val: &[f32],
+) {
+    if out_idx.is_empty() {
+        simd::q4_axpy_scaled(path, yblk, s, cblk, levels);
+        return;
+    }
+    let (lo, hi) = outlier_span(out_idx, base, base + cblk.len());
+    if lo == hi {
+        simd::q4_axpy_scaled(path, yblk, s, cblk, levels);
+        return;
+    }
+    let mut j0 = 0usize;
+    for t in lo..hi {
+        let j = out_idx[t] as usize - base;
+        if j > j0 {
+            simd::q4_axpy_scaled(path, &mut yblk[j0..j], s, &cblk[j0..j], levels);
+        }
+        yblk[j] += xv * out_val[t];
+        j0 = j + 1;
+    }
+    if j0 < yblk.len() {
+        simd::q4_axpy_scaled(path, &mut yblk[j0..], s, &cblk[j0..], levels);
+    }
+}
+
 /// `y = x @ w` for a single activation row (`x [k]`). The dense arm
 /// reuses the tiled [`tiling::matmul`] so decode logits are bit-identical
 /// to the full forward; the q4 arm multiplies in the exact order
-/// `xv * (levels[c] * am)` so it is bit-identical to the dense path over
-/// pre-dequantized weights. Parallel over quantization-block columns.
+/// `xv * (levels[c] * am)` — with OPQ outliers patched sparsely as
+/// `xv * out_val` — so it is bit-identical to the dense path over
+/// pre-dequantized, outlier-restored weights. Parallel over
+/// quantization-block columns.
 pub fn row_matmul(pool: &ThreadPool, x: &[f32], w: &MatW<'_>, k: usize, n: usize) -> Vec<f32> {
     match w {
         MatW::Dense(w) => tiling::matmul(pool, x, w, 1, k, n),
@@ -62,9 +169,24 @@ pub fn row_matmul(pool: &ThreadPool, x: &[f32], w: &MatW<'_>, k: usize, n: usize
             am_params,
             levels,
             block,
+            out_idx,
+            out_val,
         } => {
             let path = pool.simd();
             let nb = n / block;
+            // per-row binary search into the sorted side-table, hoisted
+            // out of the column-block tasks: each (kk, block) step then
+            // searches only its row's (tiny) subrange
+            let row_spans: Vec<(u32, u32)> = if out_idx.is_empty() {
+                Vec::new()
+            } else {
+                (0..k)
+                    .map(|kk| {
+                        let (lo, hi) = outlier_span(out_idx, kk * n, (kk + 1) * n);
+                        (lo as u32, hi as u32)
+                    })
+                    .collect()
+            };
             let mut y = vec![0.0f32; n];
             let ys = SyncSlice::new(&mut y);
             pool.run(nb, |jb| {
@@ -75,8 +197,18 @@ pub fn row_matmul(pool: &ThreadPool, x: &[f32], w: &MatW<'_>, k: usize, n: usize
                         continue;
                     }
                     let am = dq_constant(am_codes, am_params, kk * nb + jb);
-                    let cblk = &codes[kk * n + jb * block..kk * n + (jb + 1) * block];
-                    simd::q4_axpy_dequant(path, yblk, xv, am, cblk, levels);
+                    let base = kk * n + jb * block;
+                    let cblk = &codes[base..base + block];
+                    let (ri, rv) = if row_spans.is_empty() {
+                        (&out_idx[..0], &out_val[..0])
+                    } else {
+                        let (lo, hi) = row_spans[kk];
+                        (
+                            &out_idx[lo as usize..hi as usize],
+                            &out_val[lo as usize..hi as usize],
+                        )
+                    };
+                    q4_axpy_dequant_patched(path, yblk, xv, am, cblk, levels, base, ri, rv);
                 }
             });
             y
@@ -86,13 +218,17 @@ pub fn row_matmul(pool: &ThreadPool, x: &[f32], w: &MatW<'_>, k: usize, n: usize
 
 /// Batched fused dequant-matmul `y = x @ dequant(codes, absmax)` with f32
 /// per-block constants (`x [t, k]`, `codes [k, n]`, `absmax [k, n/block]`)
-/// — the standalone `dequant_matmul` graph kernel, parallel over rows.
+/// and an optional OPQ side-table (`out_idx`/`out_val`, empty when OPQ is
+/// off) — the standalone `dequant_matmul` graph kernel, parallel over
+/// rows.
 pub fn q4_matmul(
     pool: &ThreadPool,
     x: &[f32],
     codes: &[u8],
     absmax: &[f32],
     levels: &[f32],
+    out_idx: &[u32],
+    out_val: &[f32],
     t: usize,
     k: usize,
     n: usize,
@@ -110,13 +246,21 @@ pub fn q4_matmul(
             if xv == 0.0 {
                 continue;
             }
+            // per-row binary search; blocks subdivide the row subrange
+            let (ri, rv) = if out_idx.is_empty() {
+                (&out_idx[..0], &out_val[..0])
+            } else {
+                let (lo, hi) = outlier_span(out_idx, kk * n, (kk + 1) * n);
+                (&out_idx[lo..hi], &out_val[lo..hi])
+            };
             let crow = &codes[kk * n..(kk + 1) * n];
             let arow = &absmax[kk * nb..(kk + 1) * nb];
             for (jb, &am) in arow.iter().enumerate() {
                 let s = xv * am;
+                let base = kk * n + jb * block;
                 let cblk = &crow[jb * block..(jb + 1) * block];
                 let yblk = &mut yr[jb * block..(jb + 1) * block];
-                simd::q4_axpy_scaled(path, yblk, s, cblk, levels);
+                q4_axpy_scaled_patched(path, yblk, xv, s, cblk, levels, base, ri, rv);
             }
         }
     });
@@ -124,14 +268,18 @@ pub fn q4_matmul(
 }
 
 /// Materialize a q4 weight back to f32 with the same expression the fused
-/// kernel uses (`levels[c] * am`), so prefill (dense forward over these)
-/// and decode (fused) stay bit-identical. Parallel over the `k` rows.
+/// kernel uses (`levels[c] * am`), patching the OPQ side-table over the
+/// result (the kernel-side [`crate::quant::opq::restore_outliers`]), so
+/// prefill (dense forward over these) and decode (fused) stay
+/// bit-identical. Parallel over the `k` rows.
 pub fn dequant_q4_weight(
     pool: &ThreadPool,
     codes: &[u8],
     am_codes: &[u8],
     am_params: &[f32],
     levels: &[f32],
+    out_idx: &[u32],
+    out_val: &[f32],
     k: usize,
     n: usize,
     block: usize,
@@ -148,6 +296,12 @@ pub fn dequant_q4_weight(
             let crow = &codes[kk * n + jb * block..kk * n + (jb + 1) * block];
             let wrow = &mut wr[jb * block..(jb + 1) * block];
             simd::q4_fill_dequant(path, wrow, am, crow, levels);
+        }
+        if !out_idx.is_empty() {
+            let (lo, hi) = outlier_span(out_idx, kk * n, (kk + 1) * n);
+            for t in lo..hi {
+                wr[out_idx[t] as usize - kk * n] = out_val[t];
+            }
         }
     });
     w
@@ -170,8 +324,8 @@ mod tests {
 
         let p1 = ThreadPool::with_threads(1);
         let p4 = ThreadPool::with_threads(4);
-        let y1 = q4_matmul(&p1, &x, &codes, &absmax, &levels, t, k, n, block);
-        let y4 = q4_matmul(&p4, &x, &codes, &absmax, &levels, t, k, n, block);
+        let y1 = q4_matmul(&p1, &x, &codes, &absmax, &levels, &[], &[], t, k, n, block);
+        let y4 = q4_matmul(&p4, &x, &codes, &absmax, &levels, &[], &[], t, k, n, block);
         assert_eq!(y1, y4);
         // parity vs dense matmul over explicitly dequantized weights
         let nb = n / block;
@@ -205,6 +359,8 @@ mod tests {
             am_params: &am_params,
             levels: &levels,
             block,
+            out_idx: &[],
+            out_val: &[],
         };
         let y1 = row_matmul(&ThreadPool::with_threads(1), &x, &w, k, n);
         let y4 = row_matmul(&ThreadPool::with_threads(4), &x, &w, k, n);
@@ -244,42 +400,42 @@ mod tests {
                     (0..nblocks).map(|i| 0.05 + (i % 7) as f32 * 0.03).collect();
                 let am_codes: Vec<u8> = (0..nblocks).map(|i| ((i * 11) % 250) as u8).collect();
                 let am_params = vec![0.02f32, 0.004]; // one DQ chunk
+                // outlier side-table: every 5th position, incl. block
+                // edges and lane remainders
+                let out_idx: Vec<u32> = (0..k * n).step_by(5).map(|i| i as u32).collect();
+                let out_val: Vec<f32> =
+                    out_idx.iter().map(|&i| 2.0 + (i % 9) as f32 * 0.25).collect();
                 let mw = MatW::Q4 {
                     codes: &codes,
                     am_codes: &am_codes,
                     am_params: &am_params,
                     levels: &levels,
                     block,
+                    out_idx: &out_idx,
+                    out_val: &out_val,
                 };
 
-                let want_batch =
-                    q4_matmul(&reference, &x, &codes, &absmax, &levels, t, k, n, block);
+                let want_batch = q4_matmul(
+                    &reference, &x, &codes, &absmax, &levels, &out_idx, &out_val, t, k, n,
+                    block,
+                );
                 let want_row = row_matmul(&reference, &x[..k], &mw, k, n);
                 let want_w = dequant_q4_weight(
-                    &reference,
-                    &codes,
-                    &am_codes,
-                    &am_params,
-                    &levels,
-                    k,
-                    n,
-                    block,
+                    &reference, &codes, &am_codes, &am_params, &levels, &out_idx, &out_val,
+                    k, n, block,
                 );
                 for pool in &pools {
                     let tag = format!("k={k} n={n} block={block} {pool:?}");
-                    let got = q4_matmul(pool, &x, &codes, &absmax, &levels, t, k, n, block);
+                    let got = q4_matmul(
+                        pool, &x, &codes, &absmax, &levels, &out_idx, &out_val, t, k, n,
+                        block,
+                    );
                     assert_eq!(got, want_batch, "q4_matmul {tag}");
                     let got = row_matmul(pool, &x[..k], &mw, k, n);
                     assert_eq!(got, want_row, "row_matmul {tag}");
                     let got = dequant_q4_weight(
-                        pool,
-                        &codes,
-                        &am_codes,
-                        &am_params,
-                        &levels,
-                        k,
-                        n,
-                        block,
+                        pool, &codes, &am_codes, &am_params, &levels, &out_idx, &out_val,
+                        k, n, block,
                     );
                     assert_eq!(got, want_w, "dequant_q4_weight {tag}");
                 }
@@ -301,6 +457,8 @@ mod tests {
             &am_codes,
             &am_params,
             &levels,
+            &[],
+            &[],
             k,
             n,
             block,
@@ -311,6 +469,8 @@ mod tests {
             &am_codes,
             &am_params,
             &levels,
+            &[],
+            &[],
             k,
             n,
             block,
@@ -318,4 +478,55 @@ mod tests {
         assert_eq!(w1, w4);
         assert_eq!(w1.len(), k * n);
     }
+
+    /// The OPQ contract: the fused row kernel over a q4 weight with an
+    /// outlier side-table must be bit-identical to the tiled dense
+    /// matmul over the materialized, outlier-patched weight — at every
+    /// SIMD path and thread count (this is what makes OPQ decode match
+    /// the dense prefill oracle exactly).
+    #[test]
+    fn outlier_patched_row_matmul_bitwise_matches_patched_dense() {
+        let (k, n, block) = (16usize, 24usize, 8usize);
+        let mut rng = Pcg64::seed_from_u64(77);
+        let mut x = vec![0.0f32; k];
+        rng.fill_gaussian_f32(&mut x, 1.0);
+        x[3] = 0.0; // exercise the shared zero-skip
+        let codes: Vec<u8> = (0..k * n).map(|i| ((i * 13 + 5) % 16) as u8).collect();
+        let nblocks = k * n / block;
+        let am_codes: Vec<u8> = (0..nblocks).map(|i| ((i * 7) % 250) as u8).collect();
+        let am_params = vec![-0.03f32, 0.002]; // signed constants occur too
+        let levels: Vec<f32> = (0..16).map(|i| (i as f32 - 7.5) / 7.5).collect();
+        // outliers at block edges, lane remainders, adjacent columns,
+        // and in the zero-activation row
+        let out_idx: Vec<u32> = vec![0, 7, 8, 9, 3 * n as u32, 3 * n as u32 + 1, (k * n - 1) as u32];
+        let out_val: Vec<f32> = out_idx.iter().map(|&i| 5.0 + i as f32 * 0.125).collect();
+        let mw = MatW::Q4 {
+            codes: &codes,
+            am_codes: &am_codes,
+            am_params: &am_params,
+            levels: &levels,
+            block,
+            out_idx: &out_idx,
+            out_val: &out_val,
+        };
+        let reference = ThreadPool::with_threads(1);
+        // materialized + patched weight: outliers land verbatim
+        let w = dequant_q4_weight(
+            &reference, &codes, &am_codes, &am_params, &levels, &out_idx, &out_val, k, n,
+            block,
+        );
+        for (t, &i) in out_idx.iter().enumerate() {
+            assert_eq!(w[i as usize], out_val[t], "patch at flat {i}");
+        }
+        use super::super::simd;
+        for path in simd::all_paths() {
+            for threads in [1usize, 4, 8] {
+                let pool = ThreadPool::with_config(threads, path);
+                let got = row_matmul(&pool, &x, &mw, k, n);
+                let want = tiling::matmul(&pool, &x, &w, 1, k, n);
+                assert_eq!(got, want, "threads={threads} path={path:?}");
+            }
+        }
+    }
+
 }

@@ -38,12 +38,29 @@ impl ArgMeta {
     pub fn is_cache(&self) -> bool {
         is_cache_name(&self.name)
     }
+
+    /// Whether this argument has a data-dependent length (the OPQ
+    /// outlier side-tables of the q4 serving graphs: one entry per
+    /// preserved outlier, zero when OPQ is off). ABI validation checks
+    /// dtype and rank for dynamic args but not the element count; the
+    /// declared shape is a `[0]` placeholder.
+    pub fn is_dynamic(&self) -> bool {
+        is_outlier_name(&self.name)
+    }
 }
 
 /// Cache-tensor naming convention of the KV serving graphs
 /// (`l{layer}.k_cache` / `l{layer}.v_cache`).
 pub fn is_cache_name(name: &str) -> bool {
     name.ends_with(".k_cache") || name.ends_with(".v_cache")
+}
+
+/// Outlier side-table naming convention of the q4 serving graphs
+/// (`{matrix}.outlier_idx` / `{matrix}.outlier_val`): per-matrix sorted
+/// flat u32 indices + bf16-rounded f32 values of the OPQ-preserved
+/// weights. These are the only variable-length tensors in the ABI.
+pub fn is_outlier_name(name: &str) -> bool {
+    name.ends_with(".outlier_idx") || name.ends_with(".outlier_val")
 }
 
 /// One lowered graph.
@@ -326,6 +343,11 @@ impl Meta {
         // Quantized-serving variants: matmul weights as 4-bit codes with
         // the per-block constants stored 8-bit (double-quantized) and
         // dequantized inside the fused matmul — the end-to-end DQ path.
+        // Each matrix additionally carries an OPQ outlier side-table
+        // (sorted flat u32 indices + bf16-rounded f32 values, patched
+        // inside the fused kernels); the two side-table args are
+        // dynamic-length ([`ArgMeta::is_dynamic`]) and empty when OPQ is
+        // off, so the ABI is uniform across OPQ on/off.
         let q4_serving_prefix = || -> Vec<ArgMeta> {
             let mut v = Vec::new();
             for (n, s) in &pspecs {
@@ -348,6 +370,12 @@ impl Meta {
                 let s = &pshapes[n];
                 let nchunks = (s[0] * s[1] / m.block).div_ceil(DQ_CHUNK);
                 v.push(arg(&format!("{n}.absmax_params"), vec![nchunks, 2], &f32s));
+            }
+            for n in &mm {
+                v.push(arg(&format!("{n}.outlier_idx"), vec![0], "uint32"));
+            }
+            for n in &mm {
+                v.push(arg(&format!("{n}.outlier_val"), vec![0], &f32s));
             }
             v.push(arg("levels", vec![16], &f32s));
             v
@@ -617,17 +645,33 @@ mod tests {
         assert_eq!(ds.args[20].name, "token");
         assert_eq!(ds.args[21].name, "pos");
         assert_eq!(ds.results[0], "logits");
-        // q4: 8 f32 + 8 codes + 8 absmax_codes + 8 absmax_params + levels
+        // q4: 8 f32 + 8 codes + 8 absmax_codes + 8 absmax_params +
+        // 8 outlier_idx + 8 outlier_val + levels
         let pq = meta.graph("lm_prefill_q4").unwrap();
-        assert_eq!(pq.args.len(), 8 + 3 * 8 + 1 + 2);
+        assert_eq!(pq.args.len(), 8 + 5 * 8 + 1 + 2);
         let amp = &pq.args[pq.arg_index("l0.wqkv.absmax_params").unwrap()];
         assert_eq!(amp.shape, vec![3, 2]); // 768 constants in 256-chunks
         let amc = &pq.args[pq.arg_index("l0.wqkv.absmax_codes").unwrap()];
         assert_eq!(amc.shape, vec![128, 6]);
         assert_eq!(amc.dtype, "uint8");
+        // OPQ side-table args: dynamic-length, u32 indices + f32 values
+        let oi = &pq.args[pq.arg_index("l0.wqkv.outlier_idx").unwrap()];
+        assert_eq!(oi.dtype, "uint32");
+        assert_eq!(oi.shape, vec![0]);
+        assert!(oi.is_dynamic() && !oi.is_cache());
+        let ov = &pq.args[pq.arg_index("l1.wout.outlier_val").unwrap()];
+        assert_eq!(ov.dtype, "float32");
+        assert!(ov.is_dynamic());
+        assert!(!amc.is_dynamic(), "fixed-shape args stay static");
         let dq = meta.graph("lm_decode_step_q4").unwrap();
-        assert_eq!(dq.args.len(), 8 + 3 * 8 + 1 + 4 + 2);
+        assert_eq!(dq.args.len(), 8 + 5 * 8 + 1 + 4 + 2);
         assert_eq!(dq.results.len(), 5);
+        // the outlier args ride along in the in-place (non-cache) ABI
+        let nc = dq.non_cache_args();
+        assert_eq!(nc.len(), dq.args.len() - 4);
+        assert!(nc.iter().any(|a| a.name == "l0.wqkv.outlier_idx"));
+        assert!(is_outlier_name("l1.win.outlier_val"));
+        assert!(!is_outlier_name("l1.win.absmax_codes"));
     }
 
     #[test]

@@ -245,7 +245,13 @@ impl Runtime {
             ));
         }
         for (i, (a, m)) in args.iter().zip(&expect).enumerate() {
-            if a.shape() != m.shape.as_slice() || a.dtype_str() != m.dtype {
+            let shape_ok = if m.is_dynamic() {
+                // outlier side-tables: any element count, same rank
+                a.shape().len() == m.shape.len()
+            } else {
+                a.shape() == m.shape.as_slice()
+            };
+            if !shape_ok || a.dtype_str() != m.dtype {
                 return Err(crate::err!(
                     "{graph} (in-place) arg {i} ({}): got {}{:?}, expected {}{:?}",
                     m.name,
@@ -299,7 +305,14 @@ impl Runtime {
             ));
         }
         for (i, (a, m)) in args.iter().zip(&gm.args).enumerate() {
-            if a.shape() != m.shape.as_slice() {
+            let shape_ok = if m.is_dynamic() {
+                // dynamic-length args (OPQ outlier side-tables): the
+                // element count is data-dependent; hold rank and dtype
+                a.shape().len() == m.shape.len()
+            } else {
+                a.shape() == m.shape.as_slice()
+            };
+            if !shape_ok {
                 return Err(crate::err!(
                     "{} arg {i} ({}): shape {:?} != expected {:?}",
                     gm.name,

@@ -174,74 +174,103 @@ fn double_quant_signed_constants() {
     assert!(b_dq < b_plain);
 }
 
-/// The serving-path quantization (4-bit codes + 8-bit DQ constants in the
-/// `*_q4` graph ABI) must produce ABI-exact tensors, and its dense oracle
-/// must equal the storage-layer `Quantizer` dequantization bit-for-bit —
-/// both compute `levels[c] * (min + code * scale)` in the same order.
-#[test]
-fn serving_quantization_matches_storage_dequant() {
-    let meta = Meta::builtin();
-    let mut rng = Pcg64::seed_from_u64(404);
+/// Canonical-model ParamSet with Gaussian weights; `spike_every` (when
+/// > 0) plants super-Gaussian outliers into the matmul weights so OPQ
+/// has something to preserve.
+fn serving_pset(meta: &Meta, seed: u64, spike_every: usize) -> ParamSet {
+    let mut rng = Pcg64::seed_from_u64(seed);
     let entries: Vec<(String, Vec<usize>, Vec<f32>)> = param_specs(&meta.model)
         .into_iter()
         .map(|(name, shape)| {
             let n: usize = shape.iter().product();
             let mut v = vec![0.0f32; n];
             rng.fill_gaussian_f32(&mut v, 0.05);
+            if spike_every > 0 && shape.len() == 2 && name.contains(".w") {
+                for i in (7..n).step_by(spike_every) {
+                    v[i] *= 25.0;
+                }
+            }
             (name, shape, v)
         })
         .collect();
-    let pset = ParamSet { entries };
-    let cfg = QuantConfig {
+    ParamSet { entries }
+}
+
+/// The serving-path quantization (4-bit codes + 8-bit DQ constants in the
+/// `*_q4` graph ABI) must produce ABI-exact tensors, and its dense oracle
+/// must equal the storage-layer `Quantizer` dequantization bit-for-bit —
+/// both compute `levels[c] * (min + code * scale)` in the same order,
+/// with OPQ outliers restored verbatim from the bf16 side-table.
+#[test]
+fn serving_quantization_matches_storage_dequant() {
+    let meta = Meta::builtin();
+    let base_cfg = QuantConfig {
         method: Method::Bof4 { mse: true },
         norm: Norm::SignedAbsmax,
         block: meta.model.block,
         opq: None,
         double_quant: true,
     };
-    let qsp = quantize_for_serving(&meta, &pset, &cfg).unwrap();
-
-    // prefix matches the q4 serving graph ABI exactly
-    for graph in ["lm_prefill_q4", "lm_decode_step_q4"] {
-        let gm = meta.graph(graph).unwrap();
-        assert!(qsp.prefix.len() < gm.args.len());
-        for (t, a) in qsp.prefix.iter().zip(&gm.args) {
-            assert_eq!(t.shape(), a.shape.as_slice(), "{graph} arg {}", a.name);
-            assert_eq!(t.dtype_str(), a.dtype, "{graph} arg {}", a.name);
-        }
-    }
-    assert_eq!(qsp.dense.len(), 16);
-    assert!(qsp.quant_bytes * 6 < qsp.orig_bytes, "~4.1 bits vs 32");
-
-    // dense oracle == storage-layer dequantization, bit-for-bit
-    let qz = Quantizer::new(cfg.clone());
-    for (idx, (name, shape, data)) in pset.entries.iter().enumerate() {
-        let is_mm = shape.len() == 2 && name.contains(".w");
-        let served = qsp.dense[idx].as_f32().unwrap();
-        if is_mm {
-            let want = qz.dequantize(&qz.quantize(data));
-            assert_eq!(served, &want[..], "{name} dense oracle diverged");
+    for (cfg, seed, spikes) in [
+        (base_cfg.clone(), 404u64, 0usize),
+        (
+            QuantConfig {
+                opq: Some(OpqConfig::default()),
+                ..base_cfg.clone()
+            },
+            405,
+            211,
+        ),
+    ] {
+        let pset = serving_pset(&meta, seed, spikes);
+        let qsp = quantize_for_serving(&meta, &pset, &cfg).unwrap();
+        if cfg.opq.is_some() {
+            assert!(qsp.outliers > 0, "spiked weights must yield outliers");
         } else {
-            assert_eq!(served, &data[..], "{name} must pass through");
+            assert_eq!(qsp.outliers, 0);
+        }
+
+        // prefix matches the q4 serving graph ABI exactly; the outlier
+        // side-tables are the only dynamic-length args
+        for graph in ["lm_prefill_q4", "lm_decode_step_q4"] {
+            let gm = meta.graph(graph).unwrap();
+            assert!(qsp.prefix.len() < gm.args.len());
+            for (t, a) in qsp.prefix.iter().zip(&gm.args) {
+                if a.is_dynamic() {
+                    assert_eq!(t.shape().len(), a.shape.len(), "{graph} arg {}", a.name);
+                } else {
+                    assert_eq!(t.shape(), a.shape.as_slice(), "{graph} arg {}", a.name);
+                }
+                assert_eq!(t.dtype_str(), a.dtype, "{graph} arg {}", a.name);
+            }
+        }
+        assert_eq!(qsp.dense.len(), 16);
+        assert!(qsp.quant_bytes * 6 < qsp.orig_bytes, "~4.1 bits vs 32");
+
+        // dense oracle == storage-layer dequantization, bit-for-bit
+        // (the storage path restores outliers through the same
+        // restore_outliers expression)
+        let qz = Quantizer::new(cfg.clone());
+        for (idx, (name, shape, data)) in pset.entries.iter().enumerate() {
+            let is_mm = shape.len() == 2 && name.contains(".w");
+            let served = qsp.dense[idx].as_f32().unwrap();
+            if is_mm {
+                let want = qz.dequantize(&qz.quantize(data));
+                assert_eq!(served, &want[..], "{name} dense oracle diverged");
+            } else {
+                assert_eq!(served, &data[..], "{name} must pass through");
+            }
         }
     }
 
-    // OPQ and block mismatches are rejected on the serving path
-    assert!(quantize_for_serving(
-        &meta,
-        &pset,
-        &QuantConfig {
-            opq: Some(OpqConfig::default()),
-            ..cfg.clone()
-        }
-    )
-    .is_err());
+    // block mismatches are still rejected on the serving path
+    let pset = serving_pset(&meta, 404, 0);
     assert!(quantize_for_serving(
         &meta,
         &pset,
         &QuantConfig {
             block: meta.model.block * 2,
-            ..cfg
+            ..base_cfg
         }
     )
     .is_err());
@@ -345,6 +374,67 @@ fn property_quantize_dequantize_error_bounded_all_methods() {
                     if (a - b).abs() > m * gap + 1e-5 {
                         return Prop::Fail(format!(
                             "i={i} w={a} w_hat={b} m={m} gap={gap}"
+                        ));
+                    }
+                }
+                Prop::Pass
+            });
+        }
+    }
+}
+
+/// Property (bugfix regression): the full quantize→dequantize roundtrip
+/// must not panic and must restore every recorded outlier exactly (to
+/// its bf16 rounding), for OPQ on/off × both norms, over
+/// non-multiple-of-block tensor lengths and inputs containing ±inf/NaN.
+/// NaN-poisoned blocks propagate NaN identically under both norms
+/// (absmax.rs fix) and are skipped by the outlier extractor (opq.rs
+/// fix) instead of crashing or mis-flagging.
+#[test]
+fn property_roundtrip_nonfinite_and_ragged_inputs() {
+    use bof4::tensor::Bf16;
+    let gen = GaussianVec {
+        max_len: 515, // odd cap: ragged tail blocks are commonly drawn
+        max_scale: 4.0,
+    };
+    for opq in [None, Some(OpqConfig::default())] {
+        for norm in [Norm::Absmax, Norm::SignedAbsmax] {
+            let qz = Quantizer::new(QuantConfig {
+                method: Method::Bof4 { mse: true },
+                norm,
+                block: 64,
+                opq,
+                double_quant: false,
+            });
+            let label = format!(
+                "roundtrip-nonfinite-opq{}-{norm:?}",
+                opq.is_some() as u8
+            );
+            forall(&label, 51, 40, &gen, |w0| {
+                let mut w = w0.clone();
+                for (i, v) in w.iter_mut().enumerate() {
+                    match i % 101 {
+                        17 => *v = f32::NAN,
+                        34 => *v = f32::INFINITY,
+                        51 => *v = f32::NEG_INFINITY,
+                        68 => *v *= 40.0, // a genuine finite outlier
+                        _ => {}
+                    }
+                }
+                let qt = qz.quantize(&w);
+                let w_hat = qz.dequantize(&qt);
+                if w_hat.len() != w.len() {
+                    return Prop::Fail(format!("len {} != {}", w_hat.len(), w.len()));
+                }
+                // exact outlier restoration: side-table values land
+                // verbatim (bf16-rounded), bitwise
+                for o in &qt.outliers {
+                    let i = o.index as usize;
+                    let want = Bf16::from_f32(w[i]).to_f32();
+                    if w_hat[i].to_bits() != want.to_bits() {
+                        return Prop::Fail(format!(
+                            "outlier {i}: {} vs bf16 {want}",
+                            w_hat[i]
                         ));
                     }
                 }

@@ -757,6 +757,100 @@ fn engine_streams_match_full_context_dense() {
     );
 }
 
+/// Canonical-model ParamSet from `init_params` with super-Gaussian
+/// spikes planted into the matmul weights, so OPQ extraction is
+/// guaranteed a non-empty side-table.
+fn spiked_pset(rt: &Runtime, seed: u32) -> ParamSet {
+    let params = init_params(rt, seed);
+    let gm = rt.meta.graph("lm_nll").unwrap().clone();
+    let mut pset = ParamSet::from_tensors(&gm, &params).unwrap();
+    for (name, shape, data) in pset.entries.iter_mut() {
+        if shape.len() == 2 && name.contains(".w") {
+            for i in (11..data.len()).step_by(397) {
+                data[i] *= 30.0;
+            }
+        }
+    }
+    pset
+}
+
+fn opq_serving(rt: &Runtime, seed: u32) -> (ParamSet, bof4::eval::QuantizedServingParams) {
+    let pset = spiked_pset(rt, seed);
+    let qsp = quantize_for_serving(
+        &rt.meta,
+        &pset,
+        &QuantConfig {
+            method: Method::Bof4 { mse: true },
+            norm: Norm::SignedAbsmax,
+            block: rt.meta.model.block,
+            opq: Some(bof4::quant::OpqConfig::default()),
+            double_quant: true,
+        },
+    )
+    .expect("quantize_for_serving with OPQ");
+    assert!(qsp.outliers > 0, "spiked weights must yield outliers");
+    (pset, qsp)
+}
+
+/// OPQ serving end-to-end: the q4 engine with outlier side-tables must
+/// stream bit-identical to the full-context oracle over the
+/// outlier-patched dense weights, for every prompt length 1..=seq_len.
+/// (The CI matrix re-runs this under BOF4_THREADS × BOF4_SIMD; the
+/// explicit config sweep lives in
+/// `q4_opq_serving_bit_identical_across_threads_and_simd`.)
+#[test]
+fn engine_streams_match_full_context_q4_opq_all_lens() {
+    let rt = Arc::new(runtime());
+    let (_pset, qsp) = opq_serving(&rt, 23);
+    let lens: Vec<usize> = (1..=rt.meta.model.seq_len).collect();
+    check_engine_equivalence(
+        &rt,
+        EngineParams::QuantizedQ4(qsp.prefix.clone()),
+        &qsp.dense,
+        &lens,
+        3,
+        700,
+    );
+}
+
+/// OPQ serving across the kernel-config matrix: engine streams and the
+/// in-place decode protocol must be bit-identical to the patched dense
+/// oracle (and to the clone-based cache path) at
+/// `threads ∈ {1, 8} × SIMD ∈ {scalar, best-detected}`.
+#[test]
+fn q4_opq_serving_bit_identical_across_threads_and_simd() {
+    let mut paths = vec![SimdPath::None];
+    if simd::detect_best() != SimdPath::None {
+        paths.push(simd::detect_best());
+    }
+    for path in paths {
+        for threads in [1usize, 8] {
+            let rt = Arc::new(runtime_with_config(threads, path));
+            let (_pset, qsp) = opq_serving(&rt, 24);
+            let tag = format!("{threads}t/{}", path.name());
+            // engine streams vs the patched dense oracle
+            check_engine_equivalence(
+                &rt,
+                EngineParams::QuantizedQ4(qsp.prefix.clone()),
+                &qsp.dense,
+                &[1, 33, 64],
+                3,
+                710,
+            );
+            // in-place resident caches vs the clone path
+            check_inplace_equivalence(
+                &rt,
+                &qsp.prefix,
+                "lm_prefill_q4",
+                "lm_decode_step_q4",
+                &[1, 7, 64],
+                720,
+            );
+            eprintln!("opq serving config {tag}: ok");
+        }
+    }
+}
+
 /// Quantized (q4 + 8-bit double-quantized constants) engine vs the same
 /// oracle over the exactly-dequantized weights — both norms.
 #[test]

@@ -10,6 +10,10 @@
 //! with and without an OPQ outlier side-table and assert the fused
 //! side-table lookup costs < 10%, then record everything (with
 //! `threads`, `simd` and `opq_*` fields) as JSON under `results/`.
+//! Two more legs pin the PR-6 serving contracts: cold-start wall time
+//! in-memory vs from the on-disk model artifact (streams bit-identical),
+//! and resident-byte accounting at 1 vs 2 replicas (shared parameter
+//! bytes identical, total strictly sub-linear).
 //!
 //! ```bash
 //! cargo bench --bench decode_throughput          # full run
@@ -107,6 +111,32 @@ fn main() {
             r.opq_overhead()
         );
     }
+    // the shared-weight contract: parameters are resident once no matter
+    // the replica count, so doubling replicas must grow total resident
+    // bytes strictly sub-linearly (decode_throughput already pinned
+    // shared_param_bytes equal across 1 and 2 replicas)
+    assert!(r.shared_param_bytes > 0, "no shared parameter bytes measured");
+    assert!(
+        r.total_resident_2 < 2 * r.total_resident_1,
+        "resident bytes scaled linearly with replicas: {} @1r vs {} @2r ({:.3}x)",
+        r.total_resident_1,
+        r.total_resident_2,
+        r.replica_growth()
+    );
+    println!(
+        "cold start: {:.3}s in-memory | {:.3}s from artifact ({} bytes on disk)",
+        r.cold_start.as_secs_f64(),
+        r.artifact_cold_start.as_secs_f64(),
+        r.artifact_bytes
+    );
+    println!(
+        "resident memory: {} param bytes shared, {} bytes/replica private | total {} B @1 replica, {} B @2 replicas ({:.3}x growth)",
+        r.shared_param_bytes,
+        r.per_replica_bytes,
+        r.total_resident_1,
+        r.total_resident_2,
+        r.replica_growth()
+    );
 
     let mut fields = vec![
         ("bench", Json::Str("decode_throughput".into())),
@@ -131,6 +161,24 @@ fn main() {
         ("speedup", Json::Num(r.speedup())),
         ("thread_speedup", Json::Num(r.thread_speedup())),
         ("simd_speedup", Json::Num(r.simd_speedup())),
+        ("cold_start_s", Json::Num(r.cold_start.as_secs_f64())),
+        (
+            "artifact_cold_start_s",
+            Json::Num(r.artifact_cold_start.as_secs_f64()),
+        ),
+        ("artifact_bytes", Json::Num(r.artifact_bytes as f64)),
+        ("replicas", Json::Num(r.replicas as f64)),
+        ("shared_param_bytes", Json::Num(r.shared_param_bytes as f64)),
+        ("per_replica_bytes", Json::Num(r.per_replica_bytes as f64)),
+        (
+            "total_resident_bytes_1_replica",
+            Json::Num(r.total_resident_1 as f64),
+        ),
+        (
+            "total_resident_bytes_2_replicas",
+            Json::Num(r.total_resident_2 as f64),
+        ),
+        ("replica_growth", Json::Num(r.replica_growth())),
     ];
     if let (Some(q4), Some(q4_opq)) = (r.engine_q4, r.engine_q4_opq) {
         fields.push(("engine_q4_s", Json::Num(q4.as_secs_f64())));

@@ -99,6 +99,30 @@ pub struct DecodeThroughput {
     pub threads: usize,
     /// Active SIMD path of the measured engine (`none|array|avx2`).
     pub simd: &'static str,
+    /// Wall time for `Engine::start` over the in-memory dense weights
+    /// (replica spawn + prefill-arg setup — the warm cold-start).
+    pub cold_start: Duration,
+    /// Wall time to reload the serialized artifact from disk and
+    /// `Engine::start` from it (the serve-from-artifact cold start).
+    pub artifact_cold_start: Duration,
+    /// On-disk size of the round-tripped artifact.
+    pub artifact_bytes: usize,
+    /// Replica count of the measured engine.
+    pub replicas: usize,
+    /// Parameter bytes resident once, shared by every replica of the
+    /// measured engine.
+    pub shared_param_bytes: usize,
+    /// Private resident bytes of one replica (KV-cache slab, token and
+    /// position placeholders).
+    pub per_replica_bytes: usize,
+    /// Total resident bytes of a 1-replica engine over the same
+    /// weights.
+    pub total_resident_1: usize,
+    /// Total resident bytes of a 2-replica engine over the same
+    /// weights. Sharing invariant: parameters are resident once, so
+    /// `total_resident_2 < 2 * total_resident_1` (strictly, because
+    /// only the per-replica KV slabs doubled).
+    pub total_resident_2: usize,
 }
 
 impl DecodeThroughput {
@@ -143,6 +167,14 @@ impl DecodeThroughput {
             _ => 1.0,
         }
     }
+
+    /// Resident-byte growth when doubling the replica count:
+    /// `total_resident_2 / total_resident_1`. Must stay strictly below
+    /// 2.0 — the shared weight set is counted once no matter how many
+    /// replicas hold views over it.
+    pub fn replica_growth(&self) -> f64 {
+        self.total_resident_2 as f64 / (self.total_resident_1 as f64).max(1.0)
+    }
 }
 
 /// Greedy-decode `n_tokens` over the same parameters four ways: (a) the
@@ -159,6 +191,15 @@ impl DecodeThroughput {
 /// fused side-table lookup ([`DecodeThroughput::opq_overhead`]). The
 /// dense streams must agree — the bench doubles as a determinism smoke
 /// test for both the thread and the SIMD contract.
+///
+/// Two further legs pin the PR-6 serving contracts: the engine's
+/// [`memory profile`](crate::coordinator::Engine::memory_profile) is
+/// compared between a 1- and a 2-replica engine (shared parameter bytes
+/// must be identical; total resident bytes must grow sub-linearly), and
+/// the dense weights are round-tripped through the on-disk artifact
+/// ([`crate::eval::save_artifact`] / [`crate::eval::load_artifact`])
+/// with the artifact-loaded engine required to serve the identical
+/// token stream. Cold-start wall times for both paths are reported.
 pub fn decode_throughput(
     rt: &std::sync::Arc<crate::runtime::Runtime>,
     params: Vec<crate::runtime::HostTensor>,
@@ -294,8 +335,12 @@ pub fn decode_throughput(
         }
     }
 
-    // (d) the session engine: prefill + incremental in-place decode
-    let engine = Engine::start(rt.clone(), params, EngineConfig::default())?;
+    // (d) the session engine: prefill + incremental in-place decode.
+    // `Engine::start` is timed separately as the warm (in-memory)
+    // cold-start baseline for the artifact leg below.
+    let t0 = Instant::now();
+    let engine = Engine::start(rt.clone(), params.clone(), EngineConfig::default())?;
+    let cold_start = t0.elapsed();
     let t0 = Instant::now();
     let toks = engine.generate(prompt, n_tokens)?;
     let engine_elapsed = t0.elapsed();
@@ -320,6 +365,71 @@ pub fn decode_throughput(
             ));
         }
     }
+
+    // shared-weight accounting: the parameter set is resident once no
+    // matter the replica count; only the private KV slabs scale. Profile
+    // the measured engine, then a 2-replica engine over the same
+    // (Arc-shared) weights, and pin the sub-linear growth here so every
+    // bench run re-checks the invariant.
+    let prof = engine.memory_profile();
+    let replicas = prof.replicas;
+    let shared_param_bytes = prof.shared_param_bytes;
+    let per_replica_bytes = prof.per_replica_bytes.first().copied().unwrap_or(0);
+    let total_resident_1 = prof.total_resident_bytes;
+    let engine2 = Engine::start(
+        rt.clone(),
+        params.clone(),
+        EngineConfig {
+            replicas: 2,
+            ..EngineConfig::default()
+        },
+    )?;
+    let prof2 = engine2.memory_profile();
+    if prof2.shared_param_bytes != shared_param_bytes {
+        return Err(crate::err!(
+            "shared parameter bytes changed with replica count: {} @1r vs {} @2r",
+            shared_param_bytes,
+            prof2.shared_param_bytes
+        ));
+    }
+    let total_resident_2 = prof2.total_resident_bytes;
+    drop(engine2);
+    if shared_param_bytes > 0 && total_resident_2 >= 2 * total_resident_1 {
+        return Err(crate::err!(
+            "resident bytes scaled linearly with replicas: {} @1r vs {} @2r \
+             (weights are not shared)",
+            total_resident_1,
+            total_resident_2
+        ));
+    }
+
+    // artifact round-trip: serialize the dense set, reload from disk,
+    // cold-start a fresh engine from the loaded artifact, and require
+    // the served stream to match the in-memory engine's bit-for-bit.
+    let art_path = std::env::temp_dir().join("bof4_bench_artifact.bof4");
+    let info = crate::eval::save_artifact(
+        &art_path,
+        &m,
+        &crate::coordinator::EngineParams::Dense(params),
+        &crate::eval::SaveOptions {
+            label: "bench round-trip".into(),
+            ..Default::default()
+        },
+    )?;
+    let artifact_bytes = info.file_bytes;
+    let t0 = Instant::now();
+    let (loaded, _) = crate::eval::load_artifact(&art_path, &m)?;
+    let engine_a = Engine::start(rt.clone(), loaded, EngineConfig::default())?;
+    let artifact_cold_start = t0.elapsed();
+    let toks_a = engine_a.generate(prompt, n_tokens)?;
+    drop(engine_a);
+    let _ = std::fs::remove_file(&art_path);
+    if toks_a != toks {
+        return Err(crate::err!(
+            "artifact-loaded engine stream diverged from the in-memory stream"
+        ));
+    }
+
     Ok(DecodeThroughput {
         tokens: n_tokens,
         full_recompute,
@@ -331,6 +441,14 @@ pub fn decode_throughput(
         opq_outliers,
         threads,
         simd,
+        cold_start,
+        artifact_cold_start,
+        artifact_bytes,
+        replicas,
+        shared_param_bytes,
+        per_replica_bytes,
+        total_resident_1,
+        total_resident_2,
     })
 }
 

@@ -3,12 +3,30 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
 use std::time::Duration;
 
 /// Max samples retained per latency/value series (see
 /// [`Metrics::observe_value`]).
 pub const SERIES_CAP: usize = 16_384;
+
+/// Lock a metrics mutex, recovering from poisoning (same policy as
+/// `kernels/pool.rs`): a replica worker that panicked mid-record leaves
+/// counters/series in a consistent-enough state — at worst one sample is
+/// lost — and metrics must never cascade that panic into every other
+/// replica's `record_*` call.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Nearest-rank percentile index over a sorted series of `len` samples:
+/// `round((len-1) * p)`, with `round` half-away-from-zero. Truncation
+/// (the old behavior) systematically underestimates upper percentiles on
+/// small counts — p99 of 50 samples truncated to index 48 instead of 49,
+/// and p50 of 2 samples read index 0 (the *minimum*).
+pub fn percentile_index(len: usize, p: f64) -> usize {
+    (((len - 1) as f64) * p).round() as usize
+}
 
 /// Process-local metrics registry.
 #[derive(Debug, Default)]
@@ -27,16 +45,14 @@ impl Metrics {
     }
 
     pub fn add(&self, name: &str, v: u64) {
-        let mut g = self.counters.lock().unwrap();
+        let mut g = lock_recover(&self.counters);
         g.entry(name.to_string())
             .or_insert_with(|| AtomicU64::new(0))
             .fetch_add(v, Ordering::Relaxed);
     }
 
     pub fn get(&self, name: &str) -> u64 {
-        self.counters
-            .lock()
-            .unwrap()
+        lock_recover(&self.counters)
             .get(name)
             .map(|c| c.load(Ordering::Relaxed))
             .unwrap_or(0)
@@ -52,7 +68,7 @@ impl Metrics {
     /// so per-token recording on a long-running engine cannot grow memory
     /// without bound (stats then describe a recent window).
     pub fn observe_value(&self, name: &str, v: f64) {
-        let mut g = self.latencies.lock().unwrap();
+        let mut g = lock_recover(&self.latencies);
         let series = g.entry(name.to_string()).or_default();
         if series.len() >= SERIES_CAP {
             series.drain(..SERIES_CAP / 2);
@@ -60,21 +76,34 @@ impl Metrics {
         series.push(v);
     }
 
-    /// (count, mean_ms, p50_ms, p95_ms, max_ms) for a latency series.
+    /// Order statistics for a latency series, computed over the *finite*
+    /// samples; non-finite ones (NaN/inf from e.g. a zero-duration timer
+    /// division upstream) are filtered out and counted in
+    /// [`LatencyStats::non_finite`] instead of panicking the sort.
+    /// Percentiles use nearest-rank indexing (see [`percentile_index`]).
+    /// Returns `None` when the series is absent, empty, or has no finite
+    /// samples at all.
     pub fn latency_stats(&self, name: &str) -> Option<LatencyStats> {
-        let g = self.latencies.lock().unwrap();
+        let g = lock_recover(&self.latencies);
         let xs = g.get(name)?;
         if xs.is_empty() {
             return None;
         }
-        let mut sorted = xs.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pct = |p: f64| sorted[((sorted.len() - 1) as f64 * p) as usize];
+        let mut sorted: Vec<f64> = xs.iter().copied().filter(|v| v.is_finite()).collect();
+        let non_finite = xs.len() - sorted.len();
+        drop(g);
+        if sorted.is_empty() {
+            return None;
+        }
+        sorted.sort_by(f64::total_cmp);
+        let pct = |p: f64| sorted[percentile_index(sorted.len(), p)];
         Some(LatencyStats {
             count: sorted.len(),
+            non_finite,
             mean_ms: sorted.iter().sum::<f64>() / sorted.len() as f64,
             p50_ms: pct(0.5),
             p95_ms: pct(0.95),
+            p99_ms: pct(0.99),
             max_ms: *sorted.last().unwrap(),
         })
     }
@@ -82,16 +111,19 @@ impl Metrics {
     /// Render all metrics for reports.
     pub fn summary(&self) -> String {
         let mut out = String::new();
-        for (k, v) in self.counters.lock().unwrap().iter() {
+        for (k, v) in lock_recover(&self.counters).iter() {
             out.push_str(&format!("{k}: {}\n", v.load(Ordering::Relaxed)));
         }
-        let names: Vec<String> = self.latencies.lock().unwrap().keys().cloned().collect();
+        let names: Vec<String> = lock_recover(&self.latencies).keys().cloned().collect();
         for k in names {
             if let Some(s) = self.latency_stats(&k) {
                 out.push_str(&format!(
-                    "{k}: n={} mean={:.2}ms p50={:.2}ms p95={:.2}ms max={:.2}ms\n",
-                    s.count, s.mean_ms, s.p50_ms, s.p95_ms, s.max_ms
+                    "{k}: n={} mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms max={:.2}ms\n",
+                    s.count, s.mean_ms, s.p50_ms, s.p95_ms, s.p99_ms, s.max_ms
                 ));
+                if s.non_finite > 0 {
+                    out.push_str(&format!("{k}: dropped {} non-finite samples\n", s.non_finite));
+                }
             }
         }
         out
@@ -100,10 +132,14 @@ impl Metrics {
 
 #[derive(Clone, Copy, Debug)]
 pub struct LatencyStats {
+    /// Finite samples the stats describe.
     pub count: usize,
+    /// Non-finite samples (NaN/inf) excluded from the stats.
+    pub non_finite: usize,
     pub mean_ms: f64,
     pub p50_ms: f64,
     pub p95_ms: f64,
+    pub p99_ms: f64,
     pub max_ms: f64,
 }
 
@@ -296,5 +332,85 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("jobs: 1"));
         assert!(s.contains("lat: n=1"));
+    }
+
+    /// Regression: a single NaN sample used to panic `latency_stats` via
+    /// `partial_cmp(..).unwrap()` inside the sort, taking the replica
+    /// worker down with it. Non-finite samples are now filtered out of
+    /// the order statistics and flagged in `non_finite`.
+    #[test]
+    fn nan_sample_does_not_panic_stats() {
+        let m = Metrics::new();
+        m.observe_value("op", 1.0);
+        m.observe_value("op", f64::NAN);
+        m.observe_value("op", 3.0);
+        m.observe_value("op", f64::INFINITY);
+        let s = m.latency_stats("op").unwrap();
+        assert_eq!(s.count, 2, "finite samples only");
+        assert_eq!(s.non_finite, 2);
+        assert_eq!(s.max_ms, 3.0);
+        assert!((s.mean_ms - 2.0).abs() < 1e-12);
+        assert!(m.summary().contains("dropped 2 non-finite samples"));
+        // an all-NaN series yields no stats instead of garbage
+        m.observe_value("bad", f64::NAN);
+        assert!(m.latency_stats("bad").is_none());
+    }
+
+    /// Regression: the percentile index used to truncate
+    /// (`((len-1) as f64 * p) as usize`), so p50 of 2 samples read the
+    /// *minimum* and p99 of 50 samples read index 48. Pin the
+    /// nearest-rank indices for the counts named in the issue.
+    #[test]
+    fn percentile_index_is_nearest_rank() {
+        // len = 1: everything is the single sample
+        assert_eq!(percentile_index(1, 0.5), 0);
+        assert_eq!(percentile_index(1, 0.99), 0);
+        // len = 2: p50 rounds up to the larger sample (truncation gave 0)
+        assert_eq!(percentile_index(2, 0.5), 1);
+        // len = 50
+        assert_eq!(percentile_index(50, 0.5), 25);
+        assert_eq!(percentile_index(50, 0.95), 47);
+        assert_eq!(percentile_index(50, 0.99), 49); // truncation gave 48
+        // len = 100
+        assert_eq!(percentile_index(100, 0.5), 50);
+        assert_eq!(percentile_index(100, 0.95), 94);
+        assert_eq!(percentile_index(100, 0.99), 98);
+
+        // end-to-end through latency_stats: two samples, p50 is the max
+        let m = Metrics::new();
+        m.observe_value("two", 1.0);
+        m.observe_value("two", 9.0);
+        let s = m.latency_stats("two").unwrap();
+        assert_eq!(s.p50_ms, 9.0);
+        assert_eq!(s.p99_ms, 9.0);
+    }
+
+    /// Regression: every lock site used `.lock().unwrap()`, so one
+    /// panicking engine thread poisoned the mutex and cascaded panics
+    /// into every other replica's `record_*`/`summary` call. Mirrors the
+    /// `kernels/pool.rs` poisoned-lock test: poison both mutexes by
+    /// panicking while holding them, then verify the registry still
+    /// works.
+    #[test]
+    fn poisoned_locks_recover() {
+        let m = std::sync::Arc::new(Metrics::new());
+        m.add("n", 1);
+        m.observe_value("lat", 5.0);
+        let mc = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _c = mc.counters.lock().unwrap();
+            let _l = mc.latencies.lock().unwrap();
+            panic!("poison the metrics locks");
+        })
+        .join();
+        assert!(m.counters.lock().is_err(), "counters mutex must be poisoned");
+        assert!(m.latencies.lock().is_err(), "latencies mutex must be poisoned");
+        // all paths still function on the poisoned mutexes
+        m.add("n", 2);
+        assert_eq!(m.get("n"), 3);
+        m.observe_value("lat", 7.0);
+        let s = m.latency_stats("lat").unwrap();
+        assert_eq!(s.count, 2);
+        assert!(m.summary().contains("n: 3"));
     }
 }

@@ -16,6 +16,6 @@ pub mod service;
 pub use metrics::{EngineMetrics, Metrics};
 pub use scheduler::{QuantJob, QuantScheduler};
 pub use service::{
-    greedy_argmax, BatchedLm, DecodeSession, Engine, EngineConfig, EngineParams,
-    InferenceResponse, ServiceConfig,
+    greedy_argmax, BatchedLm, DecodeSession, Engine, EngineConfig, EngineMemoryProfile,
+    EngineParams, InferenceResponse, ServiceConfig, SharedWeights,
 };

@@ -80,9 +80,11 @@ impl Default for ServiceConfig {
 /// Serving-engine configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct EngineConfig {
-    /// Number of model replicas. Each replica owns a full parameter copy,
-    /// a KV-cache slab of `batch` slots and a private admission queue;
-    /// sessions are routed round-robin.
+    /// Number of model replicas. Every replica reads the one shared
+    /// immutable weight set ([`SharedWeights`]) — adding replicas adds
+    /// only a private KV-cache slab of `batch` slots and an admission
+    /// queue per replica, not another parameter copy; sessions are
+    /// routed round-robin. See [`Engine::memory_profile`].
     pub replicas: usize,
     /// How long an **idle** replica waits for batch-mates before
     /// prefilling. Replicas with sessions mid-decode admit new sessions
@@ -130,6 +132,33 @@ impl From<Vec<HostTensor>> for EngineParams {
     fn from(v: Vec<HostTensor>) -> Self {
         EngineParams::Dense(v)
     }
+}
+
+/// The engine's one immutable weight set: the graph-argument prefix
+/// (dense params or the q4 prefix incl. OPQ side-tables), shared by
+/// every replica. `HostTensor` clones share their buffers, so each
+/// replica's persistent prefill/decode argument vectors are cheap handle
+/// views over this set — replica count scales scheduling, not parameter
+/// memory.
+pub type SharedWeights = Arc<Vec<HostTensor>>;
+
+/// Resident-memory accounting of a running engine, measured by
+/// deduplicating tensor buffers by identity
+/// ([`crate::runtime::host::unique_resident_bytes`]) so shared storage
+/// is counted exactly once.
+#[derive(Clone, Debug)]
+pub struct EngineMemoryProfile {
+    pub replicas: usize,
+    /// Bytes of the shared parameter set — counted once no matter how
+    /// many replicas hold views over it.
+    pub shared_param_bytes: usize,
+    /// Per-replica private bytes: KV-cache slabs (backend-resident or
+    /// in-args), token/position placeholders — storage not shared with
+    /// the weight set or any other replica.
+    pub per_replica_bytes: Vec<usize>,
+    /// Unique bytes across the weight set and every replica:
+    /// `shared_param_bytes + sum(per_replica_bytes)`.
+    pub total_resident_bytes: usize,
 }
 
 /// Greedy sampling helper: `(argmax index, max logit)`. Ties resolve to
@@ -197,6 +226,9 @@ pub struct Engine {
     pub metrics: Arc<EngineMetrics>,
     max_session_tokens: usize,
     seq_len: usize,
+    /// The shared immutable weight set every replica reads through.
+    weights: SharedWeights,
+    memory: EngineMemoryProfile,
 }
 
 impl Engine {
@@ -282,18 +314,27 @@ impl Engine {
         rt.prepare(decode_graph)?;
         let metrics = Arc::new(EngineMetrics::new());
         let n_replicas = cfg.replicas.max(1);
-        let mut replicas = Vec::with_capacity(n_replicas);
-        for r in 0..n_replicas {
-            let (tx, rx) = mpsc::channel::<SessionReq>();
-            let replica = Replica::new(
+        // One immutable weight set; every replica's persistent argument
+        // vectors are handle views over it (buffer-sharing clones).
+        let weights: SharedWeights = Arc::new(prefix);
+        // Build every replica first so resident memory can be profiled
+        // before the workers take ownership, then spawn.
+        let mut built = Vec::with_capacity(n_replicas);
+        for _ in 0..n_replicas {
+            built.push(Replica::new(
                 rt.clone(),
-                prefix.clone(),
+                weights.clone(),
                 mode,
                 prefill_graph,
                 decode_graph,
                 cfg.window,
                 metrics.clone(),
-            )?;
+            )?);
+        }
+        let memory = Self::profile_memory(&weights, &built);
+        let mut replicas = Vec::with_capacity(n_replicas);
+        for (r, replica) in built.into_iter().enumerate() {
+            let (tx, rx) = mpsc::channel::<SessionReq>();
             let worker = std::thread::Builder::new()
                 .name(format!("engine-replica-{r}"))
                 .spawn(move || replica.run(rx))?;
@@ -308,7 +349,39 @@ impl Engine {
             metrics,
             max_session_tokens: cfg.max_session_tokens,
             seq_len: rt.meta.model.seq_len,
+            weights,
+            memory,
         })
+    }
+
+    /// Account resident memory by buffer identity: the weight set is
+    /// counted once, then each replica contributes only storage not
+    /// already seen (its KV slabs and small arg placeholders).
+    fn profile_memory(weights: &SharedWeights, built: &[Replica]) -> EngineMemoryProfile {
+        let mut seen = std::collections::HashSet::new();
+        let shared_param_bytes =
+            crate::runtime::host::unique_resident_bytes(weights.iter(), &mut seen);
+        let per_replica_bytes: Vec<usize> =
+            built.iter().map(|r| r.private_bytes(&mut seen)).collect();
+        EngineMemoryProfile {
+            replicas: built.len(),
+            shared_param_bytes,
+            total_resident_bytes: shared_param_bytes + per_replica_bytes.iter().sum::<usize>(),
+            per_replica_bytes,
+        }
+    }
+
+    /// Resident-memory accounting captured at start-up (weights counted
+    /// once, per-replica private storage itemized).
+    pub fn memory_profile(&self) -> &EngineMemoryProfile {
+        &self.memory
+    }
+
+    /// The shared immutable weight set. While the engine runs, its
+    /// strong count is `replicas + 1` (each worker holds one handle) —
+    /// the sharing invariant the integration tests pin.
+    pub fn shared_weights(&self) -> &SharedWeights {
+        &self.weights
     }
 
     /// Open a streaming session with the default token budget
@@ -425,9 +498,17 @@ struct Slot {
     tx: mpsc::Sender<Result<InferenceResponse>>,
 }
 
-/// Worker-thread state of one model replica.
+/// Worker-thread state of one model replica. Holds a handle to the
+/// engine's [`SharedWeights`]; its persistent argument vectors are
+/// buffer-sharing views over that set, so the replica's only private
+/// storage is its KV-cache slabs and the small token/position
+/// placeholders.
 struct Replica {
     rt: Arc<Runtime>,
+    /// The engine-wide shared weight set (kept to hold the sharing
+    /// invariant `Arc::strong_count == replicas + 1` and for
+    /// accounting; the argument vectors below view its buffers).
+    weights: SharedWeights,
     mode: ServingMode,
     prefill_graph: &'static str,
     decode_graph: &'static str,
@@ -460,7 +541,7 @@ struct Replica {
 impl Replica {
     fn new(
         rt: Arc<Runtime>,
-        prefix: Vec<HostTensor>,
+        weights: SharedWeights,
         mode: ServingMode,
         prefill_graph: &'static str,
         decode_graph: &'static str,
@@ -469,7 +550,7 @@ impl Replica {
     ) -> Result<Replica> {
         let m = rt.meta.model.clone();
         let (b, s, d) = (m.batch, m.seq_len, m.d_model);
-        let n_prefix = prefix.len();
+        let n_prefix = weights.len();
         // Ok(None) means the backend has no in-place support (fall back
         // to the clone path); an Err is a real allocation failure and
         // must surface rather than silently degrade to the slow path.
@@ -478,7 +559,10 @@ impl Replica {
         } else {
             None
         };
-        let mut decode_args = prefix.clone();
+        // Handle views over the shared set — no parameter bytes are
+        // copied here; only the KV slabs / placeholders below are
+        // replica-private storage.
+        let mut decode_args: Vec<HostTensor> = weights.as_ref().clone();
         if mode == ServingMode::KvCached {
             if kv_state.is_none() {
                 for _ in 0..2 * m.n_layers {
@@ -488,13 +572,14 @@ impl Replica {
             decode_args.push(HostTensor::i32(vec![0; b], vec![b]));
             decode_args.push(HostTensor::i32(vec![-1; b], vec![b]));
         }
-        let mut prefill_args = prefix;
+        let mut prefill_args: Vec<HostTensor> = weights.as_ref().clone();
         prefill_args.push(HostTensor::i32(vec![TOK_SPACE as i32; b * s], vec![b, s]));
         if mode == ServingMode::KvCached {
             prefill_args.push(HostTensor::i32(vec![1; b], vec![b]));
         }
         Ok(Replica {
             rt,
+            weights,
             mode,
             prefill_graph,
             decode_graph,
@@ -511,6 +596,24 @@ impl Replica {
             d_model: d,
             vocab: m.vocab,
         })
+    }
+
+    /// Bytes of storage private to this replica: tensor buffers in its
+    /// argument vectors not already accounted in `seen` (the weight set
+    /// goes in first, so shared views contribute nothing) plus the
+    /// backend-resident KV state.
+    fn private_bytes(&self, seen: &mut std::collections::HashSet<usize>) -> usize {
+        debug_assert!(
+            self.weights
+                .iter()
+                .zip(&self.decode_args)
+                .all(|(w, a)| w.byte_len() == 0 || w.shares_buffer(a)),
+            "replica arg prefix must view the shared weight buffers"
+        );
+        crate::runtime::host::unique_resident_bytes(
+            self.decode_args.iter().chain(self.prefill_args.iter()),
+            seen,
+        ) + self.kv_state.as_ref().map_or(0, |st| st.resident_bytes())
     }
 
     fn run(mut self, rx: mpsc::Receiver<SessionReq>) {

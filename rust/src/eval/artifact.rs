@@ -1,0 +1,768 @@
+//! On-disk model artifacts: a versioned, length-prefixed binary format
+//! for serving parameter sets, so a quantized model is packed once by
+//! [`crate::eval::quantize_for_serving`] and loaded straight into the
+//! engine's shared weight set on every later start.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic      b"BOF4ARTF"                     8 bytes
+//! version    u32 = 1
+//! flags      u32 (bit 0: payload is RLE-compressed at rest)
+//! meta_len   u32, then `meta_len` bytes of JSON metadata
+//! payload_len u64 (uncompressed payload bytes)
+//! stored_len  u64 (bytes on disk, == payload_len when uncompressed)
+//! payload    `stored_len` bytes
+//! checksum   u64 FNV-1a over the stored payload
+//! ```
+//!
+//! The JSON block (via the hermetic [`crate::util::json`]) carries the
+//! artifact kind (`"dense"` or `"q4"`), the model configuration it was
+//! packed for (checked against the loading runtime's model), and
+//! size/outlier statistics. The payload is a flat sequence of tensor
+//! records:
+//!
+//! ```text
+//! dtype  u8 (0 = f32, 1 = i32, 2 = u8, 3 = u32)
+//! role   u8 (0 = raw bytes; 1 = 4-bit codes, stored nibble-packed via
+//!            `quant::pack` at ceil(n/2) bytes)
+//! rank   u8, then `rank` u64 dims
+//! len    u64 stored data bytes, then the data
+//! ```
+//!
+//! Loading is a single pass over one read of the file — header checks,
+//! checksum, then each record is decoded directly into the `HostTensor`
+//! the engine serves (f32 bit patterns round-trip exactly, NaN included).
+//! Every malformed input — truncation, flipped bytes, wrong version,
+//! wrong model — returns `Err`; the loader never panics on file content.
+//!
+//! The optional RLE variant (flag bit 0) is a PackBits-style byte codec:
+//! a control byte `c < 128` is followed by `c + 1` literal bytes, and
+//! `c >= 128` repeats the next byte `c - 125` times (runs of 3..=130).
+//! Zero-heavy payloads (fresh side-tables, sparse tensors) shrink
+//! substantially; incompressible payloads cost at most 1/129 overhead.
+
+use std::path::Path;
+
+use crate::coordinator::EngineParams;
+use crate::error::Result;
+use crate::eval::quantized::QuantizedServingParams;
+use crate::quant::pack;
+use crate::runtime::meta::{matmul_param_names, param_specs, ModelMeta};
+use crate::runtime::HostTensor;
+use crate::util::json::{obj, Json};
+
+pub const MAGIC: &[u8; 8] = b"BOF4ARTF";
+pub const VERSION: u32 = 1;
+const FLAG_RLE: u32 = 1;
+
+const DTYPE_F32: u8 = 0;
+const DTYPE_I32: u8 = 1;
+const DTYPE_U8: u8 = 2;
+const DTYPE_U32: u8 = 3;
+const ROLE_RAW: u8 = 0;
+const ROLE_PACKED_Q4: u8 = 1;
+
+/// What an artifact holds (mirrors [`EngineParams`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// The canonical dense f32 parameter tensors.
+    Dense,
+    /// The q4 serving prefix: non-matmul f32 params, 4-bit codes
+    /// (nibble-packed at rest), 8-bit DQ constants, chunk params, OPQ
+    /// outlier side-tables, codebook levels.
+    QuantizedQ4,
+}
+
+impl ArtifactKind {
+    fn tag(self) -> &'static str {
+        match self {
+            ArtifactKind::Dense => "dense",
+            ArtifactKind::QuantizedQ4 => "q4",
+        }
+    }
+
+    fn from_tag(s: &str) -> Result<ArtifactKind> {
+        match s {
+            "dense" => Ok(ArtifactKind::Dense),
+            "q4" => Ok(ArtifactKind::QuantizedQ4),
+            other => Err(crate::err!("unknown artifact kind '{other}'")),
+        }
+    }
+}
+
+/// Metadata of a saved/loaded artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub kind: ArtifactKind,
+    /// Free-form provenance (e.g. the quantizer configuration).
+    pub label: String,
+    pub n_tensors: usize,
+    /// OPQ outlier count across matmul tensors (0 for dense artifacts).
+    pub outliers: usize,
+    /// Storage bytes of the quantized representation (0 for dense).
+    pub quant_bytes: usize,
+    /// f32 bytes of the quantized tensors (0 for dense).
+    pub orig_bytes: usize,
+    /// Whether the payload is RLE-compressed at rest.
+    pub compressed: bool,
+    /// Total artifact size on disk.
+    pub file_bytes: usize,
+}
+
+/// Options for [`save_artifact`].
+#[derive(Clone, Debug, Default)]
+pub struct SaveOptions {
+    pub label: String,
+    /// RLE-compress the payload at rest.
+    pub compress: bool,
+    pub outliers: usize,
+    pub quant_bytes: usize,
+    pub orig_bytes: usize,
+}
+
+impl QuantizedServingParams {
+    /// Pack this serving set into an on-disk artifact; reload with
+    /// [`load_artifact`] for a bit-identical [`EngineParams::QuantizedQ4`].
+    pub fn save_artifact(
+        &self,
+        path: &Path,
+        model: &ModelMeta,
+        label: &str,
+        compress: bool,
+    ) -> Result<ArtifactInfo> {
+        save_artifact(
+            path,
+            model,
+            &EngineParams::QuantizedQ4(self.prefix.clone()),
+            &SaveOptions {
+                label: label.to_string(),
+                compress,
+                outliers: self.outliers,
+                quant_bytes: self.quant_bytes,
+                orig_bytes: self.orig_bytes,
+            },
+        )
+    }
+}
+
+/// Expected tensor-section layout of a q4 prefix for `model`:
+/// `(n_dense, n_mm)` — the prefix is `n_dense + 5 * n_mm + 1` tensors.
+fn q4_layout(model: &ModelMeta) -> (usize, usize) {
+    let n_mm = matmul_param_names(model).len();
+    (param_specs(model).len() - n_mm, n_mm)
+}
+
+/// Serialize a parameter set to `path`. For q4 prefixes the 4-bit code
+/// tensors are nibble-packed at rest (half the bytes); everything else
+/// is stored as raw little-endian.
+pub fn save_artifact(
+    path: &Path,
+    model: &ModelMeta,
+    params: &EngineParams,
+    opts: &SaveOptions,
+) -> Result<ArtifactInfo> {
+    let (kind, tensors) = match params {
+        EngineParams::Dense(t) => (ArtifactKind::Dense, t),
+        EngineParams::QuantizedQ4(t) => (ArtifactKind::QuantizedQ4, t),
+    };
+    // Validate the tensor count against the model so a malformed set
+    // fails at save time, not at load/serve time.
+    let expected = match kind {
+        ArtifactKind::Dense => param_specs(model).len(),
+        ArtifactKind::QuantizedQ4 => {
+            let (nd, nm) = q4_layout(model);
+            nd + 5 * nm + 1
+        }
+    };
+    if tensors.len() != expected {
+        return Err(crate::err!(
+            "{} artifact wants {expected} tensors, got {}",
+            kind.tag(),
+            tensors.len()
+        ));
+    }
+    // Which tensor indices hold 4-bit codes (packable)?
+    let packed_range = match kind {
+        ArtifactKind::Dense => 0..0,
+        ArtifactKind::QuantizedQ4 => {
+            let (nd, nm) = q4_layout(model);
+            nd..nd + nm
+        }
+    };
+
+    let mut payload = Vec::new();
+    for (i, t) in tensors.iter().enumerate() {
+        let role = if packed_range.contains(&i) {
+            ROLE_PACKED_Q4
+        } else {
+            ROLE_RAW
+        };
+        write_tensor(&mut payload, t, role)?;
+    }
+    let payload_len = payload.len() as u64;
+    let (stored, flags) = if opts.compress {
+        (rle_encode(&payload), FLAG_RLE)
+    } else {
+        (payload, 0)
+    };
+
+    let meta = obj(vec![
+        ("kind", Json::Str(kind.tag().to_string())),
+        ("label", Json::Str(opts.label.clone())),
+        ("model", model_json(model)),
+        ("n_tensors", Json::Num(tensors.len() as f64)),
+        ("outliers", Json::Num(opts.outliers as f64)),
+        ("quant_bytes", Json::Num(opts.quant_bytes as f64)),
+        ("orig_bytes", Json::Num(opts.orig_bytes as f64)),
+    ]);
+    let meta_bytes = meta.to_string().into_bytes();
+
+    let mut out = Vec::with_capacity(stored.len() + meta_bytes.len() + 64);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&flags.to_le_bytes());
+    out.extend_from_slice(&(meta_bytes.len() as u32).to_le_bytes());
+    out.extend_from_slice(&meta_bytes);
+    out.extend_from_slice(&payload_len.to_le_bytes());
+    out.extend_from_slice(&(stored.len() as u64).to_le_bytes());
+    out.extend_from_slice(&stored);
+    out.extend_from_slice(&fnv1a64(&stored).to_le_bytes());
+    let file_bytes = out.len();
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| crate::err!("create {}: {e}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, &out).map_err(|e| crate::err!("write {}: {e}", path.display()))?;
+    Ok(ArtifactInfo {
+        kind,
+        label: opts.label.clone(),
+        n_tensors: tensors.len(),
+        outliers: opts.outliers,
+        quant_bytes: opts.quant_bytes,
+        orig_bytes: opts.orig_bytes,
+        compressed: opts.compress,
+        file_bytes,
+    })
+}
+
+/// Load an artifact saved by [`save_artifact`], validating magic,
+/// version, checksum, model compatibility and per-tensor layout. The
+/// returned [`EngineParams`] feeds [`crate::coordinator::Engine::start`]
+/// directly; every failure mode is an `Err`, never a panic.
+pub fn load_artifact(path: &Path, model: &ModelMeta) -> Result<(EngineParams, ArtifactInfo)> {
+    let bytes =
+        std::fs::read(path).map_err(|e| crate::err!("read {}: {e}", path.display()))?;
+    let file_bytes = bytes.len();
+    let mut cur = Cursor::new(&bytes);
+    if cur.take(8)? != MAGIC {
+        return Err(crate::err!("{}: not a BOF4 artifact (bad magic)", path.display()));
+    }
+    let version = cur.u32()?;
+    if version != VERSION {
+        return Err(crate::err!(
+            "{}: artifact version {version}, this build reads {VERSION}",
+            path.display()
+        ));
+    }
+    let flags = cur.u32()?;
+    if flags & !FLAG_RLE != 0 {
+        return Err(crate::err!("{}: unknown flags {flags:#x}", path.display()));
+    }
+    let compressed = flags & FLAG_RLE != 0;
+    let meta_len = cur.u32()? as usize;
+    let meta_raw = cur.take(meta_len)?;
+    let meta_str = std::str::from_utf8(meta_raw)
+        .map_err(|_| crate::err!("artifact metadata is not UTF-8"))?;
+    let meta =
+        Json::parse(meta_str).map_err(|e| crate::err!("artifact metadata: {e}"))?;
+    let kind = ArtifactKind::from_tag(
+        meta.get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| crate::err!("artifact metadata missing 'kind'"))?,
+    )?;
+    check_model(&meta, model)?;
+    let n_tensors = meta
+        .get("n_tensors")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| crate::err!("artifact metadata missing 'n_tensors'"))?;
+
+    let payload_len = cur.u64()? as usize;
+    let stored_len = cur.u64()? as usize;
+    let stored = cur.take(stored_len)?;
+    let checksum = cur.u64()?;
+    if fnv1a64(stored) != checksum {
+        return Err(crate::err!(
+            "{}: checksum mismatch — artifact is corrupted",
+            path.display()
+        ));
+    }
+    let payload_owned;
+    let payload: &[u8] = if compressed {
+        payload_owned = rle_decode(stored, payload_len)?;
+        &payload_owned
+    } else {
+        if stored.len() != payload_len {
+            return Err(crate::err!(
+                "uncompressed payload is {} bytes, header says {payload_len}",
+                stored.len()
+            ));
+        }
+        stored
+    };
+
+    let expected = match kind {
+        ArtifactKind::Dense => param_specs(model).len(),
+        ArtifactKind::QuantizedQ4 => {
+            let (nd, nm) = q4_layout(model);
+            nd + 5 * nm + 1
+        }
+    };
+    if n_tensors != expected {
+        return Err(crate::err!(
+            "{} artifact holds {n_tensors} tensors, this model wants {expected}",
+            kind.tag()
+        ));
+    }
+    let mut pcur = Cursor::new(payload);
+    let mut tensors = Vec::with_capacity(n_tensors);
+    for i in 0..n_tensors {
+        tensors.push(
+            read_tensor(&mut pcur).map_err(|e| crate::err!("tensor {i}: {e}"))?,
+        );
+    }
+    if pcur.remaining() != 0 {
+        return Err(crate::err!(
+            "{} trailing payload bytes after the last tensor",
+            pcur.remaining()
+        ));
+    }
+    validate_layout(kind, model, &tensors)?;
+
+    let info = ArtifactInfo {
+        kind,
+        label: meta
+            .get("label")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string(),
+        n_tensors,
+        outliers: meta.get("outliers").and_then(Json::as_usize).unwrap_or(0),
+        quant_bytes: meta.get("quant_bytes").and_then(Json::as_usize).unwrap_or(0),
+        orig_bytes: meta.get("orig_bytes").and_then(Json::as_usize).unwrap_or(0),
+        compressed,
+        file_bytes,
+    };
+    let params = match kind {
+        ArtifactKind::Dense => EngineParams::Dense(tensors),
+        ArtifactKind::QuantizedQ4 => EngineParams::QuantizedQ4(tensors),
+    };
+    Ok((params, info))
+}
+
+fn model_json(m: &ModelMeta) -> Json {
+    obj(vec![
+        ("vocab", Json::Num(m.vocab as f64)),
+        ("d_model", Json::Num(m.d_model as f64)),
+        ("n_layers", Json::Num(m.n_layers as f64)),
+        ("n_heads", Json::Num(m.n_heads as f64)),
+        ("d_ff", Json::Num(m.d_ff as f64)),
+        ("seq_len", Json::Num(m.seq_len as f64)),
+        ("batch", Json::Num(m.batch as f64)),
+        ("block", Json::Num(m.block as f64)),
+    ])
+}
+
+fn check_model(meta: &Json, model: &ModelMeta) -> Result<()> {
+    let want = [
+        ("vocab", model.vocab),
+        ("d_model", model.d_model),
+        ("n_layers", model.n_layers),
+        ("n_heads", model.n_heads),
+        ("d_ff", model.d_ff),
+        ("seq_len", model.seq_len),
+        ("batch", model.batch),
+        ("block", model.block),
+    ];
+    for (key, v) in want {
+        let got = meta
+            .path(&format!("model.{key}"))
+            .and_then(Json::as_usize)
+            .ok_or_else(|| crate::err!("artifact metadata missing model.{key}"))?;
+        if got != v {
+            return Err(crate::err!(
+                "artifact was packed for {key}={got}, this runtime has {key}={v}"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Cheap structural checks on a decoded tensor set: section dtypes, code
+/// shapes, side-table pairing. (Value-level integrity is the checksum's
+/// job; exact dequantization errors surface in `dense_from_q4_prefix`.)
+fn validate_layout(kind: ArtifactKind, model: &ModelMeta, tensors: &[HostTensor]) -> Result<()> {
+    match kind {
+        ArtifactKind::Dense => {
+            for ((name, shape), t) in param_specs(model).iter().zip(tensors) {
+                if t.dtype_str() != "float32" || t.shape() != shape.as_slice() {
+                    return Err(crate::err!(
+                        "dense tensor '{name}': got {}{:?}, expected float32 {shape:?}",
+                        t.dtype_str(),
+                        t.shape()
+                    ));
+                }
+            }
+        }
+        ArtifactKind::QuantizedQ4 => {
+            let (nd, nm) = q4_layout(model);
+            for mi in 0..nm {
+                let codes = &tensors[nd + mi];
+                let am_codes = &tensors[nd + nm + mi];
+                if codes.dtype_str() != "uint8" || am_codes.dtype_str() != "uint8" {
+                    return Err(crate::err!("q4 code tensors {mi} are not uint8"));
+                }
+                let oi = &tensors[nd + 3 * nm + mi];
+                let ov = &tensors[nd + 4 * nm + mi];
+                if oi.dtype_str() != "uint32" || ov.dtype_str() != "float32" {
+                    return Err(crate::err!("outlier side-table {mi} has wrong dtypes"));
+                }
+                if oi.shape() != ov.shape() {
+                    return Err(crate::err!(
+                        "outlier side-table {mi}: {:?} indices vs {:?} values",
+                        oi.shape(),
+                        ov.shape()
+                    ));
+                }
+            }
+            let levels = &tensors[nd + 5 * nm];
+            if levels.dtype_str() != "float32" || levels.shape() != [16] {
+                return Err(crate::err!("codebook tensor must be float32 [16]"));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn write_tensor(out: &mut Vec<u8>, t: &HostTensor, role: u8) -> Result<()> {
+    let dtype = match t.dtype_str() {
+        "float32" => DTYPE_F32,
+        "int32" => DTYPE_I32,
+        "uint8" => DTYPE_U8,
+        "uint32" => DTYPE_U32,
+        other => return Err(crate::err!("unsupported artifact dtype {other}")),
+    };
+    out.push(dtype);
+    out.push(role);
+    let shape = t.shape();
+    out.push(shape.len() as u8);
+    for &d in shape {
+        out.extend_from_slice(&(d as u64).to_le_bytes());
+    }
+    let data: Vec<u8> = match (t, role) {
+        (HostTensor::U8(d, _), ROLE_PACKED_Q4) => {
+            if let Some(&bad) = d.iter().find(|&&c| c >= 16) {
+                return Err(crate::err!(
+                    "packed-q4 tensor has code {bad} >= 16 — not 4-bit data"
+                ));
+            }
+            pack::pack_u4(d.as_slice())
+        }
+        (HostTensor::U8(d, _), _) => d.as_slice().to_vec(),
+        (HostTensor::F32(d, _), _) => d.iter().flat_map(|v| v.to_le_bytes()).collect(),
+        (HostTensor::I32(d, _), _) => d.iter().flat_map(|v| v.to_le_bytes()).collect(),
+        (HostTensor::U32(d, _), _) => d.iter().flat_map(|v| v.to_le_bytes()).collect(),
+    };
+    out.extend_from_slice(&(data.len() as u64).to_le_bytes());
+    out.extend_from_slice(&data);
+    Ok(())
+}
+
+fn read_tensor(cur: &mut Cursor<'_>) -> Result<HostTensor> {
+    let dtype = cur.u8()?;
+    let role = cur.u8()?;
+    if role > ROLE_PACKED_Q4 {
+        return Err(crate::err!("unknown tensor role {role}"));
+    }
+    let rank = cur.u8()? as usize;
+    if rank > 4 {
+        return Err(crate::err!("implausible tensor rank {rank}"));
+    }
+    let mut shape = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        shape.push(cur.u64()? as usize);
+    }
+    // product of an empty shape is 1: scalars carry one element
+    let elems: usize = shape.iter().product();
+    let len = cur.u64()? as usize;
+    let data = cur.take(len)?;
+    let elem_check = |unit: usize| -> Result<()> {
+        if len != elems * unit {
+            return Err(crate::err!(
+                "data is {len} bytes, shape {shape:?} wants {}",
+                elems * unit
+            ));
+        }
+        Ok(())
+    };
+    Ok(match (dtype, role) {
+        (DTYPE_U8, ROLE_PACKED_Q4) => {
+            if len != elems.div_ceil(2) {
+                return Err(crate::err!(
+                    "packed q4 data is {len} bytes, shape {shape:?} wants {}",
+                    elems.div_ceil(2)
+                ));
+            }
+            HostTensor::u8(pack::unpack_u4(data, elems), shape)
+        }
+        (DTYPE_U8, _) => {
+            elem_check(1)?;
+            HostTensor::u8(data.to_vec(), shape)
+        }
+        (DTYPE_F32, ROLE_RAW) => {
+            elem_check(4)?;
+            let v = data
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            HostTensor::f32(v, shape)
+        }
+        (DTYPE_I32, ROLE_RAW) => {
+            elem_check(4)?;
+            let v = data
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            HostTensor::i32(v, shape)
+        }
+        (DTYPE_U32, ROLE_RAW) => {
+            elem_check(4)?;
+            let v = data
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            HostTensor::u32(v, shape)
+        }
+        (d, r) => return Err(crate::err!("invalid dtype/role combination {d}/{r}")),
+    })
+}
+
+/// FNV-1a 64-bit over a byte stream (hermetic, no dependency).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// PackBits-style RLE: control `c < 128` → `c + 1` literal bytes follow;
+/// `c >= 128` → the next byte repeats `c - 125` times (runs of 3..=130).
+fn rle_encode(src: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(src.len() / 4 + 16);
+    let mut i = 0;
+    let mut lit_start = 0;
+    let mut flush_literals = |out: &mut Vec<u8>, lo: usize, hi: usize| {
+        let mut s = lo;
+        while s < hi {
+            let n = (hi - s).min(128);
+            out.push((n - 1) as u8);
+            out.extend_from_slice(&src[s..s + n]);
+            s += n;
+        }
+    };
+    while i < src.len() {
+        let b = src[i];
+        let mut run = 1;
+        while run < 130 && i + run < src.len() && src[i + run] == b {
+            run += 1;
+        }
+        if run >= 3 {
+            flush_literals(&mut out, lit_start, i);
+            out.push((125 + run) as u8);
+            out.push(b);
+            i += run;
+            lit_start = i;
+        } else {
+            i += run;
+        }
+    }
+    flush_literals(&mut out, lit_start, src.len());
+    out
+}
+
+fn rle_decode(src: &[u8], expect: usize) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(expect);
+    let mut i = 0;
+    while i < src.len() {
+        let c = src[i] as usize;
+        i += 1;
+        if c < 128 {
+            let n = c + 1;
+            let lit = src
+                .get(i..i + n)
+                .ok_or_else(|| crate::err!("RLE literal run truncated"))?;
+            out.extend_from_slice(lit);
+            i += n;
+        } else {
+            let b = *src
+                .get(i)
+                .ok_or_else(|| crate::err!("RLE repeat run truncated"))?;
+            i += 1;
+            let n = c - 125;
+            out.resize(out.len() + n, b);
+        }
+        if out.len() > expect {
+            return Err(crate::err!(
+                "RLE stream expands past the declared payload length {expect}"
+            ));
+        }
+    }
+    if out.len() != expect {
+        return Err(crate::err!(
+            "RLE stream decoded to {} bytes, header says {expect}",
+            out.len()
+        ));
+    }
+    Ok(out)
+}
+
+/// Bounds-checked byte reader — every overrun is an `Err`, not a panic.
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(b: &'a [u8]) -> Cursor<'a> {
+        Cursor { b, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let s = self
+            .b
+            .get(self.pos..self.pos.checked_add(n).ok_or_else(|| {
+                crate::err!("artifact length overflow")
+            })?)
+            .ok_or_else(|| crate::err!("artifact truncated (wanted {n} more bytes)"))?;
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7],
+        ]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_vectors() {
+        // standard FNV-1a test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn rle_roundtrip_shapes() {
+        let cases: Vec<Vec<u8>> = vec![
+            vec![],
+            vec![7],
+            vec![0; 1000],                                // one long run
+            (0..=255u8).collect(),                        // pure literals
+            [vec![1; 5], (0..200).collect(), vec![9; 3]].concat(), // mixed
+            vec![4; 130],                                 // exactly max run
+            vec![4; 131],                                 // run + 1
+            vec![1, 1],                                   // run below threshold
+        ];
+        for c in cases {
+            let enc = rle_encode(&c);
+            assert_eq!(rle_decode(&enc, c.len()).unwrap(), c, "len {}", c.len());
+        }
+        // zero-heavy data actually compresses
+        let zeros = vec![0u8; 4096];
+        assert!(rle_encode(&zeros).len() < 100);
+    }
+
+    #[test]
+    fn rle_decode_rejects_bad_streams() {
+        assert!(rle_decode(&[5], 6).is_err()); // literal run truncated
+        assert!(rle_decode(&[200], 75).is_err()); // repeat byte missing
+        assert!(rle_decode(&[130, 9], 2).is_err()); // expands past expect
+        assert!(rle_decode(&[0, 1], 5).is_err()); // too short overall
+    }
+
+    #[test]
+    fn cursor_overruns_are_errors() {
+        let mut c = Cursor::new(&[1, 2, 3]);
+        assert_eq!(c.take(2).unwrap(), &[1, 2]);
+        assert!(c.u32().is_err());
+        assert_eq!(c.u8().unwrap(), 3);
+        assert!(c.u8().is_err());
+    }
+
+    #[test]
+    fn tensor_record_roundtrip_bit_exact() {
+        let tensors = vec![
+            HostTensor::f32(vec![1.5, -0.0, f32::NAN, f32::INFINITY], vec![4]),
+            HostTensor::i32(vec![-5, 0, 7], vec![3]),
+            HostTensor::u32(vec![u32::MAX, 0], vec![2]),
+            HostTensor::u8(vec![0, 15, 200], vec![3]),
+            HostTensor::f32(vec![2.25], vec![]), // scalar rank
+        ];
+        let mut buf = Vec::new();
+        for t in &tensors {
+            write_tensor(&mut buf, t, ROLE_RAW).unwrap();
+        }
+        let mut cur = Cursor::new(&buf);
+        for t in &tensors {
+            let rt = read_tensor(&mut cur).unwrap();
+            assert_eq!(rt.shape(), t.shape());
+            assert_eq!(rt.dtype_str(), t.dtype_str());
+            // bit-exact comparison (NaN != NaN under PartialEq)
+            if let (Ok(a), Ok(b)) = (rt.as_f32(), t.as_f32()) {
+                let ab: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+                let bb: Vec<u32> = b.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(ab, bb);
+            } else {
+                assert_eq!(rt, *t);
+            }
+        }
+        assert_eq!(cur.remaining(), 0);
+    }
+
+    #[test]
+    fn packed_role_halves_codes_and_rejects_wide_values() {
+        let codes = HostTensor::u8((0..16u8).chain(0..16).collect(), vec![4, 8]);
+        let mut buf = Vec::new();
+        write_tensor(&mut buf, &codes, ROLE_PACKED_Q4).unwrap();
+        // record data = 16 bytes (32 nibbles), vs 32 raw
+        let rt = read_tensor(&mut Cursor::new(&buf)).unwrap();
+        assert_eq!(rt, codes);
+        // a u8 tensor with values >= 16 must not silently corrupt
+        let wide = HostTensor::u8(vec![99], vec![1]);
+        assert!(write_tensor(&mut Vec::new(), &wide, ROLE_PACKED_Q4).is_err());
+    }
+}

@@ -8,11 +8,16 @@
 //!   [`crate::quant::QuantConfig`] and rebuild eval tensors, or pack the
 //!   serving engine's end-to-end q4 + double-quantized representation
 //!   ([`quantize_for_serving`])
+//! - [`artifact`]: versioned on-disk serialization of serving parameter
+//!   sets (dense or q4+OPQ), with an optional RLE compressed-at-rest
+//!   variant — pack once, reload near-zero-copy into the engine's
+//!   shared weight set
 //! - [`lora`]: QLoRA-style fine-tuning via `lora_step` (Tables 3/4 proxy)
 //! - [`tasks`]: synthetic multiple-choice suite + NAV ACC (eq. 74) and the
 //!   two fine-tuning tasks (instruction echo / bracket code)
 //! - [`report`]: markdown/CSV table writers into `results/`
 
+pub mod artifact;
 pub mod lora;
 pub mod ppl;
 pub mod quantized;
@@ -20,6 +25,9 @@ pub mod report;
 pub mod tasks;
 pub mod trainer;
 
+pub use artifact::{load_artifact, save_artifact, ArtifactInfo, ArtifactKind, SaveOptions};
 pub use ppl::perplexity;
-pub use quantized::{quantize_for_serving, quantize_params, QuantizedServingParams};
+pub use quantized::{
+    dense_from_q4_prefix, quantize_for_serving, quantize_params, QuantizedServingParams,
+};
 pub use trainer::ensure_trained;

@@ -146,7 +146,6 @@ pub fn quantize_for_serving(
     let mut am_params_t = Vec::new();
     let mut out_idx_t = Vec::new();
     let mut out_val_t = Vec::new();
-    let mut dense = Vec::new();
     let mut quant_bytes = 0usize;
     let mut orig_bytes = 0usize;
     let mut outliers = 0usize;
@@ -161,7 +160,6 @@ pub fn quantize_for_serving(
         }
         if !mm.contains(&name) {
             f32s.push(HostTensor::f32(data.to_vec(), shape.clone()));
-            dense.push(HostTensor::f32(data.to_vec(), shape));
             continue;
         }
         let (k, n) = (shape[0], shape[1]);
@@ -179,26 +177,6 @@ pub fn quantize_for_serving(
         let dq = qt.dq.as_ref().expect("double_quant is on");
         let codes = pack::unpack_u4(&qt.codes, k * n);
         let nb = n / m.block;
-        // reconstruct the constants and weights through the shared
-        // `double_quant::reconstruct` expression, then `levels[c] * am`,
-        // so the dense oracle is bit-identical to the fused kernel path
-        let mut w = vec![0.0f32; k * n];
-        for kk in 0..k {
-            for jb in 0..nb {
-                let bi = kk * nb + jb;
-                let chunk = bi / crate::quant::double_quant::CHUNK;
-                let (mn, scale) = dq.chunk_params[chunk];
-                let am = crate::quant::double_quant::reconstruct(mn, scale, dq.codes[bi]);
-                for i in 0..m.block {
-                    let j = jb * m.block + i;
-                    w[kk * n + j] =
-                        q.codebook.levels[(codes[kk * n + j] & 0x0f) as usize] * am;
-                }
-            }
-        }
-        // patch the dense oracle exactly as the fused kernels patch
-        // their side-table: bf16-rounded outlier values, verbatim
-        crate::quant::opq::restore_outliers(&mut w, &qt.outliers);
         let mut oi = Vec::with_capacity(qt.outliers.len());
         let mut ov = Vec::with_capacity(qt.outliers.len());
         for o in &qt.outliers {
@@ -224,7 +202,6 @@ pub fn quantize_for_serving(
         let n_out = oi.len();
         out_idx_t.push(HostTensor::u32(oi, vec![n_out]));
         out_val_t.push(HostTensor::f32(ov, vec![n_out]));
-        dense.push(HostTensor::f32(w, shape));
     }
     let mut prefix = f32s;
     prefix.extend(codes_t);
@@ -233,6 +210,11 @@ pub fn quantize_for_serving(
     prefix.extend(out_idx_t);
     prefix.extend(out_val_t);
     prefix.push(HostTensor::f32(q.codebook.levels.to_vec(), vec![16]));
+    // The dense oracle is *derived from the prefix* through the one
+    // shared reconstruction (`dense_from_q4_prefix`) — the same function
+    // the artifact loader uses — so every consumer of a q4 prefix
+    // (in-memory or reloaded from disk) sees bit-identical dense weights.
+    let dense = dense_from_q4_prefix(meta, &prefix)?;
     Ok(QuantizedServingParams {
         prefix,
         dense,
@@ -240,6 +222,107 @@ pub fn quantize_for_serving(
         orig_bytes,
         outliers,
     })
+}
+
+/// Exactly dequantize a q4 serving prefix back to the canonical dense
+/// parameter tensors (outliers restored), bit-identical to what the
+/// fused q4 kernels compute: block constants through
+/// [`crate::quant::double_quant::reconstruct`], weights as
+/// `levels[code] * absmax`, then the bf16-rounded outlier side-table
+/// patched verbatim. Non-matmul tensors come back as buffer-sharing
+/// views of the prefix.
+///
+/// This is the single reconstruction shared by [`quantize_for_serving`]
+/// (to build its `dense` oracle) and the artifact loader
+/// ([`crate::eval::artifact`]) — both paths produce the same bits by
+/// construction.
+pub fn dense_from_q4_prefix(meta: &Meta, prefix: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    let m = &meta.model;
+    let specs = param_specs(m);
+    let mm = matmul_param_names(m);
+    let n_mm = mm.len();
+    let n_dense = specs.len() - n_mm;
+    let want = n_dense + 5 * n_mm + 1;
+    if prefix.len() != want {
+        return Err(crate::err!(
+            "q4 prefix has {} tensors, expected {want}",
+            prefix.len()
+        ));
+    }
+    let levels = prefix[n_dense + 5 * n_mm].as_f32()?;
+    if levels.len() != 16 {
+        return Err(crate::err!("codebook has {} levels, expected 16", levels.len()));
+    }
+    let mut dense = Vec::with_capacity(specs.len());
+    let (mut fi, mut mi) = (0usize, 0usize);
+    for (name, shape) in specs {
+        if !mm.contains(&name) {
+            let t = &prefix[fi];
+            if t.shape() != shape.as_slice() {
+                return Err(crate::err!(
+                    "prefix tensor {fi} ('{name}'): shape {:?} != {shape:?}",
+                    t.shape()
+                ));
+            }
+            dense.push(t.clone()); // buffer-sharing view
+            fi += 1;
+            continue;
+        }
+        let (k, n) = (shape[0], shape[1]);
+        let nb = n / m.block;
+        let codes = prefix[n_dense + mi].as_u8()?;
+        let am_codes = prefix[n_dense + n_mm + mi].as_u8()?;
+        let am_params = prefix[n_dense + 2 * n_mm + mi].as_f32()?;
+        let out_idx = prefix[n_dense + 3 * n_mm + mi].as_u32()?;
+        let out_val = prefix[n_dense + 4 * n_mm + mi].as_f32()?;
+        if codes.len() != k * n || am_codes.len() != k * nb {
+            return Err(crate::err!(
+                "'{name}': code tensors sized {}/{}, expected {}/{}",
+                codes.len(),
+                am_codes.len(),
+                k * n,
+                k * nb
+            ));
+        }
+        if out_idx.len() != out_val.len() {
+            return Err(crate::err!(
+                "'{name}': outlier side-table lengths differ ({} idx, {} val)",
+                out_idx.len(),
+                out_val.len()
+            ));
+        }
+        let mut w = vec![0.0f32; k * n];
+        for kk in 0..k {
+            for jb in 0..nb {
+                let bi = kk * nb + jb;
+                let chunk = bi / crate::quant::double_quant::CHUNK;
+                let ps = am_params.get(2 * chunk..2 * chunk + 2).ok_or_else(|| {
+                    crate::err!("'{name}': chunk params truncated at chunk {chunk}")
+                })?;
+                let (mn, scale) = (ps[0], ps[1]);
+                let am = crate::quant::double_quant::reconstruct(mn, scale, am_codes[bi]);
+                for i in 0..m.block {
+                    let j = jb * m.block + i;
+                    w[kk * n + j] = levels[(codes[kk * n + j] & 0x0f) as usize] * am;
+                }
+            }
+        }
+        // patch exactly as the fused kernels patch their side-table:
+        // bf16-rounded outlier values, verbatim
+        for (&idx, &val) in out_idx.iter().zip(out_val) {
+            let idx = idx as usize;
+            if idx >= w.len() {
+                return Err(crate::err!(
+                    "'{name}': outlier index {idx} out of range ({} weights)",
+                    w.len()
+                ));
+            }
+            w[idx] = val;
+        }
+        dense.push(HostTensor::f32(w, shape));
+        mi += 1;
+    }
+    Ok(dense)
 }
 
 #[cfg(test)]

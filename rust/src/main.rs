@@ -230,14 +230,43 @@ fn serve(rest: Vec<String>) -> Result<()> {
             "serve exactly-dequantized f32 weights through the dense graphs \
              instead of the 4-bit-at-rest q4 serving path",
         )
+        .opt("save", None, "write the packed serving parameters to this artifact path")
+        .opt(
+            "load",
+            None,
+            "serve a previously saved artifact instead of quantizing from scratch",
+        )
+        .flag("compress", "RLE-compress the artifact at rest (with --save)")
         .parse_from(rest);
     let rt = Arc::new(Runtime::new()?);
-    let base = eval::ensure_trained(&rt)?;
     let cfg = quant_config(&p);
     // Default: serve quantized-at-rest through the fused q4 graphs (with
     // `--opq`, outlier weights ride in the bf16 side-table the kernels
-    // patch in). `--dequant` keeps the old dense-f32 demo path.
-    let engine_params = if p.has_flag("dequant") {
+    // patch in). `--dequant` keeps the old dense-f32 demo path; `--load`
+    // skips quantization entirely and serves an on-disk artifact.
+    let mut save_opts = eval::SaveOptions {
+        label: cfg.label(),
+        compress: p.has_flag("compress"),
+        ..Default::default()
+    };
+    let engine_params = if let Some(path) = p.get("load") {
+        let (params, info) =
+            eval::load_artifact(std::path::Path::new(path), &rt.meta.model)?;
+        println!(
+            "loaded {:?} artifact {path}: {} tensors, {} outliers, {} bytes on disk{}",
+            info.kind,
+            info.n_tensors,
+            info.outliers,
+            info.file_bytes,
+            if info.compressed { " (RLE)" } else { "" }
+        );
+        save_opts.label = info.label.clone();
+        save_opts.outliers = info.outliers;
+        save_opts.quant_bytes = info.quant_bytes;
+        save_opts.orig_bytes = info.orig_bytes;
+        params
+    } else if p.has_flag("dequant") {
+        let base = eval::ensure_trained(&rt)?;
         let qm = eval::quantize_params(&base, &cfg)?;
         println!(
             "serving dense dequantized weights ({}): MAE {:.4e} MSE {:.4e}",
@@ -247,6 +276,7 @@ fn serve(rest: Vec<String>) -> Result<()> {
         );
         bof4::coordinator::EngineParams::Dense(qm.params.to_tensors())
     } else {
+        let base = eval::ensure_trained(&rt)?;
         let qsp = eval::quantize_for_serving(&rt.meta, &base, &cfg)?;
         println!(
             "serving q4 at rest ({}): {} -> {} bytes ({:.2}x), {} outliers \
@@ -258,8 +288,25 @@ fn serve(rest: Vec<String>) -> Result<()> {
             qsp.outliers,
             bof4::quant::opq::opq_bytes(qsp.outliers)
         );
+        save_opts.outliers = qsp.outliers;
+        save_opts.quant_bytes = qsp.quant_bytes;
+        save_opts.orig_bytes = qsp.orig_bytes;
         bof4::coordinator::EngineParams::QuantizedQ4(qsp.prefix)
     };
+    if let Some(path) = p.get("save") {
+        let info = eval::save_artifact(
+            std::path::Path::new(path),
+            &rt.meta.model,
+            &engine_params,
+            &save_opts,
+        )?;
+        println!(
+            "saved {:?} artifact to {path}: {} bytes on disk{}",
+            info.kind,
+            info.file_bytes,
+            if info.compressed { " (RLE)" } else { "" }
+        );
+    }
     let engine = bof4::coordinator::Engine::start(
         rt.clone(),
         engine_params,
@@ -268,6 +315,15 @@ fn serve(rest: Vec<String>) -> Result<()> {
             ..Default::default()
         },
     )?;
+    let mem = engine.memory_profile();
+    println!(
+        "resident memory: {} param bytes shared once across {} replicas, \
+         {} bytes/replica private (total {})",
+        mem.shared_param_bytes,
+        mem.replicas,
+        mem.per_replica_bytes.first().copied().unwrap_or(0),
+        mem.total_resident_bytes
+    );
     let n = p.get_usize("requests").unwrap_or(64);
     let tokens = p.get_usize("tokens").unwrap_or(8);
     let corpus = bof4::models::Corpus::generate(50_000, 5);
@@ -279,11 +335,23 @@ fn serve(rest: Vec<String>) -> Result<()> {
     }
     let mut answered = 0;
     let mut streamed = 0usize;
+    let mut first_stream: Option<Vec<u8>> = None;
     for sess in sessions {
-        streamed += sess.collect_tokens()?.len();
+        let toks = sess.collect_tokens()?;
+        if first_stream.is_none() {
+            first_stream = Some(toks.clone());
+        }
+        streamed += toks.len();
         answered += 1;
     }
     let secs = sw.elapsed().as_secs_f64();
+    // deterministic fingerprint of the first session's greedy stream —
+    // the CI artifact smoke diffs this line between a --save run and the
+    // --load run of the same artifact (bit-identical serving contract)
+    if let Some(toks) = first_stream {
+        let s: Vec<String> = toks.iter().map(|t| t.to_string()).collect();
+        println!("stream[0]: {}", s.join(" "));
+    }
     println!(
         "served {answered}/{n} sessions ({streamed} tokens) in {secs:.2}s \
          ({:.1} tok/s)\n{}",

@@ -21,10 +21,10 @@ fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
         unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
     }
     let (ty, dims, raw): (xla::ElementType, &Vec<usize>, &[u8]) = match t {
-        HostTensor::F32(d, s) => (xla::ElementType::F32, s, bytes(d)),
-        HostTensor::I32(d, s) => (xla::ElementType::S32, s, bytes(d)),
-        HostTensor::U8(d, s) => (xla::ElementType::U8, s, bytes(d)),
-        HostTensor::U32(d, s) => (xla::ElementType::U32, s, bytes(d)),
+        HostTensor::F32(d, s) => (xla::ElementType::F32, s, bytes(d.as_slice())),
+        HostTensor::I32(d, s) => (xla::ElementType::S32, s, bytes(d.as_slice())),
+        HostTensor::U8(d, s) => (xla::ElementType::U8, s, bytes(d.as_slice())),
+        HostTensor::U32(d, s) => (xla::ElementType::U32, s, bytes(d.as_slice())),
     };
     xla::Literal::create_from_shape_and_untyped_data(ty, dims, raw)
         .map_err(|e| crate::err!("literal creation failed: {e:?}"))
@@ -38,16 +38,16 @@ fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
     let ty = lit.ty().map_err(|e| crate::err!("literal ty: {e:?}"))?;
     Ok(match ty {
         xla::ElementType::F32 => {
-            HostTensor::F32(lit.to_vec().map_err(|e| crate::err!("{e:?}"))?, dims)
+            HostTensor::f32(lit.to_vec().map_err(|e| crate::err!("{e:?}"))?, dims)
         }
         xla::ElementType::S32 => {
-            HostTensor::I32(lit.to_vec().map_err(|e| crate::err!("{e:?}"))?, dims)
+            HostTensor::i32(lit.to_vec().map_err(|e| crate::err!("{e:?}"))?, dims)
         }
         xla::ElementType::U8 => {
-            HostTensor::U8(lit.to_vec().map_err(|e| crate::err!("{e:?}"))?, dims)
+            HostTensor::u8(lit.to_vec().map_err(|e| crate::err!("{e:?}"))?, dims)
         }
         xla::ElementType::U32 => {
-            HostTensor::U32(lit.to_vec().map_err(|e| crate::err!("{e:?}"))?, dims)
+            HostTensor::u32(lit.to_vec().map_err(|e| crate::err!("{e:?}"))?, dims)
         }
         other => return Err(crate::err!("unsupported result element type {other:?}")),
     })

@@ -152,6 +152,10 @@ impl DecodeState for CpuDecodeState {
     fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
         self
     }
+
+    fn resident_bytes(&self) -> usize {
+        self.caches.iter().map(|c| 4 * c.len()).sum()
+    }
 }
 
 impl Backend for CpuBackend {
@@ -1311,7 +1315,7 @@ impl CpuBackend {
             out.push(HostTensor::f32(vals, shape.clone()));
         }
         out.push(HostTensor::scalar_i32(new_step));
-        out.push(HostTensor::F32(vec![loss], vec![]));
+        out.push(HostTensor::f32(vec![loss], vec![]));
         Ok(out)
     }
 
@@ -1343,7 +1347,7 @@ impl CpuBackend {
             out.push(HostTensor::f32(vals, shape.clone()));
         }
         out.push(HostTensor::scalar_i32(new_step));
-        out.push(HostTensor::F32(vec![loss], vec![]));
+        out.push(HostTensor::f32(vec![loss], vec![]));
         Ok(out)
     }
 

@@ -4,51 +4,62 @@
 //! [`super::Backend`]: a flat little-endian buffer plus a shape, in one of
 //! the four dtypes the graph ABIs use (`float32`, `int32`, `uint8`,
 //! `uint32`).
+//!
+//! The data buffer is reference-counted (`Arc`), so cloning a tensor is a
+//! cheap handle copy that **shares** the underlying storage — this is what
+//! lets every serving-engine replica read one immutable weight set instead
+//! of owning a private parameter copy. Mutation goes through
+//! [`HostTensor::as_f32_mut`], which is copy-on-write: a uniquely-owned
+//! buffer (e.g. a replica's private KV-cache slab) is mutated in place, a
+//! shared buffer is cloned first so aliased readers never observe writes.
+
+use std::sync::Arc;
 
 use crate::error::Result;
 
-/// A host-side tensor in one of the dtypes crossing the ABI.
+/// A host-side tensor in one of the dtypes crossing the ABI. Clones share
+/// the underlying buffer (see the module docs).
 #[derive(Clone, Debug, PartialEq)]
 pub enum HostTensor {
-    F32(Vec<f32>, Vec<usize>),
-    I32(Vec<i32>, Vec<usize>),
-    U8(Vec<u8>, Vec<usize>),
-    U32(Vec<u32>, Vec<usize>),
+    F32(Arc<Vec<f32>>, Vec<usize>),
+    I32(Arc<Vec<i32>>, Vec<usize>),
+    U8(Arc<Vec<u8>>, Vec<usize>),
+    U32(Arc<Vec<u32>>, Vec<usize>),
 }
 
 impl HostTensor {
     pub fn scalar_u32(v: u32) -> Self {
-        HostTensor::U32(vec![v], vec![])
+        HostTensor::U32(Arc::new(vec![v]), vec![])
     }
 
     pub fn scalar_i32(v: i32) -> Self {
-        HostTensor::I32(vec![v], vec![])
+        HostTensor::I32(Arc::new(vec![v]), vec![])
     }
 
     pub fn f32(data: Vec<f32>, shape: Vec<usize>) -> Self {
         assert_eq!(data.len(), shape.iter().product::<usize>());
-        HostTensor::F32(data, shape)
+        HostTensor::F32(Arc::new(data), shape)
     }
 
     /// Zero-filled f32 tensor (cache slabs, argument placeholders).
     pub fn zeros_f32(shape: Vec<usize>) -> Self {
         let n = shape.iter().product();
-        HostTensor::F32(vec![0.0; n], shape)
+        HostTensor::F32(Arc::new(vec![0.0; n]), shape)
     }
 
     pub fn i32(data: Vec<i32>, shape: Vec<usize>) -> Self {
         assert_eq!(data.len(), shape.iter().product::<usize>());
-        HostTensor::I32(data, shape)
+        HostTensor::I32(Arc::new(data), shape)
     }
 
     pub fn u8(data: Vec<u8>, shape: Vec<usize>) -> Self {
         assert_eq!(data.len(), shape.iter().product::<usize>());
-        HostTensor::U8(data, shape)
+        HostTensor::U8(Arc::new(data), shape)
     }
 
     pub fn u32(data: Vec<u32>, shape: Vec<usize>) -> Self {
         assert_eq!(data.len(), shape.iter().product::<usize>());
-        HostTensor::U32(data, shape)
+        HostTensor::U32(Arc::new(data), shape)
     }
 
     pub fn shape(&self) -> &[usize] {
@@ -67,6 +78,34 @@ impl HostTensor {
             HostTensor::U8(..) => "uint8",
             HostTensor::U32(..) => "uint32",
         }
+    }
+
+    /// Size in bytes of the element buffer.
+    pub fn byte_len(&self) -> usize {
+        match self {
+            HostTensor::F32(d, _) => 4 * d.len(),
+            HostTensor::I32(d, _) => 4 * d.len(),
+            HostTensor::U8(d, _) => d.len(),
+            HostTensor::U32(d, _) => 4 * d.len(),
+        }
+    }
+
+    /// Identity of the underlying buffer (the element pointer), used to
+    /// deduplicate shared storage when accounting resident memory: two
+    /// handles over the same buffer report the same address. Only
+    /// meaningful for non-empty tensors.
+    pub fn buf_addr(&self) -> usize {
+        match self {
+            HostTensor::F32(d, _) => d.as_ptr() as usize,
+            HostTensor::I32(d, _) => d.as_ptr() as usize,
+            HostTensor::U8(d, _) => d.as_ptr() as usize,
+            HostTensor::U32(d, _) => d.as_ptr() as usize,
+        }
+    }
+
+    /// Whether `self` and `other` are handles over the same buffer.
+    pub fn shares_buffer(&self, other: &HostTensor) -> bool {
+        self.byte_len() > 0 && self.buf_addr() == other.buf_addr()
     }
 
     pub fn as_f32(&self) -> Result<&[f32]> {
@@ -110,10 +149,13 @@ impl HostTensor {
     }
 
     /// Mutable f32 view (the serving engine scatters prefilled K/V rows
-    /// into its cache slabs in place).
+    /// into its cache slabs in place). Copy-on-write: mutating a tensor
+    /// whose buffer is shared with other handles clones the buffer first,
+    /// so aliased readers (e.g. weight views in other replicas) are never
+    /// affected.
     pub fn as_f32_mut(&mut self) -> Result<&mut Vec<f32>> {
         match self {
-            HostTensor::F32(d, _) => Ok(d),
+            HostTensor::F32(d, _) => Ok(Arc::make_mut(d)),
             other => Err(crate::err!(
                 "expected f32 tensor, got {}",
                 other.dtype_str()
@@ -123,7 +165,9 @@ impl HostTensor {
 
     pub fn into_f32(self) -> Result<Vec<f32>> {
         match self {
-            HostTensor::F32(d, _) => Ok(d),
+            HostTensor::F32(d, _) => {
+                Ok(Arc::try_unwrap(d).unwrap_or_else(|shared| (*shared).clone()))
+            }
             other => Err(crate::err!(
                 "expected f32 tensor, got {}",
                 other.dtype_str()
@@ -144,9 +188,32 @@ impl HostTensor {
     }
 }
 
+/// Unique resident bytes across a set of tensor handles: shared buffers
+/// are counted once (deduplicated by buffer identity via
+/// [`HostTensor::buf_addr`]). This is the measurement behind the serving
+/// engine's memory profile — N replicas holding handles over one weight
+/// set contribute that set's bytes once, not N times.
+pub fn unique_resident_bytes<'a>(
+    tensors: impl IntoIterator<Item = &'a HostTensor>,
+    seen: &mut std::collections::HashSet<usize>,
+) -> usize {
+    let mut total = 0usize;
+    for t in tensors {
+        let bytes = t.byte_len();
+        if bytes == 0 {
+            continue; // empty tensors have no buffer worth counting
+        }
+        if seen.insert(t.buf_addr()) {
+            total += bytes;
+        }
+    }
+    total
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::HashSet;
 
     #[test]
     fn host_tensor_shape_checks() {
@@ -169,5 +236,53 @@ mod tests {
     #[should_panic]
     fn host_tensor_rejects_shape_mismatch() {
         HostTensor::f32(vec![1.0; 5], vec![2, 3]);
+    }
+
+    #[test]
+    fn clones_share_one_buffer() {
+        let a = HostTensor::f32(vec![1.0; 128], vec![128]);
+        let b = a.clone();
+        assert!(a.shares_buffer(&b));
+        assert_eq!(a.buf_addr(), b.buf_addr());
+        // the shared buffer is counted once
+        let mut seen = HashSet::new();
+        let total = unique_resident_bytes([&a, &b], &mut seen);
+        assert_eq!(total, 128 * 4);
+        // a distinct tensor adds its own bytes
+        let c = HostTensor::f32(vec![2.0; 8], vec![8]);
+        assert_eq!(unique_resident_bytes([&c], &mut seen), 8 * 4);
+    }
+
+    #[test]
+    fn mutation_is_copy_on_write() {
+        let mut a = HostTensor::f32(vec![0.0; 4], vec![4]);
+        let b = a.clone();
+        // uniquely-owned after the write: b keeps the original bits
+        a.as_f32_mut().unwrap()[0] = 7.0;
+        assert_eq!(a.as_f32().unwrap()[0], 7.0);
+        assert_eq!(b.as_f32().unwrap()[0], 0.0);
+        assert!(!a.shares_buffer(&b));
+        // an unshared tensor mutates in place (no reallocation)
+        let mut c = HostTensor::f32(vec![0.0; 4], vec![4]);
+        let addr = c.buf_addr();
+        c.as_f32_mut().unwrap()[1] = 3.0;
+        assert_eq!(c.buf_addr(), addr, "unique buffer must mutate in place");
+    }
+
+    #[test]
+    fn into_f32_recovers_data_shared_or_not() {
+        let a = HostTensor::f32(vec![1.5, -2.5], vec![2]);
+        let b = a.clone();
+        assert_eq!(a.into_f32().unwrap(), vec![1.5, -2.5]); // shared: copies
+        assert_eq!(b.into_f32().unwrap(), vec![1.5, -2.5]); // unique: moves
+    }
+
+    #[test]
+    fn empty_tensors_do_not_collide_in_accounting() {
+        let a = HostTensor::u32(Vec::new(), vec![0]);
+        let b = HostTensor::f32(Vec::new(), vec![0]);
+        let mut seen = HashSet::new();
+        assert_eq!(unique_resident_bytes([&a, &b], &mut seen), 0);
+        assert!(seen.is_empty());
     }
 }

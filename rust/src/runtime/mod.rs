@@ -54,6 +54,13 @@ pub trait DecodeState: Send {
 
     /// Downcast hook for the owning backend.
     fn as_any_mut(&mut self) -> &mut dyn std::any::Any;
+
+    /// Bytes of backend-resident cache storage this state holds — the
+    /// per-replica component of the serving engine's memory profile.
+    /// Default 0 for backends that do not account their state.
+    fn resident_bytes(&self) -> usize {
+        0
+    }
 }
 
 /// A graph executor: prepare (compile/warm) and execute graphs over the

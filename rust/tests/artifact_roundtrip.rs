@@ -1,0 +1,388 @@
+//! On-disk model-artifact invariants: save → load must be bit-exact for
+//! dense and q4+OPQ parameter sets (both norms, ragged code tails, empty
+//! and non-empty outlier side-tables, with and without RLE compression),
+//! and every malformed input — truncation, flipped bytes, wrong version,
+//! wrong flags, corrupted metadata, wrong model — must load as `Err`,
+//! never a panic. Hermetic: artifacts go to unique temp-dir paths.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use bof4::coordinator::EngineParams;
+use bof4::eval::{load_artifact, save_artifact, ArtifactKind, SaveOptions};
+use bof4::models::ParamSet;
+use bof4::quant::{Method, Norm, OpqConfig, QuantConfig};
+use bof4::runtime::meta::{matmul_param_names, param_specs};
+use bof4::runtime::{HostTensor, Meta, Runtime};
+use bof4::testkit::{forall, Gen, Prop};
+use bof4::util::rng::Pcg64;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("bof4_test_{name}.bof4"))
+}
+
+/// Bit-exact tensor comparison: f32 payloads compare by bit pattern so
+/// NaN, infinities and signed zero all round-trip observably.
+fn assert_bit_eq(a: &HostTensor, b: &HostTensor, ctx: &str) {
+    assert_eq!(a.shape(), b.shape(), "{ctx}: shape");
+    assert_eq!(a.dtype_str(), b.dtype_str(), "{ctx}: dtype");
+    if let (Ok(x), Ok(y)) = (a.as_f32(), b.as_f32()) {
+        let xb: Vec<u32> = x.iter().map(|v| v.to_bits()).collect();
+        let yb: Vec<u32> = y.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(xb, yb, "{ctx}: f32 bits");
+    } else {
+        assert_eq!(a, b, "{ctx}");
+    }
+}
+
+fn tensors_of(p: &EngineParams) -> &[HostTensor] {
+    match p {
+        EngineParams::Dense(t) | EngineParams::QuantizedQ4(t) => t,
+    }
+}
+
+#[test]
+fn dense_roundtrip_bit_exact_plain_and_compressed() {
+    let rt = Arc::new(Runtime::new().unwrap());
+    let params = rt
+        .run("init_params", &[HostTensor::scalar_u32(3)])
+        .unwrap();
+    let set = EngineParams::Dense(params.clone());
+    for compress in [false, true] {
+        let path = tmp(&format!("dense_rt_{compress}"));
+        let info = save_artifact(
+            &path,
+            &rt.meta.model,
+            &set,
+            &SaveOptions {
+                label: "dense round-trip".into(),
+                compress,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(info.kind, ArtifactKind::Dense);
+        assert_eq!(info.compressed, compress);
+        assert_eq!(
+            info.file_bytes as u64,
+            std::fs::metadata(&path).unwrap().len()
+        );
+        let (loaded, linfo) = load_artifact(&path, &rt.meta.model).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(linfo.kind, ArtifactKind::Dense);
+        assert_eq!(linfo.label, "dense round-trip");
+        assert_eq!(linfo.n_tensors, params.len());
+        let got = tensors_of(&loaded);
+        assert_eq!(got.len(), params.len());
+        for (i, (a, b)) in params.iter().zip(got).enumerate() {
+            assert_bit_eq(a, b, &format!("compress={compress} tensor {i}"));
+        }
+    }
+}
+
+/// q4+OPQ prefixes round-trip bit-exactly under both paper norms, and
+/// the nibble-packed-at-rest codes actually shrink the file.
+#[test]
+fn q4_opq_roundtrip_both_norms() {
+    let rt = Arc::new(Runtime::new().unwrap());
+    let params = rt
+        .run("init_params", &[HostTensor::scalar_u32(7)])
+        .unwrap();
+    let gm = rt.meta.graph("lm_nll").unwrap().clone();
+    let mut pset = ParamSet::from_tensors(&gm, &params).unwrap();
+    for (name, shape, data) in pset.entries.iter_mut() {
+        if shape.len() == 2 && name.contains(".w") {
+            for i in (5..data.len()).step_by(409) {
+                data[i] *= 30.0;
+            }
+        }
+    }
+    for norm in [Norm::Absmax, Norm::SignedAbsmax] {
+        let qsp = bof4::eval::quantize_for_serving(
+            &rt.meta,
+            &pset,
+            &QuantConfig {
+                method: Method::Bof4 { mse: true },
+                norm,
+                block: rt.meta.model.block,
+                opq: Some(OpqConfig::default()),
+                double_quant: true,
+            },
+        )
+        .unwrap();
+        assert!(qsp.outliers > 0, "{norm:?}: no outliers flagged");
+        let path = tmp(&format!("q4_rt_{norm:?}"));
+        let info = qsp
+            .save_artifact(&path, &rt.meta.model, "q4 round-trip", false)
+            .unwrap();
+        assert_eq!(info.kind, ArtifactKind::QuantizedQ4);
+        assert_eq!(info.outliers, qsp.outliers);
+        let (loaded, linfo) = load_artifact(&path, &rt.meta.model).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(linfo.kind, ArtifactKind::QuantizedQ4);
+        assert_eq!(linfo.outliers, qsp.outliers);
+        let got = tensors_of(&loaded);
+        assert_eq!(got.len(), qsp.prefix.len(), "{norm:?}");
+        for (i, (a, b)) in qsp.prefix.iter().zip(got).enumerate() {
+            assert_bit_eq(a, b, &format!("{norm:?} tensor {i}"));
+        }
+        // codes are stored nibble-packed: the artifact must be well
+        // under the dense f32 footprint of the same model
+        let dense_bytes: usize = params.iter().map(|t| t.byte_len()).sum();
+        assert!(
+            info.file_bytes < dense_bytes / 2,
+            "{norm:?}: artifact {} bytes vs dense {} bytes",
+            info.file_bytes,
+            dense_bytes
+        );
+    }
+}
+
+/// The record codec handles shapes the canonical model never produces:
+/// odd-element (ragged-tail) packed code tensors, zero-length side
+/// tables next to populated ones, scalars. Built synthetically against
+/// the canonical q4 section layout (`n_dense + 5*n_mm + 1` tensors).
+#[test]
+fn synthetic_q4_prefix_ragged_tails_and_empty_side_tables() {
+    let model = Meta::builtin().model;
+    let nm = matmul_param_names(&model).len();
+    let nd = param_specs(&model).len() - nm;
+    let mut prefix: Vec<HostTensor> = Vec::new();
+    for i in 0..nd {
+        prefix.push(HostTensor::f32(vec![i as f32 + 0.5; 3], vec![3]));
+    }
+    for i in 0..nm {
+        // ragged tails: odd element counts force a half-used final byte
+        // in the nibble-packed representation
+        let n = 2 * i + 3;
+        prefix.push(HostTensor::u8(
+            (0..n).map(|j| (j % 16) as u8).collect(),
+            vec![n],
+        ));
+    }
+    for i in 0..nm {
+        prefix.push(HostTensor::u8(vec![(40 + i) as u8; 4], vec![4]));
+    }
+    for _ in 0..nm {
+        prefix.push(HostTensor::f32(vec![0.25, 2.0], vec![2]));
+    }
+    for i in 0..nm {
+        if i % 2 == 0 {
+            prefix.push(HostTensor::u32(Vec::new(), vec![0]));
+        } else {
+            prefix.push(HostTensor::u32(vec![1, 5], vec![2]));
+        }
+    }
+    for i in 0..nm {
+        if i % 2 == 0 {
+            prefix.push(HostTensor::f32(Vec::new(), vec![0]));
+        } else {
+            prefix.push(HostTensor::f32(vec![-3.5, 7.0], vec![2]));
+        }
+    }
+    prefix.push(HostTensor::f32(
+        (0..16).map(|i| i as f32 / 8.0 - 1.0).collect(),
+        vec![16],
+    ));
+    assert_eq!(prefix.len(), nd + 5 * nm + 1);
+
+    let set = EngineParams::QuantizedQ4(prefix.clone());
+    for compress in [false, true] {
+        let path = tmp(&format!("q4_synth_{compress}"));
+        save_artifact(
+            &path,
+            &model,
+            &set,
+            &SaveOptions {
+                label: "synthetic".into(),
+                compress,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let (loaded, _) = load_artifact(&path, &model).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let got = tensors_of(&loaded);
+        assert_eq!(got.len(), prefix.len());
+        for (i, (a, b)) in prefix.iter().zip(got).enumerate() {
+            assert_bit_eq(a, b, &format!("compress={compress} tensor {i}"));
+        }
+    }
+}
+
+/// Property: a dense parameter set with random Gaussian values plus
+/// planted specials (NaN, ±inf, −0.0) survives save → load bit-exactly,
+/// compressed or not, for any seed.
+#[test]
+fn property_dense_roundtrip_with_special_values() {
+    struct CaseGen;
+    impl Gen<(u64, bool)> for CaseGen {
+        fn generate(&self, rng: &mut Pcg64) -> (u64, bool) {
+            (rng.next_below(u64::MAX), rng.next_below(2) == 1)
+        }
+    }
+    let model = Meta::builtin().model;
+    let specs = param_specs(&model);
+    forall(
+        "artifact-dense-roundtrip",
+        41,
+        12,
+        &CaseGen,
+        |&(seed, compress)| {
+            let mut rng = Pcg64::seed_from_u64(seed);
+            let tensors: Vec<HostTensor> = specs
+                .iter()
+                .map(|(_, shape)| {
+                    let len: usize = shape.iter().product();
+                    let mut data = vec![0.0f32; len];
+                    rng.fill_gaussian_f32(&mut data, 1.0);
+                    if len > 4 {
+                        data[0] = f32::NAN;
+                        data[1] = f32::INFINITY;
+                        data[2] = f32::NEG_INFINITY;
+                        data[3] = -0.0;
+                    }
+                    HostTensor::f32(data, shape.clone())
+                })
+                .collect();
+            let path = tmp("dense_prop");
+            let set = EngineParams::Dense(tensors.clone());
+            if let Err(e) = save_artifact(
+                &path,
+                &model,
+                &set,
+                &SaveOptions {
+                    compress,
+                    ..Default::default()
+                },
+            ) {
+                return Prop::Fail(format!("save: {e}"));
+            }
+            let r = load_artifact(&path, &model);
+            let _ = std::fs::remove_file(&path);
+            let (loaded, _) = match r {
+                Ok(v) => v,
+                Err(e) => return Prop::Fail(format!("load: {e}")),
+            };
+            for (i, (a, b)) in tensors.iter().zip(tensors_of(&loaded)).enumerate() {
+                let (x, y) = (a.as_f32().unwrap(), b.as_f32().unwrap());
+                if x.len() != y.len()
+                    || x.iter().zip(y).any(|(u, v)| u.to_bits() != v.to_bits())
+                {
+                    return Prop::Fail(format!("tensor {i} not bit-identical"));
+                }
+            }
+            Prop::Pass
+        },
+    );
+}
+
+/// Every malformed artifact must surface as `Err`, never a panic:
+/// truncation at arbitrary points, bad magic, future versions, unknown
+/// flags, corrupted metadata, flipped payload/checksum bytes, and a
+/// model mismatch at load time.
+#[test]
+fn corrupt_artifacts_error_not_panic() {
+    let rt = Arc::new(Runtime::new().unwrap());
+    let params = rt
+        .run("init_params", &[HostTensor::scalar_u32(3)])
+        .unwrap();
+    let path = tmp("corrupt_base");
+    save_artifact(
+        &path,
+        &rt.meta.model,
+        &EngineParams::Dense(params),
+        &SaveOptions::default(),
+    )
+    .unwrap();
+    let good = std::fs::read(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    let model = rt.meta.model.clone();
+    let try_load = |bytes: &[u8], tag: &str| {
+        let p = tmp(&format!("corrupt_{tag}"));
+        std::fs::write(&p, bytes).unwrap();
+        let r = load_artifact(&p, &model);
+        let _ = std::fs::remove_file(&p);
+        r
+    };
+
+    // truncation at every structurally interesting point
+    for cut in [0, 1, 7, 8, 11, 12, 15, 16, 19, 20, good.len() / 2, good.len() - 1] {
+        assert!(try_load(&good[..cut], "trunc").is_err(), "cut at {cut}");
+    }
+    // bad magic
+    let mut b = good.clone();
+    b[0] ^= 0xff;
+    assert!(try_load(&b, "magic").is_err());
+    // a future version must be rejected, not misparsed
+    let mut b = good.clone();
+    b[8] = 99;
+    let e = try_load(&b, "version").unwrap_err();
+    assert!(format!("{e}").contains("version"), "{e}");
+    // unknown flag bits
+    let mut b = good.clone();
+    b[12] |= 0x80;
+    assert!(try_load(&b, "flags").is_err());
+    // corrupted JSON metadata (first meta byte is '{' at offset 20)
+    let mut b = good.clone();
+    b[20] = b'@';
+    assert!(try_load(&b, "meta").is_err());
+    // a flipped payload byte must fail the checksum
+    let mut b = good.clone();
+    let n = b.len();
+    b[n - 64] ^= 0x01;
+    let e = try_load(&b, "payload").unwrap_err();
+    assert!(format!("{e}").contains("checksum"), "{e}");
+    // so must a flipped checksum byte
+    let mut b = good.clone();
+    b[n - 1] ^= 0x01;
+    assert!(try_load(&b, "checksum").is_err());
+    // model mismatch: the intact artifact must refuse a different model
+    let mut other = model.clone();
+    other.d_model *= 2;
+    let p = tmp("corrupt_model");
+    std::fs::write(&p, &good).unwrap();
+    let e = load_artifact(&p, &other).unwrap_err();
+    let _ = std::fs::remove_file(&p);
+    assert!(format!("{e}").contains("d_model"), "{e}");
+    // and the intact bytes still load fine (the corruptions above were
+    // the only differences)
+    let p = tmp("corrupt_intact");
+    std::fs::write(&p, &good).unwrap();
+    assert!(load_artifact(&p, &model).is_ok());
+    let _ = std::fs::remove_file(&p);
+}
+
+/// Saving a malformed parameter set fails loudly at save time.
+#[test]
+fn save_rejects_wrong_tensor_counts_and_wide_codes() {
+    let model = Meta::builtin().model;
+    // wrong dense tensor count
+    let short = EngineParams::Dense(vec![HostTensor::f32(vec![1.0], vec![1])]);
+    assert!(save_artifact(&tmp("short"), &model, &short, &SaveOptions::default()).is_err());
+    // a q4 prefix whose "codes" are not 4-bit must be rejected before
+    // nibble-packing silently corrupts them
+    let nm = matmul_param_names(&model).len();
+    let nd = param_specs(&model).len() - nm;
+    let mut prefix: Vec<HostTensor> = Vec::new();
+    for _ in 0..nd {
+        prefix.push(HostTensor::f32(vec![0.0], vec![1]));
+    }
+    for _ in 0..nm {
+        prefix.push(HostTensor::u8(vec![200, 3], vec![2])); // 200 >= 16
+    }
+    for _ in 0..nm {
+        prefix.push(HostTensor::u8(vec![1], vec![1]));
+    }
+    for _ in 0..nm {
+        prefix.push(HostTensor::f32(vec![0.0, 1.0], vec![2]));
+    }
+    for _ in 0..2 * nm {
+        prefix.push(HostTensor::u32(Vec::new(), vec![0]));
+    }
+    prefix.push(HostTensor::f32(vec![0.0; 16], vec![16]));
+    let p = EngineParams::QuantizedQ4(prefix);
+    let e = save_artifact(&tmp("wide"), &model, &p, &SaveOptions::default()).unwrap_err();
+    assert!(format!("{e}").contains("4-bit"), "{e}");
+}

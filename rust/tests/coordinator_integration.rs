@@ -429,6 +429,148 @@ fn opq_q4_engine_serves_sessions_bit_identical_to_patched_dense() {
     assert_eq!(opq_engine.metrics.core.get("sessions"), 6);
 }
 
+/// Shared-weight serving: every replica reads the one Arc-shared weight
+/// set, so parameter bytes are resident once no matter the replica
+/// count — only the private KV slabs scale. Pins the strong-count
+/// invariant (`replicas + 1` handles while running) and the
+/// [`Engine::memory_profile`] accounting.
+#[test]
+fn replicas_share_one_weight_set() {
+    let rt = Arc::new(Runtime::new().unwrap());
+    let params = rt
+        .run("init_params", &[HostTensor::scalar_u32(3)])
+        .unwrap();
+    let e1 = Engine::start(rt.clone(), params.clone(), EngineConfig::default()).unwrap();
+    let e3 = Engine::start(
+        rt.clone(),
+        params,
+        EngineConfig {
+            replicas: 3,
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap();
+    // sharing invariant: one handle per running replica + the engine's
+    assert_eq!(Arc::strong_count(e1.shared_weights()), 2);
+    assert_eq!(Arc::strong_count(e3.shared_weights()), 4);
+    let p1 = e1.memory_profile().clone();
+    let p3 = e3.memory_profile().clone();
+    assert!(p1.shared_param_bytes > 0, "{p1:?}");
+    assert_eq!(
+        p1.shared_param_bytes, p3.shared_param_bytes,
+        "parameter bytes scaled with replica count"
+    );
+    assert_eq!(p1.per_replica_bytes.len(), 1);
+    assert_eq!(p3.per_replica_bytes.len(), 3);
+    // totals are internally consistent and grow sub-linearly: tripling
+    // replicas only triples the private slabs, never the weights
+    assert_eq!(
+        p1.total_resident_bytes,
+        p1.shared_param_bytes + p1.per_replica_bytes.iter().sum::<usize>()
+    );
+    assert_eq!(
+        p3.total_resident_bytes,
+        p3.shared_param_bytes + p3.per_replica_bytes.iter().sum::<usize>()
+    );
+    assert!(
+        p3.total_resident_bytes < 3 * p1.total_resident_bytes,
+        "resident bytes scaled linearly: {} @1r vs {} @3r",
+        p1.total_resident_bytes,
+        p3.total_resident_bytes
+    );
+    // both engines still serve, and identically
+    let a = e1.generate(&[1, 2, 3], 4).unwrap();
+    let b = e3.generate(&[1, 2, 3], 4).unwrap();
+    assert_eq!(a, b);
+    assert_eq!(a.len(), 4);
+}
+
+/// Artifact round-trip through the engine: save → load → serve must be
+/// bit-identical (tokens and logits) to the in-memory engine, for a
+/// dense artifact, a q4+OPQ artifact with a non-empty outlier
+/// side-table, and the RLE compressed-at-rest variant.
+#[test]
+fn artifact_reload_serves_bit_identical_streams() {
+    use bof4::coordinator::EngineParams;
+    use bof4::eval::{load_artifact, save_artifact, SaveOptions};
+    use bof4::models::ParamSet;
+    use bof4::quant::OpqConfig;
+
+    let rt = Arc::new(Runtime::new().unwrap());
+    let params = rt
+        .run("init_params", &[HostTensor::scalar_u32(7)])
+        .unwrap();
+    let gm = rt.meta.graph("lm_nll").unwrap().clone();
+    let mut pset = ParamSet::from_tensors(&gm, &params).unwrap();
+    for (name, shape, data) in pset.entries.iter_mut() {
+        if shape.len() == 2 && name.contains(".w") {
+            for i in (5..data.len()).step_by(409) {
+                data[i] *= 30.0;
+            }
+        }
+    }
+    let qsp = bof4::eval::quantize_for_serving(
+        &rt.meta,
+        &pset,
+        &QuantConfig {
+            method: Method::Bof4 { mse: true },
+            norm: Norm::SignedAbsmax,
+            block: rt.meta.model.block,
+            opq: Some(OpqConfig::default()),
+            double_quant: true,
+        },
+    )
+    .unwrap();
+    assert!(qsp.outliers > 0, "spiked weights must yield outliers");
+
+    let cases = [
+        ("dense", EngineParams::Dense(qsp.dense.clone()), false),
+        ("q4opq", EngineParams::QuantizedQ4(qsp.prefix.clone()), false),
+        ("q4opq_rle", EngineParams::QuantizedQ4(qsp.prefix.clone()), true),
+    ];
+    for (tag, p, compress) in cases {
+        let path = std::env::temp_dir().join(format!("bof4_test_artifact_serve_{tag}.bof4"));
+        let info = save_artifact(
+            &path,
+            &rt.meta.model,
+            &p,
+            &SaveOptions {
+                label: tag.into(),
+                compress,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(info.compressed, compress, "{tag}");
+        let (loaded, linfo) = load_artifact(&path, &rt.meta.model).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(linfo.kind, info.kind, "{tag}");
+        assert_eq!(linfo.n_tensors, info.n_tensors, "{tag}");
+        let mem_engine = Engine::start(rt.clone(), p, EngineConfig::default()).unwrap();
+        let art_engine = Engine::start(rt.clone(), loaded, EngineConfig::default()).unwrap();
+        for prompt in [&[1u8, 2, 3][..], &[40; 12][..]] {
+            let a: Vec<_> = mem_engine
+                .session_with(prompt, 6)
+                .unwrap()
+                .map(|ev| {
+                    let ev = ev.unwrap();
+                    (ev.next_token, ev.logit)
+                })
+                .collect();
+            let b: Vec<_> = art_engine
+                .session_with(prompt, 6)
+                .unwrap()
+                .map(|ev| {
+                    let ev = ev.unwrap();
+                    (ev.next_token, ev.logit)
+                })
+                .collect();
+            assert_eq!(a, b, "{tag}: artifact stream diverged for {prompt:?}");
+            assert_eq!(a.len(), 6);
+        }
+    }
+}
+
 /// The full-context fallback mode (what `Engine::start` auto-selects on
 /// backends without the KV serving graphs, e.g. the XLA artifact ABI)
 /// must stream exactly the same tokens and logits as KV-cached serving.

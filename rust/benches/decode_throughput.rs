@@ -13,7 +13,11 @@
 //! Two more legs pin the PR-6 serving contracts: cold-start wall time
 //! in-memory vs from the on-disk model artifact (streams bit-identical),
 //! and resident-byte accounting at 1 vs 2 replicas (shared parameter
-//! bytes identical, total strictly sub-linear).
+//! bytes identical, total strictly sub-linear). The PR-7 KV legs serve
+//! the same weights with the per-session cache pinned `f32` vs `q8`
+//! (block-wise absmax int8, fused dequant attention) and assert the q8
+//! decode overhead stays < 15%; `kv_format`, `kv_bytes_per_token` and
+//! `sessions_per_gb` land in the JSON.
 //!
 //! ```bash
 //! cargo bench --bench decode_throughput          # full run
@@ -111,6 +115,28 @@ fn main() {
             r.opq_overhead()
         );
     }
+    // the quantized-KV contract: the fused q8 dequant inside the decode
+    // attention must cost < 15% over the f32 KV baseline (the legs are
+    // None on backends without the in-place decode protocol — skip)
+    if let (Some(f32_kv), Some(q8_kv)) = (r.engine_kv_f32, r.engine_kv_q8) {
+        assert!(
+            q8_kv.as_secs_f64() <= f32_kv.as_secs_f64() * 1.15,
+            "q8-KV decode overhead too high: q8 {:?} vs f32 {:?} ({:.3}x)",
+            q8_kv,
+            f32_kv,
+            r.kv_overhead()
+        );
+        println!(
+            "kv cache: f32 {:.3}s | q8 {:.3}s (fused dequant overhead {:.3}x) | \
+             serving format {} at {} KV bytes/token ({:.0} sessions/GB)",
+            f32_kv.as_secs_f64(),
+            q8_kv.as_secs_f64(),
+            r.kv_overhead(),
+            r.kv_format,
+            r.kv_bytes_per_token,
+            r.sessions_per_gb
+        );
+    }
     // the shared-weight contract: parameters are resident once no matter
     // the replica count, so doubling replicas must grow total resident
     // bytes strictly sub-linearly (decode_throughput already pinned
@@ -179,7 +205,15 @@ fn main() {
             Json::Num(r.total_resident_2 as f64),
         ),
         ("replica_growth", Json::Num(r.replica_growth())),
+        ("kv_format", Json::Str(r.kv_format.into())),
+        ("kv_bytes_per_token", Json::Num(r.kv_bytes_per_token as f64)),
+        ("sessions_per_gb", Json::Num(r.sessions_per_gb)),
     ];
+    if let (Some(f32_kv), Some(q8_kv)) = (r.engine_kv_f32, r.engine_kv_q8) {
+        fields.push(("engine_kv_f32_s", Json::Num(f32_kv.as_secs_f64())));
+        fields.push(("engine_kv_q8_s", Json::Num(q8_kv.as_secs_f64())));
+        fields.push(("kv_overhead", Json::Num(r.kv_overhead())));
+    }
     if let (Some(q4), Some(q4_opq)) = (r.engine_q4, r.engine_q4_opq) {
         fields.push(("engine_q4_s", Json::Num(q4.as_secs_f64())));
         fields.push(("engine_q4_opq_s", Json::Num(q4_opq.as_secs_f64())));

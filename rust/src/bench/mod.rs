@@ -85,6 +85,22 @@ pub struct DecodeThroughput {
     /// forced to the scalar path (equals `engine` on non-CPU backends or
     /// when the active path is already `none`).
     pub engine_scalar: Duration,
+    /// Engine wall time over the dense weights with the KV cache pinned
+    /// `f32` — the baseline for the quantized-KV overhead contract.
+    /// `None` off-CPU (quantized KV needs the in-place decode protocol).
+    pub engine_kv_f32: Option<Duration>,
+    /// Engine wall time over the same dense weights with the KV cache
+    /// pinned `q8` (block-wise absmax int8, dequantized fused inside the
+    /// decode attention). `None` alongside `engine_kv_f32`.
+    pub engine_kv_q8: Option<Duration>,
+    /// KV-cache format of the measured (default-config) engine.
+    pub kv_format: &'static str,
+    /// Resident KV bytes one session costs per context token at the
+    /// measured engine's format (0 in full-context mode).
+    pub kv_bytes_per_token: usize,
+    /// Sessions per GiB of KV-cache memory at the measured engine's
+    /// format (0.0 in full-context mode).
+    pub sessions_per_gb: f64,
     /// Engine wall time serving the q4 serving path (4-bit codes + DQ
     /// constants, empty outlier side-table). `None` when the backend has
     /// no q4 serving graphs.
@@ -168,6 +184,16 @@ impl DecodeThroughput {
         }
     }
 
+    /// Relative decode cost of the q8 KV cache over the f32 baseline:
+    /// `engine_kv_q8 / engine_kv_f32` (1.0 when the KV legs did not
+    /// run). The release smoke asserts this stays under 1.15.
+    pub fn kv_overhead(&self) -> f64 {
+        match (self.engine_kv_f32, self.engine_kv_q8) {
+            (Some(f), Some(q)) => q.as_secs_f64() / f.as_secs_f64().max(1e-12),
+            _ => 1.0,
+        }
+    }
+
     /// Resident-byte growth when doubling the replica count:
     /// `total_resident_2 / total_resident_1`. Must stay strictly below
     /// 2.0 — the shared weight set is counted once no matter how many
@@ -200,6 +226,13 @@ impl DecodeThroughput {
 /// ([`crate::eval::save_artifact`] / [`crate::eval::load_artifact`])
 /// with the artifact-loaded engine required to serve the identical
 /// token stream. Cold-start wall times for both paths are reported.
+///
+/// The PR-7 KV legs serve the dense weights twice more with the
+/// per-session cache pinned [`crate::quant::KvFormat::F32`] vs
+/// [`crate::quant::KvFormat::Q8`], pricing the fused q8 dequant inside
+/// the decode attention ([`DecodeThroughput::kv_overhead`]); the
+/// measured engine's KV format, per-token cache bytes and sessions/GiB
+/// are reported alongside.
 pub fn decode_throughput(
     rt: &std::sync::Arc<crate::runtime::Runtime>,
     params: Vec<crate::runtime::HostTensor>,
@@ -335,6 +368,48 @@ pub fn decode_throughput(
         }
     }
 
+    // KV-format legs: the same dense weights served with the per-session
+    // cache pinned f32 vs pinned q8 (block-wise absmax int8, fused
+    // dequant attention). Prices the quantized-KV decode overhead
+    // independently of the `BOF4_KV` env default. CPU backend only
+    // (quantized KV needs the in-place decode protocol).
+    let mut engine_kv_f32 = None;
+    let mut engine_kv_q8 = None;
+    if rt.platform() == "cpu-interpreter" && rt.meta.graphs.contains_key("lm_prefill") {
+        use crate::quant::KvFormat;
+        for (fmt, slot) in [
+            (KvFormat::F32, &mut engine_kv_f32),
+            (KvFormat::Q8, &mut engine_kv_q8),
+        ] {
+            let eng = Engine::start(
+                rt.clone(),
+                params.clone(),
+                EngineConfig {
+                    kv_format: fmt,
+                    ..EngineConfig::default()
+                },
+            )?;
+            // warm-up, then best-of-3 — the smoke asserts a hard 15%
+            // margin between the legs, so a single sample would be at
+            // the mercy of scheduler noise
+            let _ = eng.generate(prompt, n_tokens.min(8))?;
+            let mut best: Option<Duration> = None;
+            for _ in 0..3 {
+                let t0 = Instant::now();
+                let got = eng.generate(prompt, n_tokens)?;
+                let dt = t0.elapsed();
+                if got.len() != n_tokens {
+                    return Err(crate::err!(
+                        "{fmt}-KV leg decoded {} of {n_tokens}",
+                        got.len()
+                    ));
+                }
+                best = Some(best.map_or(dt, |b| b.min(dt)));
+            }
+            *slot = best;
+        }
+    }
+
     // (d) the session engine: prefill + incremental in-place decode.
     // `Engine::start` is timed separately as the warm (in-memory)
     // cold-start baseline for the artifact leg below.
@@ -373,6 +448,9 @@ pub fn decode_throughput(
     // bench run re-checks the invariant.
     let prof = engine.memory_profile();
     let replicas = prof.replicas;
+    let kv_format = prof.kv_format;
+    let kv_bytes_per_token = prof.session_kv_bytes / s.max(1);
+    let sessions_per_gb = prof.sessions_per_gb().unwrap_or(0.0);
     let shared_param_bytes = prof.shared_param_bytes;
     let per_replica_bytes = prof.per_replica_bytes.first().copied().unwrap_or(0);
     let total_resident_1 = prof.total_resident_bytes;
@@ -436,6 +514,11 @@ pub fn decode_throughput(
         engine: engine_elapsed,
         engine_single: engine_single.unwrap_or(engine_elapsed),
         engine_scalar: engine_scalar.unwrap_or(engine_elapsed),
+        engine_kv_f32,
+        engine_kv_q8,
+        kv_format,
+        kv_bytes_per_token,
+        sessions_per_gb,
         engine_q4,
         engine_q4_opq,
         opq_outliers,

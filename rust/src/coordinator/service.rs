@@ -51,7 +51,7 @@ use crate::error::Result;
 
 use super::metrics::{EngineMetrics, Metrics};
 use crate::models::corpus::TOK_SPACE;
-use crate::runtime::{DecodeState, HostTensor, Runtime};
+use crate::runtime::{DecodeState, HostTensor, KvFormat, Runtime};
 
 /// One streamed token: the greedy argmax and its logit value.
 #[derive(Clone, Debug, PartialEq)]
@@ -97,6 +97,17 @@ pub struct EngineConfig {
     /// stream ends — the maximum session length is
     /// `1 + seq_len - prompt_len` tokens.
     pub max_session_tokens: usize,
+    /// Storage format of the per-session KV caches (defaults from the
+    /// `BOF4_KV` env knob; see [`crate::quant::KvFormat`]). `F32` keeps
+    /// streams bit-identical to the pre-knob engine; `Q8`/`Q4` hold
+    /// block-quantized resident slabs, quantized at append and
+    /// dequantized fused inside the decode attention — deterministic
+    /// across `BOF4_THREADS × BOF4_SIMD`, at a small, format-dependent
+    /// accuracy cost. Quantized formats require a backend with in-place
+    /// decode support (the CPU backend has it); engine start fails
+    /// rather than silently serving f32. Irrelevant in full-context
+    /// mode, which keeps no KV cache at all.
+    pub kv_format: KvFormat,
 }
 
 impl Default for EngineConfig {
@@ -105,6 +116,7 @@ impl Default for EngineConfig {
             replicas: 1,
             window: Duration::from_millis(5),
             max_session_tokens: usize::MAX,
+            kv_format: KvFormat::from_env(),
         }
     }
 }
@@ -159,6 +171,21 @@ pub struct EngineMemoryProfile {
     /// Unique bytes across the weight set and every replica:
     /// `shared_param_bytes + sum(per_replica_bytes)`.
     pub total_resident_bytes: usize,
+    /// Active KV-cache storage format (`"f32" | "q8" | "q4"` — the
+    /// [`EngineConfig::kv_format`] knob).
+    pub kv_format: &'static str,
+    /// Resident KV-cache bytes one session (one batch slot) costs under
+    /// that format. `0` in full-context mode, which keeps no KV cache.
+    pub session_kv_bytes: usize,
+}
+
+impl EngineMemoryProfile {
+    /// Concurrent sessions one GiB of KV-cache memory holds under the
+    /// active format — the serving-capacity headline `bof4 serve`
+    /// prints. `None` in full-context mode (no KV cache to size by).
+    pub fn sessions_per_gb(&self) -> Option<f64> {
+        (self.session_kv_bytes > 0).then(|| (1u64 << 30) as f64 / self.session_kv_bytes as f64)
+    }
 }
 
 /// Greedy sampling helper: `(argmax index, max logit)`. Ties resolve to
@@ -325,6 +352,7 @@ impl Engine {
                 rt.clone(),
                 weights.clone(),
                 mode,
+                cfg.kv_format,
                 prefill_graph,
                 decode_graph,
                 cfg.window,
@@ -363,11 +391,19 @@ impl Engine {
             crate::runtime::host::unique_resident_bytes(weights.iter(), &mut seen);
         let per_replica_bytes: Vec<usize> =
             built.iter().map(|r| r.private_bytes(&mut seen)).collect();
+        // replicas are homogeneous: format and per-session cost come
+        // from the first one (start_inner builds at least one)
+        let (kv_format, session_kv_bytes) = built
+            .first()
+            .map(|r| (r.kv.name(), r.session_kv_bytes()))
+            .unwrap_or(("f32", 0));
         EngineMemoryProfile {
             replicas: built.len(),
             shared_param_bytes,
             total_resident_bytes: shared_param_bytes + per_replica_bytes.iter().sum::<usize>(),
             per_replica_bytes,
+            kv_format,
+            session_kv_bytes,
         }
     }
 
@@ -510,6 +546,9 @@ struct Replica {
     /// accounting; the argument vectors below view its buffers).
     weights: SharedWeights,
     mode: ServingMode,
+    /// KV-cache storage format of this replica's resident state
+    /// ([`EngineConfig::kv_format`]).
+    kv: KvFormat,
     prefill_graph: &'static str,
     decode_graph: &'static str,
     window: Duration,
@@ -543,6 +582,7 @@ impl Replica {
         rt: Arc<Runtime>,
         weights: SharedWeights,
         mode: ServingMode,
+        kv: KvFormat,
         prefill_graph: &'static str,
         decode_graph: &'static str,
         window: Duration,
@@ -552,10 +592,12 @@ impl Replica {
         let (b, s, d) = (m.batch, m.seq_len, m.d_model);
         let n_prefix = weights.len();
         // Ok(None) means the backend has no in-place support (fall back
-        // to the clone path); an Err is a real allocation failure and
-        // must surface rather than silently degrade to the slow path.
+        // to the clone path, which always carries f32 slabs); an Err is
+        // a real allocation failure — or a quantized-KV request the
+        // backend cannot honour — and must surface rather than silently
+        // degrade.
         let kv_state = if mode == ServingMode::KvCached {
-            rt.alloc_decode_state(decode_graph)?
+            rt.alloc_decode_state_fmt(decode_graph, kv)?
         } else {
             None
         };
@@ -581,6 +623,7 @@ impl Replica {
             rt,
             weights,
             mode,
+            kv,
             prefill_graph,
             decode_graph,
             window,
@@ -614,6 +657,19 @@ impl Replica {
             self.decode_args.iter().chain(self.prefill_args.iter()),
             seen,
         ) + self.kv_state.as_ref().map_or(0, |st| st.resident_bytes())
+    }
+
+    /// Resident KV-cache bytes one batch slot (one session) costs on
+    /// this replica: the backend-resident state divided across its
+    /// slots, or the clone-path f32 slab share; 0 in full-context mode.
+    fn session_kv_bytes(&self) -> usize {
+        match &self.kv_state {
+            Some(st) => st.resident_bytes() / self.batch,
+            None if self.mode == ServingMode::KvCached => {
+                2 * self.n_layers * self.seq * self.d_model * 4
+            }
+            None => 0,
+        }
     }
 
     fn run(mut self, rx: mpsc::Receiver<SessionReq>) {

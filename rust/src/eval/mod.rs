@@ -26,7 +26,7 @@ pub mod tasks;
 pub mod trainer;
 
 pub use artifact::{load_artifact, save_artifact, ArtifactInfo, ArtifactKind, SaveOptions};
-pub use ppl::perplexity;
+pub use ppl::{kv_decode_perplexity, perplexity};
 pub use quantized::{
     dense_from_q4_prefix, quantize_for_serving, quantize_params, QuantizedServingParams,
 };

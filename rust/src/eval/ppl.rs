@@ -1,8 +1,12 @@
 //! Held-out perplexity via the AOT'd `lm_nll` graph (the WikiText-2 /
-//! LAMBADA stand-in; same mechanism, different corpus).
+//! LAMBADA stand-in; same mechanism, different corpus), plus the
+//! decode-path variant that scores the same tokens through the KV-cached
+//! serving protocol — the probe for `BOF4_KV` cache-quantization
+//! degradation.
 
 use crate::error::Result;
 use crate::models::{Corpus, ParamSet};
+use crate::quant::KvFormat;
 use crate::runtime::{HostTensor, Runtime};
 
 /// Perplexity evaluation configuration.
@@ -44,6 +48,93 @@ pub fn perplexity(rt: &Runtime, params: &ParamSet, cfg: &PplConfig) -> Result<f6
         total_tokens += m.batch * (m.seq_len - 1);
     }
     Ok((total_nll / total_tokens as f64).exp())
+}
+
+/// Teacher-forced perplexity through the KV-cached decode path at an
+/// explicit cache format — the probe for `BOF4_KV` quantization
+/// degradation. Each eval row is prefixed on its first token, then
+/// advanced one `lm_decode_step` at a time with the **ground-truth**
+/// token teacher-forced in (greedy sampling never diverges the context),
+/// scoring every next-token prediction; K/V rows therefore pass through
+/// the format's quantize-at-append / fused-dequant-attention cycle at
+/// every position, exactly as in serving. At
+/// [`KvFormat::F32`] this equals [`perplexity`] up to the
+/// full-forward-vs-decode execution order (bit-identical on the CPU
+/// backend, same token count either way); at `Q8`/`Q4` the difference
+/// **is** the cache-quantization degradation. Needs a backend with the
+/// in-place decode protocol.
+pub fn kv_decode_perplexity(
+    rt: &Runtime,
+    params: &ParamSet,
+    kv: KvFormat,
+    cfg: &PplConfig,
+) -> Result<f64> {
+    use crate::models::corpus::TOK_SPACE;
+    let m = rt.meta.model.clone();
+    let (b, s, v, d) = (m.batch, m.seq_len, m.vocab, m.d_model);
+    let corpus = Corpus::generate(cfg.corpus_tokens, cfg.corpus_seed);
+    let (_, eval_split) = corpus.split(0.9);
+    let tensors = params.to_tensors();
+
+    let mut total_nll = 0.0f64;
+    let mut total_tokens = 0usize;
+    for step in 0..cfg.batches {
+        let tokens = corpus.batch(eval_split, b, s, step);
+        let mut state = rt
+            .alloc_decode_state_fmt("lm_decode_step", kv)?
+            .ok_or_else(|| {
+                crate::err!(
+                    "backend {} has no in-place decode state; the KV \
+                     perplexity eval needs it",
+                    rt.platform()
+                )
+            })?;
+        // prefill every row on its first token only (len = 1), scatter
+        // the returned K/V rows into the resident state — the same
+        // admission move the serving engine makes
+        let mut ptoks = vec![TOK_SPACE as i32; b * s];
+        for i in 0..b {
+            ptoks[i * s] = tokens[i * s];
+        }
+        let mut args = tensors.clone();
+        args.push(HostTensor::i32(ptoks, vec![b, s]));
+        args.push(HostTensor::i32(vec![1i32; b], vec![b]));
+        let out = rt.run("lm_prefill", &args)?;
+        let row = s * d;
+        for c in 0..2 * m.n_layers {
+            let src = out[1 + c].as_f32()?;
+            for i in 0..b {
+                state.load_slot(c, i, &src[i * row..(i + 1) * row])?;
+            }
+        }
+        // logits predict position p; teacher-force token p in, repeat
+        let mut logits = out[0].as_f32()?.to_vec();
+        for p in 1..s {
+            for i in 0..b {
+                let target = tokens[i * s + p] as usize;
+                total_nll += nll_one(&logits[i * v..(i + 1) * v], target);
+                total_tokens += 1;
+            }
+            if p == s - 1 {
+                break;
+            }
+            let tok: Vec<i32> = (0..b).map(|i| tokens[i * s + p]).collect();
+            let mut dargs = tensors.clone();
+            dargs.push(HostTensor::i32(tok, vec![b]));
+            dargs.push(HostTensor::i32(vec![p as i32; b], vec![b]));
+            let dout = rt.run_decode_step_inplace("lm_decode_step", state.as_mut(), &dargs)?;
+            logits = dout[0].as_f32()?.to_vec();
+        }
+    }
+    Ok((total_nll / total_tokens as f64).exp())
+}
+
+/// `-log softmax(logits)[target]`, accumulated in f64 with the usual
+/// max-subtraction for stability.
+fn nll_one(logits: &[f32], target: usize) -> f64 {
+    let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let sum: f64 = logits.iter().map(|&x| (x as f64 - max).exp()).sum();
+    max + sum.ln() - logits[target] as f64
 }
 
 /// Perplexity + the (MAE, MSE) of the quantized weights vs the originals —

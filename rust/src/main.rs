@@ -225,6 +225,11 @@ fn serve(rest: Vec<String>) -> Result<()> {
         .opt("requests", Some("64"), "demo session count")
         .opt("tokens", Some("8"), "tokens streamed per session")
         .opt("replicas", Some("1"), "model replicas behind the router")
+        .opt(
+            "kv",
+            None,
+            "per-session KV-cache format: f32|q8|q4 (default: BOF4_KV env, else f32)",
+        )
         .flag(
             "dequant",
             "serve exactly-dequantized f32 weights through the dense graphs \
@@ -307,11 +312,16 @@ fn serve(rest: Vec<String>) -> Result<()> {
             if info.compressed { " (RLE)" } else { "" }
         );
     }
+    let kv_format = match p.get("kv") {
+        Some(s) => bof4::quant::KvFormat::parse(s)?,
+        None => bof4::quant::KvFormat::from_env(),
+    };
     let engine = bof4::coordinator::Engine::start(
         rt.clone(),
         engine_params,
         bof4::coordinator::EngineConfig {
             replicas: p.get_usize("replicas").unwrap_or(1),
+            kv_format,
             ..Default::default()
         },
     )?;
@@ -324,6 +334,13 @@ fn serve(rest: Vec<String>) -> Result<()> {
         mem.per_replica_bytes.first().copied().unwrap_or(0),
         mem.total_resident_bytes
     );
+    match mem.sessions_per_gb() {
+        Some(spg) => println!(
+            "kv cache: {} format, {} bytes/session ({:.0} sessions/GB)",
+            mem.kv_format, mem.session_kv_bytes, spg
+        ),
+        None => println!("kv cache: none (full-context mode)"),
+    }
     let n = p.get_usize("requests").unwrap_or(64);
     let tokens = p.get_usize("tokens").unwrap_or(8);
     let corpus = bof4::models::Corpus::generate(50_000, 5);
@@ -374,6 +391,12 @@ fn info_cmd(_rest: Vec<String>) -> Result<()> {
         "kernel simd: {} (set BOF4_SIMD=0|1|array|avx2 to override; \
          results are bit-identical on every path)",
         rt.simd_path().unwrap_or("n/a")
+    );
+    println!(
+        "kv cache format: {} (set BOF4_KV=f32|q8|q4 to override; q8/q4 \
+         quantize per-session caches block-wise, dequantized fused inside \
+         decode attention)",
+        bof4::quant::KvFormat::from_env()
     );
     println!("model: {:?}", rt.meta.model);
     println!("graphs:");

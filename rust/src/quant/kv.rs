@@ -1,0 +1,377 @@
+//! Block-wise quantization of KV-cache *activations* (the `BOF4_KV`
+//! subsystem) — the paper's weight machinery (absmax block constants,
+//! BOF4 codebooks) turned onto the per-position K/V rows the serving
+//! engine keeps resident, the W4A8/BlockDialect direction of PAPERS.md.
+//!
+//! Three formats, selected by [`KvFormat`] (`EngineConfig::kv_format`,
+//! env-overridable via `BOF4_KV=f32|q8|q4` like `BOF4_THREADS` /
+//! `BOF4_SIMD`):
+//!
+//! - **f32** (default): the existing resident slabs, byte-for-byte
+//!   unchanged — streams stay bit-identical to the pre-`BOF4_KV` engine.
+//! - **q8**: block-wise absmax int8. Each `d_model`-element K/V row is
+//!   split into blocks of `block` elements; per block one f32 scale
+//!   `absmax/127` plus one signed byte per element
+//!   (`code = round(x/absmax * 127)`, reconstruction `code * scale`).
+//!   1 B/element + 4 B/block ⇒ ≥3.5× smaller than f32 at the canonical
+//!   geometry.
+//! - **q4** (experimental): BOF4 4-bit codes against a 16-level
+//!   codebook, nibble-packed two per byte, one f32 block constant per
+//!   block. 0.5 B/element + 4 B/block.
+//!
+//! Quantization happens **at append** (prefill scatter + each decode
+//! step's new K/V column); dequantization is fused into the decode
+//! attention kernels ([`crate::runtime::kernels::kv`]) through the same
+//! canonical 8-lane reduction order as every other kernel, so quantized
+//! streams are deterministic across `BOF4_THREADS × BOF4_SIMD`.
+//!
+//! The row quantizers here are deliberately scalar and path-independent:
+//! append cost is O(d_model) per token against the O(d_model · seq)
+//! attention that reads it back, and a single implementation keeps the
+//! encode bits trivially identical at every knob setting.
+
+use std::sync::OnceLock;
+
+use super::absmax::{block_constant, safe_constant, Norm};
+use super::codebook::Codebook;
+use super::pack::get_u4;
+use crate::error::Result;
+
+/// Storage format of the engine's resident K/V cache slabs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KvFormat {
+    /// Unquantized f32 rows (bit-identical to the pre-`BOF4_KV` engine).
+    F32,
+    /// Block-wise absmax int8 codes + one f32 scale per block.
+    Q8,
+    /// Block-wise BOF4 4-bit codes (nibble-packed) + one f32 constant
+    /// per block (experimental).
+    Q4,
+}
+
+impl KvFormat {
+    /// Knob spelling, as accepted by `BOF4_KV` and `bof4 serve --kv`.
+    pub fn name(&self) -> &'static str {
+        match self {
+            KvFormat::F32 => "f32",
+            KvFormat::Q8 => "q8",
+            KvFormat::Q4 => "q4",
+        }
+    }
+
+    /// Parse a knob value (`f32|q8|q4`, case-insensitive).
+    pub fn parse(s: &str) -> Result<KvFormat> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" | "" => Ok(KvFormat::F32),
+            "q8" | "int8" => Ok(KvFormat::Q8),
+            "q4" | "bof4" => Ok(KvFormat::Q4),
+            other => Err(crate::err!(
+                "unknown KV format '{other}' (expected 'f32', 'q8' or 'q4')"
+            )),
+        }
+    }
+
+    /// Format from `BOF4_KV`, else `F32`. Cached after first read (the
+    /// same once-per-process contract as `BOF4_THREADS`/`BOF4_SIMD`);
+    /// unparseable values fall back to `F32` rather than failing engine
+    /// start.
+    pub fn from_env() -> KvFormat {
+        static FMT: OnceLock<KvFormat> = OnceLock::new();
+        *FMT.get_or_init(|| match std::env::var("BOF4_KV") {
+            Ok(v) => KvFormat::parse(&v).unwrap_or(KvFormat::F32),
+            Err(_) => KvFormat::F32,
+        })
+    }
+
+    /// Bytes of resident storage per `d`-element K/V row under this
+    /// format with `block`-element quantization blocks (codes + per-block
+    /// constants; f32 rows have no constants).
+    pub fn row_bytes(&self, d: usize, block: usize) -> usize {
+        let nb = d.div_ceil(block.max(1));
+        match self {
+            KvFormat::F32 => 4 * d,
+            KvFormat::Q8 => d + 4 * nb,
+            KvFormat::Q4 => d.div_ceil(2) + 4 * nb,
+        }
+    }
+}
+
+impl std::fmt::Display for KvFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Quantize one activation row block-wise to absmax int8.
+///
+/// `codes` receives one signed byte per element (two's-complement bit
+/// pattern stored as `u8`); `scales` one f32 per block
+/// (`safe_constant(c)/127`, so all-zero blocks reconstruct exactly and a
+/// NaN anywhere in a block poisons that block's scale, mirroring
+/// [`block_constant`]). Non-finite elements encode to code 0 — no panic,
+/// but no reconstruction guarantee (the error bound below is for finite
+/// rows).
+///
+/// Reconstruction error: `|x - code*scale| <= |c|/254 + eps` per element
+/// (half a q8 step of the block's absmax).
+pub fn quantize_row_q8(row: &[f32], block: usize, norm: Norm, codes: &mut [u8], scales: &mut [f32]) {
+    assert!(block > 0, "kv quant block must be positive");
+    assert_eq!(codes.len(), row.len(), "q8 codes buffer mismatch");
+    assert_eq!(scales.len(), row.len().div_ceil(block), "q8 scales buffer mismatch");
+    for (bi, chunk) in row.chunks(block).enumerate() {
+        let c = safe_constant(block_constant(chunk, norm));
+        scales[bi] = c / 127.0;
+        let inv = 1.0 / c;
+        for (j, &x) in chunk.iter().enumerate() {
+            // NaN and ±inf saturate/zero through the `as` cast — never a
+            // panic, and the block stays readable
+            let q = (x * inv * 127.0).round().clamp(-127.0, 127.0) as i8;
+            codes[bi * block + j] = q as u8;
+        }
+    }
+}
+
+/// Dequantize a full q8 row (slow path: tests, eval, debugging — the
+/// serving path reads blocks fused inside the attention kernels).
+pub fn dequantize_row_q8(codes: &[u8], scales: &[f32], block: usize, out: &mut [f32]) {
+    assert_eq!(codes.len(), out.len());
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = (codes[i] as i8) as f32 * scales[i / block];
+    }
+}
+
+/// Quantize one activation row block-wise to 4-bit codes against `cb`
+/// (the BOF4 / BOF4-S codebook over normalized values), nibble-packed
+/// two per byte. `scales` receives one `safe_constant` per block (the
+/// raw block constant, not divided — reconstruction is
+/// `cb.decode1(code) * scale`). `row.len()` must be even (nibble
+/// packing; the engine enforces even `d_model` for q4 KV).
+pub fn quantize_row_q4(
+    row: &[f32],
+    block: usize,
+    norm: Norm,
+    cb: &Codebook,
+    codes: &mut [u8],
+    scales: &mut [f32],
+) {
+    assert!(block > 0, "kv quant block must be positive");
+    assert_eq!(row.len() % 2, 0, "q4 KV rows must have even length");
+    assert_eq!(codes.len(), row.len() / 2, "q4 codes buffer mismatch");
+    assert_eq!(scales.len(), row.len().div_ceil(block), "q4 scales buffer mismatch");
+    for (bi, chunk) in row.chunks(block).enumerate() {
+        let c = safe_constant(block_constant(chunk, norm));
+        scales[bi] = c;
+        let inv = 1.0 / c;
+        for (j, &x) in chunk.iter().enumerate() {
+            let code = cb.encode1(x * inv);
+            let e = bi * block + j;
+            let b = &mut codes[e / 2];
+            if e % 2 == 0 {
+                *b = (*b & 0xf0) | code;
+            } else {
+                *b = (*b & 0x0f) | (code << 4);
+            }
+        }
+    }
+}
+
+/// Dequantize a full q4 row (slow path, as [`dequantize_row_q8`]).
+pub fn dequantize_row_q4(
+    codes: &[u8],
+    scales: &[f32],
+    block: usize,
+    levels: &[f32; 16],
+    out: &mut [f32],
+) {
+    assert_eq!(codes.len() * 2, out.len());
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = levels[get_u4(codes, i) as usize] * scales[i / block];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{codebook_for, Method};
+    use crate::testkit::{forall, GaussianVec, Prop};
+
+    fn levels(norm: Norm, block: usize) -> [f32; 16] {
+        let cb = codebook_for(&Method::Bof4 { mse: true }, norm, block);
+        let mut l = [0.0f32; 16];
+        for (i, v) in l.iter_mut().enumerate() {
+            *v = cb.decode1(i as u8);
+        }
+        l
+    }
+
+    #[test]
+    fn format_parse_and_names() {
+        assert_eq!(KvFormat::parse("f32").unwrap(), KvFormat::F32);
+        assert_eq!(KvFormat::parse("Q8").unwrap(), KvFormat::Q8);
+        assert_eq!(KvFormat::parse(" q4 ").unwrap(), KvFormat::Q4);
+        assert_eq!(KvFormat::parse("int8").unwrap(), KvFormat::Q8);
+        assert!(KvFormat::parse("q2").is_err());
+        for f in [KvFormat::F32, KvFormat::Q8, KvFormat::Q4] {
+            assert_eq!(KvFormat::parse(f.name()).unwrap(), f);
+            assert_eq!(format!("{f}"), f.name());
+        }
+        // from_env is cached and always returns a valid format
+        let f = KvFormat::from_env();
+        assert_eq!(f, KvFormat::from_env());
+    }
+
+    /// The acceptance geometry: at the canonical `d_model=128, block=64`
+    /// the q8 row is ≥3.5× smaller than f32 and q4 ≥6×.
+    #[test]
+    fn row_bytes_reduction_at_canonical_geometry() {
+        let f32b = KvFormat::F32.row_bytes(128, 64);
+        let q8b = KvFormat::Q8.row_bytes(128, 64);
+        let q4b = KvFormat::Q4.row_bytes(128, 64);
+        assert_eq!(f32b, 512);
+        assert_eq!(q8b, 128 + 8);
+        assert_eq!(q4b, 64 + 8);
+        assert!(f32b as f64 / q8b as f64 >= 3.5, "q8 ratio {}", f32b as f64 / q8b as f64);
+        assert!(f32b as f64 / q4b as f64 >= 6.0);
+        // ragged tail: 5 blocks for d=130 @ block 32
+        assert_eq!(KvFormat::Q8.row_bytes(130, 32), 130 + 4 * 5);
+    }
+
+    #[test]
+    fn q8_roundtrip_exact_cases() {
+        // all-zero block reconstructs exactly (safe_constant)
+        let row = [0.0f32; 8];
+        let mut codes = [0u8; 8];
+        let mut scales = [0.0f32; 2];
+        quantize_row_q8(&row, 4, Norm::Absmax, &mut codes, &mut scales);
+        let mut out = [9.0f32; 8];
+        dequantize_row_q8(&codes, &scales, 4, &mut out);
+        assert_eq!(out, [0.0; 8]);
+        // the absmax element itself reconstructs to ±c exactly
+        let row = [1.0f32, -2.0, 0.5, 2.0];
+        quantize_row_q8(&row[..4], 4, Norm::Absmax, &mut codes[..4], &mut scales[..1]);
+        let mut out = [0.0f32; 4];
+        dequantize_row_q8(&codes[..4], &scales[..1], 4, &mut out);
+        assert_eq!(out[1], -2.0);
+        assert_eq!(out[3], 2.0);
+    }
+
+    /// Property: q8 round-trip over ragged tail blocks, both norms —
+    /// never panics, and every finite element reconstructs within half a
+    /// quantization step of the block's constant.
+    #[test]
+    fn property_q8_roundtrip_bounded() {
+        let gen = GaussianVec {
+            max_len: 200,
+            max_scale: 8.0,
+        };
+        for norm in [Norm::Absmax, Norm::SignedAbsmax] {
+            for block in [1usize, 3, 8, 32, 64] {
+                forall("kv-q8-roundtrip", 41, 40, &gen, |row| {
+                    if row.is_empty() {
+                        return Prop::Pass;
+                    }
+                    let nb = row.len().div_ceil(block);
+                    let mut codes = vec![0u8; row.len()];
+                    let mut scales = vec![0.0f32; nb];
+                    quantize_row_q8(row, block, norm, &mut codes, &mut scales);
+                    let mut out = vec![0.0f32; row.len()];
+                    dequantize_row_q8(&codes, &scales, block, &mut out);
+                    for (bi, chunk) in row.chunks(block).enumerate() {
+                        let c = block_constant(chunk, norm).abs();
+                        let bound = c / 254.0 + c * 1e-5 + 1e-7;
+                        for (j, (&x, &y)) in
+                            chunk.iter().zip(&out[bi * block..bi * block + chunk.len()]).enumerate()
+                        {
+                            if (x - y).abs() > bound {
+                                return Prop::Fail(format!(
+                                    "block {bi} elem {j}: {x} -> {y} (bound {bound}, norm {norm:?})"
+                                ));
+                            }
+                        }
+                    }
+                    Prop::Pass
+                });
+            }
+        }
+    }
+
+    /// Property: q4 round-trip error obeys the codebook's normalized
+    /// error bound times the block constant, both norms, ragged tails.
+    #[test]
+    fn property_q4_roundtrip_bounded() {
+        let gen = GaussianVec {
+            max_len: 101,
+            max_scale: 4.0,
+        };
+        for norm in [Norm::Absmax, Norm::SignedAbsmax] {
+            for block in [2usize, 8, 30, 64] {
+                let cb = codebook_for(&Method::Bof4 { mse: true }, norm, block);
+                let lv = levels(norm, block);
+                let max_err = cb.max_norm_error();
+                forall("kv-q4-roundtrip", 43, 40, &gen, |row| {
+                    // nibble packing needs even length
+                    let row = &row[..row.len() & !1];
+                    if row.is_empty() {
+                        return Prop::Pass;
+                    }
+                    let nb = row.len().div_ceil(block);
+                    let mut codes = vec![0u8; row.len() / 2];
+                    let mut scales = vec![0.0f32; nb];
+                    quantize_row_q4(row, block, norm, &cb, &mut codes, &mut scales);
+                    let mut out = vec![0.0f32; row.len()];
+                    dequantize_row_q4(&codes, &scales, block, &lv, &mut out);
+                    for (bi, chunk) in row.chunks(block).enumerate() {
+                        let c = block_constant(chunk, norm).abs();
+                        let bound = c * max_err + c * 1e-5 + 1e-7;
+                        for (j, (&x, &y)) in
+                            chunk.iter().zip(&out[bi * block..bi * block + chunk.len()]).enumerate()
+                        {
+                            if (x - y).abs() > bound {
+                                return Prop::Fail(format!(
+                                    "block {bi} elem {j}: {x} -> {y} (bound {bound}, norm {norm:?})"
+                                ));
+                            }
+                        }
+                    }
+                    Prop::Pass
+                });
+            }
+        }
+    }
+
+    /// NaN / ±inf inputs must not panic under either norm or format; the
+    /// poisoned block stays readable (finite or NaN output, never UB) and
+    /// clean neighbouring blocks are unaffected.
+    #[test]
+    fn non_finite_inputs_never_panic() {
+        let specials = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY];
+        for &bad in &specials {
+            for pos in 0..4 {
+                let mut row = [1.0f32, -0.5, 0.25, 2.0, 0.1, 0.2, -0.3, 0.4];
+                row[pos] = bad;
+                for norm in [Norm::Absmax, Norm::SignedAbsmax] {
+                    let mut codes = [0u8; 8];
+                    let mut scales = [0.0f32; 2];
+                    quantize_row_q8(&row, 4, norm, &mut codes, &mut scales);
+                    let mut out = [0.0f32; 8];
+                    dequantize_row_q8(&codes, &scales, 4, &mut out);
+                    // the clean second block is unaffected by the poisoned first
+                    let c = block_constant(&row[4..], norm).abs();
+                    for (x, y) in row[4..].iter().zip(&out[4..]) {
+                        assert!((x - y).abs() <= c / 254.0 + 1e-6, "{norm:?} {bad}");
+                    }
+                    let cb = codebook_for(&Method::Bof4 { mse: true }, norm, 4);
+                    let lv = levels(norm, 4);
+                    let mut codes4 = [0u8; 4];
+                    quantize_row_q4(&row, 4, norm, &cb, &mut codes4, &mut scales);
+                    let mut out4 = [0.0f32; 8];
+                    dequantize_row_q4(&codes4, &scales, 4, &lv, &mut out4);
+                    let bound = c * cb.max_norm_error() + c * 1e-5 + 1e-6;
+                    for (x, y) in row[4..].iter().zip(&out4[4..]) {
+                        assert!((x - y).abs() <= bound, "{norm:?} {bad}");
+                    }
+                }
+            }
+        }
+    }
+}

@@ -5,6 +5,8 @@
 //! - [`pack`]: 4-bit nibble packing
 //! - [`opq`]: outlier-preserving quantization (§3.3)
 //! - [`double_quant`]: 8-bit quantization of the block constants
+//! - [`kv`]: block-wise quantization of KV-cache activation rows (the
+//!   serving engine's `BOF4_KV=f32|q8|q4` formats)
 //! - [`error`]: MAE/MSE/SQNR metrics
 //!
 //! The high-level entry point is [`Quantizer`]:
@@ -27,12 +29,14 @@ pub mod absmax;
 pub mod codebook;
 pub mod double_quant;
 pub mod error;
+pub mod kv;
 pub mod opq;
 pub mod pack;
 
 pub use absmax::Norm;
 pub use codebook::{codebook_for, Codebook, Method};
 pub use double_quant::DoubleQuant;
+pub use kv::KvFormat;
 pub use opq::{OpqConfig, Outlier};
 
 /// Full quantizer configuration.

@@ -50,12 +50,14 @@
 
 use std::sync::Arc;
 
+use super::kernels::kv::{decode_attention_kv, KvView};
 use super::kernels::{attention, q4, simd, tiling, MatW, SimdPath, SyncSlice, ThreadPool};
 use super::meta::{lora_specs, matmul_param_names, param_specs, GraphMeta, ModelMeta};
 use super::{Backend, DecodeState, HostTensor};
 use crate::error::Result;
 use crate::quant::absmax::{block_constant, safe_constant};
-use crate::quant::Norm;
+use crate::quant::kv as kvq;
+use crate::quant::{codebook_for, Codebook, KvFormat, Method, Norm};
 use crate::util::rng::Pcg64;
 
 // Optimizer / model hyper-parameters (ModelCfg defaults in model.py).
@@ -158,6 +160,119 @@ impl DecodeState for CpuDecodeState {
     }
 }
 
+/// Resident **block-quantized** KV-cache slabs (`BOF4_KV=q8|q4`): per
+/// cache tensor, `[batch * seq_len * row_code_bytes]` packed codes plus
+/// `[batch * seq_len * blocks_per_row]` f32 block constants. Rows are
+/// quantized at append — the prefill scatter ([`DecodeState::load_slot`])
+/// and each decode step's fresh K/V column — and read back fused inside
+/// [`decode_attention_kv`], so a f32 row never materializes on the
+/// decode path.
+pub struct CpuDecodeStateQ {
+    fmt: KvFormat,
+    codes: Vec<Vec<u8>>,
+    scales: Vec<Vec<f32>>,
+    /// Quantization block (elements per constant): `m.block.min(d_model)`.
+    block: usize,
+    norm: Norm,
+    /// BOF4 reconstruction levels (q4; all-zero for q8, unread).
+    levels: [f32; 16],
+    /// BOF4 codebook for q4 encode (`None` for q8).
+    cb: Option<Codebook>,
+    d: usize,
+    seq: usize,
+    /// Code bytes per cached row (`fmt.row_bytes` minus the constants).
+    rcb: usize,
+    /// Block constants per cached row.
+    nb: usize,
+}
+
+impl CpuDecodeStateQ {
+    /// The stored format (tests / diagnostics).
+    pub fn format(&self) -> KvFormat {
+        self.fmt
+    }
+
+    /// Dequantize cache `c` to f32 (slow path: tests / diagnostics).
+    pub fn dequantized(&self, c: usize) -> Vec<f32> {
+        let rows = self.codes[c].len() / self.rcb;
+        let mut out = vec![0.0f32; rows * self.d];
+        for t in 0..rows {
+            let co = &self.codes[c][t * self.rcb..(t + 1) * self.rcb];
+            let so = &self.scales[c][t * self.nb..(t + 1) * self.nb];
+            let o = &mut out[t * self.d..(t + 1) * self.d];
+            match self.fmt {
+                KvFormat::Q8 => kvq::dequantize_row_q8(co, so, self.block, o),
+                KvFormat::Q4 => kvq::dequantize_row_q4(co, so, self.block, &self.levels, o),
+                KvFormat::F32 => unreachable!("f32 caches live in CpuDecodeState"),
+            }
+        }
+        out
+    }
+}
+
+/// Quantize one K/V row into its slab slices under `fmt` (shared by the
+/// prefill scatter and the decode-step append).
+fn quantize_kv_row(
+    fmt: KvFormat,
+    row: &[f32],
+    block: usize,
+    norm: Norm,
+    cb: Option<&Codebook>,
+    codes: &mut [u8],
+    scales: &mut [f32],
+) {
+    match fmt {
+        KvFormat::Q8 => kvq::quantize_row_q8(row, block, norm, codes, scales),
+        KvFormat::Q4 => {
+            kvq::quantize_row_q4(row, block, norm, cb.expect("q4 codebook"), codes, scales)
+        }
+        KvFormat::F32 => unreachable!("f32 caches live in CpuDecodeState"),
+    }
+}
+
+impl DecodeState for CpuDecodeStateQ {
+    fn load_slot(&mut self, c: usize, slot: usize, rows: &[f32]) -> Result<()> {
+        let (s, d) = (self.seq, self.d);
+        if rows.len() != s * d {
+            return Err(crate::err!(
+                "load_slot: got {} elements, slot holds {}",
+                rows.len(),
+                s * d
+            ));
+        }
+        let (rcb, nb) = (self.rcb, self.nb);
+        let codes = self
+            .codes
+            .get_mut(c)
+            .ok_or_else(|| crate::err!("load_slot: no cache {c}"))?;
+        let scales = &mut self.scales[c];
+        if (slot + 1) * s * rcb > codes.len() {
+            return Err(crate::err!("load_slot: slot {slot} out of range"));
+        }
+        for t in 0..s {
+            quantize_kv_row(
+                self.fmt,
+                &rows[t * d..(t + 1) * d],
+                self.block,
+                self.norm,
+                self.cb.as_ref(),
+                &mut codes[(slot * s + t) * rcb..(slot * s + t + 1) * rcb],
+                &mut scales[(slot * s + t) * nb..(slot * s + t + 1) * nb],
+            );
+        }
+        Ok(())
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.codes.iter().map(|c| c.len()).sum::<usize>()
+            + self.scales.iter().map(|c| 4 * c.len()).sum::<usize>()
+    }
+}
+
 impl Backend for CpuBackend {
     fn platform(&self) -> String {
         "cpu-interpreter".to_string()
@@ -167,15 +282,63 @@ impl Backend for CpuBackend {
         Ok(()) // nothing to compile
     }
 
-    fn alloc_decode_state(&self, gm: &GraphMeta) -> Result<Option<Box<dyn DecodeState>>> {
+    fn alloc_decode_state(
+        &self,
+        gm: &GraphMeta,
+        kv: KvFormat,
+    ) -> Result<Option<Box<dyn DecodeState>>> {
         match gm.name.as_str() {
             "lm_decode_step" | "lm_decode_step_q4" => {
                 let m = &self.m;
-                let slot_elems = m.seq_len * m.d_model;
-                Ok(Some(Box::new(CpuDecodeState {
-                    caches: vec![vec![0.0; m.batch * slot_elems]; 2 * m.n_layers],
-                    slot_elems,
-                })))
+                let (b, s, d) = (m.batch, m.seq_len, m.d_model);
+                match kv {
+                    KvFormat::F32 => {
+                        let slot_elems = s * d;
+                        Ok(Some(Box::new(CpuDecodeState {
+                            caches: vec![vec![0.0; b * slot_elems]; 2 * m.n_layers],
+                            slot_elems,
+                        })))
+                    }
+                    KvFormat::Q8 | KvFormat::Q4 => {
+                        if kv == KvFormat::Q4 && d % 2 != 0 {
+                            return Err(crate::err!(
+                                "BOF4_KV=q4 needs an even d_model for nibble packing (got {d})"
+                            ));
+                        }
+                        // K/V rows are activations: absmax for symmetric
+                        // int8, the signed-absmax BOF4-S codebook for q4
+                        // (the paper's best 4-bit variant).
+                        let block = m.block.min(d).max(1);
+                        let nb = d.div_ceil(block);
+                        let (norm, rcb) = match kv {
+                            KvFormat::Q8 => (Norm::Absmax, d),
+                            _ => (Norm::SignedAbsmax, d / 2),
+                        };
+                        let (levels, cb) = if kv == KvFormat::Q4 {
+                            let cb = codebook_for(&Method::Bof4 { mse: true }, norm, block);
+                            let mut l = [0.0f32; 16];
+                            for (i, lv) in l.iter_mut().enumerate() {
+                                *lv = cb.decode1(i as u8);
+                            }
+                            (l, Some(cb))
+                        } else {
+                            ([0.0f32; 16], None)
+                        };
+                        Ok(Some(Box::new(CpuDecodeStateQ {
+                            fmt: kv,
+                            codes: vec![vec![0u8; b * s * rcb]; 2 * m.n_layers],
+                            scales: vec![vec![0.0f32; b * s * nb]; 2 * m.n_layers],
+                            block,
+                            norm,
+                            levels,
+                            cb,
+                            d,
+                            seq: s,
+                            rcb,
+                            nb,
+                        })))
+                    }
+                }
             }
             _ => Ok(None),
         }
@@ -192,10 +355,6 @@ impl Backend for CpuBackend {
             "lm_decode_step_q4" => true,
             other => return Err(crate::err!("cpu backend: no in-place decode for '{other}'")),
         };
-        let st = state
-            .as_any_mut()
-            .downcast_mut::<CpuDecodeState>()
-            .ok_or_else(|| crate::err!("decode state is not a CpuDecodeState"))?;
         let (mw, tail) = if q4 {
             self.model_w_q4(args)?
         } else {
@@ -203,11 +362,17 @@ impl Backend for CpuBackend {
         };
         let token = args[tail].as_i32()?;
         let pos = args[tail + 1].as_i32()?;
-        let logits = self.decode_step_core(&mw, &mut st.caches, token, pos);
-        Ok(vec![HostTensor::f32(
-            logits,
-            vec![self.m.batch, self.m.vocab],
-        )])
+        let shape = vec![self.m.batch, self.m.vocab];
+        let any = state.as_any_mut();
+        if let Some(st) = any.downcast_mut::<CpuDecodeState>() {
+            let logits = self.decode_step_core(&mw, &mut st.caches, token, pos);
+            return Ok(vec![HostTensor::f32(logits, shape)]);
+        }
+        let st = any
+            .downcast_mut::<CpuDecodeStateQ>()
+            .ok_or_else(|| crate::err!("decode state is not a CPU decode state"))?;
+        let logits = self.decode_step_core_q(&mw, st, token, pos);
+        Ok(vec![HostTensor::f32(logits, shape)])
     }
 
     fn pool_occupancy(&self) -> Option<f64> {
@@ -1290,6 +1455,104 @@ impl CpuBackend {
         logits_out
     }
 
+    /// [`CpuBackend::decode_step_core`] over **block-quantized** resident
+    /// caches (`BOF4_KV=q8|q4`): same per-row loop order and kernels,
+    /// except the fresh K/V column is quantized at the append position
+    /// and attention reads the codes fused through
+    /// [`decode_attention_kv`] — no f32 cache row ever materializes.
+    /// Deliberately a separate loop body (not a branch inside the f32
+    /// core) so the `BOF4_KV=f32` path stays byte-for-byte the
+    /// pre-`BOF4_KV` code.
+    fn decode_step_core_q(
+        &self,
+        mw: &ModelW<'_>,
+        st: &mut CpuDecodeStateQ,
+        token: &[i32],
+        pos: &[i32],
+    ) -> Vec<f32> {
+        let (b, s, d, h, _hd, ff, v) = self.dims();
+        let pool = &*self.pool;
+        let (fmt, block, norm, rcb, nb) = (st.fmt, st.block, st.norm, st.rcb, st.nb);
+        let levels = &st.levels;
+        let cb = st.cb.as_ref();
+        let slot_cb = s * rcb;
+        let slot_nb = s * nb;
+
+        let mut logits_out = vec![0.0f32; b * v];
+        let ls = SyncSlice::new(&mut logits_out);
+        let ccs: Vec<SyncSlice<u8>> = st.codes.iter_mut().map(|c| SyncSlice::new(c)).collect();
+        let scs: Vec<SyncSlice<f32>> = st.scales.iter_mut().map(|c| SyncSlice::new(c)).collect();
+        pool.run(b, |bi| {
+            if pos[bi] < 0 || pos[bi] as usize >= s {
+                return;
+            }
+            let p = pos[bi] as usize;
+            let tok = (token[bi].max(0) as usize).min(v - 1);
+            let mut x = vec![0.0f32; d];
+            for j in 0..d {
+                x[j] = mw.embed[tok * d + j] + mw.pos[p * d + j];
+            }
+            for (li, lw) in mw.layers.iter().enumerate() {
+                let (a1, _) = tiling::rmsnorm(pool, &x, lw.g1, d);
+                let qkv = q4::row_matmul(pool, &a1, &lw.wqkv, d, 3 * d);
+                // SAFETY: batch row bi's slab regions are read and
+                // written only by task bi.
+                let kc_c = unsafe { ccs[2 * li].slice_mut(bi * slot_cb, slot_cb) };
+                let kc_s = unsafe { scs[2 * li].slice_mut(bi * slot_nb, slot_nb) };
+                let vc_c = unsafe { ccs[2 * li + 1].slice_mut(bi * slot_cb, slot_cb) };
+                let vc_s = unsafe { scs[2 * li + 1].slice_mut(bi * slot_nb, slot_nb) };
+                quantize_kv_row(
+                    fmt,
+                    &qkv[d..2 * d],
+                    block,
+                    norm,
+                    cb,
+                    &mut kc_c[p * rcb..(p + 1) * rcb],
+                    &mut kc_s[p * nb..(p + 1) * nb],
+                );
+                quantize_kv_row(
+                    fmt,
+                    &qkv[2 * d..3 * d],
+                    block,
+                    norm,
+                    cb,
+                    &mut vc_c[p * rcb..(p + 1) * rcb],
+                    &mut vc_s[p * nb..(p + 1) * nb],
+                );
+                let kview = KvView {
+                    fmt,
+                    codes: kc_c,
+                    scales: kc_s,
+                    block,
+                    levels,
+                };
+                let vview = KvView {
+                    fmt,
+                    codes: vc_c,
+                    scales: vc_s,
+                    block,
+                    levels,
+                };
+                let y = decode_attention_kv(pool, &qkv, kview, vview, d, h, p);
+                let attn_out = q4::row_matmul(pool, &y, &lw.wo, d, d);
+                add_in_place(&mut x, &attn_out);
+                let (a2, _) = tiling::rmsnorm(pool, &x, lw.g2, d);
+                let h_pre = q4::row_matmul(pool, &a2, &lw.win, d, ff);
+                let mut hact = vec![0.0f32; ff];
+                for (o, &i) in hact.iter_mut().zip(&h_pre) {
+                    *o = gelu(i);
+                }
+                let mlp_out = q4::row_matmul(pool, &hact, &lw.wout, ff, d);
+                add_in_place(&mut x, &mlp_out);
+            }
+            let (xf, _) = tiling::rmsnorm(pool, &x, mw.lnf, d);
+            let lrow = tiling::matmul(pool, &xf, mw.head, 1, d, v);
+            // SAFETY: logits row bi is written only by task bi.
+            unsafe { ls.slice_mut(bi * v, v) }.copy_from_slice(&lrow);
+        });
+        logits_out
+    }
+
     fn train_step(&self, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
         let pspecs = param_specs(&self.m);
         let np = pspecs.len();
@@ -1773,7 +2036,10 @@ mod tests {
             args: Vec::new(),
             results: Vec::new(),
         };
-        let mut state = be.alloc_decode_state(&gm).unwrap().expect("cpu in-place");
+        let mut state = be
+            .alloc_decode_state(&gm, KvFormat::F32)
+            .unwrap()
+            .expect("cpu in-place");
         let row = s * d;
         for c in 0..2 * nl {
             let src = out[1 + c].as_f32().unwrap();
@@ -1820,6 +2086,108 @@ mod tests {
         let st = state.as_any_mut().downcast_mut::<CpuDecodeState>().unwrap();
         for c in 0..2 * nl {
             assert_eq!(st.cache(c), caches[c].as_f32().unwrap(), "cache {c}");
+        }
+    }
+
+    /// Quantized resident caches (`BOF4_KV=q8|q4`): the in-place decode
+    /// step must be bit-identical across thread count × SIMD path, stay
+    /// numerically close to the f32 path, and the resident slabs must
+    /// shrink by exactly the format's row-byte accounting.
+    #[test]
+    fn decode_inplace_quantized_deterministic_and_smaller() {
+        let be0 = tiny();
+        let (b, s, d, v) = (be0.m.batch, be0.m.seq_len, be0.m.d_model, be0.m.vocab);
+        let nl = be0.m.n_layers;
+        let params = tiny_params(&be0, 50);
+        let toks = tiny_tokens(&be0, 51);
+        let specs = param_specs(&be0.m);
+        let ptensors: Vec<HostTensor> = specs
+            .iter()
+            .zip(&params)
+            .map(|((_, shp), data)| HostTensor::f32(data.clone(), shp.clone()))
+            .collect();
+
+        let plen = 2usize;
+        let mut ptoks = vec![0i32; b * s];
+        for bi in 0..b {
+            for j in 0..plen {
+                ptoks[bi * s + j] = toks[bi * s + j];
+            }
+        }
+        let mut pargs = ptensors.clone();
+        pargs.push(HostTensor::i32(ptoks, vec![b, s]));
+        pargs.push(HostTensor::i32(vec![plen as i32; b], vec![b]));
+        let out = be0.prefill(&pargs, false).unwrap();
+        let row = s * d;
+
+        let gm = GraphMeta {
+            name: "lm_decode_step".into(),
+            file: std::path::PathBuf::new(),
+            args: Vec::new(),
+            results: Vec::new(),
+        };
+
+        // 3 teacher-forced steps per config; configs must agree bitwise.
+        let run_steps = |be: &CpuBackend, fmt: KvFormat| -> (Vec<Vec<f32>>, usize) {
+            let mut state = be.alloc_decode_state(&gm, fmt).unwrap().expect("cpu in-place");
+            for c in 0..2 * nl {
+                let src = out[1 + c].as_f32().unwrap();
+                for slot in 0..b {
+                    state
+                        .load_slot(c, slot, &src[slot * row..(slot + 1) * row])
+                        .unwrap();
+                }
+            }
+            let bytes = state.resident_bytes();
+            let mut logits = Vec::new();
+            for step in 0..3usize {
+                let token: Vec<i32> = (0..b).map(|bi| toks[bi * s + plen + step]).collect();
+                let pos = vec![(plen + step) as i32; b];
+                let mut iargs = ptensors.clone();
+                iargs.push(HostTensor::i32(token, vec![b]));
+                iargs.push(HostTensor::i32(pos, vec![b]));
+                let iout = be.execute_decode_inplace(&gm, state.as_mut(), &iargs).unwrap();
+                logits.push(iout[0].as_f32().unwrap().to_vec());
+            }
+            (logits, bytes)
+        };
+
+        let (f32_logits, f32_bytes) = run_steps(&be0, KvFormat::F32);
+        assert_eq!(f32_bytes, 2 * nl * b * s * d * 4);
+        // tolerance per format: q8 keeps logits within a hair of f32 on
+        // the tiny model (~0.4% per-element quant error), q4 within the
+        // much coarser BOF4 bound — generous margins, but an
+        // indexing/scale bug lands orders of magnitude outside them
+        for (fmt, tol) in [(KvFormat::Q8, 0.5f32), (KvFormat::Q4, 2.0)] {
+            let mut want: Option<Vec<Vec<f32>>> = None;
+            for path in simd::all_paths() {
+                for threads in [1usize, 8] {
+                    let be = CpuBackend::with_config(be0.m.clone(), threads, path);
+                    let (logits, bytes) = run_steps(&be, fmt);
+                    assert_eq!(
+                        bytes,
+                        2 * nl * b * s * fmt.row_bytes(d, be0.m.block.min(d)),
+                        "{fmt} resident bytes"
+                    );
+                    assert!(bytes < f32_bytes, "{fmt} must shrink the slabs");
+                    match &want {
+                        None => {
+                            for (step, l) in logits.iter().enumerate() {
+                                for (a, wv) in l.iter().zip(&f32_logits[step]) {
+                                    assert!(
+                                        (a - wv).abs() <= tol,
+                                        "{fmt} step {step}: {a} vs f32 {wv}"
+                                    );
+                                }
+                            }
+                            want = Some(logits);
+                        }
+                        Some(w) => {
+                            assert_eq!(&logits, w, "{fmt} threads={threads} {path:?}");
+                        }
+                    }
+                }
+            }
         }
     }
 

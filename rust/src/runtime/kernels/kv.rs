@@ -1,0 +1,266 @@
+//! Fused dequant decode attention over block-quantized KV caches (the
+//! kernel half of the `BOF4_KV` subsystem; the storage half lives in
+//! [`crate::quant::kv`]).
+//!
+//! [`decode_attention_kv`] mirrors [`super::attention::decode_attention`]
+//! exactly — same `(head)` fan-out, same serial softmax row pass, same
+//! per-head output stripes — but its score dots and weighted-V axpys
+//! read q8/q4 codes directly through [`super::simd`]'s fused KV
+//! primitives (`kv_dot_*`/`kv_axpy_*`). Each primitive dequantizes
+//! `code * scale` (q8) or `levels[code] * scale` (q4) per element with
+//! the identical scalar expression on every path and reduces in the
+//! canonical 8-lane-strided order, so quantized decode output is
+//! bit-identical across `BOF4_THREADS × BOF4_SIMD` — and bit-identical
+//! to running the f32 kernel over an explicitly dequantized cache
+//! (pinned by the tests below). Dequantization never materializes a
+//! f32 row: the cache stays quantized end-to-end through attention.
+
+#![allow(clippy::too_many_arguments)]
+
+use super::pool::{SyncSlice, ThreadPool};
+use super::simd::{self, SimdPath};
+use crate::quant::kv::KvFormat;
+
+/// Borrowed view of one quantized cache slab (`[seq, d]` elements,
+/// row-major; positions `0..=p` valid at read time).
+///
+/// `codes` holds `seq` rows of `fmt.row_code_bytes`-many bytes (q8: one
+/// signed byte per element; q4: nibble-packed, low nibble = even
+/// element). `scales` holds `seq` rows of `d.div_ceil(block)` per-block
+/// constants. `levels` is the BOF4 reconstruction table (q4 only;
+/// ignored — typically all zeros — for q8).
+#[derive(Clone, Copy)]
+pub struct KvView<'a> {
+    /// `Q8` or `Q4` — f32 caches take the unquantized
+    /// [`super::attention::decode_attention`] path instead.
+    pub fmt: KvFormat,
+    pub codes: &'a [u8],
+    pub scales: &'a [f32],
+    pub block: usize,
+    pub levels: &'a [f32; 16],
+}
+
+impl KvView<'_> {
+    /// Code bytes per `d`-element row under this view's format.
+    pub fn row_code_bytes(&self, d: usize) -> usize {
+        match self.fmt {
+            KvFormat::Q8 => d,
+            KvFormat::Q4 => d.div_ceil(2),
+            KvFormat::F32 => unreachable!("f32 caches use attention::decode_attention"),
+        }
+    }
+
+    /// Canonical-order dot of `q1` against columns
+    /// `hoff..hoff+q1.len()` of cached row `s2`.
+    fn dot_row(&self, path: SimdPath, q1: &[f32], s2: usize, hoff: usize, d: usize) -> f32 {
+        let nb = d.div_ceil(self.block);
+        let scales = &self.scales[s2 * nb..(s2 + 1) * nb];
+        let rcb = self.row_code_bytes(d);
+        let codes = &self.codes[s2 * rcb..(s2 + 1) * rcb];
+        match self.fmt {
+            KvFormat::Q8 => simd::kv_dot_q8(path, q1, codes, scales, hoff, self.block),
+            KvFormat::Q4 => {
+                simd::kv_dot_q4(path, q1, codes, &self.levels[..], scales, hoff, self.block)
+            }
+            KvFormat::F32 => unreachable!("f32 caches use attention::decode_attention"),
+        }
+    }
+
+    /// Serial-order `acc += s * row` over columns `hoff..hoff+acc.len()`
+    /// of cached row `s2`.
+    fn axpy_row(
+        &self,
+        path: SimdPath,
+        acc: &mut [f32],
+        s: f32,
+        s2: usize,
+        hoff: usize,
+        d: usize,
+    ) {
+        let nb = d.div_ceil(self.block);
+        let scales = &self.scales[s2 * nb..(s2 + 1) * nb];
+        let rcb = self.row_code_bytes(d);
+        let codes = &self.codes[s2 * rcb..(s2 + 1) * rcb];
+        match self.fmt {
+            KvFormat::Q8 => simd::kv_axpy_q8(path, acc, s, codes, scales, hoff, self.block),
+            KvFormat::Q4 => {
+                simd::kv_axpy_q4(path, acc, s, codes, &self.levels[..], scales, hoff, self.block)
+            }
+            KvFormat::F32 => unreachable!("f32 caches use attention::decode_attention"),
+        }
+    }
+}
+
+/// One incremental decode-step attention for a single batch row over
+/// **quantized** caches: query from the fresh f32 `qkv [3d]` row,
+/// keys/values read fused from the `kc`/`vc` views (positions `0..=p`
+/// valid). Fanned out over heads; returns the attention mix `y [d]`.
+///
+/// Structurally identical to [`super::attention::decode_attention`]
+/// (score dot → serial softmax → weighted-V accumulation), with every
+/// K/V element dequantized inside the canonical-order primitives — so
+/// the result equals the f32 kernel over an explicitly dequantized
+/// cache, bit for bit, on every `(threads, SIMD path)` combination.
+pub fn decode_attention_kv(
+    pool: &ThreadPool,
+    qkv: &[f32],
+    kc: KvView<'_>,
+    vc: KvView<'_>,
+    d: usize,
+    h: usize,
+    p: usize,
+) -> Vec<f32> {
+    let path = pool.simd();
+    let hd = d / h;
+    let inv_sqrt_hd = 1.0 / (hd as f32).sqrt();
+    let mut y = vec![0.0f32; d];
+    let y_s = SyncSlice::new(&mut y);
+    pool.run(h, |hi| {
+        let hoff = hi * hd;
+        let q1 = &qkv[hoff..hoff + hd];
+        let mut row = vec![0.0f32; p + 1];
+        let mut maxv = f32::NEG_INFINITY;
+        for (s2, rv) in row.iter_mut().enumerate() {
+            let sc = kc.dot_row(path, q1, s2, hoff, d) * inv_sqrt_hd;
+            *rv = sc;
+            if sc > maxv {
+                maxv = sc;
+            }
+        }
+        let mut denom = 0.0f32;
+        for rv in row.iter_mut() {
+            *rv = (*rv - maxv).exp();
+            denom += *rv;
+        }
+        let inv = 1.0 / denom;
+        let mut acc = vec![0.0f32; hd];
+        for (s2, rv) in row.iter().enumerate() {
+            vc.axpy_row(path, &mut acc, rv * inv, s2, hoff, d);
+        }
+        // SAFETY: y columns [hoff, hoff+hd) are written only by task hi.
+        let yr = unsafe { y_s.slice_mut(hoff, hd) };
+        yr.copy_from_slice(&acc);
+    });
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::attention::decode_attention;
+    use super::*;
+    use crate::quant::absmax::Norm;
+    use crate::quant::kv::{dequantize_row_q4, dequantize_row_q8, quantize_row_q4, quantize_row_q8};
+    use crate::quant::{codebook_for, Method};
+    use crate::util::rng::Pcg64;
+
+    fn rand(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let mut v = vec![0.0f32; n];
+        rng.fill_gaussian_f32(&mut v, 0.5);
+        v
+    }
+
+    /// Quantize a `[s, d]` f32 slab row-wise; returns
+    /// `(codes, scales, dequantized reference slab)`.
+    fn quantize_slab(
+        slab: &[f32],
+        s: usize,
+        d: usize,
+        block: usize,
+        fmt: KvFormat,
+        norm: Norm,
+        levels: &[f32; 16],
+    ) -> (Vec<u8>, Vec<f32>, Vec<f32>) {
+        let nb = d.div_ceil(block);
+        let rcb = match fmt {
+            KvFormat::Q8 => d,
+            KvFormat::Q4 => d.div_ceil(2),
+            KvFormat::F32 => unreachable!(),
+        };
+        let cb = codebook_for(&Method::Bof4 { mse: true }, norm, block);
+        let mut codes = vec![0u8; s * rcb];
+        let mut scales = vec![0.0f32; s * nb];
+        let mut deq = vec![0.0f32; s * d];
+        for t in 0..s {
+            let row = &slab[t * d..(t + 1) * d];
+            let c = &mut codes[t * rcb..(t + 1) * rcb];
+            let sc = &mut scales[t * nb..(t + 1) * nb];
+            let o = &mut deq[t * d..(t + 1) * d];
+            match fmt {
+                KvFormat::Q8 => {
+                    quantize_row_q8(row, block, norm, c, sc);
+                    dequantize_row_q8(c, sc, block, o);
+                }
+                KvFormat::Q4 => {
+                    quantize_row_q4(row, block, norm, &cb, c, sc);
+                    dequantize_row_q4(c, sc, block, levels, o);
+                }
+                KvFormat::F32 => unreachable!(),
+            }
+        }
+        (codes, scales, deq)
+    }
+
+    fn levels_for(norm: Norm, block: usize) -> [f32; 16] {
+        let cb = codebook_for(&Method::Bof4 { mse: true }, norm, block);
+        let mut l = [0.0f32; 16];
+        for (i, v) in l.iter_mut().enumerate() {
+            *v = cb.decode1(i as u8);
+        }
+        l
+    }
+
+    /// The fused kernel must equal the f32 kernel run over an explicitly
+    /// dequantized cache — bit for bit — and be bit-identical across
+    /// every `(threads, SIMD path)` combination, for both formats, with
+    /// ragged quant blocks and odd head dims (odd q4 nibble offsets).
+    #[test]
+    fn fused_kv_attention_matches_dequantized_reference_bitwise() {
+        let reference = ThreadPool::with_config(1, SimdPath::None);
+        let mut pools = Vec::new();
+        for path in simd::all_paths() {
+            for threads in [1usize, 8] {
+                pools.push(ThreadPool::with_config(threads, path));
+            }
+        }
+        let s = 5usize;
+        // (h, d): hd in {3, 8, 5}; blocks both dividing and ragged vs d
+        for &(h, d, block) in &[(2usize, 6usize, 4usize), (2, 16, 8), (2, 10, 3)] {
+            let seed = (h * 1000 + d * 10 + block) as u64;
+            let qkv = rand(3 * d, seed);
+            let kc_f = rand(s * d, seed + 1);
+            let vc_f = rand(s * d, seed + 2);
+            for (fmt, norm) in [(KvFormat::Q8, Norm::Absmax), (KvFormat::Q4, Norm::SignedAbsmax)] {
+                let lv = levels_for(norm, block);
+                let (k_codes, k_scales, k_deq) =
+                    quantize_slab(&kc_f, s, d, block, fmt, norm, &lv);
+                let (v_codes, v_scales, v_deq) =
+                    quantize_slab(&vc_f, s, d, block, fmt, norm, &lv);
+                let kv = KvView {
+                    fmt,
+                    codes: &k_codes,
+                    scales: &k_scales,
+                    block,
+                    levels: &lv,
+                };
+                let vv = KvView {
+                    fmt,
+                    codes: &v_codes,
+                    scales: &v_scales,
+                    block,
+                    levels: &lv,
+                };
+                for p in [0usize, 2, s - 1] {
+                    let want = decode_attention(&reference, &qkv, &k_deq, &v_deq, d, h, p);
+                    for pool in &pools {
+                        let got = decode_attention_kv(pool, &qkv, kv, vv, d, h, p);
+                        assert_eq!(
+                            got, want,
+                            "fmt={fmt} h={h} d={d} block={block} p={p} {pool:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

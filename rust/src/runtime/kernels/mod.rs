@@ -21,6 +21,10 @@
 //! - [`attention`]: causal multi-head attention forward/backward fanned
 //!   out over `(batch row x head)`, and the single-row incremental
 //!   decode-step attention.
+//! - [`kv`]: the fused-dequant variant of the decode-step attention for
+//!   block-quantized (`BOF4_KV=q8|q4`) KV caches — reads codes through
+//!   [`simd`]'s `kv_dot_*`/`kv_axpy_*` forms without materializing f32
+//!   rows.
 //!
 //! **Determinism contract**: every kernel is bit-identical across every
 //! `(BOF4_THREADS, BOF4_SIMD)` combination. Tiles have exactly one
@@ -36,6 +40,7 @@
 //! `BOF4_THREADS in {1, 2, 8}` × the SIMD paths executable on the host.
 
 pub mod attention;
+pub mod kv;
 pub mod pool;
 pub mod q4;
 pub mod simd;

@@ -600,6 +600,229 @@ pub fn q4_fill_dequant(path: SimdPath, w: &mut [f32], am: f32, codes: &[u8], lev
 }
 
 // ---------------------------------------------------------------------
+// fused KV-cache dequant forms (`BOF4_KV` q8/q4 rows; decode attention
+// reads quantized K/V blocks without materializing f32 rows)
+// ---------------------------------------------------------------------
+//
+// Element `e` of a quantized KV row dequantizes as
+//   q8: w(e) = (codes[e] as i8 as f32) * scales[e / block]
+//   q4: w(e) = levels[nibble(codes, e)] * scales[e / block]
+// (`codes`/`scales` cover the full `d_model` row; `base` is the head's
+// column offset, so per-head reads need no slice re-alignment and the
+// nibble/scale indices stay global). Every arm evaluates that exact
+// per-element expression — the vector arms gather the 8 dequantized
+// values with the same scalar ops, then multiply/accumulate lane-wise —
+// so the reductions stay in the canonical 8-lane-strided order and the
+// results are bit-identical across paths.
+
+/// One dequantized q8 KV element (shared by every arm).
+#[inline(always)]
+fn kv1_q8(codes: &[u8], scales: &[f32], e: usize, block: usize) -> f32 {
+    (codes[e] as i8) as f32 * scales[e / block]
+}
+
+/// One dequantized q4 KV element (nibble-packed codes, low nibble =
+/// even element; shared by every arm).
+#[inline(always)]
+fn kv1_q4(codes: &[u8], levels: &[f32], scales: &[f32], e: usize, block: usize) -> f32 {
+    let b = codes[e / 2];
+    let code = if e % 2 == 0 { b & 0x0f } else { b >> 4 };
+    levels[code as usize] * scales[e / block]
+}
+
+/// Gather 8 dequantized q8 KV elements starting at global element `e0`.
+#[inline(always)]
+fn kv_gather8_q8(codes: &[u8], scales: &[f32], e0: usize, block: usize) -> [f32; LANES] {
+    let mut g = [0.0f32; LANES];
+    for l in 0..LANES {
+        g[l] = kv1_q8(codes, scales, e0 + l, block);
+    }
+    g
+}
+
+/// Gather 8 dequantized q4 KV elements starting at global element `e0`.
+#[inline(always)]
+fn kv_gather8_q4(
+    codes: &[u8],
+    levels: &[f32],
+    scales: &[f32],
+    e0: usize,
+    block: usize,
+) -> [f32; LANES] {
+    let mut g = [0.0f32; LANES];
+    for l in 0..LANES {
+        g[l] = kv1_q4(codes, levels, scales, e0 + l, block);
+    }
+    g
+}
+
+/// Canonical strided dot of a query slice against a quantized q8 KV row
+/// segment: `sum_j q[j] * w(base + j)` — the fused score dot of
+/// `BOF4_KV=q8` decode attention.
+#[inline]
+pub fn kv_dot_q8(
+    path: SimdPath,
+    q: &[f32],
+    codes: &[u8],
+    scales: &[f32],
+    base: usize,
+    block: usize,
+) -> f32 {
+    debug_assert!(base + q.len() <= codes.len());
+    let n = q.len();
+    let c = n - n % LANES;
+    match path {
+        SimdPath::None => {
+            let mut acc = [0.0f32; LANES];
+            let mut i = 0;
+            while i < c {
+                for l in 0..LANES {
+                    acc[l] += q[i + l] * kv1_q8(codes, scales, base + i + l, block);
+                }
+                i += LANES;
+            }
+            tail_combine(acc, c, |j| q[j] * kv1_q8(codes, scales, base + j, block), n)
+        }
+        SimdPath::Array => {
+            let mut acc = F32x8::ZERO;
+            let mut i = 0;
+            while i < c {
+                let w = F32x8(kv_gather8_q8(codes, scales, base + i, block));
+                acc += F32x8::load(&q[i..]) * w;
+                i += LANES;
+            }
+            tail_combine(acc.0, c, |j| q[j] * kv1_q8(codes, scales, base + j, block), n)
+        }
+        SimdPath::Avx2 => kv_dot_q8_avx2(q, codes, scales, base, block),
+    }
+}
+
+/// `acc[j] += s * w(base + j)` over a quantized q8 KV row segment — the
+/// fused weighted-V accumulation of `BOF4_KV=q8` decode attention.
+#[inline]
+pub fn kv_axpy_q8(
+    path: SimdPath,
+    acc: &mut [f32],
+    s: f32,
+    codes: &[u8],
+    scales: &[f32],
+    base: usize,
+    block: usize,
+) {
+    debug_assert!(base + acc.len() <= codes.len());
+    let n = acc.len();
+    let c = n - n % LANES;
+    match path {
+        SimdPath::None => {
+            for (j, a) in acc.iter_mut().enumerate() {
+                *a += s * kv1_q8(codes, scales, base + j, block);
+            }
+        }
+        SimdPath::Array => {
+            let vs = F32x8::splat(s);
+            let mut i = 0;
+            while i < c {
+                let w = F32x8(kv_gather8_q8(codes, scales, base + i, block));
+                (F32x8::load(&acc[i..]) + vs * w).store(&mut acc[i..]);
+                i += LANES;
+            }
+            for j in c..n {
+                acc[j] += s * kv1_q8(codes, scales, base + j, block);
+            }
+        }
+        SimdPath::Avx2 => kv_axpy_q8_avx2(acc, s, codes, scales, base, block),
+    }
+}
+
+/// Canonical strided dot of a query slice against a quantized q4 KV row
+/// segment (nibble-packed codes, 16-entry `levels` LUT).
+#[inline]
+pub fn kv_dot_q4(
+    path: SimdPath,
+    q: &[f32],
+    codes: &[u8],
+    levels: &[f32],
+    scales: &[f32],
+    base: usize,
+    block: usize,
+) -> f32 {
+    debug_assert!((base + q.len()).div_ceil(2) <= codes.len());
+    let n = q.len();
+    let c = n - n % LANES;
+    match path {
+        SimdPath::None => {
+            let mut acc = [0.0f32; LANES];
+            let mut i = 0;
+            while i < c {
+                for l in 0..LANES {
+                    acc[l] += q[i + l] * kv1_q4(codes, levels, scales, base + i + l, block);
+                }
+                i += LANES;
+            }
+            tail_combine(
+                acc,
+                c,
+                |j| q[j] * kv1_q4(codes, levels, scales, base + j, block),
+                n,
+            )
+        }
+        SimdPath::Array => {
+            let mut acc = F32x8::ZERO;
+            let mut i = 0;
+            while i < c {
+                let w = F32x8(kv_gather8_q4(codes, levels, scales, base + i, block));
+                acc += F32x8::load(&q[i..]) * w;
+                i += LANES;
+            }
+            tail_combine(
+                acc.0,
+                c,
+                |j| q[j] * kv1_q4(codes, levels, scales, base + j, block),
+                n,
+            )
+        }
+        SimdPath::Avx2 => kv_dot_q4_avx2(q, codes, levels, scales, base, block),
+    }
+}
+
+/// `acc[j] += s * w(base + j)` over a quantized q4 KV row segment.
+#[inline]
+pub fn kv_axpy_q4(
+    path: SimdPath,
+    acc: &mut [f32],
+    s: f32,
+    codes: &[u8],
+    levels: &[f32],
+    scales: &[f32],
+    base: usize,
+    block: usize,
+) {
+    debug_assert!((base + acc.len()).div_ceil(2) <= codes.len());
+    let n = acc.len();
+    let c = n - n % LANES;
+    match path {
+        SimdPath::None => {
+            for (j, a) in acc.iter_mut().enumerate() {
+                *a += s * kv1_q4(codes, levels, scales, base + j, block);
+            }
+        }
+        SimdPath::Array => {
+            let vs = F32x8::splat(s);
+            let mut i = 0;
+            while i < c {
+                let w = F32x8(kv_gather8_q4(codes, levels, scales, base + i, block));
+                (F32x8::load(&acc[i..]) + vs * w).store(&mut acc[i..]);
+                i += LANES;
+            }
+            for j in c..n {
+                acc[j] += s * kv1_q4(codes, levels, scales, base + j, block);
+            }
+        }
+        SimdPath::Avx2 => kv_axpy_q4_avx2(acc, s, codes, levels, scales, base, block),
+    }
+}
+
+// ---------------------------------------------------------------------
 // generic element-wise maps (par_map / par_zip_apply)
 // ---------------------------------------------------------------------
 
@@ -786,6 +1009,84 @@ fn q4_fill_dequant_avx2(w: &mut [f32], am: f32, codes: &[u8], levels: &[f32]) {
     q4_fill_dequant(SimdPath::Array, w, am, codes, levels)
 }
 
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn kv_dot_q8_avx2(q: &[f32], codes: &[u8], scales: &[f32], base: usize, block: usize) -> f32 {
+    // SAFETY: Avx2 paths are sanitized against runtime detection.
+    unsafe { avx2::kv_dot_q8(q, codes, scales, base, block) }
+}
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn kv_dot_q8_avx2(q: &[f32], codes: &[u8], scales: &[f32], base: usize, block: usize) -> f32 {
+    kv_dot_q8(SimdPath::Array, q, codes, scales, base, block)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn kv_axpy_q8_avx2(acc: &mut [f32], s: f32, codes: &[u8], scales: &[f32], base: usize, block: usize) {
+    // SAFETY: Avx2 paths are sanitized against runtime detection.
+    unsafe { avx2::kv_axpy_q8(acc, s, codes, scales, base, block) }
+}
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn kv_axpy_q8_avx2(acc: &mut [f32], s: f32, codes: &[u8], scales: &[f32], base: usize, block: usize) {
+    kv_axpy_q8(SimdPath::Array, acc, s, codes, scales, base, block)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn kv_dot_q4_avx2(
+    q: &[f32],
+    codes: &[u8],
+    levels: &[f32],
+    scales: &[f32],
+    base: usize,
+    block: usize,
+) -> f32 {
+    // SAFETY: Avx2 paths are sanitized against runtime detection.
+    unsafe { avx2::kv_dot_q4(q, codes, levels, scales, base, block) }
+}
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn kv_dot_q4_avx2(
+    q: &[f32],
+    codes: &[u8],
+    levels: &[f32],
+    scales: &[f32],
+    base: usize,
+    block: usize,
+) -> f32 {
+    kv_dot_q4(SimdPath::Array, q, codes, levels, scales, base, block)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn kv_axpy_q4_avx2(
+    acc: &mut [f32],
+    s: f32,
+    codes: &[u8],
+    levels: &[f32],
+    scales: &[f32],
+    base: usize,
+    block: usize,
+) {
+    // SAFETY: Avx2 paths are sanitized against runtime detection.
+    unsafe { avx2::kv_axpy_q4(acc, s, codes, levels, scales, base, block) }
+}
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn kv_axpy_q4_avx2(
+    acc: &mut [f32],
+    s: f32,
+    codes: &[u8],
+    levels: &[f32],
+    scales: &[f32],
+    base: usize,
+    block: usize,
+) {
+    kv_axpy_q4(SimdPath::Array, acc, s, codes, levels, scales, base, block)
+}
+
 /// The intrinsic implementations. Every function here uses only
 /// separately-rounded `mul`/`add`/`sub`/`div` vector ops (no FMA),
 /// the exact canonical chunk/tail/combine schedule of the scalar
@@ -793,7 +1094,7 @@ fn q4_fill_dequant_avx2(w: &mut [f32], am: f32, codes: &[u8], levels: &[f32]) {
 /// the other two paths.
 #[cfg(target_arch = "x86_64")]
 mod avx2 {
-    use super::{gather8, tail_combine, LANES};
+    use super::{gather8, kv1_q4, kv1_q8, kv_gather8_q4, kv_gather8_q8, tail_combine, LANES};
     use std::arch::x86_64::*;
 
     /// # Safety
@@ -1031,6 +1332,117 @@ mod avx2 {
             w[j] = levels[(codes[j] & 0x0f) as usize] * am;
         }
     }
+
+    /// # Safety
+    /// Requires AVX2 (callers dispatch behind `is_x86_feature_detected!`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn kv_dot_q8(
+        q: &[f32],
+        codes: &[u8],
+        scales: &[f32],
+        base: usize,
+        block: usize,
+    ) -> f32 {
+        let n = q.len();
+        let c = n - n % LANES;
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < c {
+            let g = kv_gather8_q8(codes, scales, base + i, block);
+            let p = _mm256_mul_ps(_mm256_loadu_ps(q.as_ptr().add(i)), _mm256_loadu_ps(g.as_ptr()));
+            acc = _mm256_add_ps(acc, p);
+            i += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        tail_combine(lanes, c, |j| q[j] * kv1_q8(codes, scales, base + j, block), n)
+    }
+
+    /// # Safety
+    /// Requires AVX2 (callers dispatch behind `is_x86_feature_detected!`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn kv_axpy_q8(
+        acc: &mut [f32],
+        s: f32,
+        codes: &[u8],
+        scales: &[f32],
+        base: usize,
+        block: usize,
+    ) {
+        let n = acc.len();
+        let c = n - n % LANES;
+        let vs = _mm256_set1_ps(s);
+        let mut i = 0;
+        while i < c {
+            let g = kv_gather8_q8(codes, scales, base + i, block);
+            let sw = _mm256_mul_ps(vs, _mm256_loadu_ps(g.as_ptr()));
+            let av = _mm256_add_ps(_mm256_loadu_ps(acc.as_ptr().add(i)), sw);
+            _mm256_storeu_ps(acc.as_mut_ptr().add(i), av);
+            i += LANES;
+        }
+        for j in c..n {
+            acc[j] += s * kv1_q8(codes, scales, base + j, block);
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2 (callers dispatch behind `is_x86_feature_detected!`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn kv_dot_q4(
+        q: &[f32],
+        codes: &[u8],
+        levels: &[f32],
+        scales: &[f32],
+        base: usize,
+        block: usize,
+    ) -> f32 {
+        let n = q.len();
+        let c = n - n % LANES;
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < c {
+            let g = kv_gather8_q4(codes, levels, scales, base + i, block);
+            let p = _mm256_mul_ps(_mm256_loadu_ps(q.as_ptr().add(i)), _mm256_loadu_ps(g.as_ptr()));
+            acc = _mm256_add_ps(acc, p);
+            i += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        tail_combine(
+            lanes,
+            c,
+            |j| q[j] * kv1_q4(codes, levels, scales, base + j, block),
+            n,
+        )
+    }
+
+    /// # Safety
+    /// Requires AVX2 (callers dispatch behind `is_x86_feature_detected!`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn kv_axpy_q4(
+        acc: &mut [f32],
+        s: f32,
+        codes: &[u8],
+        levels: &[f32],
+        scales: &[f32],
+        base: usize,
+        block: usize,
+    ) {
+        let n = acc.len();
+        let c = n - n % LANES;
+        let vs = _mm256_set1_ps(s);
+        let mut i = 0;
+        while i < c {
+            let g = kv_gather8_q4(codes, levels, scales, base + i, block);
+            let sw = _mm256_mul_ps(vs, _mm256_loadu_ps(g.as_ptr()));
+            let av = _mm256_add_ps(_mm256_loadu_ps(acc.as_ptr().add(i)), sw);
+            _mm256_storeu_ps(acc.as_mut_ptr().add(i), av);
+            i += LANES;
+        }
+        for j in c..n {
+            acc[j] += s * kv1_q4(codes, levels, scales, base + j, block);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1176,6 +1588,80 @@ mod tests {
                 let mut y = vec![0.0f32; n];
                 q4_fill_dequant(path, &mut y, am, &codes, &levels);
                 assert_eq!(y, want_fill, "q4_fill_dequant n={n} {path:?}");
+            }
+        }
+    }
+
+    /// The fused KV dequant forms: bit-identical across paths for q8
+    /// and q4, at even and odd head-column offsets (`base`), aligned and
+    /// ragged quantization blocks, against a reference evaluated through
+    /// the plain canonical dot/axpy over the dequantized f32 segment.
+    #[test]
+    fn kv_forms_bitwise_equal_across_paths() {
+        let levels: Vec<f32> = (0..16).map(|i| (i as f32 - 7.5) / 7.5).collect();
+        for &n in &LENS {
+            for base in [0usize, 1, 3, 8] {
+                let d = base + n;
+                for block in [4usize, 8, 13] {
+                    let nb = d.div_ceil(block).max(1);
+                    let scales: Vec<f32> = (0..nb).map(|b| 0.013 * (b as f32 + 1.0)).collect();
+                    let codes8: Vec<u8> = (0..d).map(|i| ((i * 37 + 11) % 251) as u8).collect();
+                    let codes4: Vec<u8> =
+                        (0..d.div_ceil(2)).map(|i| ((i * 73 + 5) % 256) as u8).collect();
+                    let q = rand(n, 11_000 + (n + base * 17 + block) as u64);
+                    let acc0 = rand(n, 12_000 + (n + base * 17 + block) as u64);
+                    let s = 0.217f32;
+
+                    // reference: dequantize the segment, then the plain
+                    // canonical dot/axpy — the fused forms must match it
+                    // bit for bit on the None path (same schedule, same
+                    // per-element expressions)
+                    let w8: Vec<f32> = (base..d)
+                        .map(|e| (codes8[e] as i8) as f32 * scales[e / block])
+                        .collect();
+                    let want_dot8 = dot(SimdPath::None, &q, &w8);
+                    assert_eq!(
+                        kv_dot_q8(SimdPath::None, &q, &codes8, &scales, base, block).to_bits(),
+                        want_dot8.to_bits(),
+                        "kv_dot_q8 vs dequant+dot n={n} base={base} block={block}"
+                    );
+                    let mut want_axpy8 = acc0.clone();
+                    axpy(SimdPath::None, &mut want_axpy8, s, &w8);
+                    let mut a = acc0.clone();
+                    kv_axpy_q8(SimdPath::None, &mut a, s, &codes8, &scales, base, block);
+                    assert_eq!(a, want_axpy8, "kv_axpy_q8 vs dequant+axpy");
+
+                    let want_dot4 = kv_dot_q4(SimdPath::None, &q, &codes4, &levels, &scales, base, block);
+                    let mut want_axpy4 = acc0.clone();
+                    kv_axpy_q4(
+                        SimdPath::None,
+                        &mut want_axpy4,
+                        s,
+                        &codes4,
+                        &levels,
+                        &scales,
+                        base,
+                        block,
+                    );
+                    for path in all_paths() {
+                        assert_eq!(
+                            kv_dot_q8(path, &q, &codes8, &scales, base, block).to_bits(),
+                            want_dot8.to_bits(),
+                            "kv_dot_q8 n={n} base={base} block={block} {path:?}"
+                        );
+                        let mut y = acc0.clone();
+                        kv_axpy_q8(path, &mut y, s, &codes8, &scales, base, block);
+                        assert_eq!(y, want_axpy8, "kv_axpy_q8 n={n} base={base} {path:?}");
+                        assert_eq!(
+                            kv_dot_q4(path, &q, &codes4, &levels, &scales, base, block).to_bits(),
+                            want_dot4.to_bits(),
+                            "kv_dot_q4 n={n} base={base} block={block} {path:?}"
+                        );
+                        let mut y = acc0.clone();
+                        kv_axpy_q4(path, &mut y, s, &codes4, &levels, &scales, base, block);
+                        assert_eq!(y, want_axpy4, "kv_axpy_q4 n={n} base={base} {path:?}");
+                    }
+                }
             }
         }
     }

@@ -34,7 +34,11 @@ impl ArgMeta {
 
     /// Whether this argument is a KV-cache tensor of the decode-step
     /// graphs (the tensors an in-place backend keeps resident; see
-    /// [`super::Backend::alloc_decode_state`]).
+    /// [`super::Backend::alloc_decode_state`]). The declared ABI dtype
+    /// stays `float32` regardless of the `BOF4_KV` knob: quantized
+    /// (q8/q4) storage exists only inside backend-resident
+    /// [`super::DecodeState`]s and never crosses the `HostTensor` ABI —
+    /// the clone-based fallback path always carries f32 slabs.
     pub fn is_cache(&self) -> bool {
         is_cache_name(&self.name)
     }

@@ -39,6 +39,7 @@ pub use host::HostTensor;
 pub use meta::{ArgMeta, GraphMeta, Meta, ModelMeta};
 
 use crate::error::Result;
+pub use crate::quant::KvFormat;
 
 /// Opaque backend-resident decode state: the per-layer KV-cache slabs a
 /// decode-step graph mutates in place instead of round-tripping them
@@ -81,8 +82,22 @@ pub trait Backend: Send + Sync {
     /// Allocate resident KV-cache state for a decode-step graph, or
     /// `None` when this backend has no in-place decode support (the
     /// engine then falls back to passing caches through
-    /// [`Backend::execute`]). Default: unsupported.
-    fn alloc_decode_state(&self, _gm: &GraphMeta) -> Result<Option<Box<dyn DecodeState>>> {
+    /// [`Backend::execute`]). `kv` selects the resident storage format
+    /// (the `BOF4_KV` knob): plain f32 slabs, or block-quantized q8/q4
+    /// codes dequantized fused inside the attention kernels. Backends
+    /// that cannot quantize must reject non-f32 requests rather than
+    /// silently serving f32. Default: unsupported.
+    fn alloc_decode_state(
+        &self,
+        _gm: &GraphMeta,
+        kv: KvFormat,
+    ) -> Result<Option<Box<dyn DecodeState>>> {
+        if kv != KvFormat::F32 {
+            return Err(crate::err!(
+                "backend {} has no {kv} KV-cache support",
+                self.platform()
+            ));
+        }
         Ok(None)
     }
 
@@ -227,10 +242,24 @@ impl Runtime {
     }
 
     /// Allocate backend-resident KV state for a decode-step graph (`None`
-    /// when the backend only supports the clone-based cache path).
+    /// when the backend only supports the clone-based cache path), with
+    /// plain f32 cache slabs — the pre-`BOF4_KV` behaviour.
     pub fn alloc_decode_state(&self, graph: &str) -> Result<Option<Box<dyn DecodeState>>> {
+        self.alloc_decode_state_fmt(graph, KvFormat::F32)
+    }
+
+    /// [`Runtime::alloc_decode_state`] with an explicit KV-cache storage
+    /// format (the `BOF4_KV` knob): `F32` keeps the plain slabs, `Q8`/`Q4`
+    /// store block-quantized codes dequantized fused inside the decode
+    /// attention. Errors when the backend cannot honour a quantized
+    /// request (never silently degrades to f32).
+    pub fn alloc_decode_state_fmt(
+        &self,
+        graph: &str,
+        kv: KvFormat,
+    ) -> Result<Option<Box<dyn DecodeState>>> {
         let gm = self.meta.graph(graph)?;
-        self.backend.alloc_decode_state(gm)
+        self.backend.alloc_decode_state(gm, kv)
     }
 
     /// Execute one decode step against resident state: `args` must match

@@ -9,7 +9,7 @@ use bof4::coordinator::{
     BatchedLm, Engine, EngineConfig, QuantJob, QuantScheduler, ServiceConfig,
 };
 use bof4::quant::{Method, Norm, QuantConfig};
-use bof4::runtime::{HostTensor, Runtime};
+use bof4::runtime::{HostTensor, KvFormat, Runtime};
 use bof4::testkit::{forall, Gen, Prop, USizeRange};
 use bof4::util::rng::Pcg64;
 
@@ -580,8 +580,15 @@ fn full_context_fallback_matches_kv_engine() {
     let params = rt
         .run("init_params", &[HostTensor::scalar_u32(3)])
         .unwrap();
-    let kv = Engine::start(rt.clone(), params.clone(), EngineConfig::default()).unwrap();
-    let full = Engine::start_full_context(rt.clone(), params, EngineConfig::default()).unwrap();
+    // Pin f32 KV: this test asserts bit-identity against the full-context
+    // mode, which only holds for an unquantized cache (the CI matrix
+    // re-runs the suite under `BOF4_KV=q8`).
+    let cfg = EngineConfig {
+        kv_format: KvFormat::F32,
+        ..EngineConfig::default()
+    };
+    let kv = Engine::start(rt.clone(), params.clone(), cfg.clone()).unwrap();
+    let full = Engine::start_full_context(rt.clone(), params, cfg).unwrap();
     for prompt in [&[1u8, 2, 3][..], &[7; 10][..]] {
         let a: Vec<_> = kv
             .session_with(prompt, 5)

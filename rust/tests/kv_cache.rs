@@ -1,0 +1,220 @@
+//! Quantized KV-cache integration (`BOF4_KV`): the f32 format must keep
+//! serving bit-identical to the pre-knob engine, q8 must be
+//! deterministic across the kernel-config matrix, both quantized
+//! formats must shrink per-session cache bytes as promised by
+//! [`bof4::quant::KvFormat::row_bytes`], and the decode-path perplexity
+//! degradation must stay bounded. Everything runs hermetically on the
+//! canonical in-repo model over the default CPU backend.
+
+use std::sync::Arc;
+
+use bof4::coordinator::{Engine, EngineConfig};
+use bof4::eval::ppl::{kv_decode_perplexity, PplConfig};
+use bof4::eval::{perplexity, report::Table};
+use bof4::models::ParamSet;
+use bof4::quant::KvFormat;
+use bof4::runtime::kernels::{simd, SimdPath};
+use bof4::runtime::{CpuBackend, HostTensor, Meta, Runtime};
+
+fn runtime() -> Arc<Runtime> {
+    Arc::new(Runtime::new().expect("runtime"))
+}
+
+fn runtime_with_config(threads: usize, path: SimdPath) -> Arc<Runtime> {
+    let meta = Meta::builtin();
+    let be = CpuBackend::with_config(meta.model.clone(), threads, path);
+    Arc::new(Runtime::with_backend(meta, Box::new(be)))
+}
+
+fn init_params(rt: &Runtime, seed: u32) -> Vec<HostTensor> {
+    rt.run("init_params", &[HostTensor::scalar_u32(seed)])
+        .expect("init_params")
+}
+
+fn engine(rt: &Arc<Runtime>, params: Vec<HostTensor>, kv: KvFormat) -> Engine {
+    Engine::start(
+        rt.clone(),
+        params,
+        EngineConfig {
+            kv_format: kv,
+            ..EngineConfig::default()
+        },
+    )
+    .expect("engine start")
+}
+
+/// Collect one session's full greedy stream as `(token, logit)` pairs.
+fn stream(engine: &Engine, prompt: &[u8], budget: usize) -> Vec<(u8, f32)> {
+    engine
+        .session_with(prompt, budget)
+        .expect("session")
+        .map(|ev| {
+            let ev = ev.expect("stream ok");
+            (ev.next_token, ev.logit)
+        })
+        .collect()
+}
+
+/// `BOF4_KV=f32` is the pre-knob engine: its streams must be
+/// bit-identical to full-context re-execution (the strongest available
+/// statement that the knob's default path changed nothing).
+#[test]
+fn f32_kv_streams_bit_identical_to_full_context() {
+    let rt = runtime();
+    let params = init_params(&rt, 11);
+    let cfg = EngineConfig {
+        kv_format: KvFormat::F32,
+        ..EngineConfig::default()
+    };
+    let kv = Engine::start(rt.clone(), params.clone(), cfg).unwrap();
+    let full = Engine::start_full_context(rt.clone(), params, cfg).unwrap();
+    for prompt in [&[2u8, 4, 8][..], &[5; 17][..], &[0][..]] {
+        let a = stream(&kv, prompt, 6);
+        let b = stream(&full, prompt, 6);
+        assert_eq!(a, b, "f32-KV engine diverged from full context, prompt {prompt:?}");
+        assert_eq!(a.len(), 6);
+    }
+}
+
+/// The q8 determinism contract at the engine level: identical `(token,
+/// logit)` streams at every `BOF4_THREADS in {1, 8} x BOF4_SIMD in
+/// {scalar, best-detected}` combination, and across repeat runs of the
+/// same engine.
+#[test]
+fn q8_kv_streams_deterministic_across_threads_and_simd() {
+    let mut paths = vec![SimdPath::None];
+    if simd::detect_best() != SimdPath::None {
+        paths.push(simd::detect_best());
+    }
+    let prompts = [&[1u8, 2, 3][..], &[9; 30][..], &[4][..]];
+    let mut reference: Option<Vec<Vec<(u8, f32)>>> = None;
+    for path in paths {
+        for threads in [1usize, 8] {
+            let rt = runtime_with_config(threads, path);
+            let params = init_params(&rt, 12);
+            let eng = engine(&rt, params, KvFormat::Q8);
+            let got: Vec<Vec<(u8, f32)>> =
+                prompts.iter().map(|&p| stream(&eng, p, 6)).collect();
+            let again: Vec<Vec<(u8, f32)>> =
+                prompts.iter().map(|&p| stream(&eng, p, 6)).collect();
+            assert_eq!(got, again, "q8 streams not repeatable at {threads}t/{path:?}");
+            match &reference {
+                None => reference = Some(got),
+                Some(want) => assert_eq!(
+                    &got, want,
+                    "q8 streams diverged at {threads}t/{path:?} \
+                     (determinism contract broken)"
+                ),
+            }
+        }
+    }
+}
+
+/// The acceptance memory contract on the canonical geometry
+/// (`d_model = 128`, `block = 64`): q8 must cut per-session KV bytes by
+/// at least 3.5x vs f32, q4 by strictly more, with the byte counts
+/// matching [`KvFormat::row_bytes`] exactly and `sessions_per_gb`
+/// scaling to match.
+#[test]
+fn quantized_kv_session_bytes_reduction_at_canonical_geometry() {
+    let rt = runtime();
+    let params = init_params(&rt, 13);
+    let m = rt.meta.model.clone();
+    let block = m.block.min(m.d_model).max(1);
+    let mut session_bytes = Vec::new();
+    let mut spg = Vec::new();
+    for fmt in [KvFormat::F32, KvFormat::Q8, KvFormat::Q4] {
+        let eng = engine(&rt, params.clone(), fmt);
+        let prof = eng.memory_profile();
+        assert_eq!(prof.kv_format, fmt.name());
+        assert_eq!(
+            prof.session_kv_bytes,
+            2 * m.n_layers * m.seq_len * fmt.row_bytes(m.d_model, block),
+            "{fmt}: session KV bytes off the analytic row cost"
+        );
+        session_bytes.push(prof.session_kv_bytes);
+        spg.push(prof.sessions_per_gb().expect("KV-cached mode"));
+    }
+    let (f32_b, q8_b, q4_b) = (session_bytes[0], session_bytes[1], session_bytes[2]);
+    let q8_ratio = f32_b as f64 / q8_b as f64;
+    let q4_ratio = f32_b as f64 / q4_b as f64;
+    assert!(
+        q8_ratio >= 3.5,
+        "q8 session KV reduction {q8_ratio:.2}x below the 3.5x acceptance floor \
+         ({f32_b} -> {q8_b} bytes)"
+    );
+    assert!(
+        q4_ratio > q8_ratio,
+        "q4 ({q4_ratio:.2}x) must shrink strictly further than q8 ({q8_ratio:.2}x)"
+    );
+    // sessions/GB scales inversely with session bytes
+    assert!(spg[1] >= spg[0] * 3.5 && spg[2] > spg[1]);
+}
+
+/// q4 KV serving works end-to-end and is repeat-deterministic (the
+/// accuracy story lives in the perplexity test below; here the contract
+/// is only that the BOF4-coded cache serves full-length streams
+/// deterministically).
+#[test]
+fn q4_kv_serves_and_repeats_deterministically() {
+    let rt = runtime();
+    let params = init_params(&rt, 14);
+    let eng = engine(&rt, params, KvFormat::Q4);
+    for prompt in [&[3u8, 1, 4, 1, 5][..], &[6; 20][..]] {
+        let a = stream(&eng, prompt, 8);
+        let b = stream(&eng, prompt, 8);
+        assert_eq!(a.len(), 8);
+        assert_eq!(a, b, "q4 streams not repeatable, prompt {prompt:?}");
+    }
+}
+
+/// Decode-path perplexity at each KV format. The f32 leg must agree
+/// with the full-forward `lm_nll` perplexity (same tokens, decode
+/// logits bit-identical to full context on this backend — only the
+/// host-side NLL accumulation differs); the quantized legs must stay
+/// within bounded degradation. Emits the f32/q8/q4 table under
+/// `results/kv_ppl.*`.
+#[test]
+fn kv_ppl_degradation_bounded_and_tabulated() {
+    let rt = runtime();
+    let params = init_params(&rt, 15);
+    let gm = rt.meta.graph("lm_nll").unwrap().clone();
+    let pset = ParamSet::from_tensors(&gm, &params).unwrap();
+    let cfg = PplConfig {
+        batches: 2,
+        corpus_tokens: 30_000,
+        corpus_seed: 7,
+    };
+    let baseline = perplexity(&rt, &pset, &cfg).unwrap();
+    let mut ppl = Vec::new();
+    for fmt in [KvFormat::F32, KvFormat::Q8, KvFormat::Q4] {
+        let p = kv_decode_perplexity(&rt, &pset, fmt, &cfg).unwrap();
+        assert!(p.is_finite() && p > 1.0, "{fmt}: degenerate perplexity {p}");
+        ppl.push(p);
+    }
+    let (f32_p, q8_p, q4_p) = (ppl[0], ppl[1], ppl[2]);
+    assert!(
+        (f32_p - baseline).abs() / baseline < 1e-3,
+        "f32 decode ppl {f32_p} drifted from lm_nll ppl {baseline}"
+    );
+    assert!(
+        q8_p <= f32_p * 1.10,
+        "q8 KV ppl degradation above 10%: {q8_p} vs f32 {f32_p}"
+    );
+    assert!(
+        q4_p <= f32_p * 1.75,
+        "q4 KV ppl degradation above 75%: {q4_p} vs f32 {f32_p}"
+    );
+    let mut t = Table::new(
+        "Decode perplexity by KV-cache format (canonical model)",
+        &["kv format", "decode ppl", "vs f32"],
+    );
+    for (fmt, p) in ["f32", "q8", "q4"].iter().zip(&ppl) {
+        t.row(vec![
+            fmt.to_string(),
+            format!("{p:.4}"),
+            format!("{:+.3}%", (p / f32_p - 1.0) * 100.0),
+        ]);
+    }
+    t.emit("kv_ppl").expect("emit kv_ppl table");
+}

@@ -17,7 +17,11 @@
 //! the same weights with the per-session cache pinned `f32` vs `q8`
 //! (block-wise absmax int8, fused dequant attention) and assert the q8
 //! decode overhead stays < 15%; `kv_format`, `kv_bytes_per_token` and
-//! `sessions_per_gb` land in the JSON.
+//! `sessions_per_gb` land in the JSON. The PR-8 trace legs re-time the
+//! default engine with the span tracer forced off vs at engine level
+//! (best-of-5 each, streams pinned bit-identical), asserting the traced
+//! leg costs < 5% and that a disabled tracer is free to noise;
+//! `trace_overhead` lands in the JSON.
 //!
 //! ```bash
 //! cargo bench --bench decode_throughput          # full run
@@ -137,6 +141,33 @@ fn main() {
             r.sessions_per_gb
         );
     }
+    // the tracing contract: engine-level span tracing must cost < 5%
+    // over the traced-off baseline (streams are pinned bit-identical
+    // across levels inside the bench), and a disabled tracer — one
+    // relaxed atomic load per probe — must be free to noise vs the
+    // untraced engine leg
+    if let (Some(off), Some(on)) = (r.engine_trace_off, r.engine_trace_on) {
+        assert!(
+            on.as_secs_f64() <= off.as_secs_f64() * 1.05,
+            "engine-level tracing overhead too high: on {:?} vs off {:?} ({:.3}x)",
+            on,
+            off,
+            r.trace_overhead()
+        );
+        assert!(
+            off.as_secs_f64() <= r.engine.as_secs_f64() * 1.10,
+            "BOF4_TRACE=0 must be unmeasurable: trace-off best-of-5 {:?} vs \
+             plain engine leg {:?}",
+            off,
+            r.engine
+        );
+        println!(
+            "tracing: off {:.3}s | engine-level {:.3}s (overhead {:.3}x, streams bit-identical)",
+            off.as_secs_f64(),
+            on.as_secs_f64(),
+            r.trace_overhead()
+        );
+    }
     // the shared-weight contract: parameters are resident once no matter
     // the replica count, so doubling replicas must grow total resident
     // bytes strictly sub-linearly (decode_throughput already pinned
@@ -219,6 +250,11 @@ fn main() {
         fields.push(("engine_q4_opq_s", Json::Num(q4_opq.as_secs_f64())));
         fields.push(("opq_outliers", Json::Num(r.opq_outliers as f64)));
         fields.push(("opq_overhead", Json::Num(r.opq_overhead())));
+    }
+    if let (Some(off), Some(on)) = (r.engine_trace_off, r.engine_trace_on) {
+        fields.push(("engine_trace_off_s", Json::Num(off.as_secs_f64())));
+        fields.push(("engine_trace_on_s", Json::Num(on.as_secs_f64())));
+        fields.push(("trace_overhead", Json::Num(r.trace_overhead())));
     }
     let json = bof4::util::json::obj(fields).to_string();
     let dir = bof4::eval::report::results_dir();

@@ -4,7 +4,7 @@
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, MutexGuard, PoisonError};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Max samples retained per latency/value series (see
 /// [`Metrics::observe_value`]).
@@ -28,11 +28,20 @@ pub fn percentile_index(len: usize, p: f64) -> usize {
     (((len - 1) as f64) * p).round() as usize
 }
 
+/// One bounded value series: the retained samples plus a count of the
+/// samples evicted by the [`SERIES_CAP`] halving, so stats can say *how
+/// much* history they no longer describe.
+#[derive(Debug, Default)]
+struct Series {
+    samples: Vec<f64>,
+    dropped: u64,
+}
+
 /// Process-local metrics registry.
 #[derive(Debug, Default)]
 pub struct Metrics {
     counters: Mutex<BTreeMap<String, AtomicU64>>,
-    latencies: Mutex<BTreeMap<String, Vec<f64>>>,
+    latencies: Mutex<BTreeMap<String, Series>>,
 }
 
 impl Metrics {
@@ -66,14 +75,17 @@ impl Metrics {
     /// value works — e.g. the engine's slot-occupancy fraction). Series
     /// are bounded: at [`SERIES_CAP`] samples the oldest half is dropped,
     /// so per-token recording on a long-running engine cannot grow memory
-    /// without bound (stats then describe a recent window).
+    /// without bound (stats then describe a recent window). Evictions are
+    /// counted per series and surfaced as [`LatencyStats::dropped`], so a
+    /// long run's percentiles are never mistaken for lifetime stats.
     pub fn observe_value(&self, name: &str, v: f64) {
         let mut g = lock_recover(&self.latencies);
         let series = g.entry(name.to_string()).or_default();
-        if series.len() >= SERIES_CAP {
-            series.drain(..SERIES_CAP / 2);
+        if series.samples.len() >= SERIES_CAP {
+            series.samples.drain(..SERIES_CAP / 2);
+            series.dropped += (SERIES_CAP / 2) as u64;
         }
-        series.push(v);
+        series.samples.push(v);
     }
 
     /// Order statistics for a latency series, computed over the *finite*
@@ -85,12 +97,13 @@ impl Metrics {
     /// samples at all.
     pub fn latency_stats(&self, name: &str) -> Option<LatencyStats> {
         let g = lock_recover(&self.latencies);
-        let xs = g.get(name)?;
-        if xs.is_empty() {
+        let s = g.get(name)?;
+        if s.samples.is_empty() {
             return None;
         }
-        let mut sorted: Vec<f64> = xs.iter().copied().filter(|v| v.is_finite()).collect();
-        let non_finite = xs.len() - sorted.len();
+        let dropped = s.dropped;
+        let mut sorted: Vec<f64> = s.samples.iter().copied().filter(|v| v.is_finite()).collect();
+        let non_finite = s.samples.len() - sorted.len();
         drop(g);
         if sorted.is_empty() {
             return None;
@@ -100,12 +113,29 @@ impl Metrics {
         Some(LatencyStats {
             count: sorted.len(),
             non_finite,
+            dropped,
             mean_ms: sorted.iter().sum::<f64>() / sorted.len() as f64,
             p50_ms: pct(0.5),
             p95_ms: pct(0.95),
             p99_ms: pct(0.99),
             max_ms: *sorted.last().unwrap(),
         })
+    }
+
+    /// Copy out all counters as `(name, value)` pairs, sorted by name —
+    /// the exporter-facing view of the registry.
+    pub fn counter_snapshot(&self) -> Vec<(String, u64)> {
+        lock_recover(&self.counters)
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// Names of all value series, sorted. Pair with
+    /// [`Metrics::latency_stats`] to build a full snapshot without
+    /// holding any lock across the two calls.
+    pub fn series_names(&self) -> Vec<String> {
+        lock_recover(&self.latencies).keys().cloned().collect()
     }
 
     /// Render all metrics for reports.
@@ -124,6 +154,13 @@ impl Metrics {
                 if s.non_finite > 0 {
                     out.push_str(&format!("{k}: dropped {} non-finite samples\n", s.non_finite));
                 }
+                if s.dropped > 0 {
+                    out.push_str(&format!(
+                        "{k}: {} older samples evicted (stats describe the \
+                         most recent window)\n",
+                        s.dropped
+                    ));
+                }
             }
         }
         out
@@ -136,6 +173,10 @@ pub struct LatencyStats {
     pub count: usize,
     /// Non-finite samples (NaN/inf) excluded from the stats.
     pub non_finite: usize,
+    /// Older samples evicted by the [`SERIES_CAP`] halving over the
+    /// series' lifetime — when non-zero, the stats describe only the most
+    /// recent window, not the whole run.
+    pub dropped: u64,
     pub mean_ms: f64,
     pub p50_ms: f64,
     pub p95_ms: f64,
@@ -144,7 +185,9 @@ pub struct LatencyStats {
 }
 
 /// Per-token latency histogram bucket upper bounds, in milliseconds.
-const TOKEN_LATENCY_BOUNDS_MS: [f64; 10] =
+/// Public so the Prometheus exporter can emit the same `le` bounds it
+/// documents ([`crate::obs::export`]).
+pub const TOKEN_LATENCY_BOUNDS_MS: [f64; 10] =
     [0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 100.0, 1000.0];
 
 /// Serving-engine metrics: the shared counter/latency registry plus a
@@ -155,24 +198,101 @@ const TOKEN_LATENCY_BOUNDS_MS: [f64; 10] =
 ///
 /// Counter names: `batches` (prefill executions), `batched_requests`
 /// (sessions admitted), `sessions`, `prefill_tokens`, `decode_tokens`,
-/// `decode_steps`. Latency series: `prefill_exec`, `decode_step_exec`,
-/// `token_latency` (ms), `slot_occupancy` (fraction, 0..=1) and
-/// `pool_busy` (kernel-pool lane occupancy, fraction 0..=1 — the
-/// replica-worker saturation counterpart of `slot_occupancy`, sampled
-/// after every prefill/decode step on backends with a thread pool; each
-/// sample covers the launches since the previous one, so the series
-/// tracks current saturation, not a lifetime mean).
-#[derive(Debug, Default)]
+/// `decode_steps`, `deadline_overruns` (sessions that closed past their
+/// [`crate::coordinator::EngineConfig::session_deadline`]). Latency
+/// series: `prefill_exec`, `decode_step_exec`, `token_latency` (ms),
+/// `ttft` (time-to-first-token: submit → first streamed token, ms),
+/// `inter_token` (gap between consecutive streamed tokens of one
+/// session, ms), `queue_wait` (submit → admission, ms),
+/// `slot_occupancy` (fraction, 0..=1) and `pool_busy` (kernel-pool lane
+/// occupancy, fraction 0..=1 — the replica-worker saturation counterpart
+/// of `slot_occupancy`, sampled after every prefill/decode step on
+/// backends with a thread pool; each sample covers the launches since
+/// the previous one, so the series tracks current saturation, not a
+/// lifetime mean). The instantaneous queue depth (submitted sessions not
+/// yet admitted) is a dedicated gauge ([`EngineMetrics::queue_depth`]) —
+/// the admission-control signal the ROADMAP's load-shedding item needs.
+#[derive(Debug)]
 pub struct EngineMetrics {
     /// Shared counter/latency registry (cloneable handle: the `BatchedLm`
     /// shim re-exposes this same registry as its `metrics` field).
     pub core: std::sync::Arc<Metrics>,
     buckets: [AtomicU64; TOKEN_LATENCY_BOUNDS_MS.len() + 1],
+    /// Sessions submitted but not yet admitted into a batch slot.
+    queue_depth: AtomicU64,
+    /// Engine start time, for uptime / tokens-per-second rates.
+    started: Instant,
+}
+
+impl Default for EngineMetrics {
+    fn default() -> Self {
+        EngineMetrics {
+            core: std::sync::Arc::default(),
+            buckets: Default::default(),
+            queue_depth: AtomicU64::new(0),
+            started: Instant::now(),
+        }
+    }
 }
 
 impl EngineMetrics {
     pub fn new() -> EngineMetrics {
         EngineMetrics::default()
+    }
+
+    /// Wall time since the engine (metrics) started.
+    pub fn uptime(&self) -> Duration {
+        self.started.elapsed()
+    }
+
+    /// Decode tokens streamed per second of uptime — the throughput
+    /// headline of the snapshot exporters.
+    pub fn tokens_per_sec(&self) -> f64 {
+        let up = self.uptime().as_secs_f64();
+        if up > 0.0 {
+            self.core.get("decode_tokens") as f64 / up
+        } else {
+            0.0
+        }
+    }
+
+    /// A session entered an admission queue ([`crate::coordinator::Engine`]
+    /// submit path).
+    pub fn queue_enter(&self) {
+        self.queue_depth.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A queued session was admitted (or rejected): record its queue wait
+    /// and drop the depth gauge.
+    pub fn queue_exit(&self, waited: Duration) {
+        // saturating: a racing snapshot between enter/exit pairs must
+        // never underflow the gauge
+        let _ = self
+            .queue_depth
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.saturating_sub(1))
+            });
+        self.core.observe("queue_wait", waited);
+    }
+
+    /// Sessions currently queued and not yet admitted.
+    pub fn queue_depth(&self) -> u64 {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
+    /// Record a session's time-to-first-token (submit → first token).
+    pub fn record_ttft(&self, d: Duration) {
+        self.core.observe("ttft", d);
+    }
+
+    /// Record the gap between two consecutive tokens of one session.
+    pub fn record_inter_token(&self, d: Duration) {
+        self.core.observe("inter_token", d);
+    }
+
+    /// A session closed later than its configured deadline allowed.
+    pub fn record_deadline_overrun(&self) {
+        self.core.inc("deadline_overruns");
     }
 
     /// Record one emitted token's latency (the wall time of the prefill
@@ -218,10 +338,11 @@ impl EngineMetrics {
         out
     }
 
-    /// Render counters/latencies plus the prefill-vs-decode token split
-    /// and the non-empty histogram buckets.
+    /// Render counters/latencies plus the queue-depth gauge, the
+    /// prefill-vs-decode token split and the non-empty histogram buckets.
     pub fn summary(&self) -> String {
         let mut out = self.core.summary();
+        out.push_str(&format!("queue depth: {}\n", self.queue_depth()));
         let pre = self.core.get("prefill_tokens");
         let dec = self.core.get("decode_tokens");
         if pre + dec > 0 {
@@ -294,6 +415,63 @@ mod tests {
         assert!(s.count <= SERIES_CAP, "series grew past cap: {}", s.count);
         // recent samples survive the halving
         assert_eq!(s.max_ms, (SERIES_CAP + 9) as f64);
+    }
+
+    /// Regression (ISSUE 8): the SERIES_CAP halving silently discarded
+    /// the oldest half, so long-run percentiles described an undocumented
+    /// window. Overflow one series and verify the eviction is counted and
+    /// reported.
+    #[test]
+    fn series_eviction_is_counted() {
+        let m = Metrics::new();
+        for i in 0..(SERIES_CAP + 10) {
+            m.observe_value("tok", i as f64);
+        }
+        let s = m.latency_stats("tok").unwrap();
+        assert_eq!(s.dropped, (SERIES_CAP / 2) as u64);
+        assert_eq!(s.count, SERIES_CAP / 2 + 10);
+        assert!(
+            m.summary().contains(&format!("{} older samples evicted", SERIES_CAP / 2)),
+            "summary must surface the eviction window"
+        );
+        // a series under the cap reports zero drops
+        m.observe_value("small", 1.0);
+        assert_eq!(m.latency_stats("small").unwrap().dropped, 0);
+    }
+
+    #[test]
+    fn slo_gauges_and_counters() {
+        let em = EngineMetrics::new();
+        em.queue_enter();
+        em.queue_enter();
+        assert_eq!(em.queue_depth(), 2);
+        em.queue_exit(Duration::from_millis(3));
+        assert_eq!(em.queue_depth(), 1);
+        em.queue_exit(Duration::from_millis(5));
+        em.queue_exit(Duration::from_millis(1)); // saturates, never wraps
+        assert_eq!(em.queue_depth(), 0);
+        em.record_ttft(Duration::from_millis(8));
+        em.record_inter_token(Duration::from_millis(2));
+        em.record_deadline_overrun();
+        assert_eq!(em.core.latency_stats("queue_wait").unwrap().count, 3);
+        assert_eq!(em.core.latency_stats("ttft").unwrap().count, 1);
+        assert_eq!(em.core.latency_stats("inter_token").unwrap().count, 1);
+        assert_eq!(em.core.get("deadline_overruns"), 1);
+        assert!(em.uptime() > Duration::ZERO);
+        assert!(em.summary().contains("queue depth: 0"));
+    }
+
+    #[test]
+    fn counter_and_series_snapshots() {
+        let m = Metrics::new();
+        m.add("b", 2);
+        m.inc("a");
+        m.observe_value("lat", 1.0);
+        assert_eq!(
+            m.counter_snapshot(),
+            vec![("a".to_string(), 1), ("b".to_string(), 2)]
+        );
+        assert_eq!(m.series_names(), vec!["lat".to_string()]);
     }
 
     #[test]

@@ -13,7 +13,7 @@ pub mod metrics;
 pub mod scheduler;
 pub mod service;
 
-pub use metrics::{EngineMetrics, Metrics};
+pub use metrics::{EngineMetrics, LatencyStats, Metrics};
 pub use scheduler::{QuantJob, QuantScheduler};
 pub use service::{
     greedy_argmax, BatchedLm, DecodeSession, Engine, EngineConfig, EngineMemoryProfile,

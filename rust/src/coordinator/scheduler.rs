@@ -100,6 +100,11 @@ impl QuantScheduler {
                             Err(_) => break, // channel closed: done
                         };
                         let sw = crate::util::timer::Stopwatch::start();
+                        let _span = crate::obs::tracer::span(
+                            crate::obs::TraceLevel::Engine,
+                            "quantize_tensor",
+                            &[("idx", idx as i64), ("elems", job.data.len() as i64)],
+                        );
                         let result = std::panic::catch_unwind(
                             std::panic::AssertUnwindSafe(|| {
                                 let qt = quantizer.quantize(&job.data);

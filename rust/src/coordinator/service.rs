@@ -41,7 +41,7 @@
 //! batch size never exceeds the graph batch; a lone request is answered
 //! within ~the admission window.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -51,7 +51,12 @@ use crate::error::Result;
 
 use super::metrics::{EngineMetrics, Metrics};
 use crate::models::corpus::TOK_SPACE;
+use crate::obs::tracer::{self, TraceLevel};
 use crate::runtime::{DecodeState, HostTensor, KvFormat, Runtime};
+
+/// Process-wide session-id source, so trace spans from different engines
+/// (tests spin several up) never collide.
+static NEXT_SESSION_ID: AtomicU64 = AtomicU64::new(1);
 
 /// One streamed token: the greedy argmax and its logit value.
 #[derive(Clone, Debug, PartialEq)]
@@ -108,6 +113,13 @@ pub struct EngineConfig {
     /// rather than silently serving f32. Irrelevant in full-context
     /// mode, which keeps no KV cache at all.
     pub kv_format: KvFormat,
+    /// Per-session latency SLO: a session whose total wall time (from
+    /// [`Engine::session`] to stream close) exceeds this budget bumps the
+    /// `deadline_overruns` counter ([`EngineMetrics::record_deadline_overrun`])
+    /// and, when tracing is on, emits a `deadline_overrun` instant event.
+    /// Purely observational — the session still streams every token.
+    /// `None` (the default) disables the check.
+    pub session_deadline: Option<Duration>,
 }
 
 impl Default for EngineConfig {
@@ -117,6 +129,7 @@ impl Default for EngineConfig {
             window: Duration::from_millis(5),
             max_session_tokens: usize::MAX,
             kv_format: KvFormat::from_env(),
+            session_deadline: None,
         }
     }
 }
@@ -203,8 +216,13 @@ pub fn greedy_argmax(row: &[f32]) -> (u8, f32) {
 
 /// A queued session request.
 struct SessionReq {
+    /// Process-unique session id (trace-span correlation key).
+    id: u64,
     prompt: Vec<u8>,
     max_tokens: usize,
+    /// When [`Engine::submit`] enqueued the request — the anchor for the
+    /// `queue_wait` span, time-to-first-token and the session deadline.
+    queued_at: Instant,
     tx: mpsc::Sender<Result<InferenceResponse>>,
 }
 
@@ -256,6 +274,9 @@ pub struct Engine {
     /// The shared immutable weight set every replica reads through.
     weights: SharedWeights,
     memory: EngineMemoryProfile,
+    /// Kept for observability: [`Engine::snapshot`] reads the backend's
+    /// per-kernel profile through it.
+    rt: Arc<Runtime>,
 }
 
 impl Engine {
@@ -356,6 +377,7 @@ impl Engine {
                 prefill_graph,
                 decode_graph,
                 cfg.window,
+                cfg.session_deadline,
                 metrics.clone(),
             )?);
         }
@@ -379,7 +401,20 @@ impl Engine {
             seq_len: rt.meta.model.seq_len,
             weights,
             memory,
+            rt,
         })
+    }
+
+    /// Capture one observability snapshot: every SLO counter/series from
+    /// [`EngineMetrics`], the backend's per-kernel profile and the
+    /// engine's memory profile — the [`crate::obs::MetricsSnapshot`]
+    /// `bof4 serve --metrics-file` renders as Prometheus text and JSON.
+    pub fn snapshot(&self) -> crate::obs::MetricsSnapshot {
+        crate::obs::MetricsSnapshot::collect(
+            &self.metrics,
+            self.rt.kernel_profile().unwrap_or_default(),
+            Some(self.memory.clone()),
+        )
     }
 
     /// Account resident memory by buffer identity: the weight set is
@@ -478,16 +513,32 @@ impl Engine {
     ) -> Result<mpsc::Receiver<Result<InferenceResponse>>> {
         let (tx, rx) = mpsc::channel();
         let i = self.next.fetch_add(1, Ordering::Relaxed) % self.replicas.len();
+        let id = NEXT_SESSION_ID.fetch_add(1, Ordering::Relaxed);
+        self.metrics.queue_enter();
+        tracer::instant(
+            TraceLevel::Engine,
+            "submit",
+            &[
+                ("session", id as i64),
+                ("replica", i as i64),
+                ("prompt_len", prompt.len() as i64),
+            ],
+        );
         self.replicas[i]
             .tx
             .as_ref()
             .expect("engine running")
             .send(SessionReq {
+                id,
                 prompt: prompt.to_vec(),
                 max_tokens,
+                queued_at: Instant::now(),
                 tx,
             })
-            .map_err(|_| crate::err!("engine stopped"))?;
+            .map_err(|_| {
+                self.metrics.queue_exit(Duration::ZERO);
+                crate::err!("engine stopped")
+            })?;
         Ok(rx)
     }
 }
@@ -520,6 +571,8 @@ enum ServingMode {
 
 /// One live batch slot: a session mid-decode.
 struct Slot {
+    /// Process-unique session id (trace-span correlation key).
+    id: u64,
     /// Positions filled in the KV cache (prompt + already-placed tokens).
     /// In full-context mode this is `ctx.len() - 1`: the last streamed
     /// token is in `ctx` but its K/V column is "not placed yet".
@@ -531,7 +584,42 @@ struct Slot {
     /// Full context (prompt tail + streamed tokens); maintained only in
     /// [`ServingMode::FullContext`], empty under KV caching.
     ctx: Vec<u8>,
+    /// When the session was submitted — anchors the `session` trace span
+    /// and the [`EngineConfig::session_deadline`] check.
+    queued_at: Instant,
+    /// When the previous token was streamed (the first token at
+    /// admission) — the inter-token latency anchor.
+    last_emit: Instant,
     tx: mpsc::Sender<Result<InferenceResponse>>,
+}
+
+/// Session close-out: deadline-overrun accounting plus the session-long
+/// trace span. Free function (not a `Replica` method) so the decode
+/// loops can call it while iterating `self.slots` mutably.
+fn finish_session(
+    metrics: &EngineMetrics,
+    deadline: Option<Duration>,
+    id: u64,
+    queued_at: Instant,
+) {
+    let now = Instant::now();
+    if let Some(dl) = deadline {
+        if now.saturating_duration_since(queued_at) > dl {
+            metrics.record_deadline_overrun();
+            tracer::instant(
+                TraceLevel::Engine,
+                "deadline_overrun",
+                &[("session", id as i64)],
+            );
+        }
+    }
+    tracer::span_at(
+        TraceLevel::Engine,
+        "session",
+        queued_at,
+        now,
+        &[("session", id as i64)],
+    );
 }
 
 /// Worker-thread state of one model replica. Holds a handle to the
@@ -552,6 +640,8 @@ struct Replica {
     prefill_graph: &'static str,
     decode_graph: &'static str,
     window: Duration,
+    /// Per-session wall-time SLO ([`EngineConfig::session_deadline`]).
+    deadline: Option<Duration>,
     metrics: Arc<EngineMetrics>,
     slots: Vec<Option<Slot>>,
     /// Backend-resident KV caches (the in-place decode protocol): when
@@ -578,6 +668,7 @@ struct Replica {
 }
 
 impl Replica {
+    #[allow(clippy::too_many_arguments)]
     fn new(
         rt: Arc<Runtime>,
         weights: SharedWeights,
@@ -586,6 +677,7 @@ impl Replica {
         prefill_graph: &'static str,
         decode_graph: &'static str,
         window: Duration,
+        deadline: Option<Duration>,
         metrics: Arc<EngineMetrics>,
     ) -> Result<Replica> {
         let m = rt.meta.model.clone();
@@ -627,6 +719,7 @@ impl Replica {
             prefill_graph,
             decode_graph,
             window,
+            deadline,
             metrics,
             slots: (0..b).map(|_| None).collect(),
             kv_state,
@@ -737,6 +830,19 @@ impl Replica {
         // defend against future edits breaking that invariant.
         debug_assert!(pending.len() <= free.len());
         let n = pending.len().min(free.len());
+        // Queue accounting: each request leaves the admission queue now.
+        let admitted_at = Instant::now();
+        for req in &pending {
+            self.metrics
+                .queue_exit(admitted_at.saturating_duration_since(req.queued_at));
+            tracer::span_at(
+                TraceLevel::Engine,
+                "queue_wait",
+                req.queued_at,
+                admitted_at,
+                &[("session", req.id as i64)],
+            );
+        }
         // Right-pad: prompt tail at positions 0..len-1 (padding after the
         // prompt is causally invisible to it, so the prefilled rows are
         // bit-identical to running the bare context).
@@ -756,6 +862,8 @@ impl Replica {
             self.prefill_args[self.n_prefix + 1] = HostTensor::i32(lens.clone(), vec![b]);
         }
 
+        let prompt_tokens: u64 = lens[..n].iter().map(|&l| l as u64).sum();
+        let t0 = Instant::now();
         let sw = crate::util::timer::Stopwatch::start();
         let out = match self.rt.run(self.prefill_graph, &self.prefill_args) {
             Ok(o) => o,
@@ -768,11 +876,17 @@ impl Replica {
             }
         };
         let elapsed = sw.elapsed();
+        tracer::span_at(
+            TraceLevel::Engine,
+            "prefill",
+            t0,
+            Instant::now(),
+            &[("batch", n as i64), ("tokens", prompt_tokens as i64)],
+        );
         self.metrics.core.inc("batches");
         self.metrics.core.add("batched_requests", n as u64);
         self.metrics.core.observe("prefill_exec", elapsed);
         self.record_pool_busy();
-        let prompt_tokens: u64 = lens[..n].iter().map(|&l| l as u64).sum();
         self.metrics.core.add("prefill_tokens", prompt_tokens);
 
         let logits = out[0].as_f32().expect("prefill logits are f32");
@@ -830,18 +944,26 @@ impl Replica {
                     logit,
                 }))
                 .is_ok();
+            let emitted_at = Instant::now();
+            self.metrics
+                .record_ttft(emitted_at.saturating_duration_since(req.queued_at));
             let remaining = req.max_tokens.saturating_sub(1);
             if alive && remaining > 0 && len < s {
                 self.slots[slot] = Some(Slot {
+                    id: req.id,
                     len,
                     last: tok,
                     remaining,
                     ctx,
+                    queued_at: req.queued_at,
+                    last_emit: emitted_at,
                     tx: req.tx,
                 });
+            } else {
+                // budget spent, cache full, or the session was dropped —
+                // closing the channel ends the stream
+                finish_session(&self.metrics, self.deadline, req.id, req.queued_at);
             }
-            // else: budget spent, cache full, or the session was dropped
-            // — closing the channel ends the stream
         }
     }
 
@@ -870,6 +992,7 @@ impl Replica {
         self.prefill_args[self.n_prefix] = HostTensor::i32(toks, vec![b, s]);
         self.metrics.record_occupancy(active, b);
 
+        let t0 = Instant::now();
         let sw = crate::util::timer::Stopwatch::start();
         let out = match self.rt.run(self.decode_graph, &self.prefill_args) {
             Ok(o) => o,
@@ -884,6 +1007,13 @@ impl Replica {
             }
         };
         let elapsed = sw.elapsed();
+        tracer::span_at(
+            TraceLevel::Engine,
+            "decode_step",
+            t0,
+            Instant::now(),
+            &[("active", active as i64)],
+        );
         self.metrics.core.inc("decode_steps");
         self.metrics.core.add("decode_tokens", active as u64);
         self.metrics.core.observe("decode_step_exec", elapsed);
@@ -906,7 +1036,12 @@ impl Replica {
                         logit,
                     }))
                     .is_ok();
+                let emitted_at = Instant::now();
+                self.metrics
+                    .record_inter_token(emitted_at.saturating_duration_since(sl.last_emit));
+                sl.last_emit = emitted_at;
                 if !alive || sl.remaining == 0 || sl.len >= s {
+                    finish_session(&self.metrics, self.deadline, sl.id, sl.queued_at);
                     *slot = None;
                 }
             }
@@ -931,6 +1066,7 @@ impl Replica {
         self.decode_args[nt - 1] = HostTensor::i32(pos, vec![b]);
         self.metrics.record_occupancy(active, b);
 
+        let t0 = Instant::now();
         let sw = crate::util::timer::Stopwatch::start();
         let run = match self.kv_state.as_mut() {
             // in-place: the caches stay resident in the backend state;
@@ -954,6 +1090,13 @@ impl Replica {
             }
         };
         let elapsed = sw.elapsed();
+        tracer::span_at(
+            TraceLevel::Engine,
+            "decode_step",
+            t0,
+            Instant::now(),
+            &[("active", active as i64)],
+        );
         self.metrics.core.inc("decode_steps");
         self.metrics.core.add("decode_tokens", active as u64);
         self.metrics.core.observe("decode_step_exec", elapsed);
@@ -982,7 +1125,12 @@ impl Replica {
                         logit,
                     }))
                     .is_ok();
+                let emitted_at = Instant::now();
+                self.metrics
+                    .record_inter_token(emitted_at.saturating_duration_since(sl.last_emit));
+                sl.last_emit = emitted_at;
                 if !alive || sl.remaining == 0 || sl.len >= s {
+                    finish_session(&self.metrics, self.deadline, sl.id, sl.queued_at);
                     *slot = None;
                 }
             }

@@ -103,6 +103,7 @@ pub mod error;
 pub mod eval;
 pub mod lloyd;
 pub mod models;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod stats;

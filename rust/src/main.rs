@@ -22,6 +22,7 @@ use bof4::{info, Result};
 
 fn main() {
     bof4::util::log::init_from_env();
+    bof4::obs::tracer::init_from_env();
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = argv.first().map(String::as_str).unwrap_or("help");
     let rest: Vec<String> = argv.iter().skip(1).cloned().collect();
@@ -242,7 +243,30 @@ fn serve(rest: Vec<String>) -> Result<()> {
             "serve a previously saved artifact instead of quantizing from scratch",
         )
         .flag("compress", "RLE-compress the artifact at rest (with --save)")
+        .opt(
+            "trace",
+            None,
+            "write a Chrome-trace JSON of the run here (Perfetto-loadable; \
+             implies BOF4_TRACE=1 unless BOF4_TRACE already set a level)",
+        )
+        .opt(
+            "metrics-file",
+            None,
+            "write Prometheus text metrics here (plus <path>.json), updated \
+             periodically during the run and once at the end",
+        )
+        .opt(
+            "deadline-ms",
+            None,
+            "per-session wall-time SLO in ms; overruns count into \
+             bof4_deadline_overruns_total (observational only)",
+        )
         .parse_from(rest);
+    let trace_path = p.get("trace").map(std::path::PathBuf::from);
+    let metrics_path = p.get("metrics-file").map(std::path::PathBuf::from);
+    if trace_path.is_some() && bof4::obs::tracer::level() == bof4::obs::TraceLevel::Off {
+        bof4::obs::tracer::set_level(bof4::obs::TraceLevel::Engine);
+    }
     let rt = Arc::new(Runtime::new()?);
     let cfg = quant_config(&p);
     // Default: serve quantized-at-rest through the fused q4 graphs (with
@@ -322,6 +346,9 @@ fn serve(rest: Vec<String>) -> Result<()> {
         bof4::coordinator::EngineConfig {
             replicas: p.get_usize("replicas").unwrap_or(1),
             kv_format,
+            session_deadline: p
+                .get_usize("deadline-ms")
+                .map(|ms| std::time::Duration::from_millis(ms as u64)),
             ..Default::default()
         },
     )?;
@@ -353,6 +380,7 @@ fn serve(rest: Vec<String>) -> Result<()> {
     let mut answered = 0;
     let mut streamed = 0usize;
     let mut first_stream: Option<Vec<u8>> = None;
+    let mut last_dump = std::time::Instant::now();
     for sess in sessions {
         let toks = sess.collect_tokens()?;
         if first_stream.is_none() {
@@ -360,6 +388,15 @@ fn serve(rest: Vec<String>) -> Result<()> {
         }
         streamed += toks.len();
         answered += 1;
+        // periodic metrics dump, so a scraper tailing the file sees the
+        // run progress (the engine handle is !Sync — dumps ride the
+        // collect loop rather than a thread)
+        if let Some(mp) = &metrics_path {
+            if last_dump.elapsed() >= std::time::Duration::from_millis(250) {
+                write_metrics_files(mp, &engine)?;
+                last_dump = std::time::Instant::now();
+            }
+        }
     }
     let secs = sw.elapsed().as_secs_f64();
     // deterministic fingerprint of the first session's greedy stream —
@@ -375,6 +412,40 @@ fn serve(rest: Vec<String>) -> Result<()> {
         streamed as f64 / secs,
         engine.metrics.summary()
     );
+    if let Some(mp) = &metrics_path {
+        write_metrics_files(mp, &engine)?;
+        println!(
+            "metrics: wrote Prometheus text to {} (and JSON to {}.json)",
+            mp.display(),
+            mp.display()
+        );
+    }
+    if let Some(tp) = &trace_path {
+        let snap = bof4::obs::tracer().snapshot();
+        std::fs::write(tp, bof4::obs::chrome_trace(&snap).to_string())
+            .map_err(|e| bof4::err!("write {}: {e}", tp.display()))?;
+        println!(
+            "trace: wrote {} events ({} evicted) to {} — open in \
+             https://ui.perfetto.dev or chrome://tracing",
+            snap.events.len(),
+            snap.dropped,
+            tp.display()
+        );
+    }
+    Ok(())
+}
+
+/// Dump one engine observability snapshot: Prometheus text at `path`,
+/// the same snapshot as JSON at `<path>.json`.
+fn write_metrics_files(path: &std::path::Path, engine: &bof4::coordinator::Engine) -> Result<()> {
+    let snap = engine.snapshot();
+    std::fs::write(path, snap.to_prometheus())
+        .map_err(|e| bof4::err!("write {}: {e}", path.display()))?;
+    let mut jp = path.as_os_str().to_owned();
+    jp.push(".json");
+    let jp = std::path::PathBuf::from(jp);
+    std::fs::write(&jp, snap.to_json().to_string())
+        .map_err(|e| bof4::err!("write {}: {e}", jp.display()))?;
     Ok(())
 }
 
@@ -397,6 +468,12 @@ fn info_cmd(_rest: Vec<String>) -> Result<()> {
          quantize per-session caches block-wise, dequantized fused inside \
          decode attention)",
         bof4::quant::KvFormat::from_env()
+    );
+    println!(
+        "tracing: {:?} (set BOF4_TRACE=0|1|kernel — or BOF4_LOG=trace — \
+         to record engine/kernel spans; export with bof4 serve --trace \
+         <path>; token streams are bit-identical at every level)",
+        bof4::obs::tracer::level()
     );
     println!("model: {:?}", rt.meta.model);
     println!("graphs:");

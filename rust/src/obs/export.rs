@@ -1,0 +1,536 @@
+//! Exporters: Chrome-trace-event JSON for the span tracer and a
+//! [`MetricsSnapshot`] rendered as Prometheus text exposition or JSON.
+//!
+//! Both serialize through [`crate::util::json`] (zero new deps) and are
+//! round-trip tested in `rust/tests/obs_integration.rs`: the trace JSON
+//! parses back cleanly and loads in Perfetto / `chrome://tracing`, and
+//! the Prometheus text names every metric in [`documented_metrics`].
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt::Write as _;
+
+use crate::coordinator::metrics::TOKEN_LATENCY_BOUNDS_MS;
+use crate::coordinator::{EngineMemoryProfile, EngineMetrics, LatencyStats};
+use crate::runtime::kernels::KernelStat;
+use crate::util::json::{obj, Json};
+
+use super::tracer::{EventKind, TraceSnapshot};
+
+/// Counter names every snapshot carries (zero-valued when the engine has
+/// not touched them yet), so scrapers see a stable series set.
+const KNOWN_COUNTERS: [&str; 7] = [
+    "batches",
+    "batched_requests",
+    "sessions",
+    "prefill_tokens",
+    "decode_tokens",
+    "decode_steps",
+    "deadline_overruns",
+];
+
+/// Value-series names every snapshot carries (summaries render empty —
+/// `_count 0` — before the first sample).
+const KNOWN_SERIES: [&str; 8] = [
+    "prefill_exec",
+    "decode_step_exec",
+    "token_latency",
+    "ttft",
+    "inter_token",
+    "queue_wait",
+    "slot_occupancy",
+    "pool_busy",
+];
+
+/// Series recorded as unit-free fractions rather than milliseconds.
+fn is_ratio_series(name: &str) -> bool {
+    matches!(name, "slot_occupancy" | "pool_busy")
+}
+
+fn series_metric_name(name: &str) -> String {
+    if is_ratio_series(name) {
+        format!("bof4_{name}_ratio")
+    } else {
+        format!("bof4_{name}_ms")
+    }
+}
+
+/// Every metric name the Prometheus exposition documents (README's
+/// metric table and the golden export test both pin this list).
+pub fn documented_metrics() -> &'static [&'static str] {
+    &[
+        "bof4_uptime_seconds",
+        "bof4_queue_depth",
+        "bof4_tokens_per_sec",
+        "bof4_batches_total",
+        "bof4_batched_requests_total",
+        "bof4_sessions_total",
+        "bof4_prefill_tokens_total",
+        "bof4_decode_tokens_total",
+        "bof4_decode_steps_total",
+        "bof4_deadline_overruns_total",
+        "bof4_prefill_exec_ms",
+        "bof4_decode_step_exec_ms",
+        "bof4_token_latency_ms",
+        "bof4_ttft_ms",
+        "bof4_inter_token_ms",
+        "bof4_queue_wait_ms",
+        "bof4_slot_occupancy_ratio",
+        "bof4_pool_busy_ratio",
+        "bof4_kernel_seconds_total",
+        "bof4_kernel_calls_total",
+        "bof4_replicas",
+        "bof4_shared_param_bytes",
+        "bof4_resident_bytes",
+        "bof4_session_kv_bytes",
+    ]
+}
+
+/// A point-in-time copy of the engine's SLO metrics, kernel profile and
+/// memory accounting — the unit both exporters render. Build one with
+/// [`MetricsSnapshot::collect`] (or [`crate::coordinator::Engine::snapshot`],
+/// which also fills in the kernel profile and memory).
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    /// Seconds since the engine's metrics started.
+    pub uptime_s: f64,
+    /// Sessions submitted but not yet admitted (gauge).
+    pub queue_depth: u64,
+    /// Decode tokens streamed per second of uptime.
+    pub tokens_per_sec: f64,
+    /// All counters, zero-filled over [`KNOWN_COUNTERS`], sorted by name.
+    pub counters: Vec<(String, u64)>,
+    /// All value series with their order statistics (`None` = no samples
+    /// yet), over the union of live series and [`KNOWN_SERIES`].
+    pub series: Vec<(String, Option<LatencyStats>)>,
+    /// Per-token latency histogram counts, aligned to
+    /// [`TOKEN_LATENCY_BOUNDS_MS`] plus the overflow bucket.
+    pub token_latency_counts: Vec<u64>,
+    /// Per-kernel-phase wall time + dispatch counts (empty on backends
+    /// without a thread pool).
+    pub kernels: Vec<KernelStat>,
+    /// Engine resident-memory accounting, when the snapshot came from a
+    /// running engine.
+    pub memory: Option<EngineMemoryProfile>,
+}
+
+impl MetricsSnapshot {
+    /// Snapshot an [`EngineMetrics`] registry plus (optionally) a kernel
+    /// profile and a memory profile.
+    pub fn collect(
+        m: &EngineMetrics,
+        kernels: Vec<KernelStat>,
+        memory: Option<EngineMemoryProfile>,
+    ) -> MetricsSnapshot {
+        let mut counters: BTreeMap<String, u64> = m.core.counter_snapshot().into_iter().collect();
+        for k in KNOWN_COUNTERS {
+            counters.entry(k.to_string()).or_insert(0);
+        }
+        let mut names: BTreeSet<String> = m.core.series_names().into_iter().collect();
+        for k in KNOWN_SERIES {
+            names.insert(k.to_string());
+        }
+        let series = names
+            .into_iter()
+            .map(|n| {
+                let s = m.core.latency_stats(&n);
+                (n, s)
+            })
+            .collect();
+        MetricsSnapshot {
+            uptime_s: m.uptime().as_secs_f64(),
+            queue_depth: m.queue_depth(),
+            tokens_per_sec: m.tokens_per_sec(),
+            counters: counters.into_iter().collect(),
+            series,
+            token_latency_counts: m
+                .token_latency_histogram()
+                .into_iter()
+                .map(|(_, n)| n)
+                .collect(),
+            kernels,
+            memory,
+        }
+    }
+
+    /// Render as Prometheus text exposition (version 0.0.4): gauges for
+    /// the SLO signals, `_total` counters, summaries with `quantile`
+    /// labels for every value series, the cumulative `le` histogram for
+    /// per-token latency, and the kernel profile as `kernel`-labelled
+    /// counters.
+    pub fn to_prometheus(&self) -> String {
+        let mut o = String::new();
+        let _ = writeln!(o, "# HELP bof4_uptime_seconds Engine uptime.");
+        let _ = writeln!(o, "# TYPE bof4_uptime_seconds gauge");
+        let _ = writeln!(o, "bof4_uptime_seconds {}", fmt_num(self.uptime_s));
+        let _ = writeln!(
+            o,
+            "# HELP bof4_queue_depth Sessions submitted but not yet admitted."
+        );
+        let _ = writeln!(o, "# TYPE bof4_queue_depth gauge");
+        let _ = writeln!(o, "bof4_queue_depth {}", self.queue_depth);
+        let _ = writeln!(
+            o,
+            "# HELP bof4_tokens_per_sec Decode tokens streamed per second of uptime."
+        );
+        let _ = writeln!(o, "# TYPE bof4_tokens_per_sec gauge");
+        let _ = writeln!(o, "bof4_tokens_per_sec {}", fmt_num(self.tokens_per_sec));
+
+        for (name, v) in &self.counters {
+            let _ = writeln!(o, "# TYPE bof4_{name}_total counter");
+            let _ = writeln!(o, "bof4_{name}_total {v}");
+        }
+
+        for (name, stats) in &self.series {
+            let metric = series_metric_name(name);
+            let _ = writeln!(o, "# TYPE {metric} summary");
+            match stats {
+                Some(s) => {
+                    let _ = writeln!(o, "{metric}{{quantile=\"0.5\"}} {}", fmt_num(s.p50_ms));
+                    let _ = writeln!(o, "{metric}{{quantile=\"0.95\"}} {}", fmt_num(s.p95_ms));
+                    let _ = writeln!(o, "{metric}{{quantile=\"0.99\"}} {}", fmt_num(s.p99_ms));
+                    let _ = writeln!(o, "{metric}_sum {}", fmt_num(s.mean_ms * s.count as f64));
+                    let _ = writeln!(o, "{metric}_count {}", s.count);
+                    let _ = writeln!(o, "{metric}_dropped_total {}", s.dropped);
+                }
+                None => {
+                    let _ = writeln!(o, "{metric}_sum 0");
+                    let _ = writeln!(o, "{metric}_count 0");
+                    let _ = writeln!(o, "{metric}_dropped_total 0");
+                }
+            }
+        }
+
+        let _ = writeln!(
+            o,
+            "# HELP bof4_token_latency_ms Wall time of the step that produced each token."
+        );
+        let _ = writeln!(o, "# TYPE bof4_token_latency_ms histogram");
+        let mut cum = 0u64;
+        for (i, bound) in TOKEN_LATENCY_BOUNDS_MS.iter().enumerate() {
+            cum += self.token_latency_counts.get(i).copied().unwrap_or(0);
+            let _ = writeln!(o, "bof4_token_latency_ms_bucket{{le=\"{bound}\"}} {cum}");
+        }
+        cum += self
+            .token_latency_counts
+            .get(TOKEN_LATENCY_BOUNDS_MS.len())
+            .copied()
+            .unwrap_or(0);
+        let _ = writeln!(o, "bof4_token_latency_ms_bucket{{le=\"+Inf\"}} {cum}");
+        let _ = writeln!(o, "bof4_token_latency_ms_count {cum}");
+
+        let _ = writeln!(
+            o,
+            "# HELP bof4_kernel_seconds_total Wall time in top-level kernel-pool dispatches, by kernel phase."
+        );
+        let _ = writeln!(o, "# TYPE bof4_kernel_seconds_total counter");
+        for k in &self.kernels {
+            let _ = writeln!(
+                o,
+                "bof4_kernel_seconds_total{{kernel=\"{}\"}} {}",
+                k.kernel,
+                fmt_num(k.seconds())
+            );
+        }
+        let _ = writeln!(
+            o,
+            "# HELP bof4_kernel_calls_total Top-level kernel-pool dispatches, by kernel phase."
+        );
+        let _ = writeln!(o, "# TYPE bof4_kernel_calls_total counter");
+        for k in &self.kernels {
+            let _ = writeln!(
+                o,
+                "bof4_kernel_calls_total{{kernel=\"{}\"}} {}",
+                k.kernel, k.calls
+            );
+        }
+
+        if let Some(mem) = &self.memory {
+            let _ = writeln!(o, "# TYPE bof4_replicas gauge");
+            let _ = writeln!(o, "bof4_replicas {}", mem.replicas);
+            let _ = writeln!(o, "# TYPE bof4_shared_param_bytes gauge");
+            let _ = writeln!(o, "bof4_shared_param_bytes {}", mem.shared_param_bytes);
+            let _ = writeln!(o, "# TYPE bof4_resident_bytes gauge");
+            let _ = writeln!(o, "bof4_resident_bytes {}", mem.total_resident_bytes);
+            let _ = writeln!(
+                o,
+                "# HELP bof4_session_kv_bytes Resident KV-cache bytes one session costs ({} format).",
+                mem.kv_format
+            );
+            let _ = writeln!(o, "# TYPE bof4_session_kv_bytes gauge");
+            let _ = writeln!(o, "bof4_session_kv_bytes {}", mem.session_kv_bytes);
+        }
+        o
+    }
+
+    /// Render as a JSON object (the machine-readable sibling of the
+    /// Prometheus text; `bof4 serve --metrics-file p` writes both).
+    pub fn to_json(&self) -> Json {
+        let counters = Json::Obj(
+            self.counters
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                .collect(),
+        );
+        let series = Json::Obj(
+            self.series
+                .iter()
+                .map(|(k, s)| {
+                    let v = match s {
+                        Some(s) => obj(vec![
+                            ("count", Json::Num(s.count as f64)),
+                            ("non_finite", Json::Num(s.non_finite as f64)),
+                            ("dropped", Json::Num(s.dropped as f64)),
+                            ("mean", Json::Num(s.mean_ms)),
+                            ("p50", Json::Num(s.p50_ms)),
+                            ("p95", Json::Num(s.p95_ms)),
+                            ("p99", Json::Num(s.p99_ms)),
+                            ("max", Json::Num(s.max_ms)),
+                        ]),
+                        None => Json::Null,
+                    };
+                    (k.clone(), v)
+                })
+                .collect(),
+        );
+        let kernels = Json::Arr(
+            self.kernels
+                .iter()
+                .map(|k| {
+                    obj(vec![
+                        ("kernel", Json::Str(k.kernel.to_string())),
+                        ("calls", Json::Num(k.calls as f64)),
+                        ("seconds", Json::Num(k.seconds())),
+                    ])
+                })
+                .collect(),
+        );
+        let memory = match &self.memory {
+            Some(m) => obj(vec![
+                ("replicas", Json::Num(m.replicas as f64)),
+                ("shared_param_bytes", Json::Num(m.shared_param_bytes as f64)),
+                (
+                    "total_resident_bytes",
+                    Json::Num(m.total_resident_bytes as f64),
+                ),
+                ("kv_format", Json::Str(m.kv_format.to_string())),
+                ("session_kv_bytes", Json::Num(m.session_kv_bytes as f64)),
+            ]),
+            None => Json::Null,
+        };
+        obj(vec![
+            ("uptime_s", Json::Num(self.uptime_s)),
+            ("queue_depth", Json::Num(self.queue_depth as f64)),
+            ("tokens_per_sec", Json::Num(self.tokens_per_sec)),
+            ("counters", counters),
+            ("series", series),
+            (
+                "token_latency_hist",
+                obj(vec![
+                    (
+                        "bounds_ms",
+                        crate::util::json::arr_f64(&TOKEN_LATENCY_BOUNDS_MS),
+                    ),
+                    (
+                        "counts",
+                        Json::Arr(
+                            self.token_latency_counts
+                                .iter()
+                                .map(|&n| Json::Num(n as f64))
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
+            ("kernels", kernels),
+            ("memory", memory),
+        ])
+    }
+}
+
+/// Plain `{}` float formatting, with non-finite values clamped to 0 (the
+/// text exposition has no NaN story worth keeping).
+fn fmt_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+/// Render a tracer snapshot as Chrome trace-event JSON (the "JSON Array
+/// Format" with a `traceEvents` wrapper), loadable in Perfetto or
+/// `chrome://tracing`. Spans are complete events (`ph: "X"`, µs
+/// timestamps); instants are `ph: "i"` with thread scope; thread names
+/// ride as `"M"` metadata.
+pub fn chrome_trace(snap: &TraceSnapshot) -> Json {
+    let mut events: Vec<Json> = Vec::with_capacity(snap.events.len() + snap.threads.len() + 1);
+    events.push(obj(vec![
+        ("name", Json::Str("process_name".to_string())),
+        ("ph", Json::Str("M".to_string())),
+        ("pid", Json::Num(0.0)),
+        ("tid", Json::Num(0.0)),
+        (
+            "args",
+            obj(vec![("name", Json::Str("bof4 serving engine".to_string()))]),
+        ),
+    ]));
+    for (tid, name) in &snap.threads {
+        events.push(obj(vec![
+            ("name", Json::Str("thread_name".to_string())),
+            ("ph", Json::Str("M".to_string())),
+            ("pid", Json::Num(0.0)),
+            ("tid", Json::Num(*tid as f64)),
+            ("args", obj(vec![("name", Json::Str(name.clone()))])),
+        ]));
+    }
+    for ev in &snap.events {
+        let mut args: Vec<(&str, Json)> = ev
+            .args
+            .iter()
+            .map(|(k, v)| (*k, Json::Num(*v as f64)))
+            .collect();
+        if let Some(text) = &ev.text {
+            args.push(("msg", Json::Str(text.to_string())));
+        }
+        let mut fields = vec![
+            ("name", Json::Str(ev.name.to_string())),
+            ("pid", Json::Num(0.0)),
+            ("tid", Json::Num(ev.tid as f64)),
+            ("ts", Json::Num(ev.ts_us as f64)),
+            ("args", obj(args)),
+        ];
+        match ev.kind {
+            EventKind::Span => {
+                fields.push(("ph", Json::Str("X".to_string())));
+                fields.push(("dur", Json::Num(ev.dur_us as f64)));
+            }
+            EventKind::Instant => {
+                fields.push(("ph", Json::Str("i".to_string())));
+                fields.push(("s", Json::Str("t".to_string())));
+            }
+        }
+        events.push(obj(fields));
+    }
+    obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+        (
+            "otherData",
+            obj(vec![("dropped_events", Json::Num(snap.dropped as f64))]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::tracer::TraceEvent;
+    use std::time::Duration;
+
+    fn sample_snapshot() -> MetricsSnapshot {
+        let em = EngineMetrics::new();
+        em.core.inc("batches");
+        em.core.add("decode_tokens", 40);
+        em.record_token_latency(Duration::from_millis(2));
+        em.record_ttft(Duration::from_millis(9));
+        em.queue_enter();
+        let kernels = vec![KernelStat {
+            kernel: "dense",
+            calls: 12,
+            nanos: 3_400_000,
+        }];
+        MetricsSnapshot::collect(&em, kernels, None)
+    }
+
+    #[test]
+    fn prometheus_names_every_documented_metric() {
+        let mut snap = sample_snapshot();
+        snap.memory = Some(EngineMemoryProfile {
+            replicas: 2,
+            shared_param_bytes: 1000,
+            per_replica_bytes: vec![10, 10],
+            total_resident_bytes: 1020,
+            kv_format: "q8",
+            session_kv_bytes: 64,
+        });
+        let text = snap.to_prometheus();
+        for name in documented_metrics() {
+            assert!(text.contains(name), "missing {name} in:\n{text}");
+        }
+        // summaries carry quantiles once samples exist
+        assert!(text.contains("bof4_ttft_ms{quantile=\"0.99\"}"), "{text}");
+        // histogram is cumulative and ends at +Inf
+        assert!(text.contains("bof4_token_latency_ms_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("bof4_kernel_seconds_total{kernel=\"dense\"}"));
+        assert!(text.contains("bof4_queue_depth 1"));
+    }
+
+    #[test]
+    fn json_export_parses_back() {
+        let snap = sample_snapshot();
+        let j = Json::parse(&snap.to_json().to_string()).unwrap();
+        assert_eq!(j.path("counters.batches").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.path("queue_depth").unwrap().as_f64(), Some(1.0));
+        assert_eq!(
+            j.path("kernels.0.kernel").unwrap().as_str(),
+            Some("dense")
+        );
+        // series without samples render null, with samples an object
+        assert_eq!(j.path("series.pool_busy").unwrap(), &Json::Null);
+        assert_eq!(j.path("series.ttft.count").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn chrome_trace_shape() {
+        let mut threads = std::collections::BTreeMap::new();
+        threads.insert(3u64, "engine-replica-0".to_string());
+        let snap = TraceSnapshot {
+            events: vec![
+                TraceEvent {
+                    name: "prefill",
+                    kind: EventKind::Span,
+                    ts_us: 10,
+                    dur_us: 250,
+                    tid: 3,
+                    args: vec![("batch", 4)],
+                    text: None,
+                },
+                TraceEvent {
+                    name: "log_warn",
+                    kind: EventKind::Instant,
+                    ts_us: 40,
+                    dur_us: 0,
+                    tid: 3,
+                    args: vec![],
+                    text: Some("queue nearly full".into()),
+                },
+            ],
+            dropped: 7,
+            threads,
+        };
+        let j = Json::parse(&chrome_trace(&snap).to_string()).unwrap();
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        // process_name + thread_name + 2 events
+        assert_eq!(evs.len(), 4);
+        let span = evs
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("prefill"))
+            .unwrap();
+        assert_eq!(span.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(span.get("dur").unwrap().as_f64(), Some(250.0));
+        assert_eq!(span.path("args.batch").unwrap().as_f64(), Some(4.0));
+        let inst = evs
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("log_warn"))
+            .unwrap();
+        assert_eq!(inst.get("ph").unwrap().as_str(), Some("i"));
+        assert_eq!(
+            inst.path("args.msg").unwrap().as_str(),
+            Some("queue nearly full")
+        );
+        assert_eq!(
+            j.path("otherData.dropped_events").unwrap().as_f64(),
+            Some(7.0)
+        );
+    }
+}

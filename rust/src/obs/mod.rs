@@ -1,0 +1,32 @@
+//! Observability: request-scoped span tracing, SLO telemetry snapshots
+//! and exporters for the serving engine — zero new dependencies.
+//!
+//! Three pieces (ISSUE 8):
+//!
+//! - [`tracer`] — a process-wide span tracer behind a relaxed-atomic
+//!   `BOF4_TRACE=0|1|kernel` gate (off cost: one branch). The engine
+//!   instruments admission → queue wait → prefill → every decode step →
+//!   completion; at the `kernel` level the thread pool adds one span per
+//!   top-level dispatch, tagged with its
+//!   [`crate::runtime::kernels::KernelPhase`]. Events live in a bounded
+//!   lock-recovering ring; spans are recorded whole ("X" complete
+//!   events), so eviction never orphans a begin/end pair.
+//! - [`export`] — Chrome-trace-event JSON (open `results/trace.json` in
+//!   [Perfetto](https://ui.perfetto.dev) or `chrome://tracing`) and
+//!   [`MetricsSnapshot`], rendered as Prometheus text exposition or
+//!   JSON.
+//! - SLO metrics — time-to-first-token, inter-token latency, queue
+//!   depth, per-session deadline overruns and tokens/sec live in
+//!   [`crate::coordinator::EngineMetrics`]; the snapshot joins them with
+//!   the engine's memory profile and the pool's per-kernel profile.
+//!
+//! Wired to `bof4 serve --trace <path> --metrics-file <path>` with
+//! periodic dumps. Determinism contract: tracing never enters a kernel's
+//! reduction path, and engine token streams are bit-identical with
+//! tracing off/on/kernel (pinned by `rust/tests/obs_integration.rs`).
+
+pub mod export;
+pub mod tracer;
+
+pub use export::{chrome_trace, documented_metrics, MetricsSnapshot};
+pub use tracer::{tracer, TraceLevel, Tracer};

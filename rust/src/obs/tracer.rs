@@ -1,0 +1,453 @@
+//! Process-wide span tracer with a bounded, lock-recovering ring buffer.
+//!
+//! The tracer records *where a request's time went*: admission, queue
+//! wait, prefill, every decode step, session completion — and, at the
+//! `kernel` level, every top-level thread-pool dispatch tagged with its
+//! kernel phase (dense / q4 / attention / KV / …). Events are buffered
+//! in a fixed-capacity ring ([`RING_CAP`]) guarded by a poisoning-immune
+//! mutex (same [`PoisonError::into_inner`] policy as
+//! `coordinator::metrics` and the kernel pool), then exported as
+//! Chrome-trace-event JSON by [`crate::obs::export::chrome_trace`].
+//!
+//! ## Cost model
+//!
+//! The gate is a single relaxed atomic load ([`enabled`]), so with
+//! `BOF4_TRACE=0` (the default) every instrumentation site costs one
+//! branch. Tracing **never** enters a kernel's reduction path: spans wrap
+//! kernel *dispatch* (entry/exit of `ThreadPool::run`), so the engine's
+//! bit-identical determinism contract is untouched at any level — pinned
+//! by `rust/tests/obs_integration.rs`.
+//!
+//! ## Levels
+//!
+//! | `BOF4_TRACE` | level | records |
+//! |--------------|-------|---------|
+//! | unset / `0`  | [`TraceLevel::Off`]    | nothing |
+//! | `1`          | [`TraceLevel::Engine`] | request lifecycle spans |
+//! | `kernel`     | [`TraceLevel::Kernel`] | \+ per-dispatch kernel spans |
+//!
+//! `BOF4_LOG=trace` is an alias that enables level `1` (see
+//! [`crate::util::log::init_from_env`]).
+
+use std::cell::Cell;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock, PoisonError};
+use std::time::Instant;
+
+/// Maximum number of buffered events; the oldest are evicted beyond this.
+pub const RING_CAP: usize = 65_536;
+
+/// Tracing verbosity. Ordered: `Kernel` implies `Engine`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum TraceLevel {
+    /// Tracing disabled (the default); every probe is one branch.
+    Off = 0,
+    /// Request-lifecycle spans: queue wait, prefill, decode steps,
+    /// session completion, log mirrors.
+    Engine = 1,
+    /// Engine spans plus one span per top-level kernel-pool dispatch,
+    /// tagged with the kernel phase.
+    Kernel = 2,
+}
+
+impl TraceLevel {
+    fn from_u8(v: u8) -> TraceLevel {
+        match v {
+            2 => TraceLevel::Kernel,
+            1 => TraceLevel::Engine,
+            _ => TraceLevel::Off,
+        }
+    }
+}
+
+/// The process-wide trace level. Relaxed ordering is deliberate: the gate
+/// needs no synchronization with the events themselves (the ring mutex
+/// provides that); it only needs to be cheap.
+static LEVEL: AtomicU8 = AtomicU8::new(0);
+
+/// One relaxed load + compare: the entire cost of a disabled probe.
+#[inline]
+pub fn enabled(lv: TraceLevel) -> bool {
+    LEVEL.load(Ordering::Relaxed) >= lv as u8
+}
+
+/// Current process-wide trace level.
+pub fn level() -> TraceLevel {
+    TraceLevel::from_u8(LEVEL.load(Ordering::Relaxed))
+}
+
+/// Set the process-wide trace level. Tests and benches use this instead
+/// of mutating `BOF4_TRACE` (env mutation is racy under the threaded
+/// test harness).
+pub fn set_level(lv: TraceLevel) {
+    LEVEL.store(lv as u8, Ordering::Relaxed);
+}
+
+/// Parse a `BOF4_TRACE` value. `None` means unrecognized.
+pub fn parse_trace_level(s: &str) -> Option<TraceLevel> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "" | "0" | "off" | "false" => Some(TraceLevel::Off),
+        "1" | "on" | "true" | "engine" => Some(TraceLevel::Engine),
+        "2" | "kernel" => Some(TraceLevel::Kernel),
+        _ => None,
+    }
+}
+
+/// Initialize the trace level from `BOF4_TRACE`. Unknown values warn to
+/// stderr and leave the level unchanged (so a `BOF4_LOG=trace` alias set
+/// earlier survives a typo here).
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("BOF4_TRACE") {
+        match parse_trace_level(&v) {
+            Some(lv) => set_level(lv),
+            None => eprintln!(
+                "bof4: unknown BOF4_TRACE value '{v}' (expected 0|1|kernel); ignored"
+            ),
+        }
+    }
+}
+
+/// Event flavor, mapped to Chrome trace-event phases on export.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A completed span (`ph: "X"`): `ts_us` start + `dur_us` duration.
+    /// Spans are recorded whole at end-of-scope, so ring eviction can
+    /// never orphan a begin without its end.
+    Span,
+    /// A point-in-time marker (`ph: "i"`).
+    Instant,
+}
+
+/// One buffered trace event. Timestamps are microseconds since the
+/// tracer's epoch (first use in the process).
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Static event name (span/instant label in the trace viewer).
+    pub name: &'static str,
+    /// Span or instant.
+    pub kind: EventKind,
+    /// Start time, µs since the tracer epoch.
+    pub ts_us: u64,
+    /// Duration in µs (0 for instants).
+    pub dur_us: u64,
+    /// Recording thread (dense ids assigned per thread at first event).
+    pub tid: u64,
+    /// Small integer arguments (session id, step, batch size, …).
+    pub args: Vec<(&'static str, i64)>,
+    /// Optional free-text payload (log-record mirrors).
+    pub text: Option<Box<str>>,
+}
+
+struct Ring {
+    events: VecDeque<TraceEvent>,
+    dropped: u64,
+    /// tid -> thread name, for `thread_name` metadata on export.
+    threads: BTreeMap<u64, String>,
+}
+
+/// Bounded event buffer behind a poisoning-immune mutex.
+pub struct Tracer {
+    epoch: Instant,
+    inner: Mutex<Ring>,
+}
+
+fn lock_recover(m: &Mutex<Ring>) -> MutexGuard<'_, Ring> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TID: Cell<u64> = const { Cell::new(0) };
+}
+
+fn current_tid() -> u64 {
+    TID.with(|t| {
+        let v = t.get();
+        if v != 0 {
+            v
+        } else {
+            let fresh = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            t.set(fresh);
+            fresh
+        }
+    })
+}
+
+impl Tracer {
+    fn new() -> Tracer {
+        Tracer {
+            epoch: Instant::now(),
+            inner: Mutex::new(Ring {
+                events: VecDeque::new(),
+                dropped: 0,
+                threads: BTreeMap::new(),
+            }),
+        }
+    }
+
+    /// The instant all timestamps are relative to.
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    fn ts_us(&self, t: Instant) -> u64 {
+        // Saturate to 0 for instants that (in tests) precede the epoch.
+        t.checked_duration_since(self.epoch)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0)
+    }
+
+    fn push(&self, ev: TraceEvent) {
+        let tid = ev.tid;
+        let mut ring = lock_recover(&self.inner);
+        if !ring.threads.contains_key(&tid) {
+            let name = std::thread::current()
+                .name()
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("thread-{tid}"));
+            ring.threads.insert(tid, name);
+        }
+        if ring.events.len() >= RING_CAP {
+            ring.events.pop_front();
+            ring.dropped += 1;
+        }
+        ring.events.push_back(ev);
+    }
+
+    /// Record a completed span from explicit start/end instants. Used for
+    /// retroactive intervals (queue wait measured at admission).
+    pub fn span_at(
+        &self,
+        name: &'static str,
+        start: Instant,
+        end: Instant,
+        args: &[(&'static str, i64)],
+    ) {
+        let ts_us = self.ts_us(start);
+        let dur_us = end
+            .checked_duration_since(start)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0);
+        self.push(TraceEvent {
+            name,
+            kind: EventKind::Span,
+            ts_us,
+            dur_us,
+            tid: current_tid(),
+            args: args.to_vec(),
+            text: None,
+        });
+    }
+
+    /// Record an instant event.
+    pub fn instant(&self, name: &'static str, args: &[(&'static str, i64)]) {
+        let ts_us = self.ts_us(Instant::now());
+        self.push(TraceEvent {
+            name,
+            kind: EventKind::Instant,
+            ts_us,
+            dur_us: 0,
+            tid: current_tid(),
+            args: args.to_vec(),
+            text: None,
+        });
+    }
+
+    /// Record an instant event carrying free text (log-record mirrors).
+    pub fn instant_msg(&self, name: &'static str, text: &str) {
+        let ts_us = self.ts_us(Instant::now());
+        self.push(TraceEvent {
+            name,
+            kind: EventKind::Instant,
+            ts_us,
+            dur_us: 0,
+            tid: current_tid(),
+            args: Vec::new(),
+            text: Some(text.into()),
+        });
+    }
+
+    /// Copy out the buffered events, the eviction count, and the thread
+    /// name table. Does not drain the ring.
+    pub fn snapshot(&self) -> TraceSnapshot {
+        let ring = lock_recover(&self.inner);
+        TraceSnapshot {
+            events: ring.events.iter().cloned().collect(),
+            dropped: ring.dropped,
+            threads: ring.threads.clone(),
+        }
+    }
+
+    /// Number of buffered events.
+    pub fn len(&self) -> usize {
+        lock_recover(&self.inner).events.len()
+    }
+
+    /// True when no events are buffered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all buffered events and reset the eviction counter (tests,
+    /// and benches that re-measure from a clean ring).
+    pub fn clear(&self) {
+        let mut ring = lock_recover(&self.inner);
+        ring.events.clear();
+        ring.dropped = 0;
+    }
+}
+
+/// A copied-out view of the ring (events + eviction count + thread names).
+#[derive(Clone, Debug)]
+pub struct TraceSnapshot {
+    /// Buffered events, oldest first.
+    pub events: Vec<TraceEvent>,
+    /// Events evicted from the ring since the last [`Tracer::clear`].
+    pub dropped: u64,
+    /// tid -> thread name.
+    pub threads: BTreeMap<u64, String>,
+}
+
+/// The process-wide tracer.
+pub fn tracer() -> &'static Tracer {
+    static TRACER: OnceLock<Tracer> = OnceLock::new();
+    TRACER.get_or_init(Tracer::new)
+}
+
+/// RAII span: records one [`EventKind::Span`] event from construction to
+/// drop. Only constructed when its level was enabled (see [`span`]).
+pub struct SpanGuard {
+    name: &'static str,
+    start: Instant,
+    args: Vec<(&'static str, i64)>,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let t = tracer();
+        t.span_at(self.name, self.start, Instant::now(), &self.args);
+    }
+}
+
+/// Open a span if `lv` is enabled; one branch otherwise. Bind the result
+/// (`let _span = span(..)`) so the guard lives to the end of the scope.
+#[inline]
+pub fn span(
+    lv: TraceLevel,
+    name: &'static str,
+    args: &[(&'static str, i64)],
+) -> Option<SpanGuard> {
+    if !enabled(lv) {
+        return None;
+    }
+    Some(SpanGuard {
+        name,
+        start: Instant::now(),
+        args: args.to_vec(),
+    })
+}
+
+/// Record a retroactive span if `lv` is enabled; one branch otherwise.
+#[inline]
+pub fn span_at(
+    lv: TraceLevel,
+    name: &'static str,
+    start: Instant,
+    end: Instant,
+    args: &[(&'static str, i64)],
+) {
+    if enabled(lv) {
+        tracer().span_at(name, start, end, args);
+    }
+}
+
+/// Record an instant event if `lv` is enabled; one branch otherwise.
+#[inline]
+pub fn instant(lv: TraceLevel, name: &'static str, args: &[(&'static str, i64)]) {
+    if enabled(lv) {
+        tracer().instant(name, args);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    // Tests that flip the global level serialize on this (the unit-test
+    // harness runs tests on concurrent threads).
+    fn level_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(parse_trace_level("0"), Some(TraceLevel::Off));
+        assert_eq!(parse_trace_level("off"), Some(TraceLevel::Off));
+        assert_eq!(parse_trace_level("1"), Some(TraceLevel::Engine));
+        assert_eq!(parse_trace_level("engine"), Some(TraceLevel::Engine));
+        assert_eq!(parse_trace_level(" KERNEL "), Some(TraceLevel::Kernel));
+        assert_eq!(parse_trace_level("2"), Some(TraceLevel::Kernel));
+        assert_eq!(parse_trace_level("verbose"), None);
+    }
+
+    #[test]
+    fn disabled_probes_record_nothing() {
+        let _g = level_lock();
+        set_level(TraceLevel::Off);
+        let before = tracer().len();
+        instant(TraceLevel::Engine, "nope", &[]);
+        let s = span(TraceLevel::Engine, "nope", &[]);
+        assert!(s.is_none());
+        drop(s);
+        assert_eq!(tracer().len(), before);
+    }
+
+    #[test]
+    fn span_guard_records_duration() {
+        let _g = level_lock();
+        set_level(TraceLevel::Engine);
+        tracer().clear();
+        {
+            let _span = span(TraceLevel::Engine, "unit_span", &[("k", 7)]);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        instant(TraceLevel::Engine, "unit_instant", &[]);
+        // Kernel-level probe must stay silent at Engine level.
+        instant(TraceLevel::Kernel, "kernel_only", &[]);
+        set_level(TraceLevel::Off);
+        let snap = tracer().snapshot();
+        let sp = snap
+            .events
+            .iter()
+            .find(|e| e.name == "unit_span")
+            .expect("span recorded");
+        assert_eq!(sp.kind, EventKind::Span);
+        assert!(sp.dur_us >= 1_000, "slept 2ms, got {}us", sp.dur_us);
+        assert_eq!(sp.args, vec![("k", 7)]);
+        assert!(snap.events.iter().any(|e| e.name == "unit_instant"));
+        assert!(!snap.events.iter().any(|e| e.name == "kernel_only"));
+        assert!(snap.threads.contains_key(&sp.tid));
+        tracer().clear();
+    }
+
+    #[test]
+    fn ring_stays_bounded() {
+        let _g = level_lock();
+        set_level(TraceLevel::Engine);
+        tracer().clear();
+        for _ in 0..RING_CAP + 100 {
+            tracer().instant("flood", &[]);
+        }
+        set_level(TraceLevel::Off);
+        let snap = tracer().snapshot();
+        assert_eq!(snap.events.len(), RING_CAP);
+        assert!(snap.dropped >= 100);
+        tracer().clear();
+        assert!(tracer().is_empty());
+    }
+}

@@ -51,7 +51,10 @@
 use std::sync::Arc;
 
 use super::kernels::kv::{decode_attention_kv, KvView};
-use super::kernels::{attention, q4, simd, tiling, MatW, SimdPath, SyncSlice, ThreadPool};
+use super::kernels::{
+    attention, phase_scope, q4, simd, tiling, KernelPhase, KernelStat, MatW, SimdPath, SyncSlice,
+    ThreadPool,
+};
 use super::meta::{lora_specs, matmul_param_names, param_specs, GraphMeta, ModelMeta};
 use super::{Backend, DecodeState, HostTensor};
 use crate::error::Result;
@@ -385,6 +388,10 @@ impl Backend for CpuBackend {
 
     fn simd_path(&self) -> Option<&'static str> {
         Some(self.pool.simd().name())
+    }
+
+    fn kernel_profile(&self) -> Option<Vec<KernelStat>> {
+        Some(self.pool.kernel_profile())
     }
 
     fn execute(&self, gm: &GraphMeta, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
@@ -1409,6 +1416,7 @@ impl CpuBackend {
         token: &[i32],
         pos: &[i32],
     ) -> Vec<f32> {
+        let _phase = phase_scope(KernelPhase::Decode);
         let (b, s, d, h, _hd, ff, v) = self.dims();
         let pool = &*self.pool;
         let slot = s * d;
@@ -1470,6 +1478,7 @@ impl CpuBackend {
         token: &[i32],
         pos: &[i32],
     ) -> Vec<f32> {
+        let _phase = phase_scope(KernelPhase::Kv);
         let (b, s, d, h, _hd, ff, v) = self.dims();
         let pool = &*self.pool;
         let (fmt, block, norm, rcb, nb) = (st.fmt, st.block, st.norm, st.rcb, st.nb);
@@ -1651,6 +1660,7 @@ impl CpuBackend {
         args: &[HostTensor],
         norm: Norm,
     ) -> Result<Vec<HostTensor>> {
+        let _phase = phase_scope(KernelPhase::Quantize);
         let w = args[0].as_f32()?;
         let bounds = args[1].as_f32()?;
         let (rows, blk) = (gm.args[0].shape[0], gm.args[0].shape[1]);

@@ -15,7 +15,7 @@
 
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
-use super::pool::{SyncSlice, ThreadPool};
+use super::pool::{phase_scope, KernelPhase, SyncSlice, ThreadPool};
 use super::simd;
 
 /// Forward causal MHA over packed `qkv [b*s, 3d]`; returns
@@ -28,6 +28,7 @@ pub fn mha_forward(
     s: usize,
     d: usize,
 ) -> (Vec<f32>, Vec<f32>) {
+    let _phase = phase_scope(KernelPhase::Attention);
     let path = pool.simd();
     let hd = d / h;
     let inv_sqrt_hd = 1.0 / (hd as f32).sqrt();
@@ -90,6 +91,7 @@ pub fn mha_backward(
     s: usize,
     d: usize,
 ) -> Vec<f32> {
+    let _phase = phase_scope(KernelPhase::Attention);
     let path = pool.simd();
     let hd = d / h;
     let inv_sqrt_hd = 1.0 / (hd as f32).sqrt();

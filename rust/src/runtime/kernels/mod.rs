@@ -26,6 +26,15 @@
 //!   [`simd`]'s `kv_dot_*`/`kv_axpy_*` forms without materializing f32
 //!   rows.
 //!
+//! **Observability**: kernel entry points tag their calling thread with
+//! a [`KernelPhase`] ([`pool::phase_scope`]); the pool attributes every
+//! top-level dispatch's wall time and call count to that phase
+//! ([`ThreadPool::kernel_profile`], exported as the Prometheus
+//! `bof4_kernel_seconds_total{kernel="…"}` series) and, at
+//! `BOF4_TRACE=kernel`, emits one trace span per dispatch. Both wrap
+//! dispatch from the outside — never a reduction loop — so the
+//! determinism contract below is untouched.
+//!
 //! **Determinism contract**: every kernel is bit-identical across every
 //! `(BOF4_THREADS, BOF4_SIMD)` combination. Tiles have exactly one
 //! owning task (deterministic ownership); element-wise accumulations
@@ -46,6 +55,8 @@ pub mod q4;
 pub mod simd;
 pub mod tiling;
 
-pub use pool::{default_pool, threads_from_env, SyncSlice, ThreadPool};
+pub use pool::{
+    default_pool, phase_scope, threads_from_env, KernelPhase, KernelStat, SyncSlice, ThreadPool,
+};
 pub use q4::MatW;
 pub use simd::SimdPath;

@@ -27,6 +27,9 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex, OnceLock, PoisonError};
 use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::obs::tracer::{self, TraceLevel};
 
 use super::simd::{self, SimdPath};
 
@@ -37,6 +40,122 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 
 std::thread_local! {
     static IS_POOL_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+    static CURRENT_PHASE: std::cell::Cell<KernelPhase> =
+        const { std::cell::Cell::new(KernelPhase::Other) };
+}
+
+/// Which kernel family a pool dispatch belongs to. Kernel entry points
+/// set the calling thread's phase with [`phase_scope`]; the pool
+/// attributes each **top-level** dispatch's wall time and call count to
+/// the phase active on the launching thread (nested launches run inline
+/// inside their parent's dispatch and are already covered by it). This
+/// generalizes the `pool_busy` lane gauge into a per-kernel profile —
+/// where the step's time went, not just how wide it fanned out.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelPhase {
+    /// Launches outside any tagged kernel (embedding gather, eval loops).
+    Other,
+    /// Dense f32 matmuls (`tiling::matmul` / `_nt` / `_tn`).
+    Dense,
+    /// RMSNorm forward/backward.
+    Norm,
+    /// Elementwise maps/zips (`par_map`, `par_zip_apply`).
+    Map,
+    /// Full-context attention forward/backward.
+    Attention,
+    /// Fused 4-bit dequant matmuls (incl. OPQ outlier patching).
+    Q4,
+    /// The batched f32-KV incremental decode step.
+    Decode,
+    /// The batched quantized-KV decode step (fused q8/q4 cache
+    /// dequantization inside the decode attention).
+    Kv,
+    /// Block-wise weight quantization (`quantize_blocks`).
+    Quantize,
+}
+
+/// Number of [`KernelPhase`] variants (profile array width).
+pub const N_KERNEL_PHASES: usize = 9;
+
+const ALL_PHASES: [KernelPhase; N_KERNEL_PHASES] = [
+    KernelPhase::Other,
+    KernelPhase::Dense,
+    KernelPhase::Norm,
+    KernelPhase::Map,
+    KernelPhase::Attention,
+    KernelPhase::Q4,
+    KernelPhase::Decode,
+    KernelPhase::Kv,
+    KernelPhase::Quantize,
+];
+
+impl KernelPhase {
+    /// Stable label used in the kernel profile, the Prometheus
+    /// `kernel="…"` series label and the kernel-level trace spans.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelPhase::Other => "other",
+            KernelPhase::Dense => "dense",
+            KernelPhase::Norm => "norm",
+            KernelPhase::Map => "map",
+            KernelPhase::Attention => "attention",
+            KernelPhase::Q4 => "q4",
+            KernelPhase::Decode => "decode",
+            KernelPhase::Kv => "kv",
+            KernelPhase::Quantize => "quantize",
+        }
+    }
+
+    fn index(self) -> usize {
+        ALL_PHASES.iter().position(|&p| p == self).unwrap_or(0)
+    }
+}
+
+/// The kernel phase active on the calling thread.
+pub fn current_phase() -> KernelPhase {
+    CURRENT_PHASE.with(|c| c.get())
+}
+
+/// RAII guard restoring the previous kernel phase on drop (see
+/// [`phase_scope`]).
+pub struct PhaseGuard {
+    prev: KernelPhase,
+}
+
+impl Drop for PhaseGuard {
+    fn drop(&mut self) {
+        CURRENT_PHASE.with(|c| c.set(self.prev));
+    }
+}
+
+/// Tag the calling thread with a kernel phase for the guard's lifetime.
+/// Placed at kernel *entry points* — never inside a reduction loop — so
+/// the cost is two `Cell` writes per kernel call and determinism is
+/// untouched.
+pub fn phase_scope(p: KernelPhase) -> PhaseGuard {
+    PhaseGuard {
+        prev: CURRENT_PHASE.with(|c| c.replace(p)),
+    }
+}
+
+/// Aggregated execution stats of one kernel phase on a pool: top-level
+/// dispatch count and summed wall time (process-lifetime totals — diff
+/// two snapshots for a windowed rate).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelStat {
+    /// Phase label ([`KernelPhase::name`]).
+    pub kernel: &'static str,
+    /// Top-level pool dispatches attributed to this phase.
+    pub calls: u64,
+    /// Summed wall time of those dispatches, in nanoseconds.
+    pub nanos: u64,
+}
+
+impl KernelStat {
+    /// Summed wall time in seconds.
+    pub fn seconds(&self) -> f64 {
+        self.nanos as f64 / 1e9
+    }
 }
 
 /// Thread count from `BOF4_THREADS`, else the detected core count.
@@ -72,6 +191,11 @@ pub struct ThreadPool {
     /// count over all top-level [`ThreadPool::run`] invocations.
     lanes_used: AtomicU64,
     calls: AtomicU64,
+    /// Per-phase top-level dispatch counts and wall time (the
+    /// [`ThreadPool::kernel_profile`] accumulators; always on — two
+    /// timestamps and two relaxed adds per dispatch).
+    phase_calls: [AtomicU64; N_KERNEL_PHASES],
+    phase_nanos: [AtomicU64; N_KERNEL_PHASES],
 }
 
 impl ThreadPool {
@@ -141,6 +265,8 @@ impl ThreadPool {
             simd,
             lanes_used: AtomicU64::new(0),
             calls: AtomicU64::new(0),
+            phase_calls: std::array::from_fn(|_| AtomicU64::new(0)),
+            phase_nanos: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
 
@@ -185,15 +311,35 @@ impl ThreadPool {
         }
         let chunks = self.threads.min(tasks);
         let nested = IS_POOL_WORKER.with(|w| w.get());
-        if chunks <= 1 || nested {
-            if !nested {
-                // top-level serial launch: one lane used
-                self.calls.fetch_add(1, Ordering::Relaxed);
-                self.lanes_used.fetch_add(1, Ordering::Relaxed);
-            }
+        if nested {
+            // nested fan-out runs inline inside its parent's dispatch:
+            // no stats (the parent's top-level dispatch covers it)
             for i in 0..tasks {
                 f(i);
             }
+            return;
+        }
+        // Top-level dispatch: attribute wall time + call count to the
+        // launching thread's kernel phase, and (at BOF4_TRACE=kernel)
+        // emit one span per dispatch. Both wrap the dispatch from the
+        // outside — nothing here runs inside a task or reduction, so
+        // results stay bit-identical with profiling always on and
+        // tracing at any level.
+        let phase = current_phase();
+        let t0 = Instant::now();
+        let _span = tracer::span(
+            TraceLevel::Kernel,
+            phase.name(),
+            &[("tasks", tasks as i64), ("chunks", chunks as i64)],
+        );
+        if chunks <= 1 {
+            // top-level serial launch: one lane used
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            self.lanes_used.fetch_add(1, Ordering::Relaxed);
+            for i in 0..tasks {
+                f(i);
+            }
+            self.record_phase(phase, t0);
             return;
         }
         self.calls.fetch_add(1, Ordering::Relaxed);
@@ -253,12 +399,37 @@ impl ThreadPool {
                 }
             }
         }
+        self.record_phase(phase, t0);
         if let Err(e) = own {
             std::panic::resume_unwind(e);
         }
         if let Some(m) = first_err {
             panic!("kernel pool task panicked: {m}");
         }
+    }
+
+    fn record_phase(&self, phase: KernelPhase, t0: Instant) {
+        let idx = phase.index();
+        self.phase_calls[idx].fetch_add(1, Ordering::Relaxed);
+        self.phase_nanos[idx].fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Per-kernel-phase execution profile: top-level dispatch counts and
+    /// summed wall time since the pool was built (cumulative — diff two
+    /// reads for a window). Phases with no dispatches are omitted.
+    pub fn kernel_profile(&self) -> Vec<KernelStat> {
+        ALL_PHASES
+            .iter()
+            .filter_map(|&p| {
+                let idx = p.index();
+                let calls = self.phase_calls[idx].load(Ordering::Relaxed);
+                (calls > 0).then(|| KernelStat {
+                    kernel: p.name(),
+                    calls,
+                    nanos: self.phase_nanos[idx].load(Ordering::Relaxed),
+                })
+            })
+            .collect()
     }
 }
 
@@ -490,6 +661,47 @@ mod tests {
         pool.run(16, |_| {});
         let f = pool.occupancy();
         assert!(f > 0.0 && f <= 1.0, "occupancy {f}");
+    }
+
+    #[test]
+    fn phase_scope_nests_and_restores() {
+        assert_eq!(current_phase(), KernelPhase::Other);
+        {
+            let _d = phase_scope(KernelPhase::Dense);
+            assert_eq!(current_phase(), KernelPhase::Dense);
+            {
+                let _q = phase_scope(KernelPhase::Q4);
+                assert_eq!(current_phase(), KernelPhase::Q4);
+            }
+            assert_eq!(current_phase(), KernelPhase::Dense);
+        }
+        assert_eq!(current_phase(), KernelPhase::Other);
+    }
+
+    #[test]
+    fn kernel_profile_attributes_dispatches() {
+        let pool = ThreadPool::with_threads(2);
+        assert!(pool.kernel_profile().is_empty());
+        {
+            let _p = phase_scope(KernelPhase::Dense);
+            pool.run(8, |_| {});
+            pool.run(8, |_| {});
+        }
+        {
+            let _p = phase_scope(KernelPhase::Attention);
+            pool.run(4, |_| {
+                // nested launches run inside the parent dispatch and must
+                // not be double-counted
+                pool.run(2, |_| {});
+            });
+        }
+        let prof = pool.kernel_profile();
+        let get = |k: &str| prof.iter().find(|s| s.kernel == k).copied();
+        let dense = get("dense").expect("dense profiled");
+        assert_eq!(dense.calls, 2);
+        assert!(dense.seconds() >= 0.0);
+        assert_eq!(get("attention").expect("attention profiled").calls, 1);
+        assert!(get("q4").is_none(), "untouched phases are omitted");
     }
 
     #[test]

@@ -22,7 +22,7 @@
 
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
-use super::pool::{SyncSlice, ThreadPool};
+use super::pool::{phase_scope, KernelPhase, SyncSlice, ThreadPool};
 use super::simd;
 use super::tiling;
 
@@ -172,6 +172,7 @@ pub fn row_matmul(pool: &ThreadPool, x: &[f32], w: &MatW<'_>, k: usize, n: usize
             out_idx,
             out_val,
         } => {
+            let _phase = phase_scope(KernelPhase::Q4);
             let path = pool.simd();
             let nb = n / block;
             // per-row binary search into the sorted side-table, hoisted
@@ -234,6 +235,7 @@ pub fn q4_matmul(
     n: usize,
     block: usize,
 ) -> Vec<f32> {
+    let _phase = phase_scope(KernelPhase::Q4);
     let path = pool.simd();
     let nb = n / block;
     let mut y = vec![0.0f32; t * n];
@@ -284,6 +286,7 @@ pub fn dequant_q4_weight(
     n: usize,
     block: usize,
 ) -> Vec<f32> {
+    let _phase = phase_scope(KernelPhase::Q4);
     let path = pool.simd();
     let nb = n / block;
     let mut w = vec![0.0f32; k * n];

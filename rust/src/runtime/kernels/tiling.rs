@@ -15,7 +15,7 @@
 // Index-heavy numeric kernels read better as explicit loops.
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
-use super::pool::{SyncSlice, ThreadPool};
+use super::pool::{phase_scope, KernelPhase, SyncSlice, ThreadPool};
 use super::simd::{self, SimdPath};
 
 /// Column-tile width for the dense matmul inner loops: 256 f32 output
@@ -28,6 +28,7 @@ const NORM_EPS: f32 = 1e-6;
 /// `y = x @ w` with `x [t,k]`, `w [k,n]`, parallel over rows (or over
 /// column tiles when `t == 1`, the decode-row case).
 pub fn matmul(pool: &ThreadPool, x: &[f32], w: &[f32], t: usize, k: usize, n: usize) -> Vec<f32> {
+    let _phase = phase_scope(KernelPhase::Dense);
     let path = pool.simd();
     let mut y = vec![0.0f32; t * n];
     let ys = SyncSlice::new(&mut y);
@@ -93,6 +94,7 @@ pub fn matmul_nt(
     k: usize,
     n: usize,
 ) -> Vec<f32> {
+    let _phase = phase_scope(KernelPhase::Dense);
     let path = pool.simd();
     let mut dx = vec![0.0f32; t * k];
     let dxs = SyncSlice::new(&mut dx);
@@ -119,6 +121,7 @@ pub fn matmul_tn(
     k: usize,
     n: usize,
 ) -> Vec<f32> {
+    let _phase = phase_scope(KernelPhase::Dense);
     let path = pool.simd();
     let mut dw = vec![0.0f32; k * n];
     let dws = SyncSlice::new(&mut dw);
@@ -141,6 +144,7 @@ pub fn matmul_tn(
 /// `(y, rms per row)`. The mean-square reduction runs in the canonical
 /// 8-lane-strided order; the normalize map is element-wise.
 pub fn rmsnorm(pool: &ThreadPool, x: &[f32], g: &[f32], d: usize) -> (Vec<f32>, Vec<f32>) {
+    let _phase = phase_scope(KernelPhase::Norm);
     let path = pool.simd();
     let rows = x.len() / d;
     let mut y = vec![0.0f32; x.len()];
@@ -172,6 +176,7 @@ pub fn rmsnorm_bwd(
     dy: &[f32],
     d: usize,
 ) -> (Vec<f32>, Vec<f32>) {
+    let _phase = phase_scope(KernelPhase::Norm);
     let path = pool.simd();
     let rows = x.len() / d;
     let mut dx = vec![0.0f32; x.len()];
@@ -205,6 +210,7 @@ pub fn rmsnorm_bwd(
 /// (8-lane blocked through [`simd::apply_unary`]).
 pub fn par_map(pool: &ThreadPool, src: &[f32], f: impl Fn(f32) -> f32 + Sync) -> Vec<f32> {
     const CHUNK: usize = 4096;
+    let _phase = phase_scope(KernelPhase::Map);
     let path = pool.simd();
     let mut out = vec![0.0f32; src.len()];
     let os = SyncSlice::new(&mut out);
@@ -226,6 +232,7 @@ pub fn par_zip_apply(
     f: impl Fn(f32, f32) -> f32 + Sync,
 ) {
     const CHUNK: usize = 4096;
+    let _phase = phase_scope(KernelPhase::Map);
     let path = pool.simd();
     let len = dst.len();
     let ds = SyncSlice::new(dst);

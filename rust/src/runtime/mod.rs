@@ -141,6 +141,15 @@ pub trait Backend: Send + Sync {
     fn simd_path(&self) -> Option<&'static str> {
         None
     }
+
+    /// Cumulative per-kernel-phase wall time and dispatch counts
+    /// ([`kernels::ThreadPool::kernel_profile`]), when this backend runs
+    /// on the tiled kernel pool — the `bof4_kernel_seconds_total` /
+    /// `bof4_kernel_calls_total` Prometheus series. `None` for backends
+    /// without a pool.
+    fn kernel_profile(&self) -> Option<Vec<kernels::KernelStat>> {
+        None
+    }
 }
 
 /// ABI-validating facade over a [`Backend`].
@@ -329,6 +338,13 @@ impl Runtime {
     /// the backend runs on the tiled CPU kernels.
     pub fn simd_path(&self) -> Option<&'static str> {
         self.backend.simd_path()
+    }
+
+    /// Cumulative per-kernel-phase wall time and dispatch counts, when
+    /// the backend runs on the tiled kernel pool (the observability
+    /// snapshot's kernel profile).
+    pub fn kernel_profile(&self) -> Option<Vec<kernels::KernelStat>> {
+        self.backend.kernel_profile()
     }
 
     fn validate_args(&self, gm: &GraphMeta, args: &[HostTensor]) -> Result<()> {

@@ -34,21 +34,47 @@ impl Level {
     }
 }
 
-/// Set the global log level (also honours `BOF4_LOG=debug|info|warn|error`).
+/// Set the global log level (also honours
+/// `BOF4_LOG=debug|info|warn|error|trace`).
 pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
-/// Initialize from the environment; call once from main()/bench.
+/// Parse a `BOF4_LOG` value (case-insensitive): the four level names,
+/// plus the `trace` alias — debug logging *and* engine-level span
+/// tracing ([`crate::obs::tracer`]), returned as the `bool`. `None` for
+/// anything unrecognized.
+pub fn parse_level(v: &str) -> Option<(Level, bool)> {
+    match v.to_ascii_lowercase().as_str() {
+        "error" => Some((Level::Error, false)),
+        "warn" => Some((Level::Warn, false)),
+        "info" => Some((Level::Info, false)),
+        "debug" => Some((Level::Debug, false)),
+        "trace" => Some((Level::Debug, true)),
+        _ => None,
+    }
+}
+
+/// Initialize from the environment; call once from main()/bench. An
+/// unrecognized `BOF4_LOG` value warns to stderr and keeps the current
+/// level (a typo must not silently drop to the default and hide the
+/// diagnostics the caller asked for). `BOF4_LOG=trace` additionally
+/// switches the span tracer to engine level unless `BOF4_TRACE` already
+/// configured it.
 pub fn init_from_env() {
     if let Ok(v) = std::env::var("BOF4_LOG") {
-        let lv = match v.to_ascii_lowercase().as_str() {
-            "error" => Level::Error,
-            "warn" => Level::Warn,
-            "debug" => Level::Debug,
-            _ => Level::Info,
-        };
-        set_level(lv);
+        match parse_level(&v) {
+            Some((lv, trace)) => {
+                set_level(lv);
+                if trace && crate::obs::tracer::level() == crate::obs::TraceLevel::Off {
+                    crate::obs::tracer::set_level(crate::obs::TraceLevel::Engine);
+                }
+            }
+            None => eprintln!(
+                "bof4: unknown BOF4_LOG value '{v}' \
+                 (expected error|warn|info|debug|trace); ignored"
+            ),
+        }
     }
     let _ = start();
 }
@@ -69,6 +95,16 @@ pub fn log(level: Level, module: &str, msg: std::fmt::Arguments<'_>) {
         module,
         msg
     );
+    // Warn/Error records double as trace instants, so operator-visible
+    // problems land on the trace timeline next to the spans they
+    // interrupt.
+    if level <= Level::Warn && crate::obs::tracer::enabled(crate::obs::TraceLevel::Engine) {
+        let name = match level {
+            Level::Error => "log_error",
+            _ => "log_warn",
+        };
+        crate::obs::tracer::tracer().instant_msg(name, &format!("{module}: {msg}"));
+    }
 }
 
 #[macro_export]
@@ -110,5 +146,17 @@ mod tests {
         assert!(enabled(Level::Warn));
         assert!(!enabled(Level::Info));
         set_level(Level::Info); // restore default for other tests
+    }
+
+    #[test]
+    fn parse_log_levels() {
+        assert_eq!(parse_level("error"), Some((Level::Error, false)));
+        assert_eq!(parse_level("WARN"), Some((Level::Warn, false)));
+        assert_eq!(parse_level("info"), Some((Level::Info, false)));
+        assert_eq!(parse_level("debug"), Some((Level::Debug, false)));
+        // the trace alias turns on debug logging plus span tracing
+        assert_eq!(parse_level("trace"), Some((Level::Debug, true)));
+        assert_eq!(parse_level("nope"), None);
+        assert_eq!(parse_level(""), None);
     }
 }

@@ -1,0 +1,204 @@
+//! Observability integration: tracing must never change what the engine
+//! streams, the exporters must produce artifacts real tools can load,
+//! and the metrics/tracer registries must survive concurrent hammering.
+//! Everything runs hermetically over the default pure-Rust CPU runtime.
+
+use std::collections::BTreeSet;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread;
+use std::time::Duration;
+
+use bof4::coordinator::{Engine, EngineConfig, EngineMetrics};
+use bof4::obs::tracer::{self, RING_CAP};
+use bof4::obs::{chrome_trace, documented_metrics, MetricsSnapshot, TraceLevel};
+use bof4::runtime::{HostTensor, Runtime};
+use bof4::util::json::Json;
+
+/// The trace level is process-global state; tests that flip it serialize
+/// here (same pattern as the tracer unit tests) so the `cargo test`
+/// thread pool cannot interleave two levels.
+static LEVEL_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock_level() -> MutexGuard<'static, ()> {
+    LEVEL_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn engine_with(cfg: EngineConfig) -> (Arc<Runtime>, Engine) {
+    let rt = Arc::new(Runtime::new().unwrap());
+    let params = rt
+        .run("init_params", &[HostTensor::scalar_u32(3)])
+        .unwrap();
+    let engine = Engine::start(rt.clone(), params, cfg).unwrap();
+    (rt, engine)
+}
+
+/// The determinism contract from the issue: token streams are
+/// bit-identical with tracing off, at engine level, and at kernel level.
+/// Probes only observe timestamps — they never sit on a data path.
+#[test]
+fn streams_bit_identical_across_trace_levels() {
+    let _g = lock_level();
+    let prev = tracer::level();
+    let prompt = [3u8, 1, 4, 1, 5, 9, 2, 6];
+    let mut baseline = None;
+    for lv in [TraceLevel::Off, TraceLevel::Engine, TraceLevel::Kernel] {
+        tracer::set_level(lv);
+        let (_rt, engine) = engine_with(EngineConfig::default());
+        let toks = engine
+            .session_with(&prompt, 12)
+            .unwrap()
+            .collect_tokens()
+            .unwrap();
+        assert_eq!(toks.len(), 12);
+        match &baseline {
+            None => baseline = Some(toks),
+            Some(b) => assert_eq!(&toks, b, "stream diverged at trace level {lv:?}"),
+        }
+    }
+    tracer::set_level(prev);
+    tracer::tracer().clear();
+}
+
+/// A traced serve run produces the request-lifecycle spans the issue
+/// names (queue wait -> prefill -> decode steps -> session), plus
+/// kernel-phase spans at `BOF4_TRACE=kernel`, and the chrome-trace
+/// export round-trips through our own JSON parser (the same shape
+/// Perfetto loads).
+#[test]
+fn chrome_trace_export_parses_and_contains_lifecycle_spans() {
+    let _g = lock_level();
+    let prev = tracer::level();
+    tracer::set_level(TraceLevel::Kernel);
+    tracer::tracer().clear();
+    let (_rt, engine) = engine_with(EngineConfig::default());
+    let toks = engine
+        .session_with(&[1, 2, 3, 4], 6)
+        .unwrap()
+        .collect_tokens()
+        .unwrap();
+    assert_eq!(toks.len(), 6);
+    let snap = tracer::tracer().snapshot();
+    tracer::set_level(prev);
+
+    let names: BTreeSet<&str> = snap.events.iter().map(|e| e.name).collect();
+    for want in ["submit", "queue_wait", "prefill", "decode_step", "session"] {
+        assert!(names.contains(want), "missing engine span '{want}': {names:?}");
+    }
+    // kernel level additionally labels top-level pool dispatches by phase
+    let kernel_phases = ["decode", "dense", "attention", "norm", "map"];
+    assert!(
+        kernel_phases.iter().any(|p| names.contains(p)),
+        "no kernel-phase spans at BOF4_TRACE=kernel: {names:?}"
+    );
+
+    let parsed = Json::parse(&chrome_trace(&snap).to_string()).expect("trace JSON parses");
+    let events = parsed
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array");
+    assert!(events.len() > snap.events.len(), "metadata events missing");
+    for ev in events {
+        assert!(ev.get("ph").is_some() && ev.get("name").is_some(), "{ev:?}");
+    }
+    tracer::tracer().clear();
+}
+
+/// Golden export over a *live* engine: after real traffic, the
+/// Prometheus text names every metric in [`documented_metrics`]
+/// (scrapers must see a stable series set) and the JSON twin parses
+/// back with populated SLO series and a kernel profile.
+#[test]
+fn live_engine_snapshot_exports_every_documented_metric() {
+    let (_rt, engine) = engine_with(EngineConfig::default());
+    for i in 0..3u8 {
+        let toks = engine
+            .session_with(&[i + 1, 7, 2], 5)
+            .unwrap()
+            .collect_tokens()
+            .unwrap();
+        assert_eq!(toks.len(), 5);
+    }
+    let snap = engine.snapshot();
+    let prom = snap.to_prometheus();
+    for name in documented_metrics() {
+        assert!(prom.contains(name), "prometheus text missing '{name}':\n{prom}");
+    }
+    // real traffic populated the SLO summaries and the kernel profile
+    let j = Json::parse(&snap.to_json().to_string()).unwrap();
+    assert_eq!(j.path("counters.sessions").unwrap().as_f64(), Some(3.0));
+    assert!(j.path("series.ttft.count").unwrap().as_f64().unwrap() >= 3.0);
+    assert!(j.path("series.inter_token.count").unwrap().as_f64().unwrap() >= 1.0);
+    assert!(!j.path("kernels").unwrap().as_arr().unwrap().is_empty());
+    assert!(j.path("memory.replicas").unwrap().as_f64().unwrap() >= 1.0);
+}
+
+/// `session_deadline` is observational: a zero deadline cannot fail the
+/// stream, but every completed session must bump the overrun counter.
+#[test]
+fn zero_session_deadline_records_overruns_without_breaking_streams() {
+    let (_rt, engine) = engine_with(EngineConfig {
+        session_deadline: Some(Duration::ZERO),
+        ..EngineConfig::default()
+    });
+    let toks = engine
+        .session_with(&[9, 9, 9], 4)
+        .unwrap()
+        .collect_tokens()
+        .unwrap();
+    assert_eq!(toks.len(), 4, "deadline must not cut streams short");
+    assert_eq!(engine.metrics.core.get("deadline_overruns"), 1);
+}
+
+/// Hammer the shared registries from many threads while exporters read
+/// concurrently: no deadlock, no lost counter increments, queue depth
+/// returns to zero, and the trace ring stays bounded by [`RING_CAP`].
+#[test]
+fn concurrent_metrics_and_tracer_use_is_lossless_and_bounded() {
+    let _g = lock_level();
+    let prev = tracer::level();
+    tracer::set_level(TraceLevel::Engine);
+    tracer::tracer().clear();
+
+    const THREADS: usize = 8;
+    const ITERS: u64 = 2_000;
+    let metrics = Arc::new(EngineMetrics::new());
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let m = metrics.clone();
+        handles.push(thread::spawn(move || {
+            for i in 0..ITERS {
+                m.core.inc("decode_steps");
+                m.queue_enter();
+                m.record_ttft(Duration::from_micros(i % 500));
+                m.record_inter_token(Duration::from_micros(i % 100));
+                m.queue_exit(Duration::from_micros(i % 50));
+                tracer::instant(
+                    TraceLevel::Engine,
+                    "hammer",
+                    &[("t", t as i64), ("i", i as i64)],
+                );
+                let _s = tracer::span(TraceLevel::Engine, "hammer_span", &[("t", t as i64)]);
+            }
+        }));
+    }
+    // concurrent readers: snapshot + every exporter while writers run
+    for _ in 0..50 {
+        let snap = MetricsSnapshot::collect(&metrics, Vec::new(), None);
+        let _ = snap.to_prometheus();
+        let _ = snap.to_json();
+        let _ = chrome_trace(&tracer::tracer().snapshot());
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let total = THREADS as u64 * ITERS;
+    assert_eq!(metrics.core.get("decode_steps"), total);
+    assert_eq!(metrics.queue_depth(), 0, "queue enter/exit must balance");
+    let snap = tracer::tracer().snapshot();
+    assert!(snap.events.len() <= RING_CAP, "ring exceeded capacity");
+    // instant + span per iteration; eviction is counted, never silent
+    assert!(snap.events.len() as u64 + snap.dropped >= 2 * total);
+    tracer::set_level(prev);
+    tracer::tracer().clear();
+}

@@ -21,7 +21,13 @@
 //! default engine with the span tracer forced off vs at engine level
 //! (best-of-5 each, streams pinned bit-identical), asserting the traced
 //! leg costs < 5% and that a disabled tracer is free to noise;
-//! `trace_overhead` lands in the JSON.
+//! `trace_overhead` lands in the JSON. The PR-9 admission legs re-serve
+//! the same weights with admission control off vs `max_queue_depth`
+//! bounded-but-unreachable (best-of-5 each, streams pinned
+//! bit-identical, zero sessions shed), asserting the bounded leg costs
+//! < 2% and — when `BOF4_FAULT` is unset — that the fault-injection
+//! hooks compiled into the backend never left their single-relaxed-load
+//! fast path; `admission_overhead` and `shed_*` land in the JSON.
 //!
 //! ```bash
 //! cargo bench --bench decode_throughput          # full run
@@ -36,6 +42,7 @@ use bof4::util::json::Json;
 
 fn main() {
     bof4::util::log::init_from_env();
+    bof4::testkit::faults::init_from_env();
     let rt = Arc::new(Runtime::new().expect("runtime"));
     let params = rt
         .run("init_params", &[HostTensor::scalar_u32(1)])
@@ -168,6 +175,47 @@ fn main() {
             r.trace_overhead()
         );
     }
+    // the admission contract: admission control must cost < 2% on the
+    // serve path (one queue-depth gauge read plus a short registry
+    // update per session, never per-token work), shed nothing when the
+    // bound is unreachable, and leave the streams bit-identical (pinned
+    // inside the bench). Legs are None off-CPU — skip there.
+    if let (Some(off), Some(on)) = (r.engine_admit_off, r.engine_admit_on) {
+        assert!(
+            on.as_secs_f64() <= off.as_secs_f64() * 1.02,
+            "admission-control overhead too high: bounded {:?} vs unbounded {:?} ({:.3}x)",
+            on,
+            off,
+            r.admission_overhead()
+        );
+        assert_eq!(
+            r.admit_shed_total, 0,
+            "admission leg shed {} sessions under an unreachable depth bound",
+            r.admit_shed_total
+        );
+        println!(
+            "admission: off {:.3}s | bounded {:.3}s (overhead {:.3}x, 0 shed, streams bit-identical)",
+            off.as_secs_f64(),
+            on.as_secs_f64(),
+            r.admission_overhead()
+        );
+    }
+    // the fault-hook contract: with BOF4_FAULT unset the chaos hooks in
+    // the CPU backend must stay unarmed across the whole run — every
+    // prefill/decode above took the single-relaxed-load fast path, and
+    // the armed-path call counters never moved
+    if std::env::var("BOF4_FAULT").is_err() {
+        assert!(
+            !bof4::testkit::faults::armed(),
+            "fault hooks armed without BOF4_FAULT set"
+        );
+        let fs = bof4::testkit::faults::stats();
+        assert_eq!(
+            (fs.decode_calls, fs.prefill_calls),
+            (0, 0),
+            "unarmed fault hooks entered the armed path: {fs:?}"
+        );
+    }
     // the shared-weight contract: parameters are resident once no matter
     // the replica count, so doubling replicas must grow total resident
     // bytes strictly sub-linearly (decode_throughput already pinned
@@ -255,6 +303,12 @@ fn main() {
         fields.push(("engine_trace_off_s", Json::Num(off.as_secs_f64())));
         fields.push(("engine_trace_on_s", Json::Num(on.as_secs_f64())));
         fields.push(("trace_overhead", Json::Num(r.trace_overhead())));
+    }
+    if let (Some(off), Some(on)) = (r.engine_admit_off, r.engine_admit_on) {
+        fields.push(("engine_admit_off_s", Json::Num(off.as_secs_f64())));
+        fields.push(("engine_admit_on_s", Json::Num(on.as_secs_f64())));
+        fields.push(("admission_overhead", Json::Num(r.admission_overhead())));
+        fields.push(("shed_sessions_total", Json::Num(r.admit_shed_total as f64)));
     }
     let json = bof4::util::json::obj(fields).to_string();
     let dir = bof4::eval::report::results_dir();

@@ -199,7 +199,15 @@ pub const TOKEN_LATENCY_BOUNDS_MS: [f64; 10] =
 /// Counter names: `batches` (prefill executions), `batched_requests`
 /// (sessions admitted), `sessions`, `prefill_tokens`, `decode_tokens`,
 /// `decode_steps`, `deadline_overruns` (sessions that closed past their
-/// [`crate::coordinator::EngineConfig::session_deadline`]). Latency
+/// [`crate::coordinator::EngineConfig::session_deadline`]),
+/// `deadline_cancelled` (sessions the engine *evicted* at a decode-step
+/// boundary for exceeding that deadline — always a subset of
+/// `deadline_overruns`), `sessions_shed` (admissions refused or queued
+/// sessions evicted by admission control, split into
+/// `sessions_shed_rejected` and `sessions_shed_evicted` by
+/// [`crate::coordinator::ShedPolicy`]), `replica_exits` (replica worker
+/// loop exits, fatal or clean) and `replica_restarts` (supervisor
+/// rebuilds of a faulted replica). Latency
 /// series: `prefill_exec`, `decode_step_exec`, `token_latency` (ms),
 /// `ttft` (time-to-first-token: submit → first streamed token, ms),
 /// `inter_token` (gap between consecutive streamed tokens of one
@@ -293,6 +301,41 @@ impl EngineMetrics {
     /// A session closed later than its configured deadline allowed.
     pub fn record_deadline_overrun(&self) {
         self.core.inc("deadline_overruns");
+    }
+
+    /// A session was cancelled mid-stream for exceeding its deadline
+    /// (enforcement, not just observation).
+    pub fn record_deadline_cancelled(&self) {
+        self.core.inc("deadline_cancelled");
+    }
+
+    /// Admission control refused a new session (ShedPolicy::Reject, or
+    /// Oldest with an empty queue).
+    pub fn record_shed_rejected(&self) {
+        self.core.inc("sessions_shed");
+        self.core.inc("sessions_shed_rejected");
+    }
+
+    /// Admission control evicted the oldest queued session in a new
+    /// one's favour (ShedPolicy::Oldest).
+    pub fn record_shed_evicted(&self) {
+        self.core.inc("sessions_shed");
+        self.core.inc("sessions_shed_evicted");
+    }
+
+    /// Total sessions shed by admission control (either policy).
+    pub fn shed_total(&self) -> u64 {
+        self.core.get("sessions_shed")
+    }
+
+    /// Supervisor rebuilds of faulted replicas.
+    pub fn restart_count(&self) -> u64 {
+        self.core.get("replica_restarts")
+    }
+
+    /// Sessions evicted mid-stream by deadline enforcement.
+    pub fn deadline_cancelled_count(&self) -> u64 {
+        self.core.get("deadline_cancelled")
     }
 
     /// Record one emitted token's latency (the wall time of the prefill
@@ -459,6 +502,28 @@ mod tests {
         assert_eq!(em.core.get("deadline_overruns"), 1);
         assert!(em.uptime() > Duration::ZERO);
         assert!(em.summary().contains("queue depth: 0"));
+    }
+
+    /// Fault-tolerance counters: shed totals split by policy, deadline
+    /// cancellations, and the restart accessor over the raw counters.
+    #[test]
+    fn shed_restart_and_cancel_counters() {
+        let em = EngineMetrics::new();
+        assert_eq!(em.shed_total(), 0);
+        assert_eq!(em.restart_count(), 0);
+        assert_eq!(em.deadline_cancelled_count(), 0);
+        em.record_shed_rejected();
+        em.record_shed_rejected();
+        em.record_shed_evicted();
+        em.record_deadline_cancelled();
+        em.core.inc("replica_restarts");
+        em.core.inc("replica_exits");
+        assert_eq!(em.shed_total(), 3);
+        assert_eq!(em.core.get("sessions_shed_rejected"), 2);
+        assert_eq!(em.core.get("sessions_shed_evicted"), 1);
+        assert_eq!(em.deadline_cancelled_count(), 1);
+        assert_eq!(em.restart_count(), 1);
+        assert_eq!(em.core.get("replica_exits"), 1);
     }
 
     #[test]

@@ -13,9 +13,10 @@ pub mod metrics;
 pub mod scheduler;
 pub mod service;
 
+pub use crate::error::EngineError;
 pub use metrics::{EngineMetrics, LatencyStats, Metrics};
 pub use scheduler::{QuantJob, QuantScheduler};
 pub use service::{
     greedy_argmax, BatchedLm, DecodeSession, Engine, EngineConfig, EngineMemoryProfile,
-    EngineParams, InferenceResponse, ServiceConfig, SharedWeights,
+    EngineParams, InferenceResponse, ServiceConfig, SharedWeights, ShedPolicy,
 };

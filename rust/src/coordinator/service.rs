@@ -41,13 +41,14 @@
 //! batch size never exceeds the graph batch; a lone request is answered
 //! within ~the admission window.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::error::Result;
+use crate::error::{EngineError, Error, Result};
 
 use super::metrics::{EngineMetrics, Metrics};
 use crate::models::corpus::TOK_SPACE;
@@ -113,13 +114,47 @@ pub struct EngineConfig {
     /// rather than silently serving f32. Irrelevant in full-context
     /// mode, which keeps no KV cache at all.
     pub kv_format: KvFormat,
-    /// Per-session latency SLO: a session whose total wall time (from
-    /// [`Engine::session`] to stream close) exceeds this budget bumps the
-    /// `deadline_overruns` counter ([`EngineMetrics::record_deadline_overrun`])
-    /// and, when tracing is on, emits a `deadline_overrun` instant event.
-    /// Purely observational — the session still streams every token.
-    /// `None` (the default) disables the check.
+    /// Per-session latency SLO, now *enforced*: a session whose wall
+    /// time (from [`Engine::session`]) exceeds this budget is cancelled
+    /// at the next decode-step boundary — its slot is freed, the
+    /// `deadline_cancelled` counter bumps, a `deadline_cancelled` trace
+    /// instant fires and the caller receives
+    /// [`EngineError::DeadlineExceeded`] mid-stream. Sessions that
+    /// merely *finish* past the budget still bump the observational
+    /// `deadline_overruns` counter (cancellations are a subset of
+    /// overruns). `None` (the default) disables both.
     pub session_deadline: Option<Duration>,
+    /// Admission control: refuse new sessions once the engine-wide
+    /// queue-depth gauge ([`EngineMetrics::queue_depth`]) reaches this
+    /// limit, per [`EngineConfig::shed_policy`]. `None` (the default)
+    /// keeps the pre-fault-tolerance unbounded queueing.
+    pub max_queue_depth: Option<usize>,
+    /// Liveness bound on session streams: [`DecodeSession::next_token`]
+    /// waits at most this long for a token before returning
+    /// [`EngineError::Timeout`] — a wedged or stalled engine yields a
+    /// typed error instead of hanging callers forever.
+    pub admission_timeout: Duration,
+    /// What happens to the excess session when the queue is full.
+    pub shed_policy: ShedPolicy,
+    /// How many times a replica whose worker panicked (or hit a backend
+    /// fault) is rebuilt from [`SharedWeights`] before the engine gives
+    /// it up and degrades capacity, re-routing admissions to survivors.
+    pub max_replica_restarts: u32,
+    /// Base of the exponential restart backoff: attempt `k` sleeps
+    /// `restart_backoff * 2^k` before rebuilding.
+    pub restart_backoff: Duration,
+}
+
+/// Load-shedding policy once `max_queue_depth` is reached.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Refuse the *new* session: [`Engine::session`] returns
+    /// [`EngineError::Overloaded`] immediately (retryable).
+    Reject,
+    /// Shed the *oldest still-queued* session in the new one's favour —
+    /// the victim's stream fails with [`EngineError::Overloaded`]. Falls
+    /// back to `Reject` when nothing is left in the queue to shed.
+    Oldest,
 }
 
 impl Default for EngineConfig {
@@ -130,6 +165,11 @@ impl Default for EngineConfig {
             max_session_tokens: usize::MAX,
             kv_format: KvFormat::from_env(),
             session_deadline: None,
+            max_queue_depth: None,
+            admission_timeout: Duration::from_secs(60),
+            shed_policy: ShedPolicy::Reject,
+            max_replica_restarts: 2,
+            restart_backoff: Duration::from_millis(10),
         }
     }
 }
@@ -233,12 +273,23 @@ struct SessionReq {
 /// next step.
 pub struct DecodeSession {
     rx: mpsc::Receiver<Result<InferenceResponse>>,
+    /// Per-token liveness bound ([`EngineConfig::admission_timeout`]).
+    timeout: Duration,
 }
 
 impl DecodeSession {
     /// Block for the next token; `None` once the stream has closed.
+    /// Waits at most [`EngineConfig::admission_timeout`]: a wedged
+    /// engine yields [`EngineError::Timeout`] instead of hanging the
+    /// caller forever.
     pub fn next_token(&mut self) -> Option<Result<InferenceResponse>> {
-        self.rx.recv().ok()
+        match self.rx.recv_timeout(self.timeout) {
+            Ok(ev) => Some(ev),
+            Err(mpsc::RecvTimeoutError::Disconnected) => None,
+            Err(mpsc::RecvTimeoutError::Timeout) => Some(Err(Error::engine(EngineError::Timeout {
+                waited_ms: self.timeout.as_millis() as u64,
+            }))),
+        }
     }
 
     /// Drain the stream into the generated token vector.
@@ -255,13 +306,97 @@ impl Iterator for DecodeSession {
     type Item = Result<InferenceResponse>;
 
     fn next(&mut self) -> Option<Self::Item> {
-        self.rx.recv().ok()
+        self.next_token()
     }
 }
 
 struct ReplicaHandle {
     tx: Option<mpsc::Sender<SessionReq>>,
     worker: Option<JoinHandle<()>>,
+}
+
+/// Queued-session bookkeeping for the `Oldest` shed policy. mpsc
+/// channels cannot un-send, so shedding a queued session means marking
+/// its id here; the replica delivers the typed error when it pulls the
+/// marked request (one lock guards both maps so a request can never be
+/// half-shed).
+#[derive(Default)]
+struct AdmissionQueue {
+    /// Session ids submitted but not yet pulled by a replica worker.
+    queued: BTreeSet<u64>,
+    /// Ids shed while queued, with the `(depth, limit)` observed at the
+    /// shed decision (reported in the victim's `Overloaded` error).
+    shed: BTreeMap<u64, (u64, u64)>,
+}
+
+/// State shared between the engine handle and every replica worker:
+/// the shed registry and per-replica liveness (a replica whose restart
+/// budget is exhausted flips its flag and admissions re-route to
+/// survivors).
+struct EngineShared {
+    q: Mutex<AdmissionQueue>,
+    alive: Vec<AtomicBool>,
+}
+
+impl EngineShared {
+    fn new(replicas: usize) -> EngineShared {
+        EngineShared {
+            q: Mutex::new(AdmissionQueue::default()),
+            alive: (0..replicas).map(|_| AtomicBool::new(true)).collect(),
+        }
+    }
+
+    fn lock_q(&self) -> std::sync::MutexGuard<'_, AdmissionQueue> {
+        self.q.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Register a submitted session id (removed again at replica pull).
+    fn register(&self, id: u64) {
+        self.lock_q().queued.insert(id);
+    }
+
+    fn deregister(&self, id: u64) {
+        let mut q = self.lock_q();
+        q.queued.remove(&id);
+        q.shed.remove(&id);
+    }
+
+    /// Shed the oldest still-queued session (session ids are monotonic,
+    /// so the smallest id is the oldest). Returns the victim id, or
+    /// `None` when nothing is queued to shed.
+    fn shed_oldest(&self, depth: u64, limit: u64) -> Option<u64> {
+        let mut q = self.lock_q();
+        let id = q.queued.iter().next().copied()?;
+        q.queued.remove(&id);
+        q.shed.insert(id, (depth, limit));
+        Some(id)
+    }
+
+    /// Replica-side pull filter: deregister the request; if it was shed
+    /// while queued, deliver the typed error (with queue accounting)
+    /// and swallow it.
+    fn on_pull(&self, metrics: &EngineMetrics, req: SessionReq) -> Option<SessionReq> {
+        let shed = {
+            let mut q = self.lock_q();
+            q.queued.remove(&req.id);
+            q.shed.remove(&req.id)
+        };
+        match shed {
+            None => Some(req),
+            Some((depth, limit)) => {
+                metrics.queue_exit(req.queued_at.elapsed());
+                tracer::instant(
+                    TraceLevel::Engine,
+                    "shed_delivered",
+                    &[("session", req.id as i64)],
+                );
+                let _ = req
+                    .tx
+                    .send(Err(Error::engine(EngineError::Overloaded { depth, limit })));
+                None
+            }
+        }
+    }
 }
 
 /// Handle to a running serving engine.
@@ -271,6 +406,12 @@ pub struct Engine {
     pub metrics: Arc<EngineMetrics>,
     max_session_tokens: usize,
     seq_len: usize,
+    /// Admission-control knobs ([`EngineConfig`]).
+    max_queue_depth: Option<usize>,
+    admission_timeout: Duration,
+    shed_policy: ShedPolicy,
+    /// Shed registry + replica liveness, shared with the workers.
+    shared: Arc<EngineShared>,
     /// The shared immutable weight set every replica reads through.
     weights: SharedWeights,
     memory: EngineMemoryProfile,
@@ -362,13 +503,14 @@ impl Engine {
         rt.prepare(decode_graph)?;
         let metrics = Arc::new(EngineMetrics::new());
         let n_replicas = cfg.replicas.max(1);
+        let shared = Arc::new(EngineShared::new(n_replicas));
         // One immutable weight set; every replica's persistent argument
         // vectors are handle views over it (buffer-sharing clones).
         let weights: SharedWeights = Arc::new(prefix);
         // Build every replica first so resident memory can be profiled
         // before the workers take ownership, then spawn.
         let mut built = Vec::with_capacity(n_replicas);
-        for _ in 0..n_replicas {
+        for r in 0..n_replicas {
             built.push(Replica::new(
                 rt.clone(),
                 weights.clone(),
@@ -379,15 +521,18 @@ impl Engine {
                 cfg.window,
                 cfg.session_deadline,
                 metrics.clone(),
+                shared.clone(),
+                r,
             )?);
         }
         let memory = Self::profile_memory(&weights, &built);
         let mut replicas = Vec::with_capacity(n_replicas);
+        let (max_restarts, backoff) = (cfg.max_replica_restarts, cfg.restart_backoff);
         for (r, replica) in built.into_iter().enumerate() {
             let (tx, rx) = mpsc::channel::<SessionReq>();
             let worker = std::thread::Builder::new()
                 .name(format!("engine-replica-{r}"))
-                .spawn(move || replica.run(rx))?;
+                .spawn(move || supervise(replica, rx, max_restarts, backoff))?;
             replicas.push(ReplicaHandle {
                 tx: Some(tx),
                 worker: Some(worker),
@@ -399,6 +544,10 @@ impl Engine {
             metrics,
             max_session_tokens: cfg.max_session_tokens,
             seq_len: rt.meta.model.seq_len,
+            max_queue_depth: cfg.max_queue_depth,
+            admission_timeout: cfg.admission_timeout,
+            shed_policy: cfg.shed_policy,
+            shared,
             weights,
             memory,
             rt,
@@ -463,9 +612,12 @@ impl Engine {
     }
 
     /// Open a streaming session that emits at most `max_tokens` tokens.
+    /// Under admission control ([`EngineConfig::max_queue_depth`]) this
+    /// can fail fast with [`EngineError::Overloaded`].
     pub fn session_with(&self, prompt: &[u8], max_tokens: usize) -> Result<DecodeSession> {
         Ok(DecodeSession {
             rx: self.submit(prompt, max_tokens.max(1))?,
+            timeout: self.admission_timeout,
         })
     }
 
@@ -512,8 +664,56 @@ impl Engine {
         max_tokens: usize,
     ) -> Result<mpsc::Receiver<Result<InferenceResponse>>> {
         let (tx, rx) = mpsc::channel();
-        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.replicas.len();
+        // Route round-robin over *live* replicas; a replica whose
+        // restart budget is exhausted no longer receives admissions.
+        let n = self.replicas.len();
+        let mut target = None;
+        for _ in 0..n {
+            let i = self.next.fetch_add(1, Ordering::Relaxed) % n;
+            if self.shared.alive[i].load(Ordering::Relaxed) {
+                target = Some(i);
+                break;
+            }
+        }
+        let Some(i) = target else {
+            return Err(Error::engine(EngineError::Stopped));
+        };
+        // Admission control: consult the queue-depth gauge before
+        // enqueueing (the telemetry PR 8 landed; this acts on it).
+        if let Some(limit) = self.max_queue_depth {
+            let depth = self.metrics.queue_depth();
+            if depth >= limit as u64 {
+                let victim = match self.shed_policy {
+                    ShedPolicy::Reject => None,
+                    ShedPolicy::Oldest => self.shared.shed_oldest(depth, limit as u64),
+                };
+                match victim {
+                    Some(v) => {
+                        self.metrics.record_shed_evicted();
+                        tracer::instant(
+                            TraceLevel::Engine,
+                            "shed",
+                            &[("victim", v as i64), ("depth", depth as i64)],
+                        );
+                    }
+                    None => {
+                        // Reject policy, or nothing queued left to shed.
+                        self.metrics.record_shed_rejected();
+                        tracer::instant(
+                            TraceLevel::Engine,
+                            "shed",
+                            &[("depth", depth as i64), ("limit", limit as i64)],
+                        );
+                        return Err(Error::engine(EngineError::Overloaded {
+                            depth,
+                            limit: limit as u64,
+                        }));
+                    }
+                }
+            }
+        }
         let id = NEXT_SESSION_ID.fetch_add(1, Ordering::Relaxed);
+        self.shared.register(id);
         self.metrics.queue_enter();
         tracer::instant(
             TraceLevel::Engine,
@@ -536,8 +736,9 @@ impl Engine {
                 tx,
             })
             .map_err(|_| {
+                self.shared.deregister(id);
                 self.metrics.queue_exit(Duration::ZERO);
-                crate::err!("engine stopped")
+                Error::engine(EngineError::Stopped)
             })?;
         Ok(rx)
     }
@@ -622,6 +823,121 @@ fn finish_session(
     );
 }
 
+/// Why a replica worker's serve loop returned.
+enum ExitReason {
+    /// The admission queue closed and every in-flight session drained —
+    /// the engine is shutting down.
+    Shutdown,
+    /// A backend fault (prefill/decode error). The replica's KV state
+    /// is suspect; the supervisor tears it down and rebuilds.
+    Fatal(Error),
+}
+
+/// Best-effort text of a `catch_unwind` payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .map(|s| (*s).to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".to_string())
+}
+
+/// Fail every request still queued on a permanently-dead replica with a
+/// typed error, until the engine closes the channel (so `Engine::drop`
+/// still joins this worker cleanly and no sender ever hangs).
+fn drain_dead_queue(
+    rx: &mpsc::Receiver<SessionReq>,
+    shared: &EngineShared,
+    metrics: &EngineMetrics,
+    index: usize,
+) {
+    while let Ok(req) = rx.recv() {
+        if let Some(req) = shared.on_pull(metrics, req) {
+            metrics.queue_exit(req.queued_at.elapsed());
+            let _ = req
+                .tx
+                .send(Err(Error::engine(EngineError::ReplicaDead { replica: index })));
+        }
+    }
+}
+
+/// Replica worker body: run the serve loop under `catch_unwind`,
+/// convert panics and backend faults into supervisor events, fail the
+/// dead replica's in-flight sessions with a typed error (never a hang),
+/// and either rebuild the replica from [`SharedWeights`] (bounded
+/// restarts, exponential backoff) or mark it dead so admissions
+/// re-route to survivors.
+fn supervise(
+    mut replica: Replica,
+    rx: mpsc::Receiver<SessionReq>,
+    max_restarts: u32,
+    backoff: Duration,
+) {
+    let index = replica.index;
+    let mut restarts: u32 = 0;
+    loop {
+        let outcome =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| replica.run(&rx)));
+        let cause = match outcome {
+            Ok(ExitReason::Shutdown) => {
+                crate::debug!("engine-replica-{index}: clean shutdown (queue closed)");
+                replica.metrics.core.inc("replica_exits");
+                tracer::instant(
+                    TraceLevel::Engine,
+                    "replica_exit",
+                    &[("replica", index as i64), ("fatal", 0)],
+                );
+                return;
+            }
+            Ok(ExitReason::Fatal(e)) => format!("backend fault: {e:#}"),
+            Err(p) => format!("panic: {}", panic_message(p.as_ref())),
+        };
+        replica.metrics.core.inc("replica_exits");
+        tracer::instant(
+            TraceLevel::Engine,
+            "replica_exit",
+            &[("replica", index as i64), ("fatal", 1)],
+        );
+        let in_flight = replica.slots.iter().filter(|s| s.is_some()).count();
+        crate::warn!(
+            "engine-replica-{index} died ({cause}); failing {in_flight} in-flight session(s)"
+        );
+        replica.fail_all_slots();
+        if restarts >= max_restarts {
+            crate::warn!(
+                "engine-replica-{index}: restart budget ({max_restarts}) exhausted; \
+                 degrading capacity and re-routing admissions to survivors"
+            );
+            replica.shared.alive[index].store(false, Ordering::Relaxed);
+            drain_dead_queue(&rx, &replica.shared, &replica.metrics, index);
+            return;
+        }
+        std::thread::sleep(backoff.saturating_mul(1u32 << restarts.min(16)));
+        restarts += 1;
+        replica.metrics.core.inc("replica_restarts");
+        tracer::instant(
+            TraceLevel::Engine,
+            "replica_restart",
+            &[("replica", index as i64), ("attempt", restarts as i64)],
+        );
+        // Rebuild from the same SharedWeights handle (moved, not
+        // cloned: the `strong_count == replicas + 1` invariant holds
+        // across restarts).
+        let shared = replica.shared.clone();
+        let metrics = replica.metrics.clone();
+        replica = match replica.rebuild() {
+            Ok(fresh) => fresh,
+            Err(e) => {
+                crate::warn!("engine-replica-{index}: rebuild failed ({e:#}); marking dead");
+                shared.alive[index].store(false, Ordering::Relaxed);
+                drain_dead_queue(&rx, &shared, &metrics, index);
+                return;
+            }
+        };
+        crate::info!("engine-replica-{index}: restarted (attempt {restarts}/{max_restarts})");
+    }
+}
+
 /// Worker-thread state of one model replica. Holds a handle to the
 /// engine's [`SharedWeights`]; its persistent argument vectors are
 /// buffer-sharing views over that set, so the replica's only private
@@ -643,6 +959,10 @@ struct Replica {
     /// Per-session wall-time SLO ([`EngineConfig::session_deadline`]).
     deadline: Option<Duration>,
     metrics: Arc<EngineMetrics>,
+    /// Engine-wide shed registry + liveness flags.
+    shared: Arc<EngineShared>,
+    /// This replica's index (liveness flag slot, error payloads).
+    index: usize,
     slots: Vec<Option<Slot>>,
     /// Backend-resident KV caches (the in-place decode protocol): when
     /// the backend hands one out, the per-layer cache slabs live here and
@@ -679,6 +999,8 @@ impl Replica {
         window: Duration,
         deadline: Option<Duration>,
         metrics: Arc<EngineMetrics>,
+        shared: Arc<EngineShared>,
+        index: usize,
     ) -> Result<Replica> {
         let m = rt.meta.model.clone();
         let (b, s, d) = (m.batch, m.seq_len, m.d_model);
@@ -721,6 +1043,8 @@ impl Replica {
             window,
             deadline,
             metrics,
+            shared,
+            index,
             slots: (0..b).map(|_| None).collect(),
             kv_state,
             decode_args,
@@ -765,7 +1089,106 @@ impl Replica {
         }
     }
 
-    fn run(mut self, rx: mpsc::Receiver<SessionReq>) {
+    /// Rebuild a fresh replica after a fault, reusing this one's
+    /// `SharedWeights` handle (moved, never cloned — the engine-wide
+    /// strong-count invariant survives restarts). The old KV state and
+    /// argument vectors drop here; the rebuilt replica allocates fresh
+    /// ones, so a panic mid-step can never leak corrupt cache rows into
+    /// the next life.
+    fn rebuild(self) -> Result<Replica> {
+        Replica::new(
+            self.rt,
+            self.weights,
+            self.mode,
+            self.kv,
+            self.prefill_graph,
+            self.decode_graph,
+            self.window,
+            self.deadline,
+            self.metrics,
+            self.shared,
+            self.index,
+        )
+    }
+
+    /// Fail the active sessions after a backend fault mid-step: typed
+    /// error with the backend cause attached, slots freed, session
+    /// spans closed (the supervisor then restarts or retires the
+    /// replica).
+    fn fail_step(&mut self, e: &Error) {
+        let msg = format!("{e:#}");
+        let index = self.index;
+        for slot in self.slots.iter_mut() {
+            if let Some(sl) = slot.take() {
+                let _ = sl.tx.send(Err(Error::wrap(
+                    format!("decode step failed: {msg}"),
+                    Error::engine(EngineError::ReplicaDead { replica: index }),
+                )));
+                finish_session(&self.metrics, self.deadline, sl.id, sl.queued_at);
+            }
+        }
+    }
+
+    /// Fail every in-flight session with a typed error (used by the
+    /// supervisor after a panic or backend fault — callers must never
+    /// hang on a dead replica).
+    fn fail_all_slots(&mut self) {
+        let index = self.index;
+        for slot in self.slots.iter_mut() {
+            if let Some(sl) = slot.take() {
+                let _ = sl
+                    .tx
+                    .send(Err(Error::engine(EngineError::ReplicaDead { replica: index })));
+                finish_session(&self.metrics, self.deadline, sl.id, sl.queued_at);
+            }
+        }
+    }
+
+    /// Deadline enforcement: evict any session whose wall time exceeds
+    /// the budget at this decode-step boundary — slot freed, typed
+    /// error streamed, `deadline_cancelled` counter + trace instant.
+    fn cancel_overdue(&mut self) {
+        let Some(dl) = self.deadline else { return };
+        let now = Instant::now();
+        for slot in self.slots.iter_mut() {
+            let overdue = slot
+                .as_ref()
+                .is_some_and(|sl| now.saturating_duration_since(sl.queued_at) > dl);
+            if overdue {
+                let sl = slot.take().expect("checked above");
+                self.metrics.record_deadline_cancelled();
+                tracer::instant(
+                    TraceLevel::Engine,
+                    "deadline_cancelled",
+                    &[("session", sl.id as i64)],
+                );
+                let _ = sl
+                    .tx
+                    .send(Err(Error::engine(EngineError::DeadlineExceeded {
+                        elapsed_ms: now.saturating_duration_since(sl.queued_at).as_millis() as u64,
+                        deadline_ms: dl.as_millis() as u64,
+                    })));
+                // also closes out the session span and (since elapsed >
+                // deadline) bumps the observational overrun counter —
+                // cancellations stay a subset of overruns
+                finish_session(&self.metrics, self.deadline, sl.id, sl.queued_at);
+            }
+        }
+    }
+
+    /// Pull filter: deregister from the shed registry; shed victims get
+    /// their typed error here and never occupy a slot.
+    fn on_pull(&self, req: SessionReq) -> Option<SessionReq> {
+        self.shared.on_pull(&self.metrics, req)
+    }
+
+    /// The serve loop. Returns the exit reason instead of silently
+    /// breaking: the supervisor logs it, accounts `replica_exits`, and
+    /// decides between restart and shutdown. Backend faults bubble out
+    /// as [`ExitReason::Fatal`] (the KV state is suspect after a failed
+    /// step); queue disconnects finish in-flight sessions first, then
+    /// report [`ExitReason::Shutdown`].
+    fn run(&mut self, rx: &mpsc::Receiver<SessionReq>) -> ExitReason {
         loop {
             let free: Vec<usize> = self
                 .slots
@@ -776,12 +1199,17 @@ impl Replica {
                 .collect();
             let idle = free.len() == self.batch;
             let mut pending: Vec<SessionReq> = Vec::new();
+            let mut closed = false;
             if idle {
                 // block for the first session of a batch; a closed queue
                 // with nothing in flight means shutdown
                 match rx.recv() {
-                    Ok(r) => pending.push(r),
-                    Err(_) => break,
+                    Ok(r) => {
+                        if let Some(r) = self.on_pull(r) {
+                            pending.push(r);
+                        }
+                    }
+                    Err(mpsc::RecvError) => return ExitReason::Shutdown,
                 }
                 let deadline = Instant::now() + self.window;
                 while pending.len() < free.len() {
@@ -790,8 +1218,16 @@ impl Replica {
                         break;
                     }
                     match rx.recv_timeout(deadline - now) {
-                        Ok(r) => pending.push(r),
-                        Err(_) => break,
+                        Ok(r) => {
+                            if let Some(r) = self.on_pull(r) {
+                                pending.push(r);
+                            }
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => break,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            closed = true;
+                            break;
+                        }
                     }
                 }
             } else {
@@ -799,16 +1235,32 @@ impl Replica {
                 // now, without stalling the sessions mid-decode
                 while pending.len() < free.len() {
                     match rx.try_recv() {
-                        Ok(r) => pending.push(r),
-                        Err(_) => break,
+                        Ok(r) => {
+                            if let Some(r) = self.on_pull(r) {
+                                pending.push(r);
+                            }
+                        }
+                        Err(mpsc::TryRecvError::Empty) => break,
+                        Err(mpsc::TryRecvError::Disconnected) => {
+                            closed = true;
+                            break;
+                        }
                     }
                 }
             }
             if !pending.is_empty() {
-                self.admit(pending, &free);
+                if let Err(e) = self.admit(pending, &free) {
+                    return ExitReason::Fatal(e);
+                }
             }
+            self.cancel_overdue();
             if self.slots.iter().any(|s| s.is_some()) {
-                self.decode_once();
+                if let Err(e) = self.decode_once() {
+                    return ExitReason::Fatal(e);
+                }
+            }
+            if closed && self.slots.iter().all(|s| s.is_none()) {
+                return ExitReason::Shutdown;
             }
         }
     }
@@ -823,8 +1275,9 @@ impl Replica {
     }
 
     /// Prefill `pending` sessions into the given free slots and stream
-    /// each one's first token.
-    fn admit(&mut self, pending: Vec<SessionReq>, free: &[usize]) {
+    /// each one's first token. A backend fault fails the admitted batch
+    /// and returns `Err` — the supervisor restarts the replica.
+    fn admit(&mut self, pending: Vec<SessionReq>, free: &[usize]) -> Result<()> {
         let (b, s, v) = (self.batch, self.seq, self.vocab);
         // run() caps admissions at the free-slot count; n/take(n) only
         // defend against future edits breaking that invariant.
@@ -868,11 +1321,16 @@ impl Replica {
         let out = match self.rt.run(self.prefill_graph, &self.prefill_args) {
             Ok(o) => o,
             Err(e) => {
-                let msg = format!("{e}");
+                let msg = format!("{e:#}");
                 for req in pending {
-                    let _ = req.tx.send(Err(crate::err!("{msg}")));
+                    let _ = req.tx.send(Err(Error::wrap(
+                        format!("prefill failed: {msg}"),
+                        Error::engine(EngineError::ReplicaDead {
+                            replica: self.index,
+                        }),
+                    )));
                 }
-                return;
+                return Err(Error::wrap("prefill failed", e));
             }
         };
         let elapsed = sw.elapsed();
@@ -965,10 +1423,12 @@ impl Replica {
                 finish_session(&self.metrics, self.deadline, req.id, req.queued_at);
             }
         }
+        Ok(())
     }
 
-    /// One decode step over every active slot.
-    fn decode_once(&mut self) {
+    /// One decode step over every active slot. A backend fault fails
+    /// the active sessions and returns `Err` for the supervisor.
+    fn decode_once(&mut self) -> Result<()> {
         match self.mode {
             ServingMode::KvCached => self.decode_once_kv(),
             ServingMode::FullContext => self.decode_once_full(),
@@ -977,7 +1437,7 @@ impl Replica {
 
     /// Full-context fallback step: re-execute every active context
     /// through `lm_logits_all` and stream one token per slot.
-    fn decode_once_full(&mut self) {
+    fn decode_once_full(&mut self) -> Result<()> {
         let (b, s, v) = (self.batch, self.seq, self.vocab);
         let mut toks = vec![TOK_SPACE as i32; b * s];
         let mut active = 0usize;
@@ -997,13 +1457,8 @@ impl Replica {
         let out = match self.rt.run(self.decode_graph, &self.prefill_args) {
             Ok(o) => o,
             Err(e) => {
-                let msg = format!("{e}");
-                for slot in self.slots.iter_mut() {
-                    if let Some(sl) = slot.take() {
-                        let _ = sl.tx.send(Err(crate::err!("{msg}")));
-                    }
-                }
-                return;
+                self.fail_step(&e);
+                return Err(Error::wrap("decode step failed", e));
             }
         };
         let elapsed = sw.elapsed();
@@ -1046,10 +1501,11 @@ impl Replica {
                 }
             }
         }
+        Ok(())
     }
 
     /// One incremental KV-cached decode step over every active slot.
-    fn decode_once_kv(&mut self) {
+    fn decode_once_kv(&mut self) -> Result<()> {
         let (b, s, v) = (self.batch, self.seq, self.vocab);
         let mut token = vec![0i32; b];
         let mut pos = vec![-1i32; b];
@@ -1080,13 +1536,8 @@ impl Replica {
         let out = match run {
             Ok(o) => o,
             Err(e) => {
-                let msg = format!("{e}");
-                for slot in self.slots.iter_mut() {
-                    if let Some(sl) = slot.take() {
-                        let _ = sl.tx.send(Err(crate::err!("{msg}")));
-                    }
-                }
-                return;
+                self.fail_step(&e);
+                return Err(Error::wrap("decode step failed", e));
             }
         };
         let elapsed = sw.elapsed();
@@ -1135,6 +1586,7 @@ impl Replica {
                 }
             }
         }
+        Ok(())
     }
 }
 
@@ -1208,6 +1660,59 @@ mod tests {
         assert_eq!(e.replicas, 1);
         assert_eq!(e.window, Duration::from_millis(5));
         assert_eq!(e.max_session_tokens, usize::MAX);
+        // fault-tolerance defaults: unbounded queue (pre-existing
+        // behaviour), generous liveness bound, reject-new shedding,
+        // bounded restarts
+        assert_eq!(e.max_queue_depth, None);
+        assert_eq!(e.admission_timeout, Duration::from_secs(60));
+        assert_eq!(e.shed_policy, ShedPolicy::Reject);
+        assert_eq!(e.max_replica_restarts, 2);
+        assert_eq!(e.restart_backoff, Duration::from_millis(10));
+    }
+
+    #[test]
+    fn shed_registry_marks_and_delivers_oldest() {
+        let shared = EngineShared::new(2);
+        let metrics = EngineMetrics::new();
+        shared.register(10);
+        shared.register(11);
+        // oldest = smallest id
+        assert_eq!(shared.shed_oldest(5, 4), Some(10));
+        // pulling the victim delivers Overloaded on its channel
+        let (tx, rx) = mpsc::channel();
+        let victim = SessionReq {
+            id: 10,
+            prompt: vec![1],
+            max_tokens: 1,
+            queued_at: Instant::now(),
+            tx,
+        };
+        assert!(shared.on_pull(&metrics, victim).is_none());
+        let err = rx.recv().unwrap().unwrap_err();
+        assert_eq!(
+            err.engine_error(),
+            Some(EngineError::Overloaded { depth: 5, limit: 4 })
+        );
+        // the un-shed request passes through
+        let (tx, _rx) = mpsc::channel();
+        let ok = SessionReq {
+            id: 11,
+            prompt: vec![1],
+            max_tokens: 1,
+            queued_at: Instant::now(),
+            tx,
+        };
+        assert!(shared.on_pull(&metrics, ok).is_some());
+        // nothing left to shed
+        assert_eq!(shared.shed_oldest(5, 4), None);
+    }
+
+    #[test]
+    fn panic_message_extracts_payloads() {
+        let p = std::panic::catch_unwind(|| panic!("boom {}", 7)).unwrap_err();
+        assert_eq!(panic_message(p.as_ref()), "boom 7");
+        let p = std::panic::catch_unwind(|| std::panic::panic_any(42i32)).unwrap_err();
+        assert_eq!(panic_message(p.as_ref()), "non-string panic payload");
     }
 
     #[test]

@@ -8,10 +8,68 @@
 
 use std::fmt;
 
+/// Typed serving-engine failure classes, attached to [`Error`] so
+/// callers can branch on *why* a session failed instead of parsing
+/// message strings. Every variant corresponds to a documented engine
+/// behaviour (see README "Fault tolerance & admission control").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineError {
+    /// Admission refused (or an older session shed) because the engine
+    /// queue depth reached `limit`. Retryable: the caller may back off
+    /// and resubmit.
+    Overloaded { depth: u64, limit: u64 },
+    /// The session exceeded its configured deadline and was cancelled
+    /// at a decode-step boundary.
+    DeadlineExceeded { elapsed_ms: u64, deadline_ms: u64 },
+    /// The replica serving this session died (panic or backend fault)
+    /// and its in-flight work could not be preserved.
+    ReplicaDead { replica: usize },
+    /// The stream produced no token within the admission timeout — the
+    /// engine is wedged or the replica stalled. Retryable.
+    Timeout { waited_ms: u64 },
+    /// The engine has shut down (all replicas gone or dropped).
+    Stopped,
+}
+
+impl EngineError {
+    /// Transient faults a client may retry after backoff.
+    pub fn is_retryable(self) -> bool {
+        matches!(
+            self,
+            EngineError::Overloaded { .. } | EngineError::Timeout { .. }
+        )
+    }
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::Overloaded { depth, limit } => {
+                write!(f, "engine overloaded: queue depth {depth} >= limit {limit}")
+            }
+            EngineError::DeadlineExceeded {
+                elapsed_ms,
+                deadline_ms,
+            } => write!(
+                f,
+                "session deadline exceeded: {elapsed_ms}ms elapsed > {deadline_ms}ms deadline"
+            ),
+            EngineError::ReplicaDead { replica } => {
+                write!(f, "replica {replica} died while serving this session")
+            }
+            EngineError::Timeout { waited_ms } => {
+                write!(f, "no token within {waited_ms}ms admission timeout")
+            }
+            EngineError::Stopped => write!(f, "engine stopped"),
+        }
+    }
+}
+
 /// A message plus an optional chain of causes.
 pub struct Error {
     msg: String,
     cause: Option<Box<Error>>,
+    engine: Option<EngineError>,
 }
 
 impl Error {
@@ -20,6 +78,7 @@ impl Error {
         Error {
             msg: msg.into(),
             cause: None,
+            engine: None,
         }
     }
 
@@ -28,7 +87,29 @@ impl Error {
         Error {
             msg: msg.into(),
             cause: Some(Box::new(cause)),
+            engine: None,
         }
+    }
+
+    /// Build a typed serving-engine error. The Display message comes
+    /// from the [`EngineError`] itself, so logs and matches agree.
+    pub fn engine(kind: EngineError) -> Error {
+        Error {
+            msg: kind.to_string(),
+            cause: None,
+            engine: Some(kind),
+        }
+    }
+
+    /// The typed engine failure class, if any error in the cause chain
+    /// carries one (outermost wins).
+    pub fn engine_error(&self) -> Option<EngineError> {
+        std::iter::successors(Some(self), |e| e.cause.as_deref()).find_map(|e| e.engine)
+    }
+
+    /// True when the chain carries a retryable [`EngineError`].
+    pub fn is_retryable(&self) -> bool {
+        self.engine_error().is_some_and(EngineError::is_retryable)
     }
 
     /// Iterate the cause chain (outermost first).
@@ -140,5 +221,30 @@ mod tests {
     fn macro_formats() {
         let e = crate::err!("x = {}", 42);
         assert_eq!(format!("{e}"), "x = 42");
+    }
+
+    #[test]
+    fn engine_error_survives_wrapping() {
+        let kind = EngineError::Overloaded {
+            depth: 9,
+            limit: 8,
+        };
+        let e = Error::wrap("submit failed", Error::engine(kind));
+        assert_eq!(e.engine_error(), Some(kind));
+        assert!(e.is_retryable());
+        assert!(format!("{e:#}").contains("queue depth 9 >= limit 8"));
+    }
+
+    #[test]
+    fn engine_error_retryability_split() {
+        assert!(Error::engine(EngineError::Timeout { waited_ms: 5 }).is_retryable());
+        assert!(!Error::engine(EngineError::Stopped).is_retryable());
+        assert!(!Error::engine(EngineError::ReplicaDead { replica: 1 }).is_retryable());
+        assert!(!Error::engine(EngineError::DeadlineExceeded {
+            elapsed_ms: 10,
+            deadline_ms: 1,
+        })
+        .is_retryable());
+        assert!(crate::err!("plain").engine_error().is_none());
     }
 }

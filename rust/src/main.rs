@@ -23,6 +23,7 @@ use bof4::{info, Result};
 fn main() {
     bof4::util::log::init_from_env();
     bof4::obs::tracer::init_from_env();
+    bof4::testkit::faults::init_from_env();
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = argv.first().map(String::as_str).unwrap_or("help");
     let rest: Vec<String> = argv.iter().skip(1).cloned().collect();
@@ -258,8 +259,21 @@ fn serve(rest: Vec<String>) -> Result<()> {
         .opt(
             "deadline-ms",
             None,
-            "per-session wall-time SLO in ms; overruns count into \
-             bof4_deadline_overruns_total (observational only)",
+            "per-session wall-time SLO in ms; overdue sessions are \
+             cancelled at the next decode-step boundary (counted in \
+             bof4_deadline_overruns_total / bof4_deadline_cancelled_total)",
+        )
+        .opt(
+            "max-queue-depth",
+            None,
+            "admission limit: submissions past this queue depth are shed \
+             per --shed instead of queueing unboundedly",
+        )
+        .opt(
+            "shed",
+            Some("reject"),
+            "load-shed policy at --max-queue-depth: reject (the new \
+             request) | oldest (evict the oldest queued session)",
         )
         .parse_from(rest);
     let trace_path = p.get("trace").map(std::path::PathBuf::from);
@@ -349,6 +363,15 @@ fn serve(rest: Vec<String>) -> Result<()> {
             session_deadline: p
                 .get_usize("deadline-ms")
                 .map(|ms| std::time::Duration::from_millis(ms as u64)),
+            max_queue_depth: p.get_usize("max-queue-depth"),
+            shed_policy: match p.get("shed").unwrap_or("reject") {
+                "oldest" => bof4::coordinator::ShedPolicy::Oldest,
+                "reject" => bof4::coordinator::ShedPolicy::Reject,
+                other => {
+                    eprintln!("unknown shed policy '{other}', using reject");
+                    bof4::coordinator::ShedPolicy::Reject
+                }
+            },
             ..Default::default()
         },
     )?;
@@ -373,21 +396,44 @@ fn serve(rest: Vec<String>) -> Result<()> {
     let corpus = bof4::models::Corpus::generate(50_000, 5);
     let sw = bof4::util::timer::Stopwatch::start();
     let mut sessions = Vec::new();
+    let mut shed = 0usize;
     for i in 0..n {
         let start = (i * 97) % (corpus.len() - 48);
-        sessions.push(engine.session_with(&corpus.tokens[start..start + 48], tokens)?);
+        match engine.session_with(&corpus.tokens[start..start + 48], tokens) {
+            Ok(s) => sessions.push(s),
+            // admission control under --max-queue-depth sheds the new
+            // request with a retryable Overloaded error — expected load
+            // behaviour, not a demo failure
+            Err(e) if e.is_retryable() => shed += 1,
+            Err(e) => return Err(e),
+        }
     }
     let mut answered = 0;
     let mut streamed = 0usize;
+    let mut deadlined = 0usize;
+    let mut faulted = 0usize;
     let mut first_stream: Option<Vec<u8>> = None;
     let mut last_dump = std::time::Instant::now();
     for sess in sessions {
-        let toks = sess.collect_tokens()?;
-        if first_stream.is_none() {
-            first_stream = Some(toks.clone());
+        match sess.collect_tokens() {
+            Ok(toks) => {
+                if first_stream.is_none() {
+                    first_stream = Some(toks.clone());
+                }
+                streamed += toks.len();
+                answered += 1;
+            }
+            // typed engine faults (oldest-shed eviction, deadline
+            // cancellation, replica failure) are expected under
+            // --max-queue-depth / --deadline-ms / BOF4_FAULT — count
+            // them and keep draining the remaining streams
+            Err(e) => match e.engine_error() {
+                Some(bof4::coordinator::EngineError::Overloaded { .. }) => shed += 1,
+                Some(bof4::coordinator::EngineError::DeadlineExceeded { .. }) => deadlined += 1,
+                Some(_) => faulted += 1,
+                None => return Err(e),
+            },
         }
-        streamed += toks.len();
-        answered += 1;
         // periodic metrics dump, so a scraper tailing the file sees the
         // run progress (the engine handle is !Sync — dumps ride the
         // collect loop rather than a thread)
@@ -408,7 +454,8 @@ fn serve(rest: Vec<String>) -> Result<()> {
     }
     println!(
         "served {answered}/{n} sessions ({streamed} tokens) in {secs:.2}s \
-         ({:.1} tok/s)\n{}",
+         ({:.1} tok/s); {shed} shed, {deadlined} deadline-cancelled, \
+         {faulted} faulted\n{}",
         streamed as f64 / secs,
         engine.metrics.summary()
     );
@@ -474,6 +521,16 @@ fn info_cmd(_rest: Vec<String>) -> Result<()> {
          to record engine/kernel spans; export with bof4 serve --trace \
          <path>; token streams are bit-identical at every level)",
         bof4::obs::tracer::level()
+    );
+    println!(
+        "fault injection: {} (set BOF4_FAULT=panic_decode:<n>,err_prefill:<n>,\
+         slow_step:<ms> to arm the testkit chaos hooks in the CPU backend; \
+         unset, each hook is a single relaxed atomic load)",
+        if bof4::testkit::faults::armed() {
+            "armed"
+        } else {
+            "off"
+        }
     );
     println!("model: {:?}", rt.meta.model);
     println!("graphs:");

@@ -18,7 +18,7 @@ use super::tracer::{EventKind, TraceSnapshot};
 
 /// Counter names every snapshot carries (zero-valued when the engine has
 /// not touched them yet), so scrapers see a stable series set.
-const KNOWN_COUNTERS: [&str; 7] = [
+const KNOWN_COUNTERS: [&str; 13] = [
     "batches",
     "batched_requests",
     "sessions",
@@ -26,6 +26,12 @@ const KNOWN_COUNTERS: [&str; 7] = [
     "decode_tokens",
     "decode_steps",
     "deadline_overruns",
+    "deadline_cancelled",
+    "sessions_shed",
+    "sessions_shed_rejected",
+    "sessions_shed_evicted",
+    "replica_exits",
+    "replica_restarts",
 ];
 
 /// Value-series names every snapshot carries (summaries render empty —
@@ -68,6 +74,12 @@ pub fn documented_metrics() -> &'static [&'static str] {
         "bof4_decode_tokens_total",
         "bof4_decode_steps_total",
         "bof4_deadline_overruns_total",
+        "bof4_deadline_cancelled_total",
+        "bof4_sessions_shed_total",
+        "bof4_sessions_shed_rejected_total",
+        "bof4_sessions_shed_evicted_total",
+        "bof4_replica_exits_total",
+        "bof4_replica_restarts_total",
         "bof4_prefill_exec_ms",
         "bof4_decode_step_exec_ms",
         "bof4_token_latency_ms",
@@ -463,6 +475,36 @@ mod tests {
         assert!(text.contains("bof4_token_latency_ms_bucket{le=\"+Inf\"} 1"));
         assert!(text.contains("bof4_kernel_seconds_total{kernel=\"dense\"}"));
         assert!(text.contains("bof4_queue_depth 1"));
+    }
+
+    /// Fault-tolerance counters (shed/restart/deadline-cancel) must be
+    /// present — zero-valued — in both exports before the engine ever
+    /// sheds or restarts anything, so scrapers see a stable series set.
+    #[test]
+    fn fault_counters_zero_filled_in_exports() {
+        let snap = MetricsSnapshot::collect(&EngineMetrics::new(), Vec::new(), None);
+        let text = snap.to_prometheus();
+        for line in [
+            "bof4_sessions_shed_total 0",
+            "bof4_sessions_shed_rejected_total 0",
+            "bof4_sessions_shed_evicted_total 0",
+            "bof4_deadline_cancelled_total 0",
+            "bof4_replica_exits_total 0",
+            "bof4_replica_restarts_total 0",
+        ] {
+            assert!(text.contains(line), "missing '{line}' in:\n{text}");
+        }
+        let j = Json::parse(&snap.to_json().to_string()).unwrap();
+        for key in [
+            "counters.sessions_shed",
+            "counters.sessions_shed_rejected",
+            "counters.sessions_shed_evicted",
+            "counters.deadline_cancelled",
+            "counters.replica_exits",
+            "counters.replica_restarts",
+        ] {
+            assert_eq!(j.path(key).unwrap().as_f64(), Some(0.0), "{key}");
+        }
     }
 
     #[test]

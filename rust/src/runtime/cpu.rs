@@ -1230,6 +1230,7 @@ impl CpuBackend {
     /// prompt batch; returns per-row logits at position `lens[b]-1` plus
     /// the per-layer K/V tensors extracted from the attention cache.
     fn prefill(&self, args: &[HostTensor], q4: bool) -> Result<Vec<HostTensor>> {
+        crate::testkit::faults::prefill_hook()?;
         let (b, s, d, _, _, _, v) = self.dims();
         let nl = self.m.n_layers;
         let np = param_specs(&self.m).len();
@@ -1416,6 +1417,7 @@ impl CpuBackend {
         token: &[i32],
         pos: &[i32],
     ) -> Vec<f32> {
+        crate::testkit::faults::decode_hook();
         let _phase = phase_scope(KernelPhase::Decode);
         let (b, s, d, h, _hd, ff, v) = self.dims();
         let pool = &*self.pool;
@@ -1478,6 +1480,7 @@ impl CpuBackend {
         token: &[i32],
         pos: &[i32],
     ) -> Vec<f32> {
+        crate::testkit::faults::decode_hook();
         let _phase = phase_scope(KernelPhase::Kv);
         let (b, s, d, h, _hd, ff, v) = self.dims();
         let pool = &*self.pool;

@@ -1,0 +1,281 @@
+//! Fault-injection harness for the serving engine (`BOF4_FAULT`).
+//!
+//! Chaos tests need deterministic ways to kill a replica mid-decode,
+//! fail a prefill, or wedge a decode step. This module owns a tiny
+//! process-global fault plan consulted by hooks compiled into the CPU
+//! backend's prefill/decode paths:
+//!
+//! * `panic_decode:<n>` — panic on the *n*-th decode-step call
+//!   (process-wide count), simulating a replica crash.
+//! * `err_prefill:<n>` — return an error from the *n*-th prefill call,
+//!   simulating a backend fault during admission.
+//! * `slow_step:<ms>`  — sleep `<ms>` before every decode step,
+//!   simulating a stalled replica.
+//!
+//! Multiple faults combine with commas: `panic_decode:5,slow_step:2`.
+//!
+//! The off path is a single relaxed atomic load (the same discipline as
+//! the tracer level gate), so production binaries pay nothing unless
+//! `BOF4_FAULT` is set — the decode bench asserts this. The plan itself
+//! lives entirely in atomics, so a hook that panics (the whole point)
+//! can never poison a lock.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+use crate::error::Result;
+
+/// Master switch: hooks return immediately while this is false.
+static ARMED: AtomicBool = AtomicBool::new(false);
+/// Panic on the n-th decode call (0 = disabled).
+static PANIC_AFTER: AtomicU64 = AtomicU64::new(0);
+/// Error on the n-th prefill call (0 = disabled).
+static ERR_AFTER: AtomicU64 = AtomicU64::new(0);
+/// Sleep this many ms before every decode call (0 = disabled).
+static SLOW_MS: AtomicU64 = AtomicU64::new(0);
+
+/// Call + trigger accounting, readable by tests to pin that the engine
+/// observed exactly the injected schedule.
+static DECODE_CALLS: AtomicU64 = AtomicU64::new(0);
+static PREFILL_CALLS: AtomicU64 = AtomicU64::new(0);
+static PANICS_FIRED: AtomicU64 = AtomicU64::new(0);
+static PREFILL_ERRS_FIRED: AtomicU64 = AtomicU64::new(0);
+
+/// A parsed `BOF4_FAULT` schedule.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// Panic on the n-th decode-step call (1-indexed).
+    pub panic_decode: Option<u64>,
+    /// Error on the n-th prefill call (1-indexed).
+    pub err_prefill: Option<u64>,
+    /// Sleep before every decode step, in milliseconds.
+    pub slow_step_ms: Option<u64>,
+}
+
+impl FaultSpec {
+    /// Parse a comma-separated schedule, e.g. `panic_decode:3,slow_step:5`.
+    pub fn parse(spec: &str) -> Result<FaultSpec> {
+        let mut out = FaultSpec::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (kind, arg) = part
+                .split_once(':')
+                .ok_or_else(|| crate::err!("BOF4_FAULT entry '{part}' missing ':<n>'"))?;
+            let n: u64 = arg
+                .trim()
+                .parse()
+                .map_err(|_| crate::err!("BOF4_FAULT entry '{part}': '{arg}' is not a number"))?;
+            match kind.trim() {
+                "panic_decode" => out.panic_decode = Some(n),
+                "err_prefill" => out.err_prefill = Some(n),
+                "slow_step" => out.slow_step_ms = Some(n),
+                other => {
+                    return Err(crate::err!(
+                        "unknown BOF4_FAULT kind '{other}' \
+                         (expected panic_decode|err_prefill|slow_step)"
+                    ))
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn is_empty(&self) -> bool {
+        *self == FaultSpec::default()
+    }
+}
+
+/// Counts of hook calls and fired faults since the last install/clear.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    pub decode_calls: u64,
+    pub prefill_calls: u64,
+    pub panics_fired: u64,
+    pub prefill_errs_fired: u64,
+}
+
+/// Snapshot the trigger accounting.
+pub fn stats() -> FaultStats {
+    FaultStats {
+        decode_calls: DECODE_CALLS.load(Ordering::Relaxed),
+        prefill_calls: PREFILL_CALLS.load(Ordering::Relaxed),
+        panics_fired: PANICS_FIRED.load(Ordering::Relaxed),
+        prefill_errs_fired: PREFILL_ERRS_FIRED.load(Ordering::Relaxed),
+    }
+}
+
+/// True when a fault plan is installed. The decode bench asserts this
+/// stays false when `BOF4_FAULT` is unset (zero-cost contract).
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+fn install(spec: &FaultSpec) {
+    DECODE_CALLS.store(0, Ordering::Relaxed);
+    PREFILL_CALLS.store(0, Ordering::Relaxed);
+    PANICS_FIRED.store(0, Ordering::Relaxed);
+    PREFILL_ERRS_FIRED.store(0, Ordering::Relaxed);
+    PANIC_AFTER.store(spec.panic_decode.unwrap_or(0), Ordering::Relaxed);
+    ERR_AFTER.store(spec.err_prefill.unwrap_or(0), Ordering::Relaxed);
+    SLOW_MS.store(spec.slow_step_ms.unwrap_or(0), Ordering::Relaxed);
+    ARMED.store(!spec.is_empty(), Ordering::Relaxed);
+}
+
+fn clear() {
+    ARMED.store(false, Ordering::Relaxed);
+    PANIC_AFTER.store(0, Ordering::Relaxed);
+    ERR_AFTER.store(0, Ordering::Relaxed);
+    SLOW_MS.store(0, Ordering::Relaxed);
+}
+
+/// One-shot env installation for binaries (`bof4`, benches), cached the
+/// same way as `BOF4_THREADS`/`BOF4_KV`. Tests must use
+/// [`install_for_test`] instead so faults cannot leak across tests.
+pub fn init_from_env() {
+    static INIT: OnceLock<()> = OnceLock::new();
+    INIT.get_or_init(|| {
+        if let Ok(spec) = std::env::var("BOF4_FAULT") {
+            match FaultSpec::parse(&spec) {
+                Ok(plan) => install(&plan),
+                Err(e) => crate::warn!("ignoring invalid BOF4_FAULT: {e:#}"),
+            }
+        }
+    });
+}
+
+/// The fault plan is process-global, so tests that install one (or that
+/// run engines which must NOT see someone else's plan) serialize here.
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+/// RAII handle from [`install_for_test`]/[`exclusive`]: holds the
+/// process-wide fault lock and clears the plan on drop.
+pub struct FaultGuard {
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        clear();
+    }
+}
+
+/// Install a fault schedule for the duration of one test. Panics on an
+/// invalid spec (tests author their own schedules).
+pub fn install_for_test(spec: &str) -> FaultGuard {
+    let guard = exclusive();
+    install(&FaultSpec::parse(spec).expect("valid fault spec"));
+    guard
+}
+
+/// Take the fault lock *without* installing anything — for tests that
+/// run engines in the fault-tolerance suite and must not race an armed
+/// sibling. Recovers from poisoning: a panicking test is normal here.
+pub fn exclusive() -> FaultGuard {
+    let lock = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    clear();
+    FaultGuard { _lock: lock }
+}
+
+/// Hook compiled into `CpuBackend::prefill`. Fails the n-th call when
+/// an `err_prefill` fault is armed.
+#[inline]
+pub fn prefill_hook() -> Result<()> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return Ok(());
+    }
+    prefill_hook_armed()
+}
+
+#[cold]
+fn prefill_hook_armed() -> Result<()> {
+    let n = PREFILL_CALLS.fetch_add(1, Ordering::Relaxed) + 1;
+    let after = ERR_AFTER.load(Ordering::Relaxed);
+    if after > 0 && n == after {
+        PREFILL_ERRS_FIRED.fetch_add(1, Ordering::Relaxed);
+        return Err(crate::err!(
+            "fault injection: err_prefill fired at prefill call {n}"
+        ));
+    }
+    Ok(())
+}
+
+/// Hook compiled into the CPU backend's decode-step cores. Sleeps when
+/// `slow_step` is armed and panics on the n-th call when `panic_decode`
+/// is armed (the panic crosses the replica's `catch_unwind`).
+#[inline]
+pub fn decode_hook() {
+    if !ARMED.load(Ordering::Relaxed) {
+        return;
+    }
+    decode_hook_armed();
+}
+
+#[cold]
+fn decode_hook_armed() {
+    let n = DECODE_CALLS.fetch_add(1, Ordering::Relaxed) + 1;
+    let slow = SLOW_MS.load(Ordering::Relaxed);
+    if slow > 0 {
+        std::thread::sleep(Duration::from_millis(slow));
+    }
+    let after = PANIC_AFTER.load(Ordering::Relaxed);
+    if after > 0 && n == after {
+        PANICS_FIRED.fetch_add(1, Ordering::Relaxed);
+        panic!("fault injection: panic_decode fired at decode call {n}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_schedule() {
+        let spec = FaultSpec::parse("panic_decode:3, err_prefill:1 ,slow_step:25").unwrap();
+        assert_eq!(
+            spec,
+            FaultSpec {
+                panic_decode: Some(3),
+                err_prefill: Some(1),
+                slow_step_ms: Some(25),
+            }
+        );
+        assert!(FaultSpec::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultSpec::parse("panic_decode").is_err());
+        assert!(FaultSpec::parse("panic_decode:x").is_err());
+        assert!(FaultSpec::parse("eat_flaming_death:1").is_err());
+    }
+
+    // Trigger thresholds in lib-level tests are set beyond any call
+    // count reachable while the guard is held, so a concurrently
+    // running engine test can never trip them; firing semantics are
+    // pinned in tests/fault_tolerance.rs, where every test serializes
+    // on the same lock.
+    #[test]
+    fn guard_arms_and_clears() {
+        {
+            let _g = install_for_test("slow_step:0,panic_decode:18446744073709551615");
+            assert!(armed());
+            assert!(prefill_hook().is_ok());
+            decode_hook(); // counts, must not fire at threshold u64::MAX
+            assert!(stats().decode_calls >= 1);
+            assert_eq!(stats().panics_fired, 0);
+        }
+        assert!(!armed(), "guard drop must clear the plan");
+        let before = stats().decode_calls;
+        decode_hook();
+        assert_eq!(stats().decode_calls, before, "disarmed hook must not count");
+    }
+
+    #[test]
+    fn exclusive_guard_installs_nothing() {
+        let _g = exclusive();
+        assert!(!armed());
+        assert!(prefill_hook().is_ok());
+        decode_hook();
+    }
+}

@@ -5,6 +5,8 @@
 //! geometries), and assertion helpers. Deliberately tiny but real:
 //! failures report the *shrunk* input and the reproducing seed.
 
+pub mod faults;
+
 use crate::util::rng::Pcg64;
 
 /// A generator of random values of `T`.

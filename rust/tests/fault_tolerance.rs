@@ -1,0 +1,403 @@
+//! Fault-tolerance integration: chaos tests driving the serving engine
+//! through the `testkit::faults` harness (`BOF4_FAULT`-style schedules
+//! installed per test), pinning the PR's contracts:
+//!
+//! * a replica panic mid-decode is supervised — in-flight sessions on
+//!   the dead replica fail with typed [`EngineError::ReplicaDead`]
+//!   (never a hang), survivors stream bit-identically to a no-fault
+//!   oracle, the replica restarts, and the engine keeps serving;
+//! * an exhausted restart budget degrades capacity: the replica is
+//!   retired, queued waiters get typed errors, and once no replica is
+//!   left admissions fail fast with [`EngineError::Stopped`];
+//! * admission control sheds deterministically — client-observed
+//!   `Overloaded` errors agree exactly with the `sessions_shed_*`
+//!   counters under an 8-thread submit hammer;
+//! * deadline enforcement cancels overdue sessions mid-stream with
+//!   [`EngineError::DeadlineExceeded`];
+//! * a stalled replica cannot wedge callers: [`DecodeSession`] waits
+//!   are bounded and surface [`EngineError::Timeout`] (retryable).
+//!
+//! The fault plan is process-global, so EVERY test here holds the
+//! harness lock — [`faults::install_for_test`] for armed schedules,
+//! [`faults::exclusive`] for fault-free phases (oracles) that must not
+//! race an armed sibling. `cargo test` runs test binaries one at a
+//! time, so the lib tests' unreachable-threshold guards cannot
+//! interleave with these firing schedules.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use bof4::coordinator::{Engine, EngineConfig, EngineError, ShedPolicy};
+use bof4::runtime::{HostTensor, Runtime};
+use bof4::testkit::faults;
+
+fn engine_with(cfg: EngineConfig) -> (std::sync::Arc<Runtime>, Engine) {
+    let rt = std::sync::Arc::new(Runtime::new().unwrap());
+    let params = rt
+        .run("init_params", &[HostTensor::scalar_u32(3)])
+        .unwrap();
+    let engine = Engine::start(rt.clone(), params, cfg).unwrap();
+    (rt, engine)
+}
+
+/// Poll a metrics counter until it reaches `want` (supervisor restarts
+/// happen on worker threads, after backoff — never assert them without
+/// waiting).
+fn wait_for(what: &str, want: u64, read: impl Fn() -> u64) {
+    let t0 = Instant::now();
+    while read() < want {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "timed out waiting for {what} >= {want} (at {})",
+            read()
+        );
+        thread::sleep(Duration::from_millis(5));
+    }
+}
+
+const PROMPTS: [&[u8]; 6] = [
+    &[1, 2, 3],
+    &[4, 5],
+    &[6, 7, 8, 9],
+    &[10, 11],
+    &[12, 13, 14],
+    &[2, 4, 6],
+];
+const TOKENS: usize = 8;
+
+/// The acceptance scenario: `panic_decode:<n>` against a 3-replica
+/// engine. Exactly one replica dies mid-decode; its sessions fail with
+/// typed `ReplicaDead`, every surviving stream is bit-identical to the
+/// no-fault oracle, the supervisor restarts the replica (counted), and
+/// the engine serves correctly afterwards.
+#[test]
+fn panic_mid_decode_restarts_replica_and_survivors_stay_bit_identical() {
+    // no-fault oracle streams, one session per prompt (determinism
+    // contract: replica count and batching never change the tokens)
+    let oracle: Vec<Vec<u8>> = {
+        let _g = faults::exclusive();
+        let (_rt, engine) = engine_with(EngineConfig::default());
+        PROMPTS
+            .iter()
+            .map(|p| {
+                engine
+                    .session_with(p, TOKENS)
+                    .unwrap()
+                    .collect_tokens()
+                    .unwrap()
+            })
+            .collect()
+    };
+
+    let _g = faults::install_for_test("panic_decode:7");
+    let (_rt, engine) = engine_with(EngineConfig {
+        replicas: 3,
+        restart_backoff: Duration::from_millis(1),
+        admission_timeout: Duration::from_secs(20),
+        ..EngineConfig::default()
+    });
+    let sessions: Vec<_> = PROMPTS
+        .iter()
+        .map(|p| engine.session_with(p, TOKENS).unwrap())
+        .collect();
+    let mut survivors = 0usize;
+    let mut killed = 0usize;
+    for (i, sess) in sessions.into_iter().enumerate() {
+        match sess.collect_tokens() {
+            Ok(toks) => {
+                assert_eq!(
+                    toks, oracle[i],
+                    "surviving stream {i} diverged from the no-fault oracle"
+                );
+                survivors += 1;
+            }
+            Err(e) => {
+                match e.engine_error() {
+                    Some(EngineError::ReplicaDead { replica }) => assert!(replica < 3),
+                    other => panic!("expected ReplicaDead, got {other:?}: {e:#}"),
+                }
+                killed += 1;
+            }
+        }
+    }
+    assert_eq!(faults::stats().panics_fired, 1, "schedule must fire exactly once");
+    assert!(killed >= 1, "the panicking replica had no in-flight sessions");
+    assert!(survivors >= 1, "no streams survived a single-replica fault");
+    wait_for("replica_restarts", 1, || engine.metrics.restart_count());
+    assert!(engine.metrics.core.get("replica_exits") >= 1);
+    // post-restart service check: the engine still serves, bit-identically
+    let toks = engine
+        .session_with(PROMPTS[0], TOKENS)
+        .unwrap()
+        .collect_tokens()
+        .unwrap();
+    assert_eq!(toks, oracle[0], "post-restart stream diverged");
+}
+
+/// `max_replica_restarts: 0`: the first fault retires the only replica.
+/// Both its sessions fail typed (bounded by `recv_timeout`, not a
+/// hang), no restart is attempted, and once the liveness flag flips,
+/// admissions fail fast with `Stopped`.
+#[test]
+fn exhausted_restart_budget_degrades_capacity_with_typed_errors() {
+    let _g = faults::install_for_test("panic_decode:1");
+    let (_rt, engine) = engine_with(EngineConfig {
+        replicas: 1,
+        max_replica_restarts: 0,
+        admission_timeout: Duration::from_secs(5),
+        ..EngineConfig::default()
+    });
+    let s1 = engine.session_with(&[1, 2, 3], 6).unwrap();
+    let s2 = engine.session_with(&[4, 5, 6], 6).unwrap();
+    for (name, sess) in [("s1", s1), ("s2", s2)] {
+        let err = sess
+            .collect_tokens()
+            .expect_err("a session on a dead replica must fail, not hang");
+        assert_eq!(
+            err.engine_error(),
+            Some(EngineError::ReplicaDead { replica: 0 }),
+            "{name}: {err:#}"
+        );
+    }
+    assert_eq!(engine.metrics.restart_count(), 0, "budget 0 must never rebuild");
+    assert!(engine.metrics.core.get("replica_exits") >= 1);
+    // capacity degrades: sessions racing the liveness flip still get
+    // typed errors from the drain; once the flag lands, submit itself
+    // refuses with Stopped
+    let t0 = Instant::now();
+    let err = loop {
+        match engine.session_with(&[9], 2) {
+            Err(e) => break e,
+            Ok(sess) => {
+                // queued before the flag flipped — drained with a typed error
+                sess.collect_tokens()
+                    .expect_err("dead replica streamed tokens");
+            }
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "submit never started failing fast"
+        );
+        thread::sleep(Duration::from_millis(2));
+    };
+    assert_eq!(err.engine_error(), Some(EngineError::Stopped), "{err:#}");
+}
+
+/// 8 threads hammer a depth-1 admission queue over one slowed replica:
+/// every client-observed `Overloaded` error (all retryable) must agree
+/// exactly with the `sessions_shed_rejected` counter — no double counts,
+/// no silent sheds — and the queue-depth gauge returns to zero.
+#[test]
+fn admission_hammer_client_errors_match_shed_counters() {
+    let _g = faults::install_for_test("slow_step:2");
+    let (_rt, engine) = engine_with(EngineConfig {
+        replicas: 1,
+        max_queue_depth: Some(1),
+        shed_policy: ShedPolicy::Reject,
+        admission_timeout: Duration::from_secs(30),
+        ..EngineConfig::default()
+    });
+    const THREADS: usize = 8;
+    const PER_THREAD: usize = 6;
+    let overloaded = AtomicUsize::new(0);
+    let served = AtomicUsize::new(0);
+    thread::scope(|s| {
+        for t in 0..THREADS {
+            let (engine, overloaded, served) = (&engine, &overloaded, &served);
+            s.spawn(move || {
+                for k in 0..PER_THREAD {
+                    let prompt = [t as u8 + 1, k as u8 + 1];
+                    match engine.session_with(&prompt, 3) {
+                        Ok(sess) => {
+                            let toks = sess.collect_tokens().unwrap_or_else(|e| {
+                                panic!("admitted session failed: {e:#}")
+                            });
+                            assert_eq!(toks.len(), 3);
+                            served.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => {
+                            match e.engine_error() {
+                                Some(EngineError::Overloaded { depth, limit }) => {
+                                    assert!(depth >= limit, "shed below the limit")
+                                }
+                                other => panic!("expected Overloaded, got {other:?}: {e:#}"),
+                            }
+                            assert!(e.is_retryable(), "Overloaded must be retryable");
+                            overloaded.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let overloaded = overloaded.load(Ordering::Relaxed);
+    let served = served.load(Ordering::Relaxed);
+    assert_eq!(overloaded + served, THREADS * PER_THREAD);
+    assert!(overloaded > 0, "a depth-1 queue under 8 threads must shed");
+    assert_eq!(
+        engine.metrics.core.get("sessions_shed_rejected"),
+        overloaded as u64,
+        "metrics-side shed count diverged from client-observed errors"
+    );
+    assert_eq!(engine.metrics.shed_total(), overloaded as u64);
+    assert_eq!(engine.metrics.core.get("sessions_shed_evicted"), 0);
+    assert_eq!(engine.metrics.queue_depth(), 0, "queue depth must drain to zero");
+    assert_eq!(engine.metrics.core.get("sessions"), served as u64);
+}
+
+/// `ShedPolicy::Oldest` sheds the oldest *queued* session in the new
+/// one's favour: the victim's stream fails with `Overloaded`, the new
+/// session streams fine, and the eviction lands in
+/// `sessions_shed_evicted`.
+#[test]
+fn oldest_shed_policy_evicts_queued_victim_in_favor_of_new_session() {
+    let _g = faults::install_for_test("slow_step:40");
+    let (rt, engine) = engine_with(EngineConfig {
+        replicas: 1,
+        max_queue_depth: Some(1),
+        shed_policy: ShedPolicy::Oldest,
+        admission_timeout: Duration::from_secs(30),
+        ..EngineConfig::default()
+    });
+    // fill every batch slot; reading each first token pins that all of
+    // them are admitted (prefill streamed it), so the queue is empty again
+    let batch = rt.meta.model.batch;
+    let mut fillers: Vec<_> = (0..batch)
+        .map(|i| engine.session_with(&[i as u8 + 1, 2], 6).unwrap())
+        .collect();
+    for f in &mut fillers {
+        f.next_token()
+            .expect("filler stream closed early")
+            .expect("filler first token");
+    }
+    // all slots busy for ~5 * 40ms: the victim queues, the usurper sheds it
+    let victim = engine.session_with(&[33, 44], 4).unwrap();
+    let usurper = engine.session_with(&[55, 66], 4).unwrap();
+    let err = victim
+        .collect_tokens()
+        .expect_err("oldest-queued session must be shed");
+    match err.engine_error() {
+        Some(EngineError::Overloaded { limit, .. }) => assert_eq!(limit, 1),
+        other => panic!("expected Overloaded, got {other:?}: {err:#}"),
+    }
+    let toks = usurper.collect_tokens().expect("usurping session must stream");
+    assert_eq!(toks.len(), 4);
+    for f in fillers {
+        assert!(f.collect_tokens().is_ok(), "filler sessions must finish");
+    }
+    assert_eq!(engine.metrics.core.get("sessions_shed_evicted"), 1);
+    assert_eq!(engine.metrics.core.get("sessions_shed_rejected"), 0);
+    assert_eq!(engine.metrics.shed_total(), 1);
+}
+
+/// Deadline enforcement mid-stream: with slowed decode steps and a
+/// short deadline, the session streams a few tokens, then is cancelled
+/// at a decode-step boundary with a typed `DeadlineExceeded`; both the
+/// cancellation counter and the observational overrun counter bump.
+#[test]
+fn deadline_cancels_overdue_session_mid_stream() {
+    let _g = faults::install_for_test("slow_step:25");
+    let (_rt, engine) = engine_with(EngineConfig {
+        replicas: 1,
+        session_deadline: Some(Duration::from_millis(60)),
+        admission_timeout: Duration::from_secs(10),
+        ..EngineConfig::default()
+    });
+    let mut sess = engine.session_with(&[1, 2, 3, 4], 32).unwrap();
+    let mut streamed = 0usize;
+    let err = loop {
+        match sess.next_token() {
+            Some(Ok(_)) => streamed += 1,
+            Some(Err(e)) => break e,
+            None => panic!("stream closed without a deadline error after {streamed} tokens"),
+        }
+    };
+    match err.engine_error() {
+        Some(EngineError::DeadlineExceeded {
+            elapsed_ms,
+            deadline_ms,
+        }) => {
+            assert_eq!(deadline_ms, 60);
+            assert!(elapsed_ms > 60, "cancelled before the deadline: {elapsed_ms}ms");
+        }
+        other => panic!("expected DeadlineExceeded, got {other:?}: {err:#}"),
+    }
+    assert!(streamed >= 1, "prefill token must stream before cancellation");
+    assert!(streamed < 32, "deadline never cut the stream");
+    assert_eq!(engine.metrics.deadline_cancelled_count(), 1);
+    assert!(engine.metrics.core.get("deadline_overruns") >= 1);
+}
+
+/// A stalled replica (`slow_step` far beyond the liveness bound) cannot
+/// wedge its caller: `next_token` waits at most
+/// `EngineConfig::admission_timeout` and returns a typed, retryable
+/// `Timeout` instead of blocking forever.
+#[test]
+fn stalled_replica_yields_typed_timeout_instead_of_hanging() {
+    let _g = faults::install_for_test("slow_step:300");
+    let (_rt, engine) = engine_with(EngineConfig {
+        replicas: 1,
+        admission_timeout: Duration::from_millis(40),
+        ..EngineConfig::default()
+    });
+    // a long budget keeps another 300ms stall ahead of every recv, so
+    // the 40ms bound must trip long before the stream can close
+    let mut sess = engine.session_with(&[5, 6, 7], 30).unwrap();
+    let t0 = Instant::now();
+    let err = loop {
+        match sess.next_token() {
+            Some(Ok(_)) => continue, // the prefill token beats the stall
+            Some(Err(e)) => break e,
+            None => panic!("stream closed without a timeout"),
+        }
+    };
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "caller was wedged far beyond the liveness bound"
+    );
+    assert_eq!(
+        err.engine_error(),
+        Some(EngineError::Timeout { waited_ms: 40 }),
+        "{err:#}"
+    );
+    assert!(err.is_retryable(), "Timeout must be retryable");
+}
+
+/// A backend fault during prefill (`err_prefill`) fails the admitted
+/// batch with typed errors carrying the backend cause, the supervisor
+/// restarts the replica, and the next session serves normally.
+#[test]
+fn prefill_fault_fails_batch_typed_and_replica_recovers() {
+    let _g = faults::install_for_test("err_prefill:1");
+    let (_rt, engine) = engine_with(EngineConfig {
+        replicas: 1,
+        restart_backoff: Duration::from_millis(1),
+        admission_timeout: Duration::from_secs(10),
+        ..EngineConfig::default()
+    });
+    let err = engine
+        .session_with(&[1, 2, 3], 5)
+        .unwrap()
+        .collect_tokens()
+        .expect_err("faulted prefill must fail the session");
+    assert_eq!(
+        err.engine_error(),
+        Some(EngineError::ReplicaDead { replica: 0 }),
+        "{err:#}"
+    );
+    let rendered = format!("{err:#}");
+    assert!(
+        rendered.contains("prefill failed"),
+        "backend cause lost from the chain: {rendered}"
+    );
+    assert_eq!(faults::stats().prefill_errs_fired, 1);
+    wait_for("replica_restarts", 1, || engine.metrics.restart_count());
+    // threshold 1 is spent: the rebuilt replica's next prefill succeeds
+    let toks = engine
+        .session_with(&[1, 2, 3], 5)
+        .unwrap()
+        .collect_tokens()
+        .expect("rebuilt replica must serve");
+    assert_eq!(toks.len(), 5);
+}

@@ -132,20 +132,30 @@ fn live_engine_snapshot_exports_every_documented_metric() {
     assert!(j.path("memory.replicas").unwrap().as_f64().unwrap() >= 1.0);
 }
 
-/// `session_deadline` is observational: a zero deadline cannot fail the
-/// stream, but every completed session must bump the overrun counter.
+/// `session_deadline` is enforced: a zero deadline cancels the session
+/// at the first decode-step boundary — the stream fails with a typed
+/// [`EngineError::DeadlineExceeded`], and both the cancellation and the
+/// observational overrun counters bump (cancellations are a subset of
+/// overruns).
 #[test]
-fn zero_session_deadline_records_overruns_without_breaking_streams() {
+fn zero_session_deadline_cancels_stream_with_typed_error() {
+    use bof4::coordinator::EngineError;
     let (_rt, engine) = engine_with(EngineConfig {
         session_deadline: Some(Duration::ZERO),
         ..EngineConfig::default()
     });
-    let toks = engine
+    let err = engine
         .session_with(&[9, 9, 9], 4)
         .unwrap()
         .collect_tokens()
-        .unwrap();
-    assert_eq!(toks.len(), 4, "deadline must not cut streams short");
+        .expect_err("zero deadline must cancel the session");
+    match err.engine_error() {
+        Some(EngineError::DeadlineExceeded { deadline_ms, .. }) => {
+            assert_eq!(deadline_ms, 0)
+        }
+        other => panic!("expected DeadlineExceeded, got {other:?}: {err:#}"),
+    }
+    assert_eq!(engine.metrics.deadline_cancelled_count(), 1);
     assert_eq!(engine.metrics.core.get("deadline_overruns"), 1);
 }
 

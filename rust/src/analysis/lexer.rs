@@ -1,0 +1,488 @@
+//! A minimal Rust lexer for the house linter.
+//!
+//! `bof4 lint` needs just enough lexing to be trustworthy: token rules
+//! must never fire inside comments or string literals, SAFETY/pragma
+//! detection must see comment text, and the metrics-schema rule must
+//! see string-literal contents. [`lex`] therefore splits a source file
+//! into per-line channels:
+//!
+//! - `code`: the line with comments removed and every string/char
+//!   literal content blanked to spaces (quotes kept, so the shape of
+//!   the line survives);
+//! - `comment`: the concatenated comment text of the line (line, doc
+//!   and block comments);
+//! - plus an ordered list of string-literal contents, each tagged with
+//!   the line its literal starts on.
+//!
+//! The lexer understands nested block comments, raw strings
+//! (`r"..."` / `r#"..."#` / `br"..."`), byte strings, char literals,
+//! and tells `'a'` char literals from `'a` lifetimes. It is not a full
+//! Rust lexer — just a faithful enough one for line-level rules.
+
+/// One analyzed line of a source file.
+#[derive(Debug, Clone)]
+pub struct LineInfo {
+    /// Code text: comments stripped, literal contents blanked.
+    pub code: String,
+    /// Comment text on this line (the `//`, `/*`, `*/` markers are
+    /// stripped; doc-comment `/` / `!` prefixes are kept).
+    pub comment: String,
+    /// True when the line sits inside a `#[cfg(test)] mod` region.
+    pub in_test: bool,
+}
+
+/// One string literal: content plus the 1-based line it starts on.
+#[derive(Debug, Clone)]
+pub struct StrLit {
+    /// 1-based line of the opening quote.
+    pub line: usize,
+    /// Literal content (escape sequences kept verbatim).
+    pub text: String,
+}
+
+/// Lexed view of a single source file.
+#[derive(Debug, Clone)]
+pub struct FileModel {
+    /// Forward-slash path label relative to the crate root, e.g.
+    /// `src/runtime/kernels/pool.rs`. Rule scoping keys off this label.
+    pub path: String,
+    /// Per-line code/comment channels.
+    pub lines: Vec<LineInfo>,
+    /// Every string literal in source order.
+    pub strings: Vec<StrLit>,
+}
+
+/// Lex `src` into a [`FileModel`] under the given path label.
+pub fn lex(path: &str, src: &str) -> FileModel {
+    let chars: Vec<char> = src.chars().collect();
+    let mut lx = Lexer {
+        c: &chars,
+        i: 0,
+        lines: Vec::new(),
+        strings: Vec::new(),
+        code: String::new(),
+        comment: String::new(),
+    };
+    lx.run();
+    let mut lines = lx.lines;
+    mark_test_regions(&mut lines);
+    FileModel {
+        path: path.to_string(),
+        lines,
+        strings: lx.strings,
+    }
+}
+
+struct Lexer<'a> {
+    c: &'a [char],
+    i: usize,
+    lines: Vec<LineInfo>,
+    strings: Vec<StrLit>,
+    code: String,
+    comment: String,
+}
+
+impl Lexer<'_> {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.c.get(self.i + ahead).copied()
+    }
+
+    fn flush_line(&mut self) {
+        self.lines.push(LineInfo {
+            code: std::mem::take(&mut self.code),
+            comment: std::mem::take(&mut self.comment),
+            in_test: false,
+        });
+    }
+
+    fn run(&mut self) {
+        while self.i < self.c.len() {
+            let ch = self.c[self.i];
+            match ch {
+                '\n' => {
+                    self.flush_line();
+                    self.i += 1;
+                }
+                '/' if self.peek(1) == Some('/') => self.line_comment(),
+                '/' if self.peek(1) == Some('*') => self.block_comment(),
+                '"' => self.cooked_string(),
+                '\'' => self.char_or_lifetime(),
+                'r' | 'b' => {
+                    if let Some((hashes, quote)) = self.raw_string_opener() {
+                        self.raw_string(hashes, quote);
+                    } else {
+                        self.code.push(ch);
+                        self.i += 1;
+                    }
+                }
+                _ => {
+                    self.code.push(ch);
+                    self.i += 1;
+                }
+            }
+        }
+        if !self.code.is_empty() || !self.comment.is_empty() || self.lines.is_empty() {
+            self.flush_line();
+        }
+    }
+
+    /// `//`, `///`, `//!`: consume to end of line (the newline itself is
+    /// handled by the main loop so the line flush stays in one place).
+    fn line_comment(&mut self) {
+        self.i += 2;
+        while self.i < self.c.len() && self.c[self.i] != '\n' {
+            self.comment.push(self.c[self.i]);
+            self.i += 1;
+        }
+    }
+
+    /// `/* ... */` with nesting; may span lines.
+    fn block_comment(&mut self) {
+        let mut depth = 1usize;
+        self.i += 2;
+        while self.i < self.c.len() && depth > 0 {
+            if self.c[self.i] == '\n' {
+                self.flush_line();
+                self.i += 1;
+            } else if self.c[self.i] == '/' && self.peek(1) == Some('*') {
+                depth += 1;
+                self.i += 2;
+            } else if self.c[self.i] == '*' && self.peek(1) == Some('/') {
+                depth -= 1;
+                self.i += 2;
+            } else {
+                self.comment.push(self.c[self.i]);
+                self.i += 1;
+            }
+        }
+    }
+
+    /// `"..."` with escapes; may span lines.
+    fn cooked_string(&mut self) {
+        let start_line = self.lines.len() + 1;
+        let mut text = String::new();
+        self.code.push('"');
+        self.i += 1;
+        while self.i < self.c.len() {
+            match self.c[self.i] {
+                '\\' => {
+                    text.push('\\');
+                    self.code.push(' ');
+                    self.i += 1;
+                    if self.i < self.c.len() {
+                        let esc = self.c[self.i];
+                        text.push(esc);
+                        if esc == '\n' {
+                            self.flush_line();
+                        } else {
+                            self.code.push(' ');
+                        }
+                        self.i += 1;
+                    }
+                }
+                '"' => {
+                    self.code.push('"');
+                    self.i += 1;
+                    break;
+                }
+                '\n' => {
+                    text.push('\n');
+                    self.flush_line();
+                    self.i += 1;
+                }
+                other => {
+                    text.push(other);
+                    self.code.push(' ');
+                    self.i += 1;
+                }
+            }
+        }
+        self.strings.push(StrLit {
+            line: start_line,
+            text,
+        });
+    }
+
+    /// At an `r`/`b`, detect a raw-string opener (`r"`, `r#..#"`, `br"`)
+    /// that is not the tail of a longer identifier. Returns the hash
+    /// count and the index of the opening quote.
+    fn raw_string_opener(&self) -> Option<(usize, usize)> {
+        let mut j = self.i;
+        if self.c[j] == 'b' {
+            if self.peek(1) != Some('r') {
+                return None;
+            }
+            j += 1;
+        }
+        if self.i > 0 && is_ident_char(self.c[self.i - 1]) {
+            return None;
+        }
+        j += 1;
+        let mut hashes = 0usize;
+        while self.c.get(j) == Some(&'#') {
+            hashes += 1;
+            j += 1;
+        }
+        if self.c.get(j) == Some(&'"') {
+            Some((hashes, j))
+        } else {
+            None
+        }
+    }
+
+    /// Raw string body: no escapes, closed by `"` + the opener's hashes.
+    fn raw_string(&mut self, hashes: usize, quote: usize) {
+        let start_line = self.lines.len() + 1;
+        while self.i <= quote {
+            self.code.push(self.c[self.i]);
+            self.i += 1;
+        }
+        let mut text = String::new();
+        while self.i < self.c.len() {
+            if self.c[self.i] == '"' && (1..=hashes).all(|k| self.peek(k) == Some('#')) {
+                self.code.push('"');
+                self.i += 1;
+                for _ in 0..hashes {
+                    self.code.push('#');
+                    self.i += 1;
+                }
+                break;
+            }
+            if self.c[self.i] == '\n' {
+                text.push('\n');
+                self.flush_line();
+            } else {
+                text.push(self.c[self.i]);
+                self.code.push(' ');
+            }
+            self.i += 1;
+        }
+        self.strings.push(StrLit {
+            line: start_line,
+            text,
+        });
+    }
+
+    /// `'` starts either a char literal or a lifetime. `'\..'` and `'x'`
+    /// are chars (contents blanked); everything else (`'a`, `'static`,
+    /// `'_`) is a lifetime and only the quote reaches the code channel.
+    fn char_or_lifetime(&mut self) {
+        if self.peek(1) == Some('\\') {
+            self.code.push('\'');
+            self.i += 1;
+            while self.i < self.c.len() && self.c[self.i] != '\'' {
+                if self.c[self.i] == '\\' {
+                    self.code.push(' ');
+                    self.i += 1;
+                    if self.i < self.c.len() {
+                        self.code.push(' ');
+                        self.i += 1;
+                    }
+                } else {
+                    self.code.push(' ');
+                    self.i += 1;
+                }
+            }
+            if self.i < self.c.len() {
+                self.code.push('\'');
+                self.i += 1;
+            }
+        } else if self.peek(2) == Some('\'') && self.peek(1) != Some('\'') {
+            self.code.push('\'');
+            self.code.push(' ');
+            self.code.push('\'');
+            self.i += 3;
+        } else {
+            self.code.push('\'');
+            self.i += 1;
+        }
+    }
+}
+
+/// Mark every line inside a `#[cfg(test)] mod` region (brace-counted on
+/// the comment-stripped, literal-blanked code channel).
+fn mark_test_regions(lines: &mut [LineInfo]) {
+    let mut i = 0;
+    while i < lines.len() {
+        if !lines[i].code.contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        // Find the `mod` item the attribute attaches to (tolerating
+        // further attributes or blank lines in between).
+        let stop = lines.len().min(i + 8);
+        let Some(mstart) = (i..stop).find(|&j| has_token(&lines[j].code, "mod")) else {
+            i += 1;
+            continue;
+        };
+        let mut depth = 0i64;
+        let mut opened = false;
+        let mut end = lines.len();
+        for (j, li) in lines.iter().enumerate().skip(mstart) {
+            for ch in li.code.chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if opened && depth <= 0 {
+                end = j + 1;
+                break;
+            }
+        }
+        for li in &mut lines[i..end] {
+            li.in_test = true;
+        }
+        i = end;
+    }
+}
+
+/// Whitespace-free concatenation of every code channel, with the
+/// 1-based source line recorded per byte — for patterns rustfmt may
+/// split across lines (like a `.lock()` chain).
+pub fn flat_code(fm: &FileModel) -> (String, Vec<usize>) {
+    let mut text = String::new();
+    let mut line_of = Vec::new();
+    for (idx, li) in fm.lines.iter().enumerate() {
+        for ch in li.code.chars() {
+            if !ch.is_whitespace() {
+                text.push(ch);
+                for _ in 0..ch.len_utf8() {
+                    line_of.push(idx + 1);
+                }
+            }
+        }
+    }
+    (text, line_of)
+}
+
+/// True when `tok` occurs in `s` with non-identifier characters (or the
+/// string boundary) on both sides.
+pub fn has_token(s: &str, tok: &str) -> bool {
+    find_token(s, tok).is_some()
+}
+
+/// Byte offset of the first standalone occurrence of `tok` in `s`.
+pub fn find_token(s: &str, tok: &str) -> Option<usize> {
+    let sb = s.as_bytes();
+    let tb = tok.as_bytes();
+    if tb.is_empty() || sb.len() < tb.len() {
+        return None;
+    }
+    let mut i = 0usize;
+    while i + tb.len() <= sb.len() {
+        if &sb[i..i + tb.len()] == tb
+            && (i == 0 || !is_ident_byte(sb[i - 1]))
+            && (i + tb.len() == sb.len() || !is_ident_byte(sb[i + tb.len()]))
+        {
+            return Some(i);
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Identifier-continuation byte (`A-Za-z0-9_`).
+pub fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn is_ident_char(ch: char) -> bool {
+    ch.is_ascii_alphanumeric() || ch == '_'
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_lines(src: &str) -> Vec<String> {
+        lex("src/x.rs", src).lines.iter().map(|l| l.code.clone()).collect()
+    }
+
+    #[test]
+    fn line_comments_stripped_but_kept() {
+        let fm = lex("src/x.rs", "let a = 1; // SAFETY: fine\nlet b = 2;\n");
+        assert_eq!(fm.lines[0].code, "let a = 1; ");
+        assert!(fm.lines[0].comment.contains("SAFETY: fine"));
+        assert_eq!(fm.lines[1].code, "let b = 2;");
+    }
+
+    #[test]
+    fn nested_block_comments_span_lines() {
+        let fm = lex("src/x.rs", "a /* one /* two */ still */ b\nc /* open\nclose */ d\n");
+        assert_eq!(fm.lines[0].code, "a  b");
+        assert!(fm.lines[0].comment.contains("two"));
+        assert_eq!(fm.lines[1].code, "c ");
+        assert_eq!(fm.lines[2].code, " d");
+        assert!(fm.lines[1].comment.contains("open"));
+    }
+
+    #[test]
+    fn string_contents_blanked_and_collected() {
+        let fm = lex("src/x.rs", "m.inc(\"decode_steps\"); let x = \"unsafe // not\";\n");
+        assert_eq!(fm.strings.len(), 2);
+        assert_eq!(fm.strings[0].text, "decode_steps");
+        assert_eq!(fm.strings[1].text, "unsafe // not");
+        assert!(!fm.lines[0].code.contains("unsafe"));
+        assert!(!fm.lines[0].code.contains("decode_steps"));
+        assert!(fm.lines[0].code.contains("m.inc(\""));
+    }
+
+    #[test]
+    fn escapes_do_not_end_strings() {
+        let fm = lex("src/x.rs", "let s = \"a\\\"b\"; let t = 1;\n");
+        assert_eq!(fm.strings[0].text, "a\\\"b");
+        assert!(fm.lines[0].code.ends_with("let t = 1;"));
+    }
+
+    #[test]
+    fn raw_strings_close_on_matching_hashes() {
+        let fm = lex("src/x.rs", "let s = r#\"quote \" inside\"#; let u = 9;\n");
+        assert_eq!(fm.strings[0].text, "quote \" inside");
+        assert!(fm.lines[0].code.ends_with("let u = 9;"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let lines = code_lines("fn f<'a>(x: &'a str) -> char { 'y' }\n");
+        assert_eq!(lines[0], "fn f<'a>(x: &'a str) -> char { ' ' }");
+    }
+
+    #[test]
+    fn escaped_char_literals_blank_cleanly() {
+        let lines = code_lines("let q = '\\''; let n = '\\n'; let z = 3;\n");
+        assert_eq!(lines[0], "let q = '  '; let n = '  '; let z = 3;");
+    }
+
+    #[test]
+    fn cfg_test_regions_marked() {
+        let src = "fn a() {}\n\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\n\nfn c() {}\n";
+        let fm = lex("src/x.rs", src);
+        let flags: Vec<bool> = fm.lines.iter().map(|l| l.in_test).collect();
+        assert!(!flags[0]);
+        assert!(flags[2] && flags[3] && flags[4] && flags[5]);
+        assert!(!flags[7]);
+    }
+
+    #[test]
+    fn flat_code_maps_bytes_to_lines() {
+        let fm = lex("src/x.rs", "a.lock()\n    .unwrap();\n");
+        let (flat, line_of) = flat_code(&fm);
+        let p = flat.find(".unwrap()").unwrap();
+        assert_eq!(line_of[p], 2);
+        assert!(flat.contains(".lock().unwrap()"));
+    }
+
+    #[test]
+    fn token_boundaries_respected() {
+        assert!(has_token("x.partial_cmp(y)", "partial_cmp"));
+        assert!(!has_token("x.partial_cmp_else(y)", "partial_cmp"));
+        assert!(!has_token("my_partial_cmp(y)", "partial_cmp"));
+        assert!(has_token("eprintln!(\"x\")", "eprintln!"));
+        assert!(!has_token("eprintln!(\"x\")", "println!"));
+    }
+}

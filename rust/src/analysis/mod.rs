@@ -1,0 +1,197 @@
+//! `bof4 lint` — house-invariant static analysis.
+//!
+//! The paper's reproducibility story rests on invariants no type system
+//! checks for us: kernels bit-exact across `BOF4_THREADS x BOF4_SIMD x
+//! BOF4_KV` (no FMA, no ambient clocks), a serving engine that recovers
+//! poisoned locks instead of cascading panics, total float orderings,
+//! documented `unsafe`, and exporters that never silently drop a metric
+//! series. PRs 4-9 re-fixed violations of these by hand; this module
+//! enforces them by machine.
+//!
+//! The pipeline: [`walker`] discovers `.rs` files under `src/`,
+//! `benches/` and `tests/`; [`lexer`] splits each file into code and
+//! comment channels (string/char literal contents blanked, literals
+//! collected separately); [`rules`] runs the single-file rules and
+//! [`schema`] the cross-file metrics-schema rule; [`report`] renders
+//! `file:line` diagnostics or the `--json` machine report.
+//!
+//! Suppress a single site by putting `// lint: allow(<rule-name>)` on
+//! the offending line or the line directly above it. Suppressions are
+//! deliberate and visible in review — prefer fixing the code.
+//!
+//! Run it as `bof4 lint` (nonzero exit on any violation), `bof4 lint
+//! --json` for the machine report, `bof4 lint --rules` for the rule
+//! table. No dependencies, std only, like everything else in the crate.
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+pub mod schema;
+pub mod walker;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::Context as _;
+use crate::Result;
+use lexer::FileModel;
+
+pub use report::{Finding, LintReport};
+
+/// A loaded set of source files ready to lint.
+#[derive(Default)]
+pub struct Analysis {
+    files: Vec<FileModel>,
+}
+
+impl Analysis {
+    /// Empty analysis; add files with [`Analysis::add_source`].
+    pub fn new() -> Analysis {
+        Analysis { files: Vec::new() }
+    }
+
+    /// Add one in-memory source file under a crate-relative path label
+    /// (e.g. `src/runtime/kernels/fake.rs`). Rule scoping keys off the
+    /// label, which is what makes fixture corpora testable without
+    /// touching the filesystem.
+    pub fn add_source(&mut self, path: &str, src: &str) {
+        self.files.push(lexer::lex(path, src));
+    }
+
+    /// Lex every `.rs` file under `root`'s `src/`, `benches/` and
+    /// `tests/` directories.
+    pub fn load_tree(root: &Path) -> Result<Analysis> {
+        let mut a = Analysis::new();
+        for p in walker::source_files(root)? {
+            let rel = rel_label(root, &p);
+            let src = std::fs::read_to_string(&p)
+                .with_context(|| format!("lint: reading {}", p.display()))?;
+            a.add_source(&rel, &src);
+        }
+        Ok(a)
+    }
+
+    /// Run every rule. Findings come back sorted by path/line/rule and
+    /// with `lint: allow(..)` pragmas already applied.
+    pub fn run(&self) -> LintReport {
+        let rules = rules::registry();
+        let mut findings = Vec::new();
+        for fm in &self.files {
+            for r in &rules {
+                findings.extend((r.check)(fm));
+            }
+        }
+        findings.extend(schema::check(&self.files));
+        let by_path: BTreeMap<&str, &FileModel> =
+            self.files.iter().map(|f| (f.path.as_str(), f)).collect();
+        findings.retain(|f| !suppressed(&by_path, f));
+        findings.sort_by(|a, b| {
+            (a.path.as_str(), a.line, a.rule).cmp(&(b.path.as_str(), b.line, b.rule))
+        });
+        LintReport {
+            findings,
+            files_scanned: self.files.len(),
+            // single-file rules + the cross-file metrics-schema rule
+            rules_checked: rules.len() + 1,
+        }
+    }
+}
+
+/// (name, summary) for every rule — docs and `bof4 lint --rules`.
+pub fn rule_table() -> Vec<(&'static str, &'static str)> {
+    let mut table: Vec<(&'static str, &'static str)> = rules::registry()
+        .iter()
+        .map(|r| (r.name, r.summary))
+        .collect();
+    table.push((schema::NAME, schema::SUMMARY));
+    table
+}
+
+/// Locate the crate root: `./rust` from the repo root, `.` when already
+/// inside the crate.
+pub fn find_root() -> Result<PathBuf> {
+    for cand in ["rust", "."] {
+        let p = Path::new(cand);
+        if p.join("src").join("lib.rs").is_file() {
+            return Ok(p.to_path_buf());
+        }
+    }
+    Err(crate::err!(
+        "lint: could not find the crate root (expected ./src/lib.rs or ./rust/src/lib.rs; \
+         run from the repo root or pass --root)"
+    ))
+}
+
+/// A finding is suppressed when the offending line, or the line just
+/// above it, carries a `lint: allow(<rule>)` comment.
+fn suppressed(by_path: &BTreeMap<&str, &FileModel>, f: &Finding) -> bool {
+    let Some(fm) = by_path.get(f.path.as_str()) else {
+        return false;
+    };
+    let needle = format!("lint: allow({})", f.rule);
+    let lo = f.line.saturating_sub(2);
+    fm.lines
+        .get(lo..f.line)
+        .unwrap_or(&[])
+        .iter()
+        .any(|li| li.comment.contains(&needle))
+}
+
+fn rel_label(root: &Path, p: &Path) -> String {
+    let rel = p.strip_prefix(root).unwrap_or(p);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pragma_suppresses_same_line_and_line_above() {
+        let mut a = Analysis::new();
+        a.add_source(
+            "src/a.rs",
+            "let g = m.lock().unwrap(); // lint: allow(lock-unwrap)\n",
+        );
+        assert!(a.run().is_clean());
+
+        let mut b = Analysis::new();
+        b.add_source(
+            "src/b.rs",
+            "// lint: allow(lock-unwrap): poisoning exercised on purpose\n\
+             let g = m.lock().unwrap();\n",
+        );
+        assert!(b.run().is_clean());
+
+        let mut c = Analysis::new();
+        c.add_source(
+            "src/c.rs",
+            "// lint: allow(float-cmp) — wrong rule name\nlet g = m.lock().unwrap();\n",
+        );
+        assert_eq!(c.run().findings.len(), 1);
+    }
+
+    #[test]
+    fn findings_sorted_and_counted() {
+        let mut a = Analysis::new();
+        a.add_source("src/z.rs", "let g = m.lock().unwrap();\n");
+        a.add_source("src/a.rs", "v.sort_by(|x, y| x.partial_cmp(y).unwrap());\n");
+        let r = a.run();
+        assert_eq!(r.findings.len(), 2);
+        assert_eq!(r.findings[0].path, "src/a.rs");
+        assert_eq!(r.findings[1].path, "src/z.rs");
+        assert_eq!(r.files_scanned, 2);
+        assert_eq!(r.rules_checked, 8);
+    }
+
+    #[test]
+    fn rule_table_lists_all_eight() {
+        let t = rule_table();
+        assert_eq!(t.len(), 8);
+        assert!(t.iter().any(|(n, _)| *n == "metrics-schema"));
+        assert!(t.iter().any(|(n, _)| *n == "safety-comment"));
+    }
+}

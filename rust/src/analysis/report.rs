@@ -1,0 +1,138 @@
+//! Diagnostics and report rendering for `bof4 lint`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+
+/// One rule violation, anchored to a `file:line` site.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Rule name (kebab-case, matches the `lint: allow(..)` pragma).
+    pub rule: &'static str,
+    /// Crate-relative forward-slash path, e.g. `src/lib.rs`.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Human-readable explanation of the violation.
+    pub message: String,
+}
+
+impl Finding {
+    /// `file:line: [rule] message` — the `file:line` prefix is what
+    /// editors and CI annotations latch onto.
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+/// The result of one lint run over a file set.
+#[derive(Debug)]
+pub struct LintReport {
+    /// All surviving findings, sorted by path, line, rule.
+    pub findings: Vec<Finding>,
+    /// Number of files lexed and checked.
+    pub files_scanned: usize,
+    /// Number of rules run (single-file rules + the cross-file one).
+    pub rules_checked: usize,
+}
+
+impl LintReport {
+    /// True when no rule fired.
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Human report: one `file:line: [rule] message` per finding plus a
+    /// one-line summary.
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&f.render());
+            out.push('\n');
+        }
+        let _ = writeln!(
+            out,
+            "lint: {} file(s), {} rule(s), {} violation(s)",
+            self.files_scanned,
+            self.rules_checked,
+            self.findings.len()
+        );
+        out
+    }
+
+    /// Machine report: `{files_scanned, rules_checked, violations,
+    /// findings: [{file, line, rule, message}]}`.
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert(
+            "files_scanned".to_string(),
+            Json::Num(self.files_scanned as f64),
+        );
+        obj.insert(
+            "rules_checked".to_string(),
+            Json::Num(self.rules_checked as f64),
+        );
+        obj.insert(
+            "violations".to_string(),
+            Json::Num(self.findings.len() as f64),
+        );
+        let findings = self
+            .findings
+            .iter()
+            .map(|f| {
+                let mut m = BTreeMap::new();
+                m.insert("file".to_string(), Json::Str(f.path.clone()));
+                m.insert("line".to_string(), Json::Num(f.line as f64));
+                m.insert("rule".to_string(), Json::Str(f.rule.to_string()));
+                m.insert("message".to_string(), Json::Str(f.message.clone()));
+                Json::Obj(m)
+            })
+            .collect();
+        obj.insert("findings".to_string(), Json::Arr(findings));
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> LintReport {
+        LintReport {
+            findings: vec![Finding {
+                rule: "float-cmp",
+                path: "src/x.rs".to_string(),
+                line: 7,
+                message: "use total_cmp".to_string(),
+            }],
+            files_scanned: 3,
+            rules_checked: 8,
+        }
+    }
+
+    #[test]
+    fn human_rendering_has_file_line_prefix() {
+        let r = report();
+        let text = r.render_human();
+        assert!(text.starts_with("src/x.rs:7: [float-cmp] use total_cmp\n"));
+        assert!(text.contains("3 file(s), 8 rule(s), 1 violation(s)"));
+        assert!(!r.is_clean());
+    }
+
+    #[test]
+    fn json_roundtrips_through_the_parser() {
+        let text = report().to_json().to_string();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.path("violations").and_then(Json::as_usize), Some(1));
+        assert_eq!(
+            j.path("findings.0.file").and_then(Json::as_str),
+            Some("src/x.rs")
+        );
+        assert_eq!(j.path("findings.0.line").and_then(Json::as_usize), Some(7));
+        assert_eq!(
+            j.path("findings.0.rule").and_then(Json::as_str),
+            Some("float-cmp")
+        );
+    }
+}

@@ -1,0 +1,393 @@
+//! The single-file house rules (the cross-file metrics-schema rule
+//! lives in [`super::schema`]).
+//!
+//! Every rule here is a pure function over one lexed [`FileModel`] and
+//! exists because some PR in this repo's history shipped (or nearly
+//! shipped) the violation it bans. The common theme is determinism:
+//! bit-exact kernels across `BOF4_THREADS x BOF4_SIMD x BOF4_KV`, and
+//! a serving engine that degrades instead of panicking.
+
+use super::lexer::{self, FileModel};
+use super::report::Finding;
+
+/// One registered rule: a stable kebab-case name (used by the
+/// `lint: allow(<name>)` pragma), a summary for docs, and the check.
+pub struct Rule {
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub check: fn(&FileModel) -> Vec<Finding>,
+}
+
+/// All single-file rules, in diagnostic order.
+pub fn registry() -> Vec<Rule> {
+    vec![
+        Rule {
+            name: "lock-unwrap",
+            summary: "no `.lock().unwrap()` — a poisoned mutex must recover via \
+                      util::sync::lock_recover, not cascade panics",
+            check: lock_unwrap,
+        },
+        Rule {
+            name: "float-cmp",
+            summary: "no `partial_cmp` on floats in src/ — orderings must be total \
+                      (`total_cmp`) so NaN can never panic a sort or pick",
+            check: float_cmp,
+        },
+        Rule {
+            name: "safety-comment",
+            summary: "every `unsafe` block/impl/fn carries a `// SAFETY:` comment or a \
+                      `# Safety` doc section justifying it",
+            check: safety_comment,
+        },
+        Rule {
+            name: "fma-in-kernels",
+            summary: "no `mul_add`/FMA tokens in runtime/kernels/ — fused rounding breaks \
+                      the bit-exactness contract with the scalar path",
+            check: fma_in_kernels,
+        },
+        Rule {
+            name: "stdout-in-lib",
+            summary: "no println!/eprintln!/dbg!/process::exit in library code — route \
+                      diagnostics through util::log",
+            check: stdout_in_lib,
+        },
+        Rule {
+            name: "timing-in-kernels",
+            summary: "no Instant/SystemTime inside runtime/kernels/ inner files — only \
+                      pool.rs owns the profile clock",
+            check: timing_in_kernels,
+        },
+        Rule {
+            name: "gate-ordering",
+            summary: "atomic fast-path gates (SCREAMING_CASE statics) load with \
+                      Ordering::Relaxed, never SeqCst",
+            check: gate_ordering,
+        },
+    ]
+}
+
+fn finding(rule: &'static str, fm: &FileModel, line: usize, message: String) -> Finding {
+    Finding {
+        rule,
+        path: fm.path.clone(),
+        line,
+        message,
+    }
+}
+
+/// Rule 1: `.lock().unwrap()` turns one panicked holder into a
+/// process-wide panic cascade. Matched on the whitespace-free code
+/// stream so a rustfmt-split chain cannot hide it.
+fn lock_unwrap(fm: &FileModel) -> Vec<Finding> {
+    let (flat, line_of) = lexer::flat_code(fm);
+    let pat = ".lock().unwrap()";
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(off) = flat[from..].find(pat) {
+        let p = from + off;
+        from = p + pat.len();
+        out.push(finding(
+            "lock-unwrap",
+            fm,
+            line_of[p],
+            "`.lock().unwrap()` panics forever once any holder panicked; use \
+             `util::sync::lock_recover` (PoisonError::into_inner) instead"
+                .to_string(),
+        ));
+    }
+    out
+}
+
+/// Rule 2: `partial_cmp(..).unwrap()` (and friends) panic on NaN and
+/// order `-0.0`/`+0.0` arbitrarily; `total_cmp` is the house ordering.
+fn float_cmp(fm: &FileModel) -> Vec<Finding> {
+    if !fm.path.starts_with("src/") {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (idx, li) in fm.lines.iter().enumerate() {
+        if lexer::has_token(&li.code, "partial_cmp") {
+            out.push(finding(
+                "float-cmp",
+                fm,
+                idx + 1,
+                "float comparison via `partial_cmp` can panic or misorder on NaN; \
+                 use `total_cmp` (IEEE total order) instead"
+                    .to_string(),
+            ));
+        }
+    }
+    out
+}
+
+/// Rule 3: every `unsafe` site needs a written justification — either a
+/// `// SAFETY:` comment within the 5 preceding lines (one comment may
+/// cover a short run of unsafe lines below it), or a `# Safety` doc
+/// section in the contiguous doc/attribute block above the item.
+fn safety_comment(fm: &FileModel) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (idx, li) in fm.lines.iter().enumerate() {
+        if !lexer::has_token(&li.code, "unsafe") {
+            continue;
+        }
+        if has_safety_note(fm, idx) {
+            continue;
+        }
+        out.push(finding(
+            "safety-comment",
+            fm,
+            idx + 1,
+            "`unsafe` without a `// SAFETY:` comment (or `# Safety` doc section) \
+             justifying why the contract holds"
+                .to_string(),
+        ));
+    }
+    out
+}
+
+fn has_safety_note(fm: &FileModel, idx: usize) -> bool {
+    let lo = idx.saturating_sub(5);
+    if fm.lines[lo..=idx].iter().any(|li| is_safety(&li.comment)) {
+        return true;
+    }
+    // Long doc blocks: walk up through contiguous comment/attribute/blank
+    // lines looking for a `# Safety` section further away.
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let li = &fm.lines[j];
+        let code = li.code.trim();
+        let annotation = code.is_empty() || code.starts_with("#[") || code.starts_with("#![");
+        if !annotation {
+            return false;
+        }
+        if is_safety(&li.comment) {
+            return true;
+        }
+    }
+    false
+}
+
+fn is_safety(comment: &str) -> bool {
+    comment.contains("SAFETY") || comment.contains("# Safety")
+}
+
+/// Rule 4: fused multiply-add rounds once where the scalar reference
+/// path rounds twice — any FMA token inside the kernels breaks the
+/// cross-backend bit-exactness pin.
+fn fma_in_kernels(fm: &FileModel) -> Vec<Finding> {
+    if !fm.path.starts_with("src/runtime/kernels/") {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (idx, li) in fm.lines.iter().enumerate() {
+        if lexer::has_token(&li.code, "mul_add") || li.code.contains("fmadd") {
+            out.push(finding(
+                "fma-in-kernels",
+                fm,
+                idx + 1,
+                "FMA token in a kernel file: fused rounding diverges from the \
+                 scalar reference path and breaks bit-exactness"
+                    .to_string(),
+            ));
+        }
+    }
+    out
+}
+
+/// Files allowed to write to stdout/stderr directly: the CLI binary,
+/// the argument parser (usage/errors before logging exists), and the
+/// logger itself (stderr is its sink).
+const STDOUT_EXEMPT: [&str; 3] = ["src/main.rs", "src/util/cli.rs", "src/util/log.rs"];
+
+/// Rule 5: library code must not print or exit; `#[cfg(test)]` regions
+/// are exempt (test diagnostics are fine).
+fn stdout_in_lib(fm: &FileModel) -> Vec<Finding> {
+    if !fm.path.starts_with("src/") || STDOUT_EXEMPT.contains(&fm.path.as_str()) {
+        return Vec::new();
+    }
+    let pats = [
+        "println!",
+        "eprintln!",
+        "print!",
+        "eprint!",
+        "dbg!",
+        "process::exit",
+    ];
+    let mut out = Vec::new();
+    for (idx, li) in fm.lines.iter().enumerate() {
+        if li.in_test {
+            continue;
+        }
+        if pats.iter().any(|p| lexer::has_token(&li.code, p)) {
+            out.push(finding(
+                "stdout-in-lib",
+                fm,
+                idx + 1,
+                "direct stdout/stderr/exit in library code; route diagnostics \
+                 through util::log so BOF4_LOG stays in control"
+                    .to_string(),
+            ));
+        }
+    }
+    out
+}
+
+/// Rule 6: kernel inner files must stay clock-free — timing belongs to
+/// the pool's profile points (pool.rs), where it is recorded once per
+/// dispatch instead of inside tile loops.
+fn timing_in_kernels(fm: &FileModel) -> Vec<Finding> {
+    if !fm.path.starts_with("src/runtime/kernels/") || fm.path.ends_with("/pool.rs") {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (idx, li) in fm.lines.iter().enumerate() {
+        if lexer::has_token(&li.code, "Instant") || lexer::has_token(&li.code, "SystemTime") {
+            out.push(finding(
+                "timing-in-kernels",
+                fm,
+                idx + 1,
+                "clock access in a kernel inner file; only pool.rs profile points \
+                 may read time (kernels stay deterministic and cheap)"
+                    .to_string(),
+            ));
+        }
+    }
+    out
+}
+
+/// Rule 7: the repo's off-path gates (`LEVEL`, `ARMED`, ...) are
+/// SCREAMING_CASE atomics read on hot paths; they must load Relaxed.
+fn gate_ordering(fm: &FileModel) -> Vec<Finding> {
+    if !fm.path.starts_with("src/") {
+        return Vec::new();
+    }
+    let (flat, line_of) = lexer::flat_code(fm);
+    let bytes = flat.as_bytes();
+    let call = ".load(";
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(off) = flat[from..].find(call) {
+        let p = from + off;
+        from = p + call.len();
+        let arg_start = p + call.len();
+        let Some(arg_len) = flat[arg_start..].find(')') else {
+            break;
+        };
+        if !flat[arg_start..arg_start + arg_len].ends_with("SeqCst") {
+            continue;
+        }
+        let mut j = p;
+        while j > 0 && lexer::is_ident_byte(bytes[j - 1]) {
+            j -= 1;
+        }
+        let recv = &flat[j..p];
+        if is_screaming(recv) {
+            out.push(finding(
+                "gate-ordering",
+                fm,
+                line_of[p],
+                format!(
+                    "fast-path gate `{recv}` loads with Ordering::SeqCst; house gates \
+                     load Relaxed (the disarmed path must stay fence-free)"
+                ),
+            ));
+        }
+    }
+    out
+}
+
+fn is_screaming(s: &str) -> bool {
+    s.len() >= 2
+        && s.bytes().any(|b| b.is_ascii_uppercase())
+        && s.bytes()
+            .all(|b| b.is_ascii_uppercase() || b.is_ascii_digit() || b == b'_')
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn run_rule(rule: fn(&FileModel) -> Vec<Finding>, path: &str, src: &str) -> Vec<Finding> {
+        rule(&lex(path, src))
+    }
+
+    #[test]
+    fn lock_unwrap_catches_split_chains() {
+        let hits = run_rule(lock_unwrap, "src/a.rs", "let g = m.lock()\n    .unwrap();\n");
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].line, 1);
+        let ok = run_rule(
+            lock_unwrap,
+            "src/a.rs",
+            "let g = m.lock().unwrap_or_else(PoisonError::into_inner);\n",
+        );
+        assert!(ok.is_empty());
+    }
+
+    #[test]
+    fn float_cmp_only_fires_in_src() {
+        let src = "v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n";
+        assert_eq!(run_rule(float_cmp, "src/a.rs", src).len(), 1);
+        assert!(run_rule(float_cmp, "benches/a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_accepts_nearby_and_doc_forms() {
+        let bad = "fn f(p: *mut u8) {\n    unsafe { p.write(0) };\n}\n";
+        assert_eq!(run_rule(safety_comment, "src/a.rs", bad).len(), 1);
+        let near = "// SAFETY: p is valid for writes.\nlet x = unsafe { p.write(0) };\n";
+        assert!(run_rule(safety_comment, "src/a.rs", near).is_empty());
+        let doc = "/// Does things.\n///\n/// # Safety\n/// Caller checks p.\n\
+                   #[inline]\npub unsafe fn f(p: *mut u8) {}\n";
+        assert!(run_rule(safety_comment, "src/a.rs", doc).is_empty());
+    }
+
+    #[test]
+    fn one_safety_comment_covers_a_short_run() {
+        let src = "// SAFETY: disjoint tiles per task.\n\
+                   let a = unsafe { s.slice_mut(0, 4) };\n\
+                   let b = unsafe { t.slice_mut(0, 4) };\n";
+        assert!(run_rule(safety_comment, "src/a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn fma_scoped_to_kernel_files() {
+        let src = "let y = x.mul_add(a, b);\n";
+        assert_eq!(run_rule(fma_in_kernels, "src/runtime/kernels/k.rs", src).len(), 1);
+        assert!(run_rule(fma_in_kernels, "src/stats/m.rs", src).is_empty());
+        let intrinsic = "let y = _mm256_fmadd_ps(a, b, c);\n";
+        let hits = run_rule(fma_in_kernels, "src/runtime/kernels/k.rs", intrinsic);
+        assert_eq!(hits.len(), 1);
+    }
+
+    #[test]
+    fn stdout_rule_exempts_tests_and_cli() {
+        let src = "fn f() {\n    println!(\"x\");\n}\n";
+        assert_eq!(run_rule(stdout_in_lib, "src/quant/mod.rs", src).len(), 1);
+        assert!(run_rule(stdout_in_lib, "src/main.rs", src).is_empty());
+        let t = "#[cfg(test)]\nmod t {\n    fn f() {\n        println!(\"x\");\n    }\n}\n";
+        assert!(run_rule(stdout_in_lib, "src/quant/mod.rs", t).is_empty());
+    }
+
+    #[test]
+    fn timing_rule_exempts_pool() {
+        let src = "let t0 = Instant::now();\n";
+        assert_eq!(run_rule(timing_in_kernels, "src/runtime/kernels/kv.rs", src).len(), 1);
+        assert!(run_rule(timing_in_kernels, "src/runtime/kernels/pool.rs", src).is_empty());
+        assert!(run_rule(timing_in_kernels, "src/obs/tracer.rs", src).is_empty());
+    }
+
+    #[test]
+    fn gate_ordering_flags_screaming_receivers_only() {
+        let bad = "if ARMED.load(Ordering::SeqCst) == 0 {}\n";
+        let hits = run_rule(gate_ordering, "src/a.rs", bad);
+        assert_eq!(hits.len(), 1);
+        assert!(hits[0].message.contains("ARMED"));
+        let relaxed = "if ARMED.load(Ordering::Relaxed) == 0 {}\n";
+        assert!(run_rule(gate_ordering, "src/a.rs", relaxed).is_empty());
+        let lower = "let d = self.depth.load(Ordering::SeqCst);\n";
+        assert!(run_rule(gate_ordering, "src/a.rs", lower).is_empty());
+    }
+}

@@ -1,0 +1,294 @@
+//! Rule 8 — cross-file metrics-schema completeness.
+//!
+//! Every counter/series name registered against `EngineMetrics` in
+//! `coordinator/metrics.rs` or `coordinator/service.rs` must appear in
+//! the exporter schema (`obs/export.rs`): the `KNOWN_COUNTERS` /
+//! `KNOWN_SERIES` zero-fill arrays and the `documented_metrics()`
+//! exposition list. And vice versa: a known name with no registration
+//! site is a stale schema entry. This is the rule that stops an
+//! exporter from ever silently dropping a series again (the PR 8
+//! exporters had to be reconciled by hand).
+
+use std::collections::BTreeMap;
+
+use super::lexer::{self, FileModel};
+use super::report::Finding;
+
+/// Rule name (used by the `lint: allow(..)` pragma).
+pub const NAME: &str = "metrics-schema";
+
+/// One-line summary for docs and `lint --rules`.
+pub const SUMMARY: &str = "counter/series names registered in coordinator/{metrics,service}.rs \
+                           must match obs/export.rs KNOWN_COUNTERS/KNOWN_SERIES/documented_metrics";
+
+/// Registration call markers: `.inc(`/`.add(` register counters,
+/// `.observe(`/`.observe_value(` register value series.
+const COUNTER_CALLS: [&str; 2] = [".inc(", ".add("];
+const SERIES_CALLS: [&str; 2] = [".observe(", ".observe_value("];
+
+/// Name -> first registration site (path, 1-based line).
+type Sites = BTreeMap<String, (String, usize)>;
+
+/// Run the cross-file check. Inert when the exporter or both
+/// registration files are absent from the file set (partial fixtures).
+pub fn check(files: &[FileModel]) -> Vec<Finding> {
+    let Some(export) = files.iter().find(|f| f.path.ends_with("obs/export.rs")) else {
+        return Vec::new();
+    };
+    let reg_files: Vec<&FileModel> = files
+        .iter()
+        .filter(|f| {
+            f.path.ends_with("coordinator/metrics.rs")
+                || f.path.ends_with("coordinator/service.rs")
+        })
+        .collect();
+    if reg_files.is_empty() {
+        return Vec::new();
+    }
+
+    let counters = registrations(&reg_files, &COUNTER_CALLS);
+    let series = registrations(&reg_files, &SERIES_CALLS);
+    let (known_counters, kc_line) = array_literal(export, "KNOWN_COUNTERS");
+    let (known_series, ks_line) = array_literal(export, "KNOWN_SERIES");
+    let documented = fn_literals(export, "documented_metrics");
+
+    let mut out = Vec::new();
+    for (name, (path, line)) in &counters {
+        if !known_counters.contains(name) {
+            out.push(site_finding(
+                path,
+                *line,
+                format!(
+                    "counter `{name}` is registered here but missing from KNOWN_COUNTERS \
+                     in obs/export.rs — the exporter would not zero-fill it"
+                ),
+            ));
+        }
+        if !documented.contains(&format!("bof4_{name}_total")) {
+            out.push(site_finding(
+                path,
+                *line,
+                format!(
+                    "counter `{name}` has no `bof4_{name}_total` entry in obs/export.rs \
+                     documented_metrics()"
+                ),
+            ));
+        }
+    }
+    for (name, (path, line)) in &series {
+        if !known_series.contains(name) {
+            out.push(site_finding(
+                path,
+                *line,
+                format!(
+                    "series `{name}` is registered here but missing from KNOWN_SERIES \
+                     in obs/export.rs — the exporter would not zero-fill it"
+                ),
+            ));
+        }
+        let ms = format!("bof4_{name}_ms");
+        let ratio = format!("bof4_{name}_ratio");
+        if !documented.contains(&ms) && !documented.contains(&ratio) {
+            out.push(site_finding(
+                path,
+                *line,
+                format!(
+                    "series `{name}` has neither `{ms}` nor `{ratio}` in obs/export.rs \
+                     documented_metrics()"
+                ),
+            ));
+        }
+    }
+    for name in &known_counters {
+        if !counters.contains_key(name) {
+            out.push(site_finding(
+                &export.path,
+                kc_line,
+                format!(
+                    "KNOWN_COUNTERS entry `{name}` has no registration site in \
+                     coordinator/metrics.rs or coordinator/service.rs (stale schema entry)"
+                ),
+            ));
+        }
+    }
+    for name in &known_series {
+        if !series.contains_key(name) {
+            out.push(site_finding(
+                &export.path,
+                ks_line,
+                format!(
+                    "KNOWN_SERIES entry `{name}` has no registration site in \
+                     coordinator/metrics.rs or coordinator/service.rs (stale schema entry)"
+                ),
+            ));
+        }
+    }
+    out
+}
+
+fn site_finding(path: &str, line: usize, message: String) -> Finding {
+    Finding {
+        rule: NAME,
+        path: path.to_string(),
+        line,
+        message,
+    }
+}
+
+/// Scan non-test code for registration calls and take the string
+/// literal naming the metric — on the call line, or on the next line
+/// when rustfmt wrapped the argument list.
+fn registrations(files: &[&FileModel], calls: &[&str]) -> Sites {
+    let mut out = Sites::new();
+    for fm in files {
+        for (idx, li) in fm.lines.iter().enumerate() {
+            if li.in_test || !calls.iter().any(|c| li.code.contains(c)) {
+                continue;
+            }
+            let mut name = first_string_on(fm, idx + 1);
+            if name.is_none() && li.code.trim_end().ends_with('(') {
+                name = first_string_on(fm, idx + 2);
+            }
+            let Some(name) = name else {
+                continue;
+            };
+            out.entry(name).or_insert_with(|| (fm.path.clone(), idx + 1));
+        }
+    }
+    out
+}
+
+fn first_string_on(fm: &FileModel, line: usize) -> Option<String> {
+    fm.strings
+        .iter()
+        .find(|s| s.line == line)
+        .map(|s| s.text.clone())
+}
+
+/// String entries of a `const NAME: [..] = [ ... ];` array literal,
+/// plus the declaration line (for anchoring stale-entry findings).
+fn array_literal(fm: &FileModel, name: &str) -> (Vec<String>, usize) {
+    for (idx, li) in fm.lines.iter().enumerate() {
+        if !lexer::has_token(&li.code, "const") || !lexer::has_token(&li.code, name) {
+            continue;
+        }
+        let mut end = idx;
+        while end < fm.lines.len() && !fm.lines[end].code.contains("];") {
+            end += 1;
+        }
+        let entries = fm
+            .strings
+            .iter()
+            .filter(|s| s.line >= idx + 1 && s.line <= end + 1)
+            .map(|s| s.text.clone())
+            .collect();
+        return (entries, idx + 1);
+    }
+    (Vec::new(), 1)
+}
+
+/// Every string literal inside the body of `fn <name>`, located by
+/// brace counting from the declaration line.
+fn fn_literals(fm: &FileModel, name: &str) -> Vec<String> {
+    for (idx, li) in fm.lines.iter().enumerate() {
+        if !lexer::has_token(&li.code, "fn") || !lexer::has_token(&li.code, name) {
+            continue;
+        }
+        let mut depth = 0i64;
+        let mut opened = false;
+        let mut end = fm.lines.len();
+        for (j, lj) in fm.lines.iter().enumerate().skip(idx) {
+            for ch in lj.code.chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if opened && depth <= 0 {
+                end = j + 1;
+                break;
+            }
+        }
+        return fm
+            .strings
+            .iter()
+            .filter(|s| s.line >= idx + 1 && s.line <= end)
+            .map(|s| s.text.clone())
+            .collect();
+    }
+    Vec::new()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn export_src(counters: &[&str], documented: &[&str]) -> String {
+        let mut s = String::from("const KNOWN_COUNTERS: [&str; N] = [\n");
+        for c in counters {
+            s.push_str(&format!("    \"{c}\",\n"));
+        }
+        s.push_str("];\n\nconst KNOWN_SERIES: [&str; 0] = [];\n\n");
+        s.push_str("pub fn documented_metrics() -> &'static [&'static str] {\n    &[\n");
+        for d in documented {
+            s.push_str(&format!("        \"{d}\",\n"));
+        }
+        s.push_str("    ]\n}\n");
+        s
+    }
+
+    fn models(metrics_src: &str, export_src: &str) -> Vec<FileModel> {
+        vec![
+            lex("src/coordinator/metrics.rs", metrics_src),
+            lex("src/obs/export.rs", export_src),
+        ]
+    }
+
+    #[test]
+    fn consistent_schema_is_clean() {
+        let metrics = "fn f(m: &M) {\n    m.inc(\"batches\");\n}\n";
+        let export = export_src(&["batches"], &["bof4_batches_total"]);
+        assert!(check(&models(metrics, &export)).is_empty());
+    }
+
+    #[test]
+    fn unknown_counter_flagged_at_registration_site() {
+        let metrics = "fn f(m: &M) {\n    m.inc(\"brand_new\");\n}\n";
+        let export = export_src(&[], &[]);
+        let hits = check(&models(metrics, &export));
+        assert_eq!(hits.len(), 2); // missing from KNOWN_COUNTERS + undocumented
+        assert_eq!(hits[0].path, "src/coordinator/metrics.rs");
+        assert_eq!(hits[0].line, 2);
+    }
+
+    #[test]
+    fn stale_known_entry_flagged_at_export_decl() {
+        let metrics = "fn f(_m: &M) {}\n";
+        let export = export_src(&["ghost"], &["bof4_ghost_total"]);
+        let hits = check(&models(metrics, &export));
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].path, "src/obs/export.rs");
+        assert!(hits[0].message.contains("ghost"));
+    }
+
+    #[test]
+    fn test_code_does_not_register_names() {
+        let metrics = "fn f(m: &M) {\n    m.inc(\"batches\");\n}\n\
+                       #[cfg(test)]\nmod tests {\n    fn t(m: &M) {\n        \
+                       m.inc(\"test_only\");\n    }\n}\n";
+        let export = export_src(&["batches"], &["bof4_batches_total"]);
+        assert!(check(&models(metrics, &export)).is_empty());
+    }
+
+    #[test]
+    fn inert_without_the_exporter() {
+        let metrics = "fn f(m: &M) {\n    m.inc(\"whatever\");\n}\n";
+        let files = vec![lex("src/coordinator/metrics.rs", metrics)];
+        assert!(check(&files).is_empty());
+    }
+}

@@ -1,0 +1,57 @@
+//! Source-tree discovery for `bof4 lint`.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::Context as _;
+use crate::Result;
+
+/// The crate-relative directories the linter covers.
+pub const ROOTS: [&str; 3] = ["src", "benches", "tests"];
+
+/// Collect every `.rs` file under `root`'s `src/`, `benches/` and
+/// `tests/` directories (recursively), sorted for deterministic
+/// diagnostics. Missing directories are skipped, so the walker also
+/// works on partial checkouts.
+pub fn source_files(root: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    for dir in ROOTS {
+        let d = root.join(dir);
+        if d.is_dir() {
+            walk(&d, &mut out)?;
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries =
+        std::fs::read_dir(dir).with_context(|| format!("lint: reading {}", dir.display()))?;
+    for entry in entries {
+        let path = entry
+            .with_context(|| format!("lint: reading {}", dir.display()))?
+            .path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn walks_this_crate_deterministically() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let files = source_files(root).unwrap();
+        assert!(files.iter().any(|p| p.ends_with("src/lib.rs")));
+        assert!(files.iter().any(|p| p.ends_with("src/analysis/walker.rs")));
+        let mut sorted = files.clone();
+        sorted.sort();
+        assert_eq!(files, sorted);
+    }
+}

@@ -52,7 +52,7 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> M
         p95: times[(iters as f64 * 0.95) as usize % iters],
         min: times[0],
     };
-    println!("{}", m.report());
+    println!("{}", m.report()); // lint: allow(stdout-in-lib): bench harness
     m
 }
 

@@ -3,21 +3,14 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
+
+use crate::util::sync::lock_recover;
 
 /// Max samples retained per latency/value series (see
 /// [`Metrics::observe_value`]).
 pub const SERIES_CAP: usize = 16_384;
-
-/// Lock a metrics mutex, recovering from poisoning (same policy as
-/// `kernels/pool.rs`): a replica worker that panicked mid-record leaves
-/// counters/series in a consistent-enough state — at worst one sample is
-/// lost — and metrics must never cascade that panic into every other
-/// replica's `record_*` call.
-fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(PoisonError::into_inner)
-}
 
 /// Nearest-rank percentile index over a sorted series of `len` samples:
 /// `round((len-1) * p)`, with `round` half-away-from-zero. Truncation
@@ -641,8 +634,8 @@ mod tests {
         m.observe_value("lat", 5.0);
         let mc = m.clone();
         let _ = std::thread::spawn(move || {
-            let _c = mc.counters.lock().unwrap();
-            let _l = mc.latencies.lock().unwrap();
+            let _c = mc.counters.lock().unwrap(); // lint: allow(lock-unwrap)
+            let _l = mc.latencies.lock().unwrap(); // lint: allow(lock-unwrap)
             panic!("poison the metrics locks");
         })
         .join();

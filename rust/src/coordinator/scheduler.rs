@@ -92,7 +92,7 @@ impl QuantScheduler {
                 move || {
                     loop {
                         let job = {
-                            let guard = job_rx.lock().unwrap();
+                            let guard = crate::util::sync::lock_recover(&job_rx);
                             guard.recv()
                         };
                         let (idx, job) = match job {

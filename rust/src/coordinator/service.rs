@@ -244,12 +244,14 @@ impl EngineMemoryProfile {
 /// Greedy sampling helper: `(argmax index, max logit)`. Ties resolve to
 /// the highest index (`Iterator::max_by` keeps the last maximum) — the
 /// equivalence tests rely on the engine and the full-context oracle
-/// sharing this exact rule.
+/// sharing this exact rule. `total_cmp` keeps the comparison a total
+/// order, so a NaN logit yields a deterministic pick instead of a panic
+/// (and the engine and oracle agree on it, since both call this fn).
 pub fn greedy_argmax(row: &[f32]) -> (u8, f32) {
     let (arg, max) = row
         .iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| a.1.total_cmp(b.1))
         .expect("non-empty logits row");
     (arg as u8, *max)
 }
@@ -347,7 +349,7 @@ impl EngineShared {
     }
 
     fn lock_q(&self) -> std::sync::MutexGuard<'_, AdmissionQueue> {
-        self.q.lock().unwrap_or_else(|e| e.into_inner())
+        crate::util::sync::lock_recover(&self.q)
     }
 
     /// Register a submitted session id (removed again at replica pull).

@@ -171,7 +171,7 @@ pub fn task_accuracy(
                 let tok = row
                     .iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .max_by(|a, b| a.1.total_cmp(b.1))
                     .unwrap()
                     .0 as u8;
                 // wildcard positions are content-free: teacher-force the

@@ -107,6 +107,7 @@ impl Table {
     /// Print to stdout and persist the markdown/CSV/JSON renderings under
     /// `results/`.
     pub fn emit(&self, stem: &str) -> Result<()> {
+        // lint: allow(stdout-in-lib): printing the table is this API's job
         println!("{}", self.to_markdown());
         let dir = results_dir();
         std::fs::create_dir_all(&dir)?;

@@ -325,7 +325,7 @@ pub fn score_task(rt: &Runtime, params: &ParamSet, task: &McTask) -> Result<f64>
         let best = slice
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(b.1))
             .unwrap()
             .0;
         if best == q.correct {

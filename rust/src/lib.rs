@@ -97,6 +97,7 @@
 //! `lm_logits_all` (same session semantics, quadratic decode cost) on
 //! backends without them.
 
+pub mod analysis;
 pub mod bench;
 pub mod coordinator;
 pub mod error;

@@ -48,7 +48,7 @@ impl EmpiricalBackend {
                 pairs.push((v as f64 / ms, weight));
             }
         }
-        pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        pairs.sort_by(|a, b| a.0.total_cmp(&b.0));
         let n = pairs.len();
         let mut xs = Vec::with_capacity(n);
         let mut cum_w = Vec::with_capacity(n + 1);

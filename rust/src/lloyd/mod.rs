@@ -121,7 +121,7 @@ pub fn init_levels(cfg: &EmConfig) -> ([f64; LEVELS], [bool; LEVELS]) {
 fn sort_with_flags(levels: &mut [f64; LEVELS], fixed: &mut [bool; LEVELS]) {
     let mut pairs: Vec<(f64, bool)> =
         levels.iter().cloned().zip(fixed.iter().cloned()).collect();
-    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    pairs.sort_by(|a, b| a.0.total_cmp(&b.0));
     for (i, (l, f)) in pairs.into_iter().enumerate() {
         levels[i] = l;
         fixed[i] = f;

@@ -6,6 +6,7 @@
 //!   train     pre-train the in-repo LM via the AOT'd train_step graph
 //!   eval      perplexity + task accuracy for a quantizer configuration
 //!   serve     run the batched inference service on a quantized model
+//!   lint      house static analysis (determinism, SAFETY, metrics schema)
 //!   info      artifact + platform inventory
 //!
 //! Run `bof4 <cmd> --help` for flags.
@@ -33,11 +34,12 @@ fn main() {
         "train" => run(train(rest)),
         "eval" => run(eval_cmd(rest)),
         "serve" => run(serve(rest)),
+        "lint" => run(lint(rest)),
         "info" => run(info_cmd(rest)),
         _ => {
             eprintln!(
                 "bof4 — 4-bit Block-Wise Optimal Float quantization\n\n\
-                 USAGE: bof4 <design|quantize|train|eval|serve|info> [flags]\n\
+                 USAGE: bof4 <design|quantize|train|eval|serve|lint|info> [flags]\n\
                  Each subcommand accepts --help."
             );
             2
@@ -494,6 +496,43 @@ fn write_metrics_files(path: &std::path::Path, engine: &bof4::coordinator::Engin
     std::fs::write(&jp, snap.to_json().to_string())
         .map_err(|e| bof4::err!("write {}: {e}", jp.display()))?;
     Ok(())
+}
+
+/// `bof4 lint` — run the house static analysis over the crate's own
+/// sources. Exits nonzero on any violation, so CI can gate on it.
+fn lint(rest: Vec<String>) -> Result<()> {
+    let p = Args::new("house-invariant static analysis over src/, benches/ and tests/")
+        .opt(
+            "root",
+            None,
+            "crate root containing src/ (default: ./rust, else .)",
+        )
+        .flag("json", "emit the machine-readable JSON report on stdout")
+        .flag("rules", "list the rules and what they enforce, then exit")
+        .parse_from(rest);
+    if p.has_flag("rules") {
+        for (name, summary) in bof4::analysis::rule_table() {
+            println!("{name:<18} {summary}");
+        }
+        return Ok(());
+    }
+    let root = match p.get("root") {
+        Some(r) => std::path::PathBuf::from(r),
+        None => bof4::analysis::find_root()?,
+    };
+    let analysis = bof4::analysis::Analysis::load_tree(&root)?;
+    let report = analysis.run();
+    if p.has_flag("json") {
+        let json = report.to_json().to_string();
+        println!("{json}");
+    } else {
+        print!("{}", report.render_human());
+    }
+    if report.is_clean() {
+        Ok(())
+    } else {
+        Err(bof4::err!("lint: {} violation(s)", report.findings.len()))
+    }
 }
 
 fn info_cmd(_rest: Vec<String>) -> Result<()> {

@@ -79,6 +79,8 @@ impl ParamSet {
             }
             f.write_all(&(data.len() as u64).to_le_bytes())?;
             // little-endian f32s
+            // SAFETY: viewing the f32 buffer as its raw bytes — exact
+            // length `len * 4`, borrow scoped to the write below.
             let bytes = unsafe {
                 std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
             };
@@ -120,6 +122,9 @@ impl ParamSet {
                 return Err(crate::err!("{path:?}: shape/data mismatch"));
             }
             let mut data = vec![0f32; n];
+            // SAFETY: filling the freshly-allocated f32 buffer through
+            // its byte view — exact length `n * 4`, any bit pattern is a
+            // valid f32, and the borrow ends at the read below.
             let bytes = unsafe {
                 std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, n * 4)
             };

@@ -5,7 +5,7 @@
 //! `kernel` level, every top-level thread-pool dispatch tagged with its
 //! kernel phase (dense / q4 / attention / KV / …). Events are buffered
 //! in a fixed-capacity ring ([`RING_CAP`]) guarded by a poisoning-immune
-//! mutex (same [`PoisonError::into_inner`] policy as
+//! mutex (the [`crate::util::sync::lock_recover`] policy shared with
 //! `coordinator::metrics` and the kernel pool), then exported as
 //! Chrome-trace-event JSON by [`crate::obs::export::chrome_trace`].
 //!
@@ -32,8 +32,10 @@
 use std::cell::Cell;
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
-use std::sync::{Mutex, MutexGuard, OnceLock, PoisonError};
+use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
+
+use crate::util::sync::lock_recover;
 
 /// Maximum number of buffered events; the oldest are evicted beyond this.
 pub const RING_CAP: usize = 65_536;
@@ -102,6 +104,7 @@ pub fn init_from_env() {
     if let Ok(v) = std::env::var("BOF4_TRACE") {
         match parse_trace_level(&v) {
             Some(lv) => set_level(lv),
+            // lint: allow(stdout-in-lib): documented warn-to-stderr on bad env
             None => eprintln!(
                 "bof4: unknown BOF4_TRACE value '{v}' (expected 0|1|kernel); ignored"
             ),
@@ -151,10 +154,6 @@ struct Ring {
 pub struct Tracer {
     epoch: Instant,
     inner: Mutex<Ring>,
-}
-
-fn lock_recover(m: &Mutex<Ring>) -> MutexGuard<'_, Ring> {
-    m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
 static NEXT_TID: AtomicU64 = AtomicU64::new(1);
@@ -381,7 +380,7 @@ mod tests {
     // harness runs tests on concurrent threads).
     fn level_lock() -> std::sync::MutexGuard<'static, ()> {
         static LOCK: Mutex<()> = Mutex::new(());
-        LOCK.lock().unwrap_or_else(PoisonError::into_inner)
+        lock_recover(&LOCK)
     }
 
     #[test]

@@ -341,7 +341,7 @@ pub fn codebook_for(method: &Method, norm: Norm, block: usize) -> Codebook {
         _ => unreachable!(),
     };
     let key = (tag.clone(), signed, block);
-    if let Some(cb) = registry().lock().unwrap().get(&key) {
+    if let Some(cb) = crate::util::sync::lock_recover(registry()).get(&key) {
         return cb.clone();
     }
     // Design it. (lloyd depends on quant::Codebook; intra-crate cycles are
@@ -351,7 +351,7 @@ pub fn codebook_for(method: &Method, norm: Norm, block: usize) -> Codebook {
         Method::Bof4 { mse } => crate::lloyd::design_bof4_empirical_default(*mse, norm, block),
         _ => unreachable!(),
     };
-    registry().lock().unwrap().insert(key, cb.clone());
+    crate::util::sync::lock_recover(registry()).insert(key, cb.clone());
     cb
 }
 

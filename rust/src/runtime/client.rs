@@ -15,9 +15,13 @@ use std::sync::{Arc, Mutex};
 use super::meta::GraphMeta;
 use super::{Backend, HostTensor};
 use crate::error::Result;
+use crate::util::sync::lock_recover;
 
 fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
     fn bytes<T: Copy>(v: &[T]) -> &[u8] {
+        // SAFETY: reinterpreting a &[T] of plain-old-data as raw bytes;
+        // `size_of_val` gives the exact byte length and the output borrow
+        // is tied to `v` by the signature.
         unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
     }
     let (ty, dims, raw): (xla::ElementType, &Vec<usize>, &[u8]) = match t {
@@ -59,9 +63,12 @@ pub struct XlaBackend {
     cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
 }
 
-// The PJRT client/executable handles are internally synchronized for our
-// single-client, execute-only usage; XlaBackend is shared behind &self.
+// SAFETY: the PJRT client/executable handles are internally synchronized
+// for our single-client, execute-only usage; XlaBackend is shared behind
+// &self and never hands out raw pointers.
 unsafe impl Send for XlaBackend {}
+// SAFETY: see the `Send` justification above — all &self entry points go
+// through the internally-synchronized PJRT API or the `cache` mutex.
 unsafe impl Sync for XlaBackend {}
 
 impl XlaBackend {
@@ -81,7 +88,7 @@ impl XlaBackend {
 
     /// Compile (or fetch the cached) executable for a graph.
     fn executable(&self, gm: &GraphMeta) -> Result<Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(&gm.name) {
+        if let Some(exe) = lock_recover(&self.cache).get(&gm.name) {
             return Ok(exe.clone());
         }
         let sw = crate::util::timer::Stopwatch::start();
@@ -98,10 +105,7 @@ impl XlaBackend {
             .map_err(|e| crate::err!("compiling {}: {e:?}", gm.name))?;
         crate::info!("compiled graph '{}' in {:.1} ms", gm.name, sw.elapsed_ms());
         let exe = Arc::new(exe);
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(gm.name.clone(), exe.clone());
+        lock_recover(&self.cache).insert(gm.name.clone(), exe.clone());
         Ok(exe)
     }
 }

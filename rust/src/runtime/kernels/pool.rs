@@ -488,10 +488,25 @@ pub fn default_pool() -> Arc<ThreadPool> {
 pub struct SyncSlice<'a, T> {
     ptr: *mut T,
     len: usize,
+    /// Debug-build ledger of ranges claimed through
+    /// [`SyncSlice::slice_mut`], keyed by claiming thread
+    /// (`start -> end`). [`SyncSlice::assert_disjoint`] checks new
+    /// claims against every *other* thread's entries.
+    #[cfg(debug_assertions)]
+    claims: Mutex<std::collections::HashMap<std::thread::ThreadId, ClaimMap>>,
     _marker: std::marker::PhantomData<&'a mut [T]>,
 }
 
+#[cfg(debug_assertions)]
+type ClaimMap = std::collections::BTreeMap<usize, usize>;
+
+// SAFETY: SyncSlice is a borrow of a `&mut [T]` exclusive for its whole
+// lifetime; sending it to a pool worker moves only the pointer/len pair,
+// and `T: Send` makes the elements themselves movable across threads.
 unsafe impl<T: Send> Send for SyncSlice<'_, T> {}
+// SAFETY: sharing `&SyncSlice` across tasks is sound because the only
+// mutation path is `slice_mut`, whose contract (one owner per disjoint
+// tile, checked in debug builds) prevents overlapping `&mut` views.
 unsafe impl<T: Send> Sync for SyncSlice<'_, T> {}
 
 impl<'a, T> SyncSlice<'a, T> {
@@ -499,6 +514,8 @@ impl<'a, T> SyncSlice<'a, T> {
         SyncSlice {
             ptr: s.as_mut_ptr(),
             len: s.len(),
+            #[cfg(debug_assertions)]
+            claims: Mutex::new(std::collections::HashMap::new()),
             _marker: std::marker::PhantomData,
         }
     }
@@ -516,10 +533,44 @@ impl<'a, T> SyncSlice<'a, T> {
     /// # Safety
     /// The caller must guarantee that no two live views overlap — i.e.
     /// concurrent tasks request disjoint ranges (one owner per tile).
+    /// Debug builds enforce the cross-thread half of this contract: a
+    /// claim that intersects a range previously claimed by a different
+    /// thread panics with a `SyncSlice overlap` message.
     #[allow(clippy::mut_from_ref)] // disjointness is the call-site contract
     pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [T] {
         debug_assert!(start + len <= self.len);
+        #[cfg(debug_assertions)]
+        self.assert_disjoint(start, len);
         std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+
+    /// Panic if `[start, start + len)` intersects a range claimed by a
+    /// *different* thread. Same-thread re-claims are allowed — kernels
+    /// legitimately re-derive the same stripe across outer-loop
+    /// iterations (e.g. the attention backward pass touches each
+    /// dK/dV stripe once per query row) — and refresh the ledger entry.
+    /// Release builds compile the ledger away entirely.
+    #[cfg(debug_assertions)]
+    fn assert_disjoint(&self, start: usize, len: usize) {
+        let me = std::thread::current().id();
+        let end = start + len;
+        let mut g = crate::util::sync::lock_recover(&self.claims);
+        for (tid, owned) in g.iter() {
+            if *tid == me {
+                continue;
+            }
+            // Per-thread claims are disjoint tiles, so the one with the
+            // largest start below `end` is the only intersection
+            // candidate from this thread.
+            if let Some((&s, &e)) = owned.range(..end).next_back() {
+                assert!(
+                    e <= start,
+                    "SyncSlice overlap: [{start}, {end}) claimed on {me:?} \
+                     intersects [{s}, {e}) claimed on {tid:?}"
+                );
+            }
+        }
+        g.entry(me).or_default().insert(start, end);
     }
 }
 
@@ -607,6 +658,26 @@ mod tests {
         for (i, v) in out.iter().enumerate() {
             assert_eq!(*v, i as u32 * 3);
         }
+    }
+
+    /// The debug-build claim ledger must catch cross-thread overlap:
+    /// with 2 threads and 2 tasks the caller always runs chunk 0 and
+    /// the worker chunk 1, so the two identical claims are guaranteed
+    /// to come from different threads whichever lands second.
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "SyncSlice overlap")]
+    fn sync_slice_overlap_panics_in_debug() {
+        let pool = ThreadPool::with_threads(2);
+        let mut out = vec![0u32; 8];
+        let s = SyncSlice::new(&mut out);
+        pool.run(2, |_| {
+            // SAFETY: deliberately violated — both tasks claim the same
+            // range, and the ledger panics before the second `&mut`
+            // view ever materializes.
+            let t = unsafe { s.slice_mut(0, 4) };
+            t[0] = 1;
+        });
     }
 
     /// Poison the queue mutex directly (a panic while the guard is

@@ -161,6 +161,7 @@ impl F32x8 {
     /// `self * a + b` as a separately-rounded multiply then add (never
     /// a fused FMA — fusion would break the bit-exactness contract).
     #[inline(always)]
+    // lint: allow(fma-in-kernels): two separately-rounded ops, not a fusion
     pub fn mul_add(self, a: F32x8, b: F32x8) -> F32x8 {
         self * a + b
     }
@@ -1696,6 +1697,7 @@ mod tests {
         assert_eq!((a - b).0[0], -1.0);
         assert_eq!((a * b).0[7], 16.0);
         assert_eq!((a / b).0[1], 1.0);
+        // lint: allow(fma-in-kernels): exercising the separately-rounded op
         assert_eq!(a.mul_add(b, F32x8::splat(1.0)).0[2], 7.0);
         let mut out = [0.0f32; 8];
         F32x8::load(&a.0).store(&mut out);

@@ -193,6 +193,7 @@ pub fn rmsnorm_bwd(
         simd::stage_apply(path, sg, dyr, xr, r);
         let s = simd::dot3(path, dyr, g, xr);
         let c = s / (d as f32 * r * r * r);
+        // SAFETY: as above — row i of dx is written only by task i.
         let dxr = unsafe { dxs.slice_mut(i * d, d) };
         simd::norm_bwd_apply(path, dxr, g, dyr, r, xr, c);
     });

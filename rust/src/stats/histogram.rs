@@ -122,7 +122,7 @@ mod tests {
         let peak = d
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .unwrap()
             .0;
         assert!((7..=8).contains(&peak), "peak bin {peak}");

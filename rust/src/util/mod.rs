@@ -6,4 +6,5 @@ pub mod cli;
 pub mod json;
 pub mod log;
 pub mod rng;
+pub mod sync;
 pub mod timer;

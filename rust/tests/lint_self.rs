@@ -1,0 +1,148 @@
+//! Fixture corpus + self-lint gate for `bof4 lint`.
+//!
+//! One bad fixture per rule (tripping exactly that rule at a known
+//! line), scope/exemption checks, pragma suppression, the `--json`
+//! report shape — and the gate itself: a self-lint asserting the
+//! shipped tree is clean under its own linter.
+
+use bof4::analysis::{Analysis, LintReport};
+use bof4::util::json::Json;
+
+fn lint_one(path: &str, src: &str) -> LintReport {
+    let mut a = Analysis::new();
+    a.add_source(path, src);
+    a.run()
+}
+
+/// Assert the report holds exactly one finding, of `rule`, at `line`.
+fn assert_single(r: &LintReport, rule: &str, line: usize) {
+    assert_eq!(r.findings.len(), 1, "expected one finding:\n{}", r.render_human());
+    assert_eq!(r.findings[0].rule, rule);
+    assert_eq!(r.findings[0].line, line);
+}
+
+#[test]
+fn bad_fixture_lock_unwrap() {
+    let r = lint_one("src/x.rs", "fn f() {\n    let g = m.lock().unwrap();\n}\n");
+    assert_single(&r, "lock-unwrap", 2);
+    // a rustfmt-split chain cannot hide the pattern
+    let r = lint_one("src/x.rs", "let g = m\n    .lock()\n    .unwrap();\n");
+    assert_single(&r, "lock-unwrap", 2);
+}
+
+#[test]
+fn bad_fixture_float_cmp() {
+    let src = "fn f(v: &mut [f32]) {\n    v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
+    let r = lint_one("src/x.rs", src);
+    assert_single(&r, "float-cmp", 2);
+    // scoped to src/: bench code may order floats however it likes
+    assert!(lint_one("benches/x.rs", src).is_clean());
+}
+
+#[test]
+fn bad_fixture_safety_comment() {
+    let src = "fn f(p: *mut u8) {\n    unsafe { p.write(0) };\n}\n";
+    let r = lint_one("src/x.rs", src);
+    assert_single(&r, "safety-comment", 2);
+    let ok = "fn f(p: *mut u8) {\n    // SAFETY: p is valid for writes.\n    \
+              unsafe { p.write(0) };\n}\n";
+    assert!(lint_one("src/x.rs", ok).is_clean());
+}
+
+#[test]
+fn bad_fixture_fma_in_kernels() {
+    let src = "fn f(x: f32) -> f32 {\n    x.mul_add(2.0, 1.0)\n}\n";
+    let r = lint_one("src/runtime/kernels/fake.rs", src);
+    assert_single(&r, "fma-in-kernels", 2);
+    // outside runtime/kernels/ the std fn is fine
+    assert!(lint_one("src/quant/fake.rs", src).is_clean());
+}
+
+#[test]
+fn bad_fixture_stdout_in_lib() {
+    let src = "fn f() {\n    println!(\"boo\");\n}\n";
+    let r = lint_one("src/quant/fake.rs", src);
+    assert_single(&r, "stdout-in-lib", 2);
+    // the CLI binary is exempt
+    assert!(lint_one("src/main.rs", src).is_clean());
+}
+
+#[test]
+fn bad_fixture_timing_in_kernels() {
+    let src = "fn f() {\n    let t0 = std::time::Instant::now();\n}\n";
+    let r = lint_one("src/runtime/kernels/fake.rs", src);
+    assert_single(&r, "timing-in-kernels", 2);
+    // pool.rs owns the profile clock
+    assert!(lint_one("src/runtime/kernels/pool.rs", src).is_clean());
+}
+
+#[test]
+fn bad_fixture_gate_ordering() {
+    let src = "fn armed() -> u8 {\n    ARMED.load(Ordering::SeqCst)\n}\n";
+    let r = lint_one("src/x.rs", src);
+    assert_single(&r, "gate-ordering", 2);
+    let relaxed = "fn armed() -> u8 {\n    ARMED.load(Ordering::Relaxed)\n}\n";
+    assert!(lint_one("src/x.rs", relaxed).is_clean());
+}
+
+#[test]
+fn bad_fixture_metrics_schema() {
+    let metrics = "fn f(m: &M) {\n    m.inc(\"brand_new\");\n}\n";
+    let export = "const KNOWN_COUNTERS: [&str; 0] = [];\n\
+                  const KNOWN_SERIES: [&str; 0] = [];\n\
+                  pub fn documented_metrics() -> &'static [&'static str] {\n    &[]\n}\n";
+    let mut a = Analysis::new();
+    a.add_source("src/coordinator/metrics.rs", metrics);
+    a.add_source("src/obs/export.rs", export);
+    let r = a.run();
+    // missing from KNOWN_COUNTERS + missing from documented_metrics()
+    assert_eq!(r.findings.len(), 2, "{}", r.render_human());
+    assert!(r.findings.iter().all(|f| f.rule == "metrics-schema"));
+    assert_eq!(r.findings[0].path, "src/coordinator/metrics.rs");
+    assert_eq!(r.findings[0].line, 2);
+}
+
+#[test]
+fn pragma_suppression_honored() {
+    let same = "fn f() {\n    let g = m.lock().unwrap(); // lint: allow(lock-unwrap)\n}\n";
+    assert!(lint_one("src/x.rs", same).is_clean());
+    let above = "fn f() {\n    // lint: allow(lock-unwrap): exercising poisoning\n    \
+                 let g = m.lock().unwrap();\n}\n";
+    assert!(lint_one("src/x.rs", above).is_clean());
+}
+
+#[test]
+fn clean_snippet_with_string_and_comment_decoys() {
+    // rule tokens inside comments and string literals must not fire
+    let src = "/// Docs may mention partial_cmp and mul_add freely.\n\
+               fn f(v: &mut [f32]) -> &'static str {\n\
+               v.sort_by(|a, b| a.total_cmp(b));\n\
+               \"never call .lock().unwrap() or Instant::now() here\"\n\
+               }\n";
+    let r = lint_one("src/runtime/kernels/fake.rs", src);
+    assert!(r.is_clean(), "{}", r.render_human());
+}
+
+#[test]
+fn json_report_shape() {
+    let r = lint_one("src/x.rs", "let g = m.lock().unwrap();\n");
+    let text = r.to_json().to_string();
+    let j = Json::parse(&text).expect("report must be valid JSON");
+    assert_eq!(j.path("violations").and_then(Json::as_usize), Some(1));
+    assert_eq!(j.path("files_scanned").and_then(Json::as_usize), Some(1));
+    assert_eq!(j.path("rules_checked").and_then(Json::as_usize), Some(8));
+    let rule = j.path("findings.0.rule").and_then(Json::as_str);
+    assert_eq!(rule, Some("lock-unwrap"));
+    assert_eq!(j.path("findings.0.line").and_then(Json::as_usize), Some(1));
+}
+
+/// The gate: the shipped tree must be clean under its own linter. Any
+/// violation prints with its `file:line` so the failure is actionable.
+#[test]
+fn shipped_tree_is_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let a = Analysis::load_tree(root).expect("lexing the shipped tree");
+    let r = a.run();
+    assert!(r.is_clean(), "house lint violations:\n{}", r.render_human());
+    assert!(r.files_scanned > 50, "walker found only {} files", r.files_scanned);
+}
